@@ -1,0 +1,45 @@
+//! Fig.-1 style motivation sweep: throughput and end-system power across the
+//! (cc, p) grid under light/medium/heavy background traffic.
+//!
+//! ```bash
+//! cargo run --release --example energy_sweep [testbed]
+//! ```
+
+use sparta::experiments::fig1;
+use sparta::net::Testbed;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "chameleon".into());
+    let tb = Testbed::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown testbed '{name}', using chameleon");
+        Testbed::chameleon()
+    });
+    let grid = [1u32, 2, 4, 8, 16];
+    println!(
+        "sweeping (cc, p) ∈ {{1,2,4,8,16}}² x 3 background regimes on {} ({} Gbps)...",
+        tb.name, tb.capacity_gbps
+    );
+    let pts = fig1::sweep(&tb, &grid, &["low", "medium", "high"], 7);
+    fig1::print(&pts, &grid);
+
+    // The paper's observation: the optimum moves with background traffic.
+    for regime in ["low", "medium", "high"] {
+        let best = pts
+            .iter()
+            .filter(|p| p.regime == regime)
+            .max_by(|a, b| a.throughput_gbps.partial_cmp(&b.throughput_gbps).unwrap())
+            .unwrap();
+        let base = pts
+            .iter()
+            .find(|p| p.regime == regime && p.cc == 1 && p.p == 1)
+            .unwrap();
+        println!(
+            "background={regime}: best=(cc={}, p={}) at {:.1} Gbps / {:.0} W  ({:.1}x over (1,1))",
+            best.cc,
+            best.p,
+            best.throughput_gbps,
+            best.power_w,
+            best.throughput_gbps / base.throughput_gbps
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! Fig.-7 style fairness demo: three concurrent transfers share a 10 Gbps
+//! bottleneck; compare JFI under SPARTA-T, SPARTA-FE, and the mixed scenario.
+//!
+//! ```bash
+//! cargo run --release --example fairness_demo
+//! ```
+//! (Requires trained weights: `sparta train-all --scale quick` or the
+//! quickstart example.)
+
+use anyhow::Result;
+use sparta::config::Paths;
+use sparta::experiments::{fig7, Scale, SpartaCtx};
+
+fn main() -> Result<()> {
+    let ctx = SpartaCtx::load(Paths::resolve())?;
+    let scenarios = fig7::run(&ctx, Scale::Quick, 99)?;
+    fig7::print(&scenarios);
+
+    // The paper's finding: the F&E reward (loss-aware) yields higher, more
+    // stable fairness than the T/E reward.
+    let t = scenarios.iter().find(|s| s.name.contains("sparta-t")).unwrap();
+    let fe = scenarios.iter().find(|s| s.name.contains("sparta-fe")).unwrap();
+    println!(
+        "\nSPARTA-FE converged JFI {:.3} (±{:.3}) vs SPARTA-T {:.3} (±{:.3})",
+        fe.converged_jfi(),
+        fe.jfi_std(),
+        t.converged_jfi(),
+        t.jfi_std()
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Fig.-5 style transfer-learning demo: an R_PPO agent trained on the
+//! Chameleon preset keeps learning after deployment on CloudLab, whose RTT,
+//! capacity and congestion dynamics differ.
+//!
+//! ```bash
+//! cargo run --release --example online_tuning [episodes]
+//! ```
+
+use anyhow::Result;
+use sparta::agents::make_agent;
+use sparta::config::Paths;
+use sparta::coordinator::{ParamBounds, RewardKind};
+use sparta::emulator::Env;
+use sparta::experiments::SpartaCtx;
+use sparta::net::Testbed;
+use sparta::trainer::LiveEnv;
+use sparta::util::stats;
+
+fn main() -> Result<()> {
+    let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(80);
+    let ctx = SpartaCtx::load(Paths::resolve())?;
+    let store = ctx.weight_store();
+    let n = ctx.runtime.manifest.algo("rppo")?.n_params;
+    let weights = store.load(&SpartaCtx::weight_name("rppo", RewardKind::ThroughputEnergy), n)?;
+    let mut agent = make_agent(&ctx.runtime, "rppo", 5, Some(weights))?;
+
+    let mut env = LiveEnv::new(
+        Testbed::cloudlab(),
+        RewardKind::ThroughputEnergy,
+        ParamBounds::default(),
+        8,
+        30,
+        77,
+    );
+    println!("tuning Chameleon-trained R_PPO on CloudLab for {episodes} episodes...");
+    let mut rewards = Vec::new();
+    let mut throughputs = Vec::new();
+    for ep in 0..episodes {
+        let mut state = env.reset();
+        let mut total = 0.0;
+        let mut thr = 0.0;
+        let mut steps = 0;
+        loop {
+            let a = agent.act(&state, true);
+            let out = env.step(a);
+            agent.observe(&state, a, out.reward, &out.state, out.done);
+            total += out.reward;
+            thr += out.throughput_gbps;
+            steps += 1;
+            state = out.state;
+            if out.done {
+                break;
+            }
+        }
+        rewards.push(total);
+        throughputs.push(thr / steps as f64);
+        if (ep + 1) % 20 == 0 {
+            let w = &rewards[rewards.len() - 20..];
+            let t = &throughputs[throughputs.len() - 20..];
+            println!(
+                "  episodes {:>3}-{:>3}: mean reward {:+.2}, mean throughput {:.1} Gbps",
+                ep + 1 - 19,
+                ep + 1,
+                stats::mean(w),
+                stats::mean(t)
+            );
+        }
+    }
+    let early = stats::mean(&rewards[..20.min(rewards.len())]);
+    let late = stats::mean(&rewards[rewards.len().saturating_sub(20)..]);
+    println!("adaptation: early-phase reward {early:+.2} → late-phase {late:+.2}");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end quickstart: train (if needed) and run SPARTA against a static
+//! baseline on a real small workload, printing the paper's headline metrics.
+//!
+//! ```bash
+//! make artifacts                 # once: AOT-lower the networks
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the full-system driver: exploration transfers on the simulated
+//! Chameleon testbed → k-means emulator → offline R_PPO training through the
+//! AOT-compiled HLO train step → evaluation transfers (SPARTA-FE, SPARTA-T,
+//! rclone) with energy metering — all three stack layers composing.
+
+use anyhow::Result;
+use sparta::config::Paths;
+use sparta::coordinator::{Controller, RewardKind};
+use sparta::experiments::{make_optimizer, train_pipeline, Scale, SpartaCtx};
+use sparta::net::Testbed;
+use sparta::telemetry::Table;
+use sparta::transfer::TransferJob;
+
+fn main() -> Result<()> {
+    let ctx = SpartaCtx::load(Paths::resolve())?;
+    let tb = Testbed::chameleon();
+    let scale = Scale::Quick;
+    let seed = 2026;
+
+    // 1. Make sure both SPARTA variants are trained (offline, emulated).
+    let store = ctx.weight_store();
+    for reward in [RewardKind::FairnessEfficiency, RewardKind::ThroughputEnergy] {
+        let name = SpartaCtx::weight_name("rppo", reward);
+        if !store.exists(&name) {
+            println!("training {name} (offline, cluster emulator)...");
+            let stats = train_pipeline(&ctx, "rppo", reward, &tb, scale, seed)?;
+            println!(
+                "  {:.0}s, {} env steps, converged at step {}",
+                stats.wall_s, stats.env_steps, stats.steps_to_converge
+            );
+        }
+    }
+
+    // 2. Move 30 x 256 MiB from TACC to UC (simulated 10 Gbps shared WAN)
+    //    with each method and compare.
+    let (files, bytes) = scale.workload();
+    println!(
+        "\ntransferring {} x {} MiB on {} ({} Gbps, shared)...",
+        files,
+        bytes >> 20,
+        tb.name,
+        tb.capacity_gbps
+    );
+    let mut table = Table::new(&["method", "Gbps", "duration s", "energy kJ", "J per GB"]);
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+    for method in ["rclone", "sparta-t", "sparta-fe"] {
+        let (opt, engine, reward) = make_optimizer(&ctx, method, seed)?;
+        let mut ctl = Controller::builder(tb.clone())
+            .job(TransferJob::files(files, bytes))
+            .engine(engine)
+            .reward(reward)
+            .seed(seed)
+            .build();
+        let report = ctl.run(opt, seed);
+        let lane = report.lane();
+        assert!(lane.completed, "{method}: transfer did not complete");
+        table.row(vec![
+            method.to_string(),
+            format!("{:.2}", lane.avg_throughput_gbps()),
+            format!("{:.0}", lane.duration_s),
+            format!("{:.1}", lane.total_energy_j / 1000.0),
+            format!("{:.1}", lane.energy_per_gb()),
+        ]);
+        results.push((method.to_string(), lane.avg_throughput_gbps(), lane.total_energy_j));
+    }
+    table.print();
+
+    let baseline = &results[0];
+    let best_thr = results[1..].iter().map(|r| r.1).fold(0.0, f64::max);
+    let best_energy = results[1..].iter().map(|r| r.2).fold(f64::MAX, f64::min);
+    println!(
+        "\nSPARTA vs rclone: {:+.0}% throughput, {:+.0}% energy",
+        (best_thr - baseline.1) / baseline.1 * 100.0,
+        (best_energy - baseline.2) / baseline.2 * 100.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""AOT exporter: lower every graph to HLO text + manifest + init params.
+
+HLO *text* is the interchange format (NOT ``lowered.compiler_ir("hlo")`` /
+``.serialize()``): jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids that the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (idempotent; `make
+artifacts` wires this up).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import kmeans_assign
+
+# Fixed shapes for the standalone k-means assignment artifact; the Rust
+# emulator pads its query batch to these.
+KMEANS_N = 1024
+KMEANS_K = 64
+KMEANS_D = M.FEATURES + 1
+
+
+def to_hlo_text(fn, example_args):
+    """jit-lower `fn` and convert to XLA HLO text via stablehlo."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def graph_table():
+    """name -> (fn, arg_names, example_args, n_outputs)."""
+    g = {}
+    for algo in ("dqn", "drqn", "ppo", "rppo", "ddpg"):
+        n = M.LAYOUTS[algo].size
+        b = M.BATCH[algo]
+        obs1 = spec(M.OBS) if algo in ("dqn", "ppo", "ddpg") else spec(M.WINDOW, M.FEATURES)
+        obsb = spec(b, M.OBS) if algo in ("dqn", "ppo", "ddpg") else spec(b, M.WINDOW, M.FEATURES)
+        fwd = getattr(M, f"{algo}_forward")
+        n_fwd_out = {"dqn": 1, "drqn": 1, "ppo": 2, "rppo": 2, "ddpg": 1}[algo]
+        g[f"{algo}_forward"] = (fwd, ["params", "obs"], [spec(n), obs1], n_fwd_out)
+
+        train = getattr(M, f"{algo}_train")
+        if algo in ("dqn", "drqn"):
+            g[f"{algo}_train"] = (
+                train,
+                ["params", "tparams", "m", "v", "step", "obs", "act", "rew", "next_obs", "done"],
+                [spec(n), spec(n), spec(n), spec(n), spec(), obsb, spec(b), spec(b), obsb, spec(b)],
+                4,
+            )
+        elif algo in ("ppo", "rppo"):
+            g[f"{algo}_train"] = (
+                train,
+                ["params", "m", "v", "step", "obs", "act", "old_logp", "adv", "ret"],
+                [spec(n), spec(n), spec(n), spec(), obsb, spec(b), spec(b), spec(b), spec(b)],
+                4,
+            )
+        else:  # ddpg
+            g[f"{algo}_train"] = (
+                train,
+                ["params", "tparams", "m", "v", "step", "obs", "act", "rew", "next_obs", "done"],
+                [spec(n), spec(n), spec(n), spec(n), spec(), obsb, spec(b, 2), spec(b), obsb, spec(b)],
+                5,
+            )
+    g["kmeans_assign"] = (
+        lambda pts, cen: (kmeans_assign(pts, cen),),
+        ["points", "centroids"],
+        [spec(KMEANS_N, KMEANS_D), spec(KMEANS_K, KMEANS_D)],
+        1,
+    )
+    return g
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--only", default=None, help="export a single graph (debug)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    graphs = {}
+    table = graph_table()
+    for name, (fn, arg_names, example, n_out) in sorted(table.items()):
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(fn, example)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        graphs[name] = {
+            "file": fname,
+            "arg_names": arg_names,
+            "arg_shapes": [list(a.shape) for a in example],
+            "n_outputs": n_out,
+        }
+        print(f"  {name}: {len(text)} chars, args={arg_names}")
+
+    algos = {}
+    for algo in ("dqn", "drqn", "ppo", "rppo", "ddpg"):
+        flat = M.init_params(algo, seed=42)
+        flat.tofile(os.path.join(args.out, f"{algo}_init.f32"))
+        algos[algo] = {
+            "n_params": int(M.LAYOUTS[algo].size),
+            "hparams": {
+                "gamma": M.GAMMA,
+                "lr": M.LR[algo],
+                "batch": M.BATCH[algo],
+                "max_grad_norm": M.MAX_GRAD_NORM[algo],
+                "clip_range": M.CLIP_RANGE,
+            },
+            "graphs": [f"{algo}_forward", f"{algo}_train"],
+        }
+
+    manifest = {
+        "graphs": graphs,
+        "algos": algos,
+        "globals": {
+            "window": M.WINDOW,
+            "features": M.FEATURES,
+            "n_actions": M.N_ACTIONS,
+            "kmeans_n": KMEANS_N,
+            "kmeans_k": KMEANS_K,
+            "kmeans_d": KMEANS_D,
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(graphs)} graphs to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the HLO artifacts).
+
+All kernels run with ``interpret=True``: real TPU lowering would emit Mosaic
+custom-calls the CPU PJRT plugin cannot execute. Correctness is pinned to
+the pure-jnp oracles in :mod:`ref` by the pytest/hypothesis suite.
+"""
+
+from .fused_mlp import fused_dense
+from .kmeans import kmeans_assign
+from .lstm_cell import lstm_cell
+from . import ref
+
+__all__ = ["fused_dense", "kmeans_assign", "lstm_cell", "ref"]

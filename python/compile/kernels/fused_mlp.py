@@ -1,0 +1,82 @@
+"""Fused dense layer as a Pallas kernel: y = act(x @ W + b).
+
+This is the compute hot-spot of every SPARTA policy network (all five agents
+are MLP or MLP+LSTM stacks). The kernel fuses the matmul, bias add and
+activation into one VMEM-resident pass.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): on TPU the natural
+shape is MXU 128x128 tiles, so wide layers are tiled along the output (N)
+dimension with a grid, keeping one (M, K) x (K, 128) product per grid step
+in VMEM. Narrow layers (policy heads, batch-1 inference) fit in a single
+block. ``interpret=True`` is mandatory here: the CPU PJRT client cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-dimension tile, matched to the MXU lane width.
+TILE_N = 128
+# Tile the N dimension only when it is an exact multiple (padding is handled
+# by the caller-side wrapper below).
+_SINGLE_BLOCK_MAX_ELEMS = 1 << 18  # ~1 MB of f32: fits VMEM comfortably
+
+
+def _make_kernel(activation):
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        acc = acc + b_ref[...][None, :]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "tanh":
+            acc = jnp.tanh(acc)
+        o_ref[...] = acc
+
+    return kernel
+
+
+def fused_dense(x, w, b, activation="relu"):
+    """act(x @ w + b) via Pallas. x: (M, K), w: (K, N), b: (N,)."""
+    if activation not in ("relu", "tanh", "linear"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), f"shape mismatch {x.shape} {w.shape} {b.shape}"
+
+    kernel = _make_kernel(activation)
+    single_block = (n % TILE_N != 0) or (m * k * n <= _SINGLE_BLOCK_MAX_ELEMS)
+    if single_block:
+        # Whole layer in one VMEM block (heads, small hidden layers,
+        # batch-1 inference).
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x, w, b)
+
+    # Tiled along N: one (K, TILE_N) weight panel per grid step.
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, TILE_N), lambda j: (0, j)),
+            pl.BlockSpec((TILE_N,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m, TILE_N), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_estimate_bytes(m, k, n):
+    """Estimated VMEM working set of one grid step, bytes (f32).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to check block shapes against
+    the ~16 MiB/core VMEM budget of a TPU.
+    """
+    n_eff = TILE_N if (n % TILE_N == 0 and m * k * n > _SINGLE_BLOCK_MAX_ELEMS) else n
+    return 4 * (m * k + k * n_eff + n_eff + m * n_eff)

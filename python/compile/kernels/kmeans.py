@@ -1,0 +1,41 @@
+"""k-means nearest-centroid assignment as a Pallas kernel.
+
+The emulated training environment (paper §3.4) clusters logged transitions
+and, during training, assigns each (state, action) query to its nearest
+centroid. The kernel computes all pairwise squared distances with the
+expanded form so the (N, D) x (D, K) inner product runs on the MXU, then
+reduces with an argmin on the VPU.
+
+Exported standalone as the ``kmeans_assign`` artifact; the Rust emulator can
+use it in place of its scalar implementation (compared in benches/micro.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, c_ref, o_ref):
+    p = p_ref[...]
+    c = c_ref[...]
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    d = p2 - 2.0 * jnp.dot(p, c.T, preferred_element_type=jnp.float32) + c2
+    o_ref[...] = jnp.argmin(d, axis=1).astype(jnp.float32)
+
+
+def kmeans_assign(points, centroids):
+    """points: (N, D), centroids: (K, D) -> float32 (N,) of indices."""
+    n, d = points.shape
+    k, d2 = centroids.shape
+    assert d == d2
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(points, centroids)
+
+
+def vmem_estimate_bytes(n, k, d):
+    """Estimated VMEM working set, bytes (f32)."""
+    return 4 * (n * d + k * d + n * k + n)

@@ -1,0 +1,59 @@
+"""Fused LSTM cell as a Pallas kernel.
+
+Used by the recurrent agents (R_PPO, DRQN): one step fuses the 4-gate
+projection (a single (B, I+H) x (I+H, 4H) matmul on the MXU) with the
+element-wise gating (VPU) so intermediate gate tensors never leave VMEM.
+
+``interpret=True`` is mandatory for the CPU PJRT path (see fused_mlp.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, h_ref, c_ref, wih_ref, whh_ref, bih_ref, bhh_ref, h_out, c_out):
+    hidden = h_ref.shape[-1]
+    gates = (
+        jnp.dot(x_ref[...], wih_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_ref[...], whh_ref[...], preferred_element_type=jnp.float32)
+        + bih_ref[...][None, :]
+        + bhh_ref[...][None, :]
+    )
+    i = jax.nn.sigmoid(gates[:, :hidden])
+    f = jax.nn.sigmoid(gates[:, hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden :])
+    c_new = f * c_ref[...] + i * g
+    h_out[...] = o * jnp.tanh(c_new)
+    c_out[...] = c_new
+
+
+def lstm_cell(x, h, c, wih, whh, bih, bhh):
+    """One LSTM step. Shapes as in ref.lstm_cell_ref. Returns (h', c')."""
+    b, hidden = h.shape
+    assert c.shape == (b, hidden)
+    assert wih.shape == (x.shape[1], 4 * hidden)
+    assert whh.shape == (hidden, 4 * hidden)
+    h_new, c_new = pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hidden), jnp.float32),
+            jax.ShapeDtypeStruct((b, hidden), jnp.float32),
+        ),
+        interpret=True,
+    )(x, h, c, wih, whh, bih, bhh)
+    return h_new, c_new
+
+
+def vmem_estimate_bytes(batch, inp, hidden):
+    """Estimated VMEM working set, bytes (f32): inputs + weights + gates."""
+    return 4 * (
+        batch * inp
+        + 2 * batch * hidden
+        + inp * 4 * hidden
+        + hidden * 4 * hidden
+        + 8 * hidden
+        + batch * 4 * hidden
+        + 2 * batch * hidden
+    )

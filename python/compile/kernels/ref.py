@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against (pytest +
+hypothesis), and they are also what the *training* graphs use: autodiff
+through interpret-mode ``pallas_call`` is not guaranteed across jax versions,
+so forward/inference graphs call the Pallas kernels (the request hot path)
+while gradient computations run through these mathematically identical
+implementations.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation="relu"):
+    """y = act(x @ w + b).
+
+    x: (M, K), w: (K, N), b: (N,) -> (M, N).
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation == "linear":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def lstm_cell_ref(x, h, c, wih, whh, bih, bhh):
+    """One fused LSTM step. Gate order: i, f, g, o (PyTorch convention).
+
+    x: (B, I), h/c: (B, H), wih: (I, 4H), whh: (H, 4H), biases: (4H,).
+    Returns (h_new, c_new).
+    """
+    hidden = h.shape[-1]
+    gates = x @ wih + h @ whh + bih[None, :] + bhh[None, :]
+    i = jax.nn.sigmoid(gates[:, :hidden])
+    f = jax.nn.sigmoid(gates[:, hidden : 2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden :])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def kmeans_assign_ref(points, centroids):
+    """Nearest-centroid assignment.
+
+    points: (N, D), centroids: (K, D) -> (N,) float32 indices.
+    Distances use the expanded form |p|^2 - 2 p.c + |c|^2 so the inner
+    product dominates the FLOPs (MXU-friendly on TPU).
+    """
+    p2 = jnp.sum(points * points, axis=1, keepdims=True)
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]
+    d = p2 - 2.0 * points @ centroids.T + c2
+    return jnp.argmin(d, axis=1).astype(jnp.float32)

@@ -1,0 +1,370 @@
+"""Layer 2: the five DRL algorithms' networks and update rules as pure JAX.
+
+Every algorithm stores ALL of its trainable tensors in one flat f32 vector
+(policy + value / actor + critic together); the slice layout is exported in
+the manifest so the Rust side can save/load/target-copy without knowing the
+architecture. Forward (inference) graphs call the Layer-1 Pallas kernels —
+they are the per-MI hot path; training graphs differentiate through the
+pure-jnp oracles (same math, see kernels/ref.py).
+
+Hyperparameters follow the paper's appendix (Tables 2-6) with two documented
+CPU-budget reductions: R_PPO's LSTM hidden size 256 -> 128 and the off-policy
+batch sizes 256 -> 64 (DESIGN.md §1).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fused_dense, lstm_cell
+from .kernels.ref import dense_ref, lstm_cell_ref
+
+# ---------------------------------------------------------------------------
+# Global state-space constants (must match rust/src/coordinator/state.rs).
+# ---------------------------------------------------------------------------
+WINDOW = 8      # state history length n
+FEATURES = 5    # plr, rtt_gradient, rtt_ratio, cc, p
+N_ACTIONS = 5
+OBS = WINDOW * FEATURES
+GAMMA = 0.99
+
+# Architecture constants.
+DQN_HIDDEN = [128, 128]         # Table 2
+PPO_HIDDEN = [128, 128]         # Table 3 (policy and value)
+DDPG_HIDDEN = [400, 300]        # Table 4
+RPPO_LSTM = 128                 # Table 5 says 256; reduced for CPU budget
+DRQN_DENSE = 64                 # Table 6: [64, LSTM(64)]
+DRQN_LSTM = 64
+
+# Batch sizes per training-step graph.
+BATCH = {"dqn": 32, "ppo": 64, "ddpg": 64, "rppo": 64, "drqn": 64}
+LR = {"dqn": 5e-4, "ppo": 3e-4, "ddpg": 1e-3, "rppo": 3e-4, "drqn": 1e-3}
+MAX_GRAD_NORM = {"dqn": 10.0, "ppo": 0.5, "ddpg": 10.0, "rppo": 0.5, "drqn": 10.0}
+CLIP_RANGE = 0.2
+VF_COEF = 0.5
+ENT_COEF = 0.01  # Table 3 uses 0.0; a small bonus prevents premature collapse
+# under the sparse difference-based reward (EXPERIMENTS.md §Perf notes).
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter layout machinery.
+# ---------------------------------------------------------------------------
+class Layout:
+    """Ordered (name, shape) table mapped onto one flat f32 vector."""
+
+    def __init__(self, entries):
+        self.entries = list(entries)
+        self.offsets = {}
+        off = 0
+        for name, shape in self.entries:
+            size = int(np.prod(shape)) if shape else 1
+            self.offsets[name] = (off, shape)
+            off += size
+        self.size = off
+
+    def slice(self, flat, name):
+        off, shape = self.offsets[name]
+        size = int(np.prod(shape)) if shape else 1
+        return flat[off : off + size].reshape(shape)
+
+    def unflatten(self, flat):
+        return {name: self.slice(flat, name) for name, _ in self.entries}
+
+    def mask(self, prefix):
+        """0/1 vector selecting all entries whose name starts with prefix."""
+        m = np.zeros(self.size, np.float32)
+        for name, shape in self.entries:
+            if name.startswith(prefix):
+                off, _ = self.offsets[name]
+                size = int(np.prod(shape)) if shape else 1
+                m[off : off + size] = 1.0
+        return jnp.asarray(m)
+
+    def init(self, rng):
+        """Glorot-uniform weights, zero biases, as one flat numpy vector."""
+        flat = np.zeros(self.size, np.float32)
+        for name, shape in self.entries:
+            off, _ = self.offsets[name]
+            size = int(np.prod(shape)) if shape else 1
+            if len(shape) == 2:
+                fan_in, fan_out = shape
+                lim = math.sqrt(6.0 / (fan_in + fan_out))
+                flat[off : off + size] = rng.uniform(-lim, lim, size).astype(np.float32)
+            # biases stay zero; LSTM forget-gate bias boosted below
+        return flat
+
+
+def mlp_layout(prefix, sizes):
+    """[(f"{prefix}.w0", (in, h0)), (f"{prefix}.b0", (h0,)), ...]"""
+    entries = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        entries.append((f"{prefix}.w{i}", (a, b)))
+        entries.append((f"{prefix}.b{i}", (b,)))
+    return entries
+
+
+def lstm_layout(prefix, inp, hidden):
+    return [
+        (f"{prefix}.wih", (inp, 4 * hidden)),
+        (f"{prefix}.whh", (hidden, 4 * hidden)),
+        (f"{prefix}.bih", (4 * hidden,)),
+        (f"{prefix}.bhh", (4 * hidden,)),
+    ]
+
+
+def mlp_apply(layout, flat, prefix, x, n_layers, dense=dense_ref, out_act="linear"):
+    """Apply an MLP; hidden layers ReLU, final layer `out_act`."""
+    for i in range(n_layers):
+        w = layout.slice(flat, f"{prefix}.w{i}")
+        b = layout.slice(flat, f"{prefix}.b{i}")
+        act = out_act if i == n_layers - 1 else "relu"
+        x = dense(x, w, b, act)
+    return x
+
+
+def lstm_scan(layout, flat, prefix, xs, hidden, cell=lstm_cell_ref):
+    """Run an LSTM over time. xs: (T, B, I) -> final hidden (B, H)."""
+    wih = layout.slice(flat, f"{prefix}.wih")
+    whh = layout.slice(flat, f"{prefix}.whh")
+    bih = layout.slice(flat, f"{prefix}.bih")
+    bhh = layout.slice(flat, f"{prefix}.bhh")
+    b = xs.shape[1]
+    h0 = jnp.zeros((b, hidden), jnp.float32)
+    c0 = jnp.zeros((b, hidden), jnp.float32)
+
+    def step(carry, x):
+        h, c = carry
+        h, c = cell(x, h, c, wih, whh, bih, bhh)
+        return (h, c), None
+
+    (h, _c), _ = jax.lax.scan(step, (h0, c0), xs)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Per-algorithm layouts.
+# ---------------------------------------------------------------------------
+LAYOUTS = {
+    "dqn": Layout(mlp_layout("q", [OBS] + DQN_HIDDEN + [N_ACTIONS])),
+    "ppo": Layout(
+        mlp_layout("pi", [OBS] + PPO_HIDDEN + [N_ACTIONS])
+        + mlp_layout("vf", [OBS] + PPO_HIDDEN + [1])
+    ),
+    "ddpg": Layout(
+        mlp_layout("actor", [OBS] + DDPG_HIDDEN + [2])
+        + mlp_layout("critic", [OBS + 2] + DDPG_HIDDEN + [1])
+    ),
+    "rppo": Layout(
+        lstm_layout("pi_lstm", FEATURES, RPPO_LSTM)
+        + mlp_layout("pi", [RPPO_LSTM, N_ACTIONS])
+        + lstm_layout("vf_lstm", FEATURES, RPPO_LSTM)
+        + mlp_layout("vf", [RPPO_LSTM, 1])
+    ),
+    "drqn": Layout(
+        mlp_layout("enc", [FEATURES, DRQN_DENSE])
+        + lstm_layout("lstm", DRQN_DENSE, DRQN_LSTM)
+        + mlp_layout("q", [DRQN_LSTM, N_ACTIONS])
+    ),
+}
+
+
+def init_params(algo, seed=0):
+    rng = np.random.RandomState(seed)
+    layout = LAYOUTS[algo]
+    flat = layout.init(rng)
+    # LSTM forget-gate bias = 1 (standard trick for gradient flow).
+    for name, shape in layout.entries:
+        if name.endswith(".bih"):
+            off, _ = layout.offsets[name]
+            hidden = shape[0] // 4
+            flat[off + hidden : off + 2 * hidden] = 1.0
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Forward (inference) graphs — batch-1, Pallas kernels on the hot path.
+# ---------------------------------------------------------------------------
+def dqn_forward(flat, obs):
+    """obs: (OBS,) -> (q[N_ACTIONS],)"""
+    q = mlp_apply(LAYOUTS["dqn"], flat, "q", obs[None, :], 3, dense=fused_dense)
+    return (q[0],)
+
+
+def ppo_forward(flat, obs):
+    """obs: (OBS,) -> (logits[N_ACTIONS], value[1])"""
+    lo = LAYOUTS["ppo"]
+    x = obs[None, :]
+    logits = mlp_apply(lo, flat, "pi", x, 3, dense=fused_dense)
+    value = mlp_apply(lo, flat, "vf", x, 3, dense=fused_dense)
+    return (logits[0], value[0])
+
+
+def ddpg_forward(flat, obs):
+    """obs: (OBS,) -> (action[2] in [-2, 2]^2,)"""
+    a = mlp_apply(LAYOUTS["ddpg"], flat, "actor", obs[None, :], 3,
+                  dense=fused_dense, out_act="tanh")
+    return (2.0 * a[0],)
+
+
+def rppo_forward(flat, obs):
+    """obs: (WINDOW, FEATURES) -> (logits[N_ACTIONS], value[1])"""
+    lo = LAYOUTS["rppo"]
+    xs = obs[:, None, :]  # (T, B=1, F)
+    h_pi = lstm_scan(lo, flat, "pi_lstm", xs, RPPO_LSTM, cell=lstm_cell)
+    h_vf = lstm_scan(lo, flat, "vf_lstm", xs, RPPO_LSTM, cell=lstm_cell)
+    logits = mlp_apply(lo, flat, "pi", h_pi, 1, dense=fused_dense)
+    value = mlp_apply(lo, flat, "vf", h_vf, 1, dense=fused_dense)
+    return (logits[0], value[0])
+
+
+def drqn_forward(flat, obs):
+    """obs: (WINDOW, FEATURES) -> (q[N_ACTIONS],)"""
+    lo = LAYOUTS["drqn"]
+    xs = obs[:, None, :]
+    enc = jax.vmap(lambda x: mlp_apply(lo, flat, "enc", x, 1, dense=dense_ref, out_act="relu"))(xs)
+    h = lstm_scan(lo, flat, "lstm", enc, DRQN_LSTM, cell=lstm_cell)
+    q = mlp_apply(lo, flat, "q", h, 1, dense=fused_dense)
+    return (q[0],)
+
+
+# Batched (ref-kernel) forwards used inside the training losses.
+def _dqn_q(flat, obs_b):
+    return mlp_apply(LAYOUTS["dqn"], flat, "q", obs_b, 3)
+
+
+def _ppo_pi_vf(flat, obs_b):
+    lo = LAYOUTS["ppo"]
+    return (
+        mlp_apply(lo, flat, "pi", obs_b, 3),
+        mlp_apply(lo, flat, "vf", obs_b, 3)[:, 0],
+    )
+
+
+def _ddpg_actor(flat, obs_b):
+    a = mlp_apply(LAYOUTS["ddpg"], flat, "actor", obs_b, 3, out_act="tanh")
+    return 2.0 * a
+
+
+def _ddpg_critic(flat, obs_b, act_b):
+    x = jnp.concatenate([obs_b, act_b], axis=1)
+    return mlp_apply(LAYOUTS["ddpg"], flat, "critic", x, 3)[:, 0]
+
+
+def _rppo_pi_vf(flat, obs_b):
+    """obs_b: (B, WINDOW, FEATURES)."""
+    lo = LAYOUTS["rppo"]
+    xs = jnp.transpose(obs_b, (1, 0, 2))  # (T, B, F)
+    h_pi = lstm_scan(lo, flat, "pi_lstm", xs, RPPO_LSTM)
+    h_vf = lstm_scan(lo, flat, "vf_lstm", xs, RPPO_LSTM)
+    logits = mlp_apply(lo, flat, "pi", h_pi, 1)
+    value = mlp_apply(lo, flat, "vf", h_vf, 1)[:, 0]
+    return logits, value
+
+
+def _drqn_q(flat, obs_b):
+    lo = LAYOUTS["drqn"]
+    xs = jnp.transpose(obs_b, (1, 0, 2))
+    t, b, f = xs.shape
+    enc = mlp_apply(lo, flat, "enc", xs.reshape(t * b, f), 1, out_act="relu").reshape(t, b, -1)
+    h = lstm_scan(lo, flat, "lstm", enc, DRQN_LSTM)
+    return mlp_apply(lo, flat, "q", h, 1)
+
+
+# ---------------------------------------------------------------------------
+# Adam with global-norm clipping (optimizer state threads through the graph).
+# ---------------------------------------------------------------------------
+def adam(flat, m, v, step, grad, lr, max_norm):
+    norm = jnp.sqrt(jnp.sum(grad * grad) + 1e-12)
+    grad = grad * jnp.minimum(1.0, max_norm / norm)
+    m = 0.9 * m + 0.1 * grad
+    v = 0.999 * v + 0.001 * grad * grad
+    mh = m / (1.0 - jnp.power(0.9, step))
+    vh = v / (1.0 - jnp.power(0.999, step))
+    flat = flat - lr * mh / (jnp.sqrt(vh) + 1e-8)
+    return flat, m, v
+
+
+def _huber(x):
+    a = jnp.abs(x)
+    return jnp.where(a <= 1.0, 0.5 * x * x, a - 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Training-step graphs (one Adam minibatch update each).
+# ---------------------------------------------------------------------------
+def _td_train(q_fn, algo):
+    """Shared DQN/DRQN TD(0) update with a frozen target network."""
+
+    def train(flat, tflat, m, v, step, obs, act, rew, nobs, done):
+        def loss_fn(p):
+            q = q_fn(p, obs)
+            qa = jnp.sum(q * jax.nn.one_hot(act.astype(jnp.int32), N_ACTIONS), axis=1)
+            tq = jnp.max(q_fn(tflat, nobs), axis=1)
+            target = rew + GAMMA * (1.0 - done) * jax.lax.stop_gradient(tq)
+            return jnp.mean(_huber(qa - target))
+
+        loss, grad = jax.value_and_grad(loss_fn)(flat)
+        flat2, m2, v2 = adam(flat, m, v, step, grad, LR[algo], MAX_GRAD_NORM[algo])
+        return (flat2, m2, v2, loss[None])
+
+    return train
+
+
+dqn_train = _td_train(_dqn_q, "dqn")
+drqn_train = _td_train(_drqn_q, "drqn")
+
+
+def _ppo_train(pi_vf_fn, algo):
+    """Shared PPO/R_PPO clipped-surrogate update (Table 3/5)."""
+
+    def train(flat, m, v, step, obs, act, old_logp, adv, ret):
+        def loss_fn(p):
+            logits, values = pi_vf_fn(p, obs)
+            logp_all = jax.nn.log_softmax(logits)
+            logp = jnp.sum(logp_all * jax.nn.one_hot(act.astype(jnp.int32), N_ACTIONS), axis=1)
+            # Normalize advantages (Table 3: normalize_advantage = true).
+            a = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+            ratio = jnp.exp(logp - old_logp)
+            surr = jnp.minimum(ratio * a, jnp.clip(ratio, 1.0 - CLIP_RANGE, 1.0 + CLIP_RANGE) * a)
+            vf = jnp.mean((values - ret) ** 2)
+            ent = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=1))
+            return -jnp.mean(surr) + VF_COEF * vf - ENT_COEF * ent
+
+        loss, grad = jax.value_and_grad(loss_fn)(flat)
+        flat2, m2, v2 = adam(flat, m, v, step, grad, LR[algo], MAX_GRAD_NORM[algo])
+        return (flat2, m2, v2, loss[None])
+
+    return train
+
+
+ppo_train = _ppo_train(_ppo_pi_vf, "ppo")
+rppo_train = _ppo_train(_rppo_pi_vf, "rppo")
+
+
+def ddpg_train(flat, tflat, m, v, step, obs, act, rew, nobs, done):
+    """DDPG actor-critic update (Table 4); soft target updates are done on
+    the Rust side (tau = 0.005 vector lerp over the flat params)."""
+    lo = LAYOUTS["ddpg"]
+    actor_mask = lo.mask("actor")
+
+    def critic_loss_fn(p):
+        q = _ddpg_critic(p, obs, act)
+        na = _ddpg_actor(tflat, nobs)
+        tq = _ddpg_critic(tflat, nobs, na)
+        target = rew + GAMMA * (1.0 - done) * jax.lax.stop_gradient(tq)
+        return jnp.mean((q - target) ** 2)
+
+    def actor_loss_fn(p):
+        # Deterministic policy gradient: -mean Q(s, pi(s)). Gradients w.r.t.
+        # the critic slice are discarded by the mask below, so the critic is
+        # effectively frozen for this term.
+        a = _ddpg_actor(p, obs)
+        return -jnp.mean(_ddpg_critic(p, obs, a))
+
+    closs, cgrad = jax.value_and_grad(critic_loss_fn)(flat)
+    aloss, agrad = jax.value_and_grad(actor_loss_fn)(flat)
+    grad = cgrad * (1.0 - actor_mask) + agrad * actor_mask
+    flat2, m2, v2 = adam(flat, m, v, step, grad, LR["ddpg"], MAX_GRAD_NORM["ddpg"])
+    return (flat2, m2, v2, aloss[None], closs[None])

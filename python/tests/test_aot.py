@@ -1,0 +1,73 @@
+"""AOT export contract: manifest consistency and HLO-text validity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_graph_table_covers_all_algos():
+    table = aot.graph_table()
+    for algo in M.LAYOUTS:
+        assert f"{algo}_forward" in table
+        assert f"{algo}_train" in table
+    assert "kmeans_assign" in table
+
+
+def test_manifest_matches_layouts(manifest):
+    for algo, lo in M.LAYOUTS.items():
+        assert manifest["algos"][algo]["n_params"] == lo.size
+    g = manifest["globals"]
+    assert g["window"] == M.WINDOW
+    assert g["features"] == M.FEATURES
+    assert g["n_actions"] == M.N_ACTIONS
+
+
+def test_manifest_arg_shapes_match_table(manifest):
+    table = aot.graph_table()
+    for name, (fn, arg_names, example, n_out) in table.items():
+        entry = manifest["graphs"][name]
+        assert entry["arg_names"] == arg_names
+        assert entry["arg_shapes"] == [list(a.shape) for a in example]
+        assert entry["n_outputs"] == n_out
+
+
+def test_init_params_files_match_sizes(manifest):
+    for algo, spec in manifest["algos"].items():
+        path = os.path.join(ART, f"{algo}_init.f32")
+        data = np.fromfile(path, dtype=np.float32)
+        assert len(data) == spec["n_params"]
+        assert np.all(np.isfinite(data))
+
+
+def test_hlo_text_files_parse_as_hlo(manifest):
+    for name, entry in manifest["graphs"].items():
+        path = os.path.join(ART, entry["file"])
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), f"{name} not HLO text"
+        # ENTRY computation present with a tuple root (return_tuple=True).
+        assert "ENTRY" in text
+
+
+def test_hlo_text_is_deterministic(tmp_path):
+    # Re-lowering the same graph yields identical text (reproducible builds).
+    table = aot.graph_table()
+    fn, _, example, _ = table["dqn_forward"]
+    a = aot.to_hlo_text(fn, example)
+    b = aot.to_hlo_text(fn, example)
+    assert a == b

@@ -1,0 +1,88 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; every kernel must match its
+oracle to float32 tolerance across the sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_dense, kmeans_assign, lstm_cell, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=48)
+small = st.floats(min_value=-3.0, max_value=3.0, allow_nan=False, width=32)
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, act=st.sampled_from(["relu", "tanh", "linear"]), seed=st.integers(0, 2**31 - 1))
+def test_fused_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = arr(rng, m, k), arr(rng, k, n), arr(rng, n)
+    got = fused_dense(x, w, b, act)
+    want = ref.dense_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 40, 128), (64, 128, 128), (64, 400, 256), (2, 402, 384)])
+def test_fused_dense_tiled_and_single_block_paths(m, k, n):
+    rng = np.random.default_rng(1)
+    x, w, b = arr(rng, m, k), arr(rng, k, n), arr(rng, n)
+    np.testing.assert_allclose(fused_dense(x, w, b), ref.dense_ref(x, w, b), atol=1e-3, rtol=1e-4)
+
+
+def test_fused_dense_rejects_unknown_activation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        fused_dense(arr(rng, 2, 3), arr(rng, 3, 4), arr(rng, 4), "gelu")
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 16), i=st.integers(1, 40), h=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_lstm_cell_matches_ref(b, i, h, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, b, i)
+    hh = arr(rng, b, h, scale=0.5)
+    cc = arr(rng, b, h, scale=0.5)
+    wih = arr(rng, i, 4 * h, scale=0.2)
+    whh = arr(rng, h, 4 * h, scale=0.2)
+    bih = arr(rng, 4 * h, scale=0.1)
+    bhh = arr(rng, 4 * h, scale=0.1)
+    h1, c1 = lstm_cell(x, hh, cc, wih, whh, bih, bhh)
+    h2, c2 = ref.lstm_cell_ref(x, hh, cc, wih, whh, bih, bhh)
+    np.testing.assert_allclose(h1, h2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(c1, c2, atol=1e-5, rtol=1e-5)
+
+
+def test_lstm_cell_state_bounded():
+    # |h| <= 1 by construction (o * tanh(c)).
+    rng = np.random.default_rng(3)
+    h, c = lstm_cell(
+        arr(rng, 4, 8, scale=10), arr(rng, 4, 16), arr(rng, 4, 16),
+        arr(rng, 8, 64, scale=5), arr(rng, 16, 64, scale=5),
+        arr(rng, 64), arr(rng, 64),
+    )
+    assert np.all(np.abs(h) <= 1.0 + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 200), k=st.integers(1, 32), d=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_kmeans_assign_matches_ref(n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    pts, cen = arr(rng, n, d), arr(rng, k, d)
+    np.testing.assert_array_equal(kmeans_assign(pts, cen), ref.kmeans_assign_ref(pts, cen))
+
+
+def test_kmeans_assign_identifies_own_centroid():
+    # Distinct centroids: each point nearest to itself.
+    cen = jnp.eye(8, 8, dtype=jnp.float32) * 5.0
+    got = kmeans_assign(cen, cen)
+    np.testing.assert_array_equal(got, np.arange(8, dtype=np.float32))

@@ -1,0 +1,154 @@
+"""L2 correctness: layouts, forwards, training-step behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def flat(algo, seed=0):
+    return jnp.asarray(M.init_params(algo, seed))
+
+
+class TestLayout:
+    def test_sizes_are_consistent(self):
+        for algo, lo in M.LAYOUTS.items():
+            total = sum(int(np.prod(s)) if s else 1 for _, s in lo.entries)
+            assert lo.size == total, algo
+
+    def test_unflatten_roundtrip(self):
+        lo = M.LAYOUTS["dqn"]
+        v = jnp.arange(lo.size, dtype=jnp.float32)
+        d = lo.unflatten(v)
+        # Reassemble in entry order and compare.
+        back = jnp.concatenate([d[name].reshape(-1) for name, _ in lo.entries])
+        np.testing.assert_array_equal(back, v)
+
+    def test_mask_selects_prefix(self):
+        lo = M.LAYOUTS["ddpg"]
+        am = np.asarray(lo.mask("actor"))
+        cm = np.asarray(lo.mask("critic"))
+        assert am.sum() + cm.sum() == lo.size
+        assert np.all(am * cm == 0)
+
+    def test_forget_gate_bias_initialized(self):
+        lo = M.LAYOUTS["rppo"]
+        flat_p = M.init_params("rppo")
+        d = lo.unflatten(jnp.asarray(flat_p))
+        bih = np.asarray(d["pi_lstm.bih"])
+        h = len(bih) // 4
+        assert np.all(bih[h:2 * h] == 1.0)
+
+
+class TestForward:
+    @pytest.mark.parametrize("algo,n_out", [("dqn", 5), ("drqn", 5), ("ppo", 5), ("rppo", 5)])
+    def test_heads_have_action_arity(self, algo, n_out):
+        fwd = getattr(M, f"{algo}_forward")
+        obs = jnp.zeros(M.OBS) if algo in ("dqn", "ppo") else jnp.zeros((M.WINDOW, M.FEATURES))
+        out = fwd(flat(algo), obs)
+        assert out[0].shape == (n_out,)
+
+    def test_ddpg_actor_bounded(self):
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            obs = jnp.asarray(rng.standard_normal(M.OBS).astype(np.float32) * 3)
+            (a,) = M.ddpg_forward(flat("ddpg"), obs)
+            assert np.all(np.abs(np.asarray(a)) <= 2.0 + 1e-6)
+
+    def test_forward_deterministic(self):
+        obs = jnp.full(M.OBS, 0.3)
+        q1 = M.dqn_forward(flat("dqn"), obs)[0]
+        q2 = M.dqn_forward(flat("dqn"), obs)[0]
+        np.testing.assert_array_equal(q1, q2)
+
+    def test_pallas_forward_matches_ref_forward(self):
+        # The inference path (Pallas) and training path (ref) must agree.
+        p = flat("dqn")
+        rng = np.random.default_rng(7)
+        obs = jnp.asarray(rng.standard_normal(M.OBS).astype(np.float32))
+        q_pallas = M.dqn_forward(p, obs)[0]
+        q_ref = M._dqn_q(p, obs[None, :])[0]
+        np.testing.assert_allclose(q_pallas, q_ref, atol=1e-4, rtol=1e-4)
+
+    def test_rppo_pallas_vs_ref(self):
+        p = flat("rppo")
+        rng = np.random.default_rng(8)
+        obs = jnp.asarray(rng.standard_normal((M.WINDOW, M.FEATURES)).astype(np.float32))
+        logits_pl, value_pl = M.rppo_forward(p, obs)
+        logits_ref, value_ref = M._rppo_pi_vf(p, obs[None, :, :])
+        np.testing.assert_allclose(logits_pl, logits_ref[0], atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(value_pl[0], value_ref[0], atol=1e-4, rtol=1e-4)
+
+
+class TestTraining:
+    def _batch(self, algo, seed=0):
+        rng = np.random.default_rng(seed)
+        b = M.BATCH[algo]
+        if algo in ("dqn", "ppo", "ddpg"):
+            obs = rng.standard_normal((b, M.OBS)).astype(np.float32)
+        else:
+            obs = rng.standard_normal((b, M.WINDOW, M.FEATURES)).astype(np.float32)
+        return jnp.asarray(obs), rng
+
+    @pytest.mark.parametrize("algo", ["dqn", "drqn"])
+    def test_td_loss_decreases(self, algo):
+        obs, rng = self._batch(algo)
+        b = M.BATCH[algo]
+        act = jnp.asarray(rng.integers(0, 5, b).astype(np.float32))
+        rew = jnp.ones(b)
+        done = jnp.ones(b)  # terminal: fixed target
+        p = flat(algo)
+        t = p
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        train = getattr(M, f"{algo}_train")
+        losses = []
+        for step in range(1, 31):
+            p, m, v, loss = train(p, t, m, v, jnp.float32(step), obs, act, rew, obs, done)
+            losses.append(float(loss[0]))
+        assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+
+    @pytest.mark.parametrize("algo", ["ppo", "rppo"])
+    def test_ppo_surrogate_improves_good_action_prob(self, algo):
+        obs, rng = self._batch(algo)
+        b = M.BATCH[algo]
+        # Mixed actions; action 1 advantageous, others not. (A constant
+        # advantage vector would be zeroed by advantage normalization.)
+        act = jnp.asarray(rng.integers(0, 5, b).astype(np.float32))
+        adv = jnp.where(act == 1, 1.0, -1.0)
+        old_logp = jnp.full(b, -np.log(5.0))
+        ret = jnp.zeros(b)
+        p = flat(algo)
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        train = getattr(M, f"{algo}_train")
+        fwd = M._ppo_pi_vf if algo == "ppo" else M._rppo_pi_vf
+        before = jax.nn.softmax(fwd(p, obs)[0], axis=1)[:, 1].mean()
+        for step in range(1, 11):
+            p, m, v, _ = train(p, m, v, jnp.float32(step), obs, act, old_logp, adv, ret)
+        after = jax.nn.softmax(fwd(p, obs)[0], axis=1)[:, 1].mean()
+        assert after > before, (before, after)
+
+    def test_ddpg_updates_both_networks(self):
+        obs, rng = self._batch("ddpg")
+        b = M.BATCH["ddpg"]
+        act = jnp.asarray(rng.uniform(-2, 2, (b, 2)).astype(np.float32))
+        rew = jnp.ones(b)
+        done = jnp.zeros(b)
+        p = flat("ddpg")
+        out = M.ddpg_train(p, p, jnp.zeros_like(p), jnp.zeros_like(p), jnp.float32(1), obs, act, rew, obs, done)
+        delta = np.abs(np.asarray(out[0] - p))
+        lo = M.LAYOUTS["ddpg"]
+        am = np.asarray(lo.mask("actor"))
+        assert delta[am > 0].sum() > 0
+        assert delta[am == 0].sum() > 0
+
+    def test_adam_grad_clipping(self):
+        g = jnp.full(10, 1e6)
+        p, m, v = M.adam(jnp.zeros(10), jnp.zeros(10), jnp.zeros(10), jnp.float32(1), g, 0.001, 1.0)
+        # Clipped to norm 1 -> bounded first step.
+        assert np.all(np.abs(np.asarray(p)) < 0.01)

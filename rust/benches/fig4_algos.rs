@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig. 4 — five DRL algorithms x two rewards, sim + real.
+use sparta::config::Paths;
+use sparta::coordinator::RewardKind;
+use sparta::experiments::{fig4, train_pipeline, Scale, SpartaCtx};
+use sparta::net::Testbed;
+
+fn main() {
+    let scale = Scale::by_name(&std::env::var("SPARTA_BENCH_SCALE").unwrap_or_default());
+    let t0 = std::time::Instant::now();
+    let ctx = SpartaCtx::load(Paths::resolve()).expect("run `make artifacts` first");
+    let tb = Testbed::chameleon();
+    for reward in [RewardKind::FairnessEfficiency, RewardKind::ThroughputEnergy] {
+        // Ensure weights exist for every algorithm under this reward.
+        for algo in sparta::agents::ALGOS {
+            let name = SpartaCtx::weight_name(algo, reward);
+            if !ctx.weight_store().exists(&name) {
+                eprintln!("training {name}...");
+                train_pipeline(&ctx, algo, reward, &tb, scale, 42).expect("train");
+            }
+        }
+        let cells = fig4::run(&ctx, reward, &sparta::agents::ALGOS, scale, 42).expect("fig4");
+        fig4::print(&cells);
+    }
+    println!("\n[bench fig4_algos: {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 6 — six methods x three testbeds (headline).
+use sparta::config::Paths;
+use sparta::experiments::{fig6, Scale, SpartaCtx};
+use sparta::net::Testbed;
+
+fn main() {
+    let scale = Scale::by_name(&std::env::var("SPARTA_BENCH_SCALE").unwrap_or_default());
+    let t0 = std::time::Instant::now();
+    let ctx = SpartaCtx::load(Paths::resolve()).expect("run `make artifacts` first");
+    let cells = fig6::run(&ctx, &Testbed::all(), scale, 42)
+        .expect("fig6 (train SPARTA first: `sparta train-all`)");
+    fig6::print(&cells);
+    let (thr, en) = fig6::headline(&cells);
+    println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");
+    println!("(paper: up to +25% throughput, up to -40% energy)");
+    println!("\n[bench fig6_testbeds: {:.1}s]", t0.elapsed().as_secs_f64());
+}

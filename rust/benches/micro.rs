@@ -1,0 +1,88 @@
+//! Microbenchmarks of the hot paths: simulator tick rate, HLO inference
+//! latency per algorithm, k-means assignment (Rust scalar vs AOT Pallas
+//! kernel), and the full MI control-loop step.
+use sparta::agents;
+use sparta::config::Paths;
+use sparta::emulator::KMeans;
+use sparta::experiments::SpartaCtx;
+use sparta::net::{background::Background, NetworkSim, Testbed};
+use sparta::telemetry::Table;
+use sparta::util::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let mut table = Table::new(&["benchmark", "per-op", "ops/s"]);
+    let fmt = |s: f64| {
+        if s < 1e-6 {
+            format!("{:.0} ns", s * 1e9)
+        } else if s < 1e-3 {
+            format!("{:.1} us", s * 1e6)
+        } else {
+            format!("{:.2} ms", s * 1e3)
+        }
+    };
+
+    // Simulator: one MI (20 ticks) with a 16x16-stream flow.
+    let mut sim = NetworkSim::new(Testbed::chameleon(), 1)
+        .with_background(Background::regime("medium", 10.0));
+    sim.add_flow(16, 16, None);
+    for _ in 0..10 {
+        sim.run_mi(1.0);
+    }
+    let s = bench(200, || {
+        sim.run_mi(1.0);
+    });
+    table.row(vec!["net sim MI (256 streams)".into(), fmt(s), format!("{:.0}", 1.0 / s)]);
+
+    // k-means assignment: Rust scalar.
+    let mut rng = Rng::new(3);
+    let (n, k, d) = (1024usize, 64usize, 6usize);
+    let points: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+    let centroids: Vec<f32> = (0..k * d).map(|_| rng.f32()).collect();
+    let km = KMeans { centroids: centroids.clone(), k, dim: d, assignments: vec![] };
+    let s = bench(200, || {
+        for i in 0..n {
+            std::hint::black_box(km.assign(&points[i * d..(i + 1) * d]));
+        }
+    });
+    table.row(vec![format!("kmeans assign {n} pts (rust)"), fmt(s), format!("{:.0}", 1.0 / s)]);
+
+    // HLO paths (need artifacts).
+    match SpartaCtx::load(Paths::resolve()) {
+        Err(e) => eprintln!("skipping HLO benches: {e}"),
+        Ok(ctx) => {
+            let exe = ctx.runtime.compile("kmeans_assign").unwrap();
+            let s = bench(100, || {
+                std::hint::black_box(exe.call(&[&points, &centroids]).unwrap());
+            });
+            table.row(vec![format!("kmeans assign {n} pts (pallas HLO)"), fmt(s), format!("{:.0}", 1.0 / s)]);
+
+            for algo in agents::ALGOS {
+                let mut agent = agents::make_agent(&ctx.runtime, algo, 7, None).unwrap();
+                let state_len = ctx
+                    .runtime
+                    .compile(&format!("{algo}_forward"))
+                    .unwrap()
+                    .spec
+                    .arg_len(1);
+                let state = vec![0.1f32; state_len];
+                for _ in 0..10 {
+                    agent.act(&state, false);
+                }
+                let s = bench(200, || {
+                    std::hint::black_box(agent.act(&state, false));
+                });
+                table.row(vec![format!("{algo} inference"), fmt(s), format!("{:.0}", 1.0 / s)]);
+            }
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,167 @@
+//! DDPG: continuous-control actor-critic (appendix Table 4).
+//!
+//! The actor emits (x₁, x₂) ∈ [−2, 2]²; Gaussian exploration noise is added
+//! in Rust and the pair is floored/capped onto the paper's five discrete
+//! actions (§3.3.2). Soft target updates (τ = 0.005) are flat-vector lerps.
+
+use super::replay::{Replay, Stored};
+use super::{init_params, timed_call, DrlAgent};
+use crate::coordinator::ParamBounds;
+use crate::runtime::{Executable, Runtime};
+use crate::util::Rng;
+use anyhow::Result;
+
+const TAU: f32 = 0.005;
+const BUFFER: usize = 100_000;
+const LEARN_START: usize = 100; // Table 4: learning starts
+const TRAIN_FREQ: u64 = 1; // Table 4: train frequency 1
+/// Exploration noise std-dev (decayed multiplicatively per step).
+const NOISE_START: f64 = 0.8;
+const NOISE_END: f64 = 0.05;
+const NOISE_DECAY: f64 = 0.999;
+
+/// DDPG agent core.
+pub struct DdpgAgent {
+    forward: Executable,
+    train: Executable,
+    params: Vec<f32>,
+    tparams: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    adam_step: f32,
+    batch: usize,
+    replay: Replay,
+    /// Continuous action actually taken, awaiting observe().
+    pending_cont: [f32; 2],
+    noise: f64,
+    rng: Rng,
+    env_steps: u64,
+    train_steps: u64,
+    xla_s: f64,
+    state_len: usize,
+    pub learning: bool,
+}
+
+impl DdpgAgent {
+    pub fn new(runtime: &Runtime, seed: u64) -> Result<DdpgAgent> {
+        let forward = runtime.compile("ddpg_forward")?;
+        let train = runtime.compile("ddpg_train")?;
+        let params = init_params(runtime, "ddpg")?;
+        let batch = runtime.manifest.algo("ddpg")?.hparam_or("batch", 64.0) as usize;
+        let state_len = forward.spec.arg_len(1);
+        let n = params.len();
+        Ok(DdpgAgent {
+            forward,
+            train,
+            tparams: params.clone(),
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            adam_step: 0.0,
+            params,
+            batch,
+            replay: Replay::new(BUFFER),
+            pending_cont: [0.0, 0.0],
+            noise: NOISE_START,
+            rng: Rng::new(seed),
+            env_steps: 0,
+            train_steps: 0,
+            xla_s: 0.0,
+            state_len,
+            learning: true,
+        })
+    }
+
+    fn actor(&mut self, state: &[f32]) -> [f32; 2] {
+        let out = timed_call(&self.forward, &[&self.params, state], &mut self.xla_s)
+            .expect("forward execution failed");
+        let a = &out[0];
+        [a[0], a[1]]
+    }
+
+    fn train_step(&mut self) {
+        let b = self.replay.sample_batch(self.batch, self.state_len, &mut self.rng);
+        self.adam_step += 1.0;
+        let step = [self.adam_step];
+        let out = timed_call(
+            &self.train,
+            &[
+                &self.params,
+                &self.tparams,
+                &self.m,
+                &self.v,
+                &step,
+                &b.obs,
+                &b.cont,
+                &b.rew,
+                &b.next_obs,
+                &b.done,
+            ],
+            &mut self.xla_s,
+        )
+        .expect("train execution failed");
+        let mut it = out.into_iter();
+        self.params = it.next().unwrap();
+        self.m = it.next().unwrap();
+        self.v = it.next().unwrap();
+        self.train_steps += 1;
+        // Soft target update.
+        for (t, p) in self.tparams.iter_mut().zip(&self.params) {
+            *t = TAU * p + (1.0 - TAU) * *t;
+        }
+    }
+}
+
+impl DrlAgent for DdpgAgent {
+    fn name(&self) -> &str {
+        "ddpg"
+    }
+
+    fn act(&mut self, state: &[f32], explore: bool) -> usize {
+        let mut a = self.actor(state);
+        if explore {
+            a[0] = (a[0] as f64 + self.rng.normal_ms(0.0, self.noise * 2.0)) as f32;
+            a[1] = (a[1] as f64 + self.rng.normal_ms(0.0, self.noise * 2.0)) as f32;
+        }
+        a[0] = a[0].clamp(-2.0, 2.0);
+        a[1] = a[1].clamp(-2.0, 2.0);
+        self.pending_cont = a;
+        ParamBounds::continuous_to_action(a[0], a[1])
+    }
+
+    fn observe(&mut self, state: &[f32], action: usize, reward: f64, next_state: &[f32], done: bool) {
+        if !self.learning {
+            return;
+        }
+        self.replay.push(Stored {
+            state: state.to_vec(),
+            action,
+            cont: self.pending_cont,
+            reward: reward as f32,
+            next_state: next_state.to_vec(),
+            done,
+        });
+        self.env_steps += 1;
+        self.noise = (self.noise * NOISE_DECAY).max(NOISE_END);
+        if self.replay.len() >= LEARN_START && self.env_steps % TRAIN_FREQ == 0 {
+            self.train_step();
+        }
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn set_params(&mut self, params: Vec<f32>) {
+        assert_eq!(params.len(), self.params.len());
+        self.tparams.copy_from_slice(&params);
+        self.params = params;
+    }
+
+    fn train_steps(&self) -> u64 {
+        self.train_steps
+    }
+
+    fn xla_seconds(&self) -> f64 {
+        self.xla_s
+    }
+}

@@ -1,0 +1,98 @@
+//! The five DRL agents (DQN, DRQN, PPO, R_PPO, DDPG).
+//!
+//! Every agent executes its policy network and its Adam training step as
+//! AOT-compiled HLO through the PJRT runtime — no Python anywhere. The
+//! algorithm-side logic that naturally lives on the host stays in Rust:
+//! replay buffers, GAE, ε-greedy/noise exploration, target-network copies
+//! and soft updates, and rollout bookkeeping.
+//!
+//! DQN/DRQN share [`td::TdAgent`] (TD(0) with a frozen target network);
+//! PPO/R_PPO share [`pg::PgAgent`] (clipped-surrogate policy gradient);
+//! DDPG has its own actor-critic flow in [`ddpg::DdpgAgent`].
+
+pub mod ddpg;
+pub mod pg;
+pub mod replay;
+pub mod rollout;
+pub mod td;
+pub mod wrapper;
+
+pub use ddpg::DdpgAgent;
+pub use pg::PgAgent;
+pub use replay::Replay;
+pub use rollout::Rollout;
+pub use td::TdAgent;
+pub use wrapper::DrlOptimizer;
+
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+
+/// Common interface of the learning cores (distinct from
+/// [`crate::coordinator::Optimizer`], which adds the (cc, p) mapping —
+/// see [`wrapper::DrlOptimizer`]).
+pub trait DrlAgent {
+    fn name(&self) -> &str;
+
+    /// Select an action for `state`; `explore` enables ε/noise exploration.
+    fn act(&mut self, state: &[f32], explore: bool) -> usize;
+
+    /// Record a transition and (depending on the algorithm's schedule) run
+    /// one or more HLO training steps.
+    fn observe(&mut self, state: &[f32], action: usize, reward: f64, next_state: &[f32], done: bool);
+
+    /// Flat parameter vector (for persistence).
+    fn params(&self) -> &[f32];
+
+    /// Replace the parameter vector (e.g. with trained weights).
+    fn set_params(&mut self, params: Vec<f32>);
+
+    /// Number of HLO train-step executions so far.
+    fn train_steps(&self) -> u64;
+
+    /// Cumulative wall-clock seconds spent inside HLO executions (used for
+    /// the Table-1 "GPU%" analogue — the XLA share of process time).
+    fn xla_seconds(&self) -> f64;
+}
+
+/// Algorithm names understood by [`make_agent`].
+pub const ALGOS: [&str; 5] = ["dqn", "drqn", "ppo", "rppo", "ddpg"];
+
+/// Construct an agent core by algorithm name, with freshly-initialized
+/// parameters from the artifacts (or `weights` if provided).
+pub fn make_agent(
+    runtime: &Runtime,
+    algo: &str,
+    seed: u64,
+    weights: Option<Vec<f32>>,
+) -> Result<Box<dyn DrlAgent>> {
+    let mut agent: Box<dyn DrlAgent> = match algo {
+        "dqn" => Box::new(TdAgent::new(runtime, td::TdConfig::dqn(), seed)?),
+        "drqn" => Box::new(TdAgent::new(runtime, td::TdConfig::drqn(), seed)?),
+        "ppo" => Box::new(PgAgent::new(runtime, "ppo", seed)?),
+        "rppo" => Box::new(PgAgent::new(runtime, "rppo", seed)?),
+        "ddpg" => Box::new(DdpgAgent::new(runtime, seed)?),
+        other => return Err(anyhow!("unknown algorithm '{other}' (expected one of {ALGOS:?})")),
+    };
+    if let Some(w) = weights {
+        agent.set_params(w);
+    }
+    Ok(agent)
+}
+
+/// Load an algorithm's freshly-initialized parameters from the artifacts.
+pub fn init_params(runtime: &Runtime, algo: &str) -> Result<Vec<f32>> {
+    let spec = runtime.manifest.algo(algo)?;
+    crate::runtime::weights::load_f32(&runtime.manifest.init_params_path(algo), spec.n_params)
+}
+
+/// Timed HLO call helper shared by the agent implementations.
+pub(crate) fn timed_call(
+    exe: &crate::runtime::Executable,
+    args: &[&[f32]],
+    acc_s: &mut f64,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let t0 = std::time::Instant::now();
+    let out = exe.call(args)?;
+    *acc_s += t0.elapsed().as_secs_f64();
+    Ok(out)
+}

@@ -1,0 +1,134 @@
+//! Experience replay buffer for the off-policy agents.
+
+use crate::util::Rng;
+
+/// One stored transition (flattened states).
+#[derive(Debug, Clone)]
+pub struct Stored {
+    pub state: Vec<f32>,
+    /// Discrete action index (TD agents) — DDPG stores the continuous pair
+    /// separately in `cont`.
+    pub action: usize,
+    pub cont: [f32; 2],
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    pub done: bool,
+}
+
+/// Ring-buffer replay memory with uniform sampling.
+#[derive(Debug)]
+pub struct Replay {
+    buf: Vec<Stored>,
+    capacity: usize,
+    head: usize,
+}
+
+impl Replay {
+    pub fn new(capacity: usize) -> Replay {
+        assert!(capacity > 0);
+        Replay { buf: Vec::with_capacity(capacity.min(1 << 20)), capacity, head: 0 }
+    }
+
+    pub fn push(&mut self, t: Stored) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Sample a minibatch (with replacement when the buffer is small) into
+    /// flat column arrays ready for the HLO train step.
+    pub fn sample_batch(&self, batch: usize, state_len: usize, rng: &mut Rng) -> Batch {
+        let mut b = Batch::zeros(batch, state_len);
+        for i in 0..batch {
+            let t = &self.buf[rng.below(self.buf.len())];
+            b.obs[i * state_len..(i + 1) * state_len].copy_from_slice(&t.state);
+            b.next_obs[i * state_len..(i + 1) * state_len].copy_from_slice(&t.next_state);
+            b.act[i] = t.action as f32;
+            b.cont[i * 2] = t.cont[0];
+            b.cont[i * 2 + 1] = t.cont[1];
+            b.rew[i] = t.reward;
+            b.done[i] = if t.done { 1.0 } else { 0.0 };
+        }
+        b
+    }
+}
+
+/// Column-major minibatch matching the training-graph argument layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub obs: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub cont: Vec<f32>,
+    pub rew: Vec<f32>,
+    pub done: Vec<f32>,
+}
+
+impl Batch {
+    fn zeros(batch: usize, state_len: usize) -> Batch {
+        Batch {
+            obs: vec![0.0; batch * state_len],
+            next_obs: vec![0.0; batch * state_len],
+            act: vec![0.0; batch],
+            cont: vec![0.0; batch * 2],
+            rew: vec![0.0; batch],
+            done: vec![0.0; batch],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stored(v: f32) -> Stored {
+        Stored {
+            state: vec![v; 4],
+            action: v as usize % 5,
+            cont: [v, -v],
+            reward: v,
+            next_state: vec![v + 1.0; 4],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = Replay::new(3);
+        for i in 0..5 {
+            r.push(stored(i as f32));
+        }
+        assert_eq!(r.len(), 3);
+        // Values 0 and 1 were overwritten by 3 and 4.
+        let rewards: Vec<f32> = r.buf.iter().map(|t| t.reward).collect();
+        assert!(rewards.contains(&2.0) && rewards.contains(&3.0) && rewards.contains(&4.0));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut r = Replay::new(100);
+        for i in 0..10 {
+            r.push(stored(i as f32));
+        }
+        let mut rng = Rng::new(1);
+        let b = r.sample_batch(8, 4, &mut rng);
+        assert_eq!(b.obs.len(), 32);
+        assert_eq!(b.act.len(), 8);
+        assert_eq!(b.cont.len(), 16);
+        // Sampled rows are coherent: next = state + 1.
+        for i in 0..8 {
+            assert_eq!(b.next_obs[i * 4], b.obs[i * 4] + 1.0);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! On-policy rollout buffer with Generalized Advantage Estimation.
+
+/// One on-policy step.
+#[derive(Debug, Clone)]
+pub struct RolloutStep {
+    pub state: Vec<f32>,
+    pub action: usize,
+    pub reward: f32,
+    pub value: f32,
+    pub logp: f32,
+    pub done: bool,
+}
+
+/// Fixed-horizon rollout buffer; finalized into GAE advantages/returns.
+#[derive(Debug, Default)]
+pub struct Rollout {
+    pub steps: Vec<RolloutStep>,
+}
+
+impl Rollout {
+    pub fn new() -> Rollout {
+        Rollout { steps: Vec::new() }
+    }
+
+    pub fn push(&mut self, s: RolloutStep) {
+        self.steps.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.steps.clear();
+    }
+
+    /// GAE(γ, λ): returns (advantages, returns) with `last_value`
+    /// bootstrapping the value beyond the horizon.
+    pub fn gae(&self, gamma: f32, lambda: f32, last_value: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = self.steps.len();
+        let mut adv = vec![0.0f32; n];
+        let mut gae = 0.0f32;
+        for i in (0..n).rev() {
+            let s = &self.steps[i];
+            let not_done = if s.done { 0.0 } else { 1.0 };
+            let next_v = if i + 1 < n {
+                // Value after a terminal step is 0 regardless of the stored value.
+                if s.done { 0.0 } else { self.steps[i + 1].value }
+            } else {
+                not_done * last_value
+            };
+            let delta = s.reward + gamma * next_v - s.value;
+            gae = delta + gamma * lambda * not_done * gae;
+            adv[i] = gae;
+        }
+        let ret: Vec<f32> = adv.iter().zip(&self.steps).map(|(a, s)| a + s.value).collect();
+        (adv, ret)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(reward: f32, value: f32, done: bool) -> RolloutStep {
+        RolloutStep { state: vec![0.0; 4], action: 0, reward, value, logp: -1.6, done }
+    }
+
+    #[test]
+    fn single_step_terminal() {
+        let mut r = Rollout::new();
+        r.push(step(1.0, 0.5, true));
+        let (adv, ret) = r.gae(0.99, 0.95, 42.0); // bootstrap ignored: done
+        assert!((adv[0] - (1.0 - 0.5)).abs() < 1e-6);
+        assert!((ret[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bootstrap_used_when_not_done() {
+        let mut r = Rollout::new();
+        r.push(step(0.0, 0.0, false));
+        let (adv, _) = r.gae(0.99, 0.95, 2.0);
+        assert!((adv[0] - 0.99 * 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_reward_gae_matches_closed_form() {
+        // With values = 0 and rewards = 1, adv[last] = 1, and each earlier
+        // step adds gamma*lambda discounting.
+        let mut r = Rollout::new();
+        for _ in 0..4 {
+            r.push(step(1.0, 0.0, false));
+        }
+        let (adv, ret) = r.gae(1.0, 1.0, 0.0);
+        assert!((adv[3] - 1.0).abs() < 1e-6);
+        assert!((adv[0] - 4.0).abs() < 1e-6);
+        assert_eq!(adv, ret);
+    }
+
+    #[test]
+    fn done_breaks_credit_assignment() {
+        let mut r = Rollout::new();
+        r.push(step(0.0, 0.0, false));
+        r.push(step(0.0, 0.0, true)); // episode boundary
+        r.push(step(100.0, 0.0, false));
+        let (adv, _) = r.gae(0.99, 0.95, 0.0);
+        // Step 0 must not see the 100 reward beyond the boundary.
+        assert!(adv[0].abs() < 1e-6, "adv0={}", adv[0]);
+        assert!((adv[2] - 100.0).abs() < 1e-6);
+    }
+}

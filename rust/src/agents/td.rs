@@ -1,0 +1,219 @@
+//! Temporal-difference agents: DQN and DRQN.
+//!
+//! Both optimize a Q-network against a frozen target network via the
+//! AOT-compiled `*_train` graph; they differ in architecture (handled
+//! entirely on the Python side) and in schedule constants (appendix
+//! Tables 2 and 6).
+
+use super::replay::{Replay, Stored};
+use super::{init_params, timed_call, DrlAgent};
+use crate::runtime::{Executable, Runtime};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Schedule constants distinguishing DQN from DRQN.
+#[derive(Debug, Clone)]
+pub struct TdConfig {
+    pub algo: &'static str,
+    pub buffer: usize,
+    pub batch: usize,
+    pub train_freq: u64,
+    pub learn_start: usize,
+    /// Hard target copy period in train steps (None = soft updates).
+    pub hard_update: Option<u64>,
+    /// Soft update (period, tau).
+    pub soft_update: Option<(u64, f32)>,
+    pub eps_start: f64,
+    pub eps_end: f64,
+    /// Multiplicative ε decay per environment step.
+    pub eps_decay: f64,
+}
+
+impl TdConfig {
+    /// Table 2: buffer 10000, batch 32, train freq 4, update interval 1000,
+    /// final ε 0.02.
+    pub fn dqn() -> TdConfig {
+        TdConfig {
+            algo: "dqn",
+            buffer: 10_000,
+            batch: 32,
+            train_freq: 4,
+            learn_start: 200,
+            hard_update: Some(1000),
+            soft_update: None,
+            eps_start: 1.0,
+            eps_end: 0.02,
+            eps_decay: 0.9995,
+        }
+    }
+
+    /// Table 6: ε 0.1 → 0.001 (decay 0.995), target update period 4 with
+    /// τ = 0.01; batch reduced 256 → 64 for the CPU budget (DESIGN.md §1).
+    pub fn drqn() -> TdConfig {
+        TdConfig {
+            algo: "drqn",
+            buffer: 100_000,
+            batch: 64,
+            train_freq: 4,
+            learn_start: 200,
+            hard_update: None,
+            soft_update: Some((4, 0.01)),
+            eps_start: 0.1,
+            eps_end: 0.001,
+            eps_decay: 0.995,
+        }
+    }
+}
+
+/// DQN / DRQN agent core.
+pub struct TdAgent {
+    cfg: TdConfig,
+    forward: Executable,
+    train: Executable,
+    params: Vec<f32>,
+    tparams: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    adam_step: f32,
+    epsilon: f64,
+    replay: Replay,
+    rng: Rng,
+    env_steps: u64,
+    train_steps: u64,
+    xla_s: f64,
+    state_len: usize,
+    /// When false (evaluation), observe() neither stores nor trains.
+    pub learning: bool,
+}
+
+impl TdAgent {
+    pub fn new(runtime: &Runtime, cfg: TdConfig, seed: u64) -> Result<TdAgent> {
+        let forward = runtime.compile(&format!("{}_forward", cfg.algo))?;
+        let train = runtime.compile(&format!("{}_train", cfg.algo))?;
+        let params = init_params(runtime, cfg.algo)?;
+        let state_len = forward.spec.arg_len(1);
+        let batch = runtime.manifest.algo(cfg.algo)?.hparam_or("batch", cfg.batch as f64) as usize;
+        let n = params.len();
+        Ok(TdAgent {
+            epsilon: cfg.eps_start,
+            replay: Replay::new(cfg.buffer),
+            cfg: TdConfig { batch, ..cfg },
+            forward,
+            train,
+            tparams: params.clone(),
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            adam_step: 0.0,
+            params,
+            rng: Rng::new(seed),
+            env_steps: 0,
+            train_steps: 0,
+            xla_s: 0.0,
+            state_len,
+            learning: true,
+        })
+    }
+
+    fn q_values(&mut self, state: &[f32]) -> Vec<f32> {
+        let out = timed_call(&self.forward, &[&self.params, state], &mut self.xla_s)
+            .expect("forward execution failed");
+        out.into_iter().next().unwrap()
+    }
+
+    fn train_step(&mut self) {
+        let b = self.replay.sample_batch(self.cfg.batch, self.state_len, &mut self.rng);
+        self.adam_step += 1.0;
+        let step = [self.adam_step];
+        let out = timed_call(
+            &self.train,
+            &[
+                &self.params,
+                &self.tparams,
+                &self.m,
+                &self.v,
+                &step,
+                &b.obs,
+                &b.act,
+                &b.rew,
+                &b.next_obs,
+                &b.done,
+            ],
+            &mut self.xla_s,
+        )
+        .expect("train execution failed");
+        let mut it = out.into_iter();
+        self.params = it.next().unwrap();
+        self.m = it.next().unwrap();
+        self.v = it.next().unwrap();
+        self.train_steps += 1;
+
+        // Target-network maintenance.
+        if let Some(period) = self.cfg.hard_update {
+            if self.train_steps % period == 0 {
+                self.tparams.copy_from_slice(&self.params);
+            }
+        }
+        if let Some((period, tau)) = self.cfg.soft_update {
+            if self.train_steps % period == 0 {
+                for (t, p) in self.tparams.iter_mut().zip(&self.params) {
+                    *t = tau * p + (1.0 - tau) * *t;
+                }
+            }
+        }
+    }
+}
+
+impl DrlAgent for TdAgent {
+    fn name(&self) -> &str {
+        self.cfg.algo
+    }
+
+    fn act(&mut self, state: &[f32], explore: bool) -> usize {
+        if explore && self.rng.chance(self.epsilon) {
+            return self.rng.below(crate::coordinator::N_ACTIONS);
+        }
+        let q = self.q_values(state);
+        q.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn observe(&mut self, state: &[f32], action: usize, reward: f64, next_state: &[f32], done: bool) {
+        if !self.learning {
+            return;
+        }
+        self.replay.push(Stored {
+            state: state.to_vec(),
+            action,
+            cont: [0.0, 0.0],
+            reward: reward as f32,
+            next_state: next_state.to_vec(),
+            done,
+        });
+        self.env_steps += 1;
+        self.epsilon = (self.epsilon * self.cfg.eps_decay).max(self.cfg.eps_end);
+        if self.replay.len() >= self.cfg.learn_start && self.env_steps % self.cfg.train_freq == 0 {
+            self.train_step();
+        }
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn set_params(&mut self, params: Vec<f32>) {
+        assert_eq!(params.len(), self.params.len());
+        self.tparams.copy_from_slice(&params);
+        self.params = params;
+    }
+
+    fn train_steps(&self) -> u64 {
+        self.train_steps
+    }
+
+    fn xla_seconds(&self) -> f64 {
+        self.xla_s
+    }
+}

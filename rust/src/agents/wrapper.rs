@@ -1,0 +1,127 @@
+//! Adapter from a [`DrlAgent`] learning core to the coordinator's
+//! [`Optimizer`] interface (the paper's five-action (cc, p) mapping).
+
+use super::DrlAgent;
+use crate::coordinator::{Decision, MiContext, Optimizer, ParamBounds};
+
+/// Wraps a DRL agent as a transfer-parameter optimizer.
+pub struct DrlOptimizer {
+    agent: Box<dyn DrlAgent>,
+    display_name: String,
+    /// Exploration on the transfer path (off for pure evaluation).
+    pub explore: bool,
+    /// Online learning on the transfer path (the paper's "online tuning").
+    pub online_learning: bool,
+    last_state: Vec<f32>,
+    last_action: Option<usize>,
+    start_cc: u32,
+    start_p: u32,
+    /// Consecutive MIs of an idle network with under-committed (cc, p) —
+    /// drives the paper's "resume threads when resources are available"
+    /// guardrail (§1, §5: agents pause *and resume* transfer threads).
+    idle_underuse: u32,
+}
+
+impl DrlOptimizer {
+    /// `display_name` lets SPARTA variants label themselves (e.g.
+    /// "sparta-fe" is the R_PPO core with the F&E reward).
+    pub fn new(agent: Box<dyn DrlAgent>, display_name: impl Into<String>) -> DrlOptimizer {
+        DrlOptimizer {
+            agent,
+            display_name: display_name.into(),
+            explore: false,
+            online_learning: false,
+            last_state: Vec::new(),
+            last_action: None,
+            start_cc: 0,
+            start_p: 0,
+            idle_underuse: 0,
+        }
+    }
+
+    pub fn exploring(mut self, on: bool) -> Self {
+        self.explore = on;
+        self
+    }
+
+    pub fn learning(mut self, on: bool) -> Self {
+        self.online_learning = on;
+        self
+    }
+
+    /// Override the initial (cc, p) (0 = use the bounds' default).
+    pub fn start_at(mut self, cc: u32, p: u32) -> Self {
+        self.start_cc = cc;
+        self.start_p = p;
+        self
+    }
+
+    pub fn agent(&self) -> &dyn DrlAgent {
+        self.agent.as_ref()
+    }
+
+    pub fn agent_mut(&mut self) -> &mut Box<dyn DrlAgent> {
+        &mut self.agent
+    }
+}
+
+impl Optimizer for DrlOptimizer {
+    fn name(&self) -> &str {
+        &self.display_name
+    }
+
+    fn start(&mut self, bounds: &ParamBounds) -> (u32, u32) {
+        self.last_action = None;
+        self.last_state.clear();
+        if self.start_cc > 0 && self.start_p > 0 {
+            (self.start_cc, self.start_p)
+        } else {
+            (bounds.cc0, bounds.p0)
+        }
+    }
+
+    fn decide(&mut self, ctx: &MiContext<'_>) -> Decision {
+        let mut action = self.agent.act(ctx.state, self.explore);
+
+        // Resume guardrail: a frozen policy can drive (cc, p) into the lower
+        // bound and then face a state it never saw offline (perfectly calm
+        // link), where a wrong argmax becomes absorbing. The paper's
+        // coordinator explicitly "resumes transfer threads when resources
+        // are available" — if the network has been loss-free and queue-free
+        // for several MIs while we hold fewer streams than the starting
+        // configuration, force an increase.
+        let ratio_calm = {
+            // newest feature row: [plr, gradient, ratio, cc, p]
+            let f = &ctx.state[ctx.state.len() - crate::coordinator::FEATURES..];
+            f[2] < 1.15
+        };
+        let underused = ctx.cc * ctx.p < ctx.bounds.cc0 * ctx.bounds.p0;
+        if ctx.obs.plr < 1e-4 && ratio_calm && underused {
+            self.idle_underuse += 1;
+        } else {
+            self.idle_underuse = 0;
+        }
+        if self.idle_underuse >= 3 && matches!(action, 0 | 2 | 4) {
+            action = 1; // +1/+1: resume capacity
+            self.idle_underuse = 0;
+        }
+
+        self.last_state = ctx.state.to_vec();
+        self.last_action = Some(action);
+        let (cc, p) = ctx.bounds.apply(ctx.cc, ctx.p, action);
+        Decision { cc, p, action: Some(action) }
+    }
+
+    fn learn(&mut self, reward: f64, next_state: &[f32], done: bool) {
+        if !self.online_learning {
+            return;
+        }
+        if let Some(action) = self.last_action.take() {
+            self.agent.observe(&self.last_state, action, reward, next_state, done);
+        }
+    }
+
+    fn is_learning(&self) -> bool {
+        self.online_learning
+    }
+}

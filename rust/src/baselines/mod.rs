@@ -1,0 +1,16 @@
+//! Baseline optimizers the paper compares against (§4).
+//!
+//! * [`StaticTool`] — rclone / escp: fixed (cc, p) = (4, 4) for the session.
+//! * [`FalconMp`] — Falcon_MP: online gradient-descent tuning of (cc, p)
+//!   from a baseline configuration, optimizing the same utility U(T, L).
+//! * [`TwoPhase`] — the 2-phase historical-model optimizer, deployed (as in
+//!   the paper) without historical logs: midpoint initialization plus a
+//!   coarse-then-hold search.
+
+pub mod falcon;
+pub mod static_tool;
+pub mod two_phase;
+
+pub use falcon::FalconMp;
+pub use static_tool::StaticTool;
+pub use two_phase::TwoPhase;

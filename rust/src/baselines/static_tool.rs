@@ -1,0 +1,78 @@
+//! Static-configuration transfer tools (rclone, escp).
+
+use crate::coordinator::{Decision, MiContext, Optimizer, ParamBounds};
+
+/// A tool that fixes (cc, p) for the whole session.
+#[derive(Debug, Clone)]
+pub struct StaticTool {
+    name: String,
+    cc: u32,
+    p: u32,
+}
+
+impl StaticTool {
+    /// rclone with its default (cc, p) = (4, 4).
+    pub fn rclone() -> StaticTool {
+        StaticTool { name: "rclone".into(), cc: 4, p: 4 }
+    }
+
+    /// escp with (cc, p) = (4, 4).
+    pub fn escp() -> StaticTool {
+        StaticTool { name: "escp".into(), cc: 4, p: 4 }
+    }
+
+    /// An efficient engine pinned at an arbitrary setting (used for sweeps).
+    pub fn efficient_static(cc: u32, p: u32) -> StaticTool {
+        StaticTool { name: format!("static({cc},{p})"), cc, p }
+    }
+}
+
+impl Optimizer for StaticTool {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn start(&mut self, bounds: &ParamBounds) -> (u32, u32) {
+        bounds.clamp(self.cc, self.p)
+    }
+
+    fn decide(&mut self, ctx: &MiContext<'_>) -> Decision {
+        let (cc, p) = ctx.bounds.clamp(self.cc, self.p);
+        Decision { cc, p, action: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Observation;
+
+    #[test]
+    fn never_moves() {
+        let mut t = StaticTool::rclone();
+        let bounds = ParamBounds::default();
+        assert_eq!(t.start(&bounds), (4, 4));
+        let obs = Observation {
+            throughput_gbps: 1.0,
+            plr: 0.5,
+            rtt_s: 0.03,
+            energy_j: 10.0,
+            cc: 4,
+            p: 4,
+            duration_s: 1.0,
+        };
+        let state = vec![0.0f32; 40];
+        let ctx = MiContext { state: &state, obs: &obs, cc: 4, p: 4, bounds: &bounds, mi_index: 9 };
+        let d = t.decide(&ctx);
+        assert_eq!((d.cc, d.p), (4, 4));
+        assert!(d.action.is_none());
+        assert!(!t.is_learning());
+    }
+
+    #[test]
+    fn clamped_into_bounds() {
+        let mut t = StaticTool::efficient_static(64, 64);
+        let bounds = ParamBounds::default();
+        assert_eq!(t.start(&bounds), (16, 16));
+    }
+}

@@ -1,0 +1,174 @@
+//! The 2-phase historical-model optimizer, deployed without historical logs.
+//!
+//! Nine & Kosar's two-phase model ([11] in the paper) normally mines
+//! historical transfer logs offline (phase 1) and refines online (phase 2).
+//! The paper's evaluation "did not have historical datasets in our testbed
+//! setup, so we initialized it from a midpoint range of concurrency and
+//! parallelism" — which is what this implementation reproduces: a short
+//! coarse probe over a midpoint-biased candidate set standing in for the
+//! offline model's suggestion, then hold-with-occasional-recheck.
+
+use crate::coordinator::reward::{utility, RewardConfig};
+use crate::coordinator::{Decision, MiContext, Optimizer, ParamBounds};
+
+/// Candidate probe offsets around the midpoint (phase-1 surrogate).
+const PROBE_OFFSETS: [(i32, i32); 5] = [(0, 0), (-2, -2), (2, 2), (-2, 2), (2, -2)];
+
+#[derive(Debug, Clone)]
+pub struct TwoPhase {
+    cfg: RewardConfig,
+    probe_mis: usize,
+    /// Probe candidates (cc, p) and their measured mean utilities.
+    candidates: Vec<(u32, u32)>,
+    scores: Vec<f64>,
+    current: usize,
+    acc: f64,
+    acc_n: usize,
+    /// Phase 2: index of the chosen setting; recheck countdown.
+    chosen: Option<usize>,
+    recheck_in: usize,
+}
+
+impl TwoPhase {
+    pub fn new() -> TwoPhase {
+        TwoPhase {
+            cfg: RewardConfig::default(),
+            probe_mis: 4,
+            candidates: Vec::new(),
+            scores: Vec::new(),
+            current: 0,
+            acc: 0.0,
+            acc_n: 0,
+            chosen: None,
+            recheck_in: 0,
+        }
+    }
+
+    fn midpoint(bounds: &ParamBounds) -> (u32, u32) {
+        ((bounds.cc_min + bounds.cc_max) / 2, (bounds.p_min + bounds.p_max) / 2)
+    }
+}
+
+impl Default for TwoPhase {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Optimizer for TwoPhase {
+    fn name(&self) -> &str {
+        "2-phase"
+    }
+
+    fn start(&mut self, bounds: &ParamBounds) -> (u32, u32) {
+        let (mc, mp) = Self::midpoint(bounds);
+        self.candidates = PROBE_OFFSETS
+            .iter()
+            .map(|&(dc, dp)| {
+                bounds.clamp(
+                    (mc as i64 + dc as i64).max(1) as u32,
+                    (mp as i64 + dp as i64).max(1) as u32,
+                )
+            })
+            .collect();
+        self.scores = vec![f64::MIN; self.candidates.len()];
+        self.current = 0;
+        self.chosen = None;
+        self.candidates[0]
+    }
+
+    fn decide(&mut self, ctx: &MiContext<'_>) -> Decision {
+        let u = utility(&self.cfg, ctx.obs.throughput_gbps, ctx.obs.plr, ctx.cc, ctx.p);
+        self.acc += u;
+        self.acc_n += 1;
+
+        if let Some(best) = self.chosen {
+            // Phase 2: hold, with an occasional re-probe of the runner-up.
+            self.recheck_in = self.recheck_in.saturating_sub(1);
+            if self.recheck_in == 0 {
+                self.chosen = None;
+                self.current = 0;
+                self.scores.fill(f64::MIN);
+                self.acc = 0.0;
+                self.acc_n = 0;
+                let (cc, p) = self.candidates[0];
+                return Decision { cc, p, action: None };
+            }
+            let (cc, p) = self.candidates[best];
+            return Decision { cc, p, action: None };
+        }
+
+        // Phase 1 surrogate: cycle through candidates, score each.
+        if self.acc_n >= self.probe_mis {
+            self.scores[self.current] = self.acc / self.acc_n as f64;
+            self.acc = 0.0;
+            self.acc_n = 0;
+            self.current += 1;
+            if self.current >= self.candidates.len() {
+                // All probed: choose the best and enter phase 2.
+                let best = self
+                    .scores
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                self.chosen = Some(best);
+                self.recheck_in = 120;
+                let (cc, p) = self.candidates[best];
+                return Decision { cc, p, action: None };
+            }
+        }
+        let (cc, p) = self.candidates[self.current];
+        Decision { cc, p, action: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Observation;
+
+    #[test]
+    fn starts_at_midpoint() {
+        let mut t = TwoPhase::new();
+        let (cc, p) = t.start(&ParamBounds::default());
+        assert_eq!((cc, p), (8, 8));
+    }
+
+    #[test]
+    fn settles_on_best_candidate() {
+        let mut t = TwoPhase::new();
+        let bounds = ParamBounds::default();
+        let (mut cc, mut p) = t.start(&bounds);
+        let state = vec![0.0f32; 40];
+        // Surface rewarding smaller stream counts: best candidate = (6, 6).
+        for mi in 0..60 {
+            let thr = 9.0 - 0.05 * ((cc * p) as f64 - 36.0).abs();
+            let obs = Observation {
+                throughput_gbps: thr.max(0.1),
+                plr: 0.0,
+                rtt_s: 0.03,
+                energy_j: 100.0,
+                cc,
+                p,
+                duration_s: 1.0,
+            };
+            let ctx = MiContext { state: &state, obs: &obs, cc, p, bounds: &bounds, mi_index: mi };
+            let d = t.decide(&ctx);
+            cc = d.cc;
+            p = d.p;
+        }
+        assert_eq!((cc, p), (6, 6), "cc={cc} p={p}");
+    }
+
+    #[test]
+    fn candidates_respect_bounds() {
+        let mut t = TwoPhase::new();
+        let bounds = ParamBounds { cc_min: 1, cc_max: 3, p_min: 1, p_max: 3, cc0: 2, p0: 2 };
+        t.start(&bounds);
+        for &(cc, p) in &t.candidates {
+            assert!(cc >= 1 && cc <= 3 && p >= 1 && p <= 3);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Run-time configuration: directory layout and experiment defaults.
+//!
+//! Everything is overridable from the CLI; environment variable
+//! `SPARTA_ROOT` relocates the whole tree (useful for tests and benches).
+
+use std::path::PathBuf;
+
+/// Directory layout of a SPARTA deployment.
+#[derive(Debug, Clone)]
+pub struct Paths {
+    /// AOT artifacts (HLO text + manifest + init params).
+    pub artifacts: PathBuf,
+    /// Mutable data: transition logs, trained weights, reports.
+    pub data: PathBuf,
+}
+
+impl Paths {
+    /// Resolve against `SPARTA_ROOT` (or the current directory).
+    pub fn resolve() -> Paths {
+        let root = std::env::var_os("SPARTA_ROOT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        Paths { artifacts: root.join("artifacts"), data: root.join("data") }
+    }
+
+    pub fn with_root(root: impl Into<PathBuf>) -> Paths {
+        let root = root.into();
+        Paths { artifacts: root.join("artifacts"), data: root.join("data") }
+    }
+
+    /// Trained-weights directory.
+    pub fn weights(&self) -> PathBuf {
+        self.data.join("weights")
+    }
+
+    /// Transition-log directory.
+    pub fn transitions(&self) -> PathBuf {
+        self.data.join("transitions")
+    }
+
+    /// Experiment-report directory.
+    pub fn reports(&self) -> PathBuf {
+        self.data.join("reports")
+    }
+}
+
+/// Experiment defaults shared by the CLI and the bench harness.
+#[derive(Debug, Clone)]
+pub struct Defaults {
+    /// Monitoring-interval length, seconds.
+    pub mi_s: f64,
+    /// State-window length n.
+    pub history: usize,
+    /// Default evaluation workload: files × bytes.
+    pub eval_files: usize,
+    pub eval_file_bytes: u64,
+    /// Trials per evaluation point (the paper repeats 5×).
+    pub trials: usize,
+}
+
+impl Default for Defaults {
+    fn default() -> Self {
+        Defaults {
+            mi_s: 1.0,
+            history: 8,
+            eval_files: 1000,
+            eval_file_bytes: 1 << 30,
+            trials: 5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_root_layout() {
+        let p = Paths::with_root("/tmp/x");
+        assert_eq!(p.artifacts, PathBuf::from("/tmp/x/artifacts"));
+        assert_eq!(p.weights(), PathBuf::from("/tmp/x/data/weights"));
+        assert_eq!(p.transitions(), PathBuf::from("/tmp/x/data/transitions"));
+    }
+
+    #[test]
+    fn defaults_match_paper_workload() {
+        let d = Defaults::default();
+        assert_eq!(d.eval_files, 1000);
+        assert_eq!(d.eval_file_bytes, 1 << 30);
+        assert_eq!(d.trials, 5);
+    }
+}

@@ -1,0 +1,118 @@
+//! The paper's five-action space over (cc, p), with parameter clipping.
+
+/// Discrete action index, 0..5 (§3.3.2 of the paper).
+pub type ActionId = usize;
+
+/// Number of discrete actions.
+pub const N_ACTIONS: usize = 5;
+
+/// (∆cc, ∆p) per action id: 0 = hold, 1 = +1/+1, 2 = −1/−1, 3 = +2/+2,
+/// 4 = −2/−2.
+pub const ACTIONS: [(i32, i32); N_ACTIONS] = [(0, 0), (1, 1), (-1, -1), (2, 2), (-2, -2)];
+
+/// Concurrency/parallelism bounds (Eq. 9); actions are clipped into them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamBounds {
+    pub cc_min: u32,
+    pub cc_max: u32,
+    pub p_min: u32,
+    pub p_max: u32,
+    /// Initial setting at transfer start (the paper uses a midpoint, e.g. (4,4)).
+    pub cc0: u32,
+    pub p0: u32,
+}
+
+impl Default for ParamBounds {
+    fn default() -> Self {
+        ParamBounds { cc_min: 1, cc_max: 16, p_min: 1, p_max: 16, cc0: 4, p0: 4 }
+    }
+}
+
+impl ParamBounds {
+    /// Apply an action id to (cc, p), clipping into bounds.
+    pub fn apply(&self, cc: u32, p: u32, action: ActionId) -> (u32, u32) {
+        let (dcc, dp) = ACTIONS[action];
+        let cc = (cc as i64 + dcc as i64).clamp(self.cc_min as i64, self.cc_max as i64) as u32;
+        let p = (p as i64 + dp as i64).clamp(self.p_min as i64, self.p_max as i64) as u32;
+        (cc, p)
+    }
+
+    /// Clamp an arbitrary (cc, p) into bounds (used by baselines).
+    pub fn clamp(&self, cc: u32, p: u32) -> (u32, u32) {
+        (cc.clamp(self.cc_min, self.cc_max), p.clamp(self.p_min, self.p_max))
+    }
+
+    /// Map DDPG's continuous actor output (x₁, x₂) ∈ [−2, 2]² onto the five
+    /// discrete actions by flooring/capping the mean delta (§3.3.2: the
+    /// continuous outputs "are then floored or capped to map them into one
+    /// of the five discrete actions").
+    pub fn continuous_to_action(x1: f32, x2: f32) -> ActionId {
+        let mean = (x1 + x2) / 2.0;
+        let delta = mean.round().clamp(-2.0, 2.0) as i32;
+        match delta {
+            0 => 0,
+            1 => 1,
+            -1 => 2,
+            2 => 3,
+            _ => 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actions_match_paper_table() {
+        assert_eq!(ACTIONS[0], (0, 0));
+        assert_eq!(ACTIONS[1], (1, 1));
+        assert_eq!(ACTIONS[2], (-1, -1));
+        assert_eq!(ACTIONS[3], (2, 2));
+        assert_eq!(ACTIONS[4], (-2, -2));
+    }
+
+    #[test]
+    fn apply_moves_and_clips() {
+        let b = ParamBounds::default();
+        assert_eq!(b.apply(4, 4, 1), (5, 5));
+        assert_eq!(b.apply(4, 4, 4), (2, 2));
+        assert_eq!(b.apply(1, 1, 2), (1, 1)); // clipped at min
+        assert_eq!(b.apply(16, 16, 3), (16, 16)); // clipped at max
+        assert_eq!(b.apply(15, 15, 3), (16, 16));
+    }
+
+    #[test]
+    fn clamp_bounds_arbitrary_values() {
+        let b = ParamBounds::default();
+        assert_eq!(b.clamp(0, 99), (1, 16));
+    }
+
+    #[test]
+    fn continuous_mapping_covers_all_actions() {
+        assert_eq!(ParamBounds::continuous_to_action(0.1, -0.1), 0);
+        assert_eq!(ParamBounds::continuous_to_action(1.0, 1.0), 1);
+        assert_eq!(ParamBounds::continuous_to_action(-1.0, -0.9), 2);
+        assert_eq!(ParamBounds::continuous_to_action(2.0, 1.9), 3);
+        assert_eq!(ParamBounds::continuous_to_action(-2.0, -2.0), 4);
+        // Saturation beyond the range maps to the extreme actions.
+        assert_eq!(ParamBounds::continuous_to_action(9.0, 9.0), 3);
+        assert_eq!(ParamBounds::continuous_to_action(-9.0, -9.0), 4);
+    }
+
+    #[test]
+    fn every_action_stays_in_bounds_property() {
+        // Hand-rolled property test: all (cc, p, action) combinations stay
+        // within bounds after apply().
+        let b = ParamBounds { cc_min: 1, cc_max: 12, p_min: 2, p_max: 9, cc0: 4, p0: 4 };
+        for cc in 1..=12 {
+            for p in 2..=9 {
+                for a in 0..N_ACTIONS {
+                    let (ncc, np) = b.apply(cc, p, a);
+                    assert!((b.cc_min..=b.cc_max).contains(&ncc));
+                    assert!((b.p_min..=b.p_max).contains(&np));
+                }
+            }
+        }
+    }
+}

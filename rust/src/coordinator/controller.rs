@@ -1,0 +1,499 @@
+//! The monitoring-interval control loop.
+//!
+//! A [`Controller`] owns one simulated testbed and any number of *lanes*
+//! (transfer applications): each lane couples a transfer job, an engine
+//! profile, an energy meter, a reward tracker and an [`Optimizer`]. Each MI
+//! the controller advances the shared network, updates every lane's state
+//! window, feeds rewards back to learning optimizers, and applies their
+//! (cc, p) decisions via pause/resume.
+
+use super::actions::ParamBounds;
+use super::reward::{RewardConfig, RewardKind, RewardTracker};
+use super::state::{FeatureWindow, Observation};
+use super::{Decision, MiContext, Optimizer};
+use crate::energy::EnergyMeter;
+use crate::net::background::Background;
+use crate::net::{FlowId, NetworkSim, Testbed};
+use crate::transfer::{EngineProfile, TransferJob};
+use crate::util::stats;
+
+/// Everything recorded about one lane during one monitoring interval.
+#[derive(Debug, Clone)]
+pub struct MiRecord {
+    pub mi: usize,
+    pub time_s: f64,
+    pub throughput_gbps: f64,
+    pub plr: f64,
+    pub rtt_s: f64,
+    pub energy_j: f64,
+    pub cc: u32,
+    pub p: u32,
+    /// Windowed objective metric (utility score / T-per-E).
+    pub metric: f64,
+    /// Shaped reward handed to the optimizer.
+    pub reward: f64,
+    /// Discrete action taken *at the end of* this MI (None for baselines
+    /// that set (cc, p) directly).
+    pub action: Option<usize>,
+    /// Flattened state window after ingesting this MI.
+    pub state: Vec<f32>,
+}
+
+/// Per-lane results of a run.
+#[derive(Debug, Clone)]
+pub struct LaneReport {
+    pub name: String,
+    pub records: Vec<MiRecord>,
+    pub completed: bool,
+    pub duration_s: f64,
+    pub total_energy_j: f64,
+    pub bytes_delivered: f64,
+}
+
+impl LaneReport {
+    /// Mean goodput over the lane's active MIs, Gbps.
+    pub fn avg_throughput_gbps(&self) -> f64 {
+        stats::mean(&self.records.iter().map(|r| r.throughput_gbps).collect::<Vec<_>>())
+    }
+
+    pub fn avg_plr(&self) -> f64 {
+        stats::mean(&self.records.iter().map(|r| r.plr).collect::<Vec<_>>())
+    }
+
+    pub fn total_reward(&self) -> f64 {
+        self.records.iter().map(|r| r.reward).sum()
+    }
+
+    /// Energy per delivered gigabyte, J/GB.
+    pub fn energy_per_gb(&self) -> f64 {
+        if self.bytes_delivered <= 0.0 {
+            return 0.0;
+        }
+        self.total_energy_j / (self.bytes_delivered / 1e9)
+    }
+
+    pub fn throughput_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.throughput_gbps).collect()
+    }
+}
+
+/// Results of a full run (all lanes).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub lanes: Vec<LaneReport>,
+    pub duration_s: f64,
+    /// Per-MI Jain's fairness index across lanes active in that MI.
+    pub jfi_series: Vec<f64>,
+}
+
+impl RunReport {
+    /// Convenience for single-lane runs.
+    pub fn lane(&self) -> &LaneReport {
+        &self.lanes[0]
+    }
+
+    pub fn avg_throughput_gbps(&self) -> f64 {
+        self.lane().avg_throughput_gbps()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.lanes.iter().map(|l| l.total_energy_j).sum()
+    }
+
+    pub fn avg_jfi(&self) -> f64 {
+        stats::mean(&self.jfi_series)
+    }
+}
+
+struct Lane {
+    flow: FlowId,
+    optimizer: Box<dyn Optimizer>,
+    job: TransferJob,
+    window: FeatureWindow,
+    reward: RewardTracker,
+    meter: EnergyMeter,
+    cc: u32,
+    p: u32,
+    has_pending_decision: bool,
+    records: Vec<MiRecord>,
+    done: bool,
+    done_at_s: f64,
+}
+
+/// Builder for [`Controller`].
+pub struct ControllerBuilder {
+    testbed: Testbed,
+    background: Option<Background>,
+    mi_s: f64,
+    bounds: ParamBounds,
+    reward_cfg: RewardConfig,
+    max_mis: usize,
+    seed: u64,
+    history: usize,
+    // Single-lane convenience state.
+    job: Option<TransferJob>,
+    reward_kind: RewardKind,
+    engine: EngineProfile,
+}
+
+impl ControllerBuilder {
+    pub fn background(mut self, bg: Background) -> Self {
+        self.background = Some(bg);
+        self
+    }
+
+    pub fn mi(mut self, seconds: f64) -> Self {
+        self.mi_s = seconds;
+        self
+    }
+
+    pub fn bounds(mut self, b: ParamBounds) -> Self {
+        self.bounds = b;
+        self
+    }
+
+    pub fn reward_cfg(mut self, c: RewardConfig) -> Self {
+        self.reward_cfg = c;
+        self
+    }
+
+    pub fn max_mis(mut self, n: usize) -> Self {
+        self.max_mis = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// State-window length n (MIs).
+    pub fn history(mut self, n: usize) -> Self {
+        self.history = n;
+        self
+    }
+
+    pub fn job(mut self, j: TransferJob) -> Self {
+        self.job = Some(j);
+        self
+    }
+
+    pub fn reward(mut self, k: RewardKind) -> Self {
+        self.reward_kind = k;
+        self
+    }
+
+    pub fn engine(mut self, e: EngineProfile) -> Self {
+        self.engine = e;
+        self
+    }
+
+    pub fn build(self) -> Controller {
+        let mut sim = NetworkSim::new(self.testbed.clone(), self.seed);
+        if let Some(bg) = self.background.clone() {
+            sim = sim.with_background(bg);
+        }
+        Controller {
+            sim,
+            testbed: self.testbed,
+            mi_s: self.mi_s,
+            bounds: self.bounds,
+            reward_cfg: self.reward_cfg,
+            max_mis: self.max_mis,
+            seed: self.seed,
+            history: self.history,
+            lanes: Vec::new(),
+            default_job: self.job,
+            default_reward: self.reward_kind,
+            default_engine: self.engine,
+        }
+    }
+}
+
+/// The MI control loop over one simulated testbed.
+pub struct Controller {
+    sim: NetworkSim,
+    testbed: Testbed,
+    mi_s: f64,
+    pub bounds: ParamBounds,
+    reward_cfg: RewardConfig,
+    max_mis: usize,
+    seed: u64,
+    history: usize,
+    lanes: Vec<Lane>,
+    default_job: Option<TransferJob>,
+    default_reward: RewardKind,
+    default_engine: EngineProfile,
+}
+
+impl Controller {
+    pub fn builder(testbed: Testbed) -> ControllerBuilder {
+        ControllerBuilder {
+            testbed,
+            background: None,
+            mi_s: 1.0,
+            bounds: ParamBounds::default(),
+            reward_cfg: RewardConfig::default(),
+            max_mis: 3000,
+            seed: 1,
+            history: 8,
+            job: None,
+            reward_kind: RewardKind::ThroughputEnergy,
+            engine: EngineProfile::efficient(),
+        }
+    }
+
+    /// Add a transfer lane; returns its index.
+    pub fn add_lane(
+        &mut self,
+        mut optimizer: Box<dyn Optimizer>,
+        job: TransferJob,
+        engine: EngineProfile,
+        reward_kind: RewardKind,
+    ) -> usize {
+        let (cc0, p0) = optimizer.start(&self.bounds);
+        let (cc0, p0) = self.bounds.clamp(cc0, p0);
+        let io = engine.task_io_gbps(self.testbed.task_io_gbps);
+        let flow = self.sim.add_flow(cc0, p0, Some(io));
+        let window = FeatureWindow::new(self.history, self.bounds.cc_max, self.bounds.p_max);
+        let meter_seed = self.seed.wrapping_mul(0x9E37).wrapping_add(self.lanes.len() as u64);
+        let lane = Lane {
+            flow,
+            optimizer,
+            job,
+            window,
+            reward: RewardTracker::new(reward_kind, self.reward_cfg.clone()),
+            meter: EnergyMeter::new(engine.power.clone(), meter_seed),
+            cc: cc0,
+            p: p0,
+            has_pending_decision: false,
+            records: Vec::new(),
+            done: false,
+            done_at_s: 0.0,
+        };
+        self.lanes.push(lane);
+        self.lanes.len() - 1
+    }
+
+    /// Single-lane convenience: add `optimizer` with the builder's default
+    /// job/engine/reward and run to completion.
+    pub fn run(&mut self, optimizer: Box<dyn Optimizer>, _seed: u64) -> RunReport {
+        let job = self.default_job.clone().expect("builder .job() not set");
+        let engine = self.default_engine.clone();
+        let kind = self.default_reward;
+        self.add_lane(optimizer, job, engine, kind);
+        self.run_all()
+    }
+
+    /// Run every lane until completion (or `max_mis`).
+    pub fn run_all(&mut self) -> RunReport {
+        let has_energy = self.testbed.has_energy_counters;
+        for mi in 0..self.max_mis {
+            if self.lanes.iter().all(|l| l.done) {
+                break;
+            }
+            // Cap demand of nearly-finished lanes so they don't overshoot.
+            for lane in &self.lanes {
+                if lane.done {
+                    self.sim.set_demand_cap(lane.flow, 0.0);
+                } else {
+                    let cap = lane.job.remaining_bytes() * 8.0 / self.mi_s / 1e9;
+                    self.sim.set_demand_cap(lane.flow, cap.max(0.05));
+                }
+            }
+            let metrics = self.sim.run_mi(self.mi_s);
+            let time_s = self.sim.time_s();
+            let mut decisions: Vec<Option<(usize, Decision)>> = Vec::new();
+            for (li, lane) in self.lanes.iter_mut().enumerate() {
+                if lane.done {
+                    decisions.push(None);
+                    continue;
+                }
+                let m = &metrics[lane.flow.0];
+                lane.job.advance(m.bytes_delivered);
+                let energy = if has_energy {
+                    lane.meter.record_mi(m.active_streams, m.throughput_gbps, m.duration_s)
+                } else {
+                    f64::NAN
+                };
+                let obs = Observation {
+                    throughput_gbps: m.throughput_gbps,
+                    plr: m.plr,
+                    rtt_s: m.rtt_s,
+                    energy_j: energy,
+                    cc: lane.cc,
+                    p: lane.p,
+                    duration_s: m.duration_s,
+                };
+                lane.window.push(&obs);
+                let out = lane.reward.update(&obs);
+                let done_now = lane.job.is_complete();
+                if lane.has_pending_decision {
+                    lane.optimizer.learn(out.reward, lane.window.state(), done_now);
+                }
+                let mut action = None;
+                if done_now {
+                    lane.done = true;
+                    lane.done_at_s = time_s;
+                    lane.has_pending_decision = false;
+                } else {
+                    let ctx = MiContext {
+                        state: lane.window.state(),
+                        obs: &obs,
+                        cc: lane.cc,
+                        p: lane.p,
+                        bounds: &self.bounds,
+                        mi_index: mi,
+                    };
+                    let d = lane.optimizer.decide(&ctx);
+                    action = d.action;
+                    decisions.push(Some((li, d)));
+                    lane.has_pending_decision = true;
+                }
+                if done_now {
+                    decisions.push(None);
+                }
+                lane.records.push(MiRecord {
+                    mi,
+                    time_s,
+                    throughput_gbps: m.throughput_gbps,
+                    plr: m.plr,
+                    rtt_s: m.rtt_s,
+                    energy_j: energy,
+                    cc: lane.cc,
+                    p: lane.p,
+                    metric: out.metric,
+                    reward: out.reward,
+                    action,
+                    state: lane.window.state().to_vec(),
+                });
+            }
+            // Apply decisions after all lanes observed this MI.
+            for d in decisions.into_iter().flatten() {
+                let (li, dec) = d;
+                let (cc, p) = self.bounds.clamp(dec.cc, dec.p);
+                let lane = &mut self.lanes[li];
+                if cc != lane.cc || p != lane.p {
+                    self.sim.set_cc_p(lane.flow, cc, p);
+                    lane.cc = cc;
+                    lane.p = p;
+                }
+            }
+        }
+        self.report()
+    }
+
+    fn report(&self) -> RunReport {
+        let mut lanes = Vec::new();
+        for lane in &self.lanes {
+            lanes.push(LaneReport {
+                name: lane.optimizer.name().to_string(),
+                records: lane.records.clone(),
+                completed: lane.done,
+                duration_s: if lane.done {
+                    lane.done_at_s
+                } else {
+                    self.sim.time_s()
+                },
+                total_energy_j: lane.meter.total_j(),
+                bytes_delivered: lane.job.delivered_bytes(),
+            });
+        }
+        // JFI per MI over lanes active at that MI.
+        let max_len = lanes.iter().map(|l| l.records.len()).max().unwrap_or(0);
+        let mut jfi_series = Vec::with_capacity(max_len);
+        for i in 0..max_len {
+            let thrs: Vec<f64> = lanes
+                .iter()
+                .filter_map(|l| l.records.get(i).map(|r| r.throughput_gbps))
+                .collect();
+            jfi_series.push(stats::jain_fairness(&thrs));
+        }
+        RunReport { lanes, duration_s: self.sim.time_s(), jfi_series }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::StaticTool;
+
+    fn quick_job() -> TransferJob {
+        // 8 x 256 MB — completes in tens of simulated seconds at Gbps rates.
+        TransferJob::files(8, 256 << 20)
+    }
+
+    #[test]
+    fn static_tool_completes_job() {
+        let mut ctl = Controller::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .job(quick_job())
+            .seed(3)
+            .build();
+        let report = ctl.run(Box::new(StaticTool::rclone()), 3);
+        let lane = report.lane();
+        assert!(lane.completed, "transfer did not complete");
+        assert!(lane.avg_throughput_gbps() > 1.0);
+        assert!(lane.total_energy_j > 0.0);
+        assert!((lane.bytes_delivered - 8.0 * (256u64 << 20) as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn cc_p_held_static_by_static_tool() {
+        let mut ctl = Controller::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .job(quick_job())
+            .build();
+        let report = ctl.run(Box::new(StaticTool::rclone()), 1);
+        for r in &report.lane().records {
+            assert_eq!((r.cc, r.p), (4, 4));
+        }
+    }
+
+    #[test]
+    fn fabric_reports_nan_energy() {
+        let mut ctl = Controller::builder(Testbed::fabric())
+            .background(Background::Idle)
+            .job(quick_job())
+            .build();
+        let report = ctl.run(Box::new(StaticTool::efficient_static(4, 4)), 1);
+        assert!(report.lane().records.iter().all(|r| r.energy_j.is_nan()));
+        assert_eq!(report.lane().total_energy_j, 0.0);
+    }
+
+    #[test]
+    fn two_lanes_share_and_both_finish() {
+        let mut ctl = Controller::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .max_mis(4000)
+            .build();
+        ctl.add_lane(
+            Box::new(StaticTool::efficient_static(4, 4)),
+            quick_job(),
+            EngineProfile::efficient(),
+            RewardKind::ThroughputEnergy,
+        );
+        ctl.add_lane(
+            Box::new(StaticTool::efficient_static(4, 4)),
+            quick_job(),
+            EngineProfile::efficient(),
+            RewardKind::ThroughputEnergy,
+        );
+        let report = ctl.run_all();
+        assert!(report.lanes.iter().all(|l| l.completed));
+        assert!(report.avg_jfi() > 0.8, "jfi={}", report.avg_jfi());
+    }
+
+    #[test]
+    fn report_durations_monotone_with_job_size() {
+        let run = |files: usize| {
+            let mut ctl = Controller::builder(Testbed::chameleon())
+                .background(Background::Idle)
+                .job(TransferJob::files(files, 256 << 20))
+                .seed(5)
+                .build();
+            ctl.run(Box::new(StaticTool::efficient_static(4, 4)), 5).lane().duration_s
+        };
+        assert!(run(16) > run(4));
+    }
+}

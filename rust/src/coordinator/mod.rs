@@ -1,0 +1,66 @@
+//! The SPARTA coordinator — the paper's system contribution.
+//!
+//! Each monitoring interval (MI) the coordinator:
+//! 1. collects end-host metrics from the network substrate (goodput, packet
+//!    loss rate, RTT) and the energy meter,
+//! 2. extracts the paper's state features (`plr`, `rtt_gradient`,
+//!    `rtt_ratio`, `cc`, `p`) into a sliding window of `n` observations,
+//! 3. asks the active [`Optimizer`] (a DRL agent or a baseline) for a
+//!    decision in the five-action space (∆cc, ∆p ∈ {0, ±1, ±2}),
+//! 4. applies it by pausing/resuming transfer threads, and
+//! 5. computes the F&E or T/E reward and feeds it back for learning.
+
+pub mod actions;
+pub mod controller;
+pub mod reward;
+pub mod state;
+
+pub use actions::{ActionId, ParamBounds, ACTIONS, N_ACTIONS};
+pub use controller::{Controller, ControllerBuilder, LaneReport, MiRecord, RunReport};
+pub use reward::{RewardConfig, RewardKind, RewardTracker};
+pub use state::{FeatureWindow, Observation, FEATURES};
+
+/// A (cc, p) decision returned by an optimizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    pub cc: u32,
+    pub p: u32,
+    /// The discrete action index that produced this decision, when the
+    /// optimizer uses the paper's five-action space (used for transition
+    /// logging and emulator training).
+    pub action: Option<ActionId>,
+}
+
+/// Everything an optimizer may inspect when deciding.
+pub struct MiContext<'a> {
+    /// Flattened feature window, length `window * FEATURES` (oldest first).
+    pub state: &'a [f32],
+    /// Latest raw observation.
+    pub obs: &'a Observation,
+    pub cc: u32,
+    pub p: u32,
+    pub bounds: &'a ParamBounds,
+    /// Monitoring-interval index within the run (0-based).
+    pub mi_index: usize,
+}
+
+/// A transfer-parameter optimizer: a DRL agent or a baseline tool policy.
+pub trait Optimizer {
+    fn name(&self) -> &str;
+
+    /// Initial (cc, p) at transfer start.
+    fn start(&mut self, bounds: &ParamBounds) -> (u32, u32);
+
+    /// Decide the next (cc, p) given the current state window.
+    fn decide(&mut self, ctx: &MiContext<'_>) -> Decision;
+
+    /// Reward feedback for the *previous* decision, with the resulting state.
+    /// Learning optimizers train here; static tools ignore it.
+    fn learn(&mut self, _reward: f64, _next_state: &[f32], _done: bool) {}
+
+    /// Whether this optimizer keeps adapting online (affects Table-1 style
+    /// accounting of online tuning energy).
+    fn is_learning(&self) -> bool {
+        false
+    }
+}

@@ -1,0 +1,264 @@
+//! Reward formulations (§3.2, §3.3.3 of the paper).
+//!
+//! Two objectives share one difference-based shaping function f(·):
+//!
+//! * **F&E (fairness & efficiency)** — utility U(T, L) = T / K^(cc·p) − T·L·B
+//!   (Eq. 3/10): rewards throughput, penalizes stream hoarding and loss.
+//! * **T/E (throughput-focused energy)** — R̄ = mean(T)·SC / max(E) over the
+//!   window (Eq. 13/14): throughput per unit energy.
+//!
+//! f(cur, prev) returns +x on improvement beyond ε, −y on regression beyond
+//! ε, else 0 (§3.3.3 "Difference-Based Reward Update").
+
+use super::state::Observation;
+use std::collections::VecDeque;
+
+/// Which objective the agent optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RewardKind {
+    /// Fairness & Efficiency (Eq. 4) — SPARTA-FE.
+    FairnessEfficiency,
+    /// Throughput-focused energy efficiency (Eq. 5) — SPARTA-T.
+    ThroughputEnergy,
+}
+
+impl RewardKind {
+    pub fn short(&self) -> &'static str {
+        match self {
+            RewardKind::FairnessEfficiency => "FE",
+            RewardKind::ThroughputEnergy => "TE",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<RewardKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "fe" | "f&e" | "fairness" => Some(RewardKind::FairnessEfficiency),
+            "te" | "t/e" | "energy" => Some(RewardKind::ThroughputEnergy),
+            _ => None,
+        }
+    }
+}
+
+/// Constants of the reward machinery.
+#[derive(Debug, Clone)]
+pub struct RewardConfig {
+    /// K in U = T/K^(cc·p): per-stream utility discount (> 1).
+    pub k: f64,
+    /// B in U: loss penalty weight.
+    pub b: f64,
+    /// SC scaling constant of the T/E metric.
+    pub sc: f64,
+    /// ε dead-band of the difference update, relative to |prev|.
+    pub epsilon: f64,
+    /// +x reward on improvement.
+    pub x: f64,
+    /// −y reward on regression (stored positive).
+    pub y: f64,
+    /// Averaging window n (MIs).
+    pub window: usize,
+}
+
+impl Default for RewardConfig {
+    fn default() -> Self {
+        // K = 1.02, B = 25 reproduce the paper's §3.4 example: at
+        // (cc, p) = (7, 7), T = 8.32 Gbps, L = 0 the utility score is ≈ 3.0.
+        RewardConfig { k: 1.02, b: 25.0, sc: 10.0, epsilon: 0.03, x: 1.0, y: 1.0, window: 4 }
+    }
+}
+
+/// The paper's utility function U(T, L) (Eq. 3/10).
+pub fn utility(cfg: &RewardConfig, throughput_gbps: f64, plr: f64, cc: u32, p: u32) -> f64 {
+    let n_streams = (cc as f64) * (p as f64);
+    throughput_gbps / cfg.k.powf(n_streams) - throughput_gbps * plr * cfg.b
+}
+
+/// Difference-based reward shaping f(cur, prev) (§3.3.3).
+pub fn diff_reward(cfg: &RewardConfig, cur: f64, prev: f64) -> f64 {
+    let scale = prev.abs().max(1e-6);
+    let delta = (cur - prev) / scale;
+    if delta > cfg.epsilon {
+        cfg.x
+    } else if delta < -cfg.epsilon {
+        -cfg.y
+    } else {
+        0.0
+    }
+}
+
+/// Output of one reward update.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RewardOut {
+    /// The windowed objective metric (Ū_t or R̄_t) — the "utility score"
+    /// that transition logs record.
+    pub metric: f64,
+    /// The shaped reward r_t handed to the agent.
+    pub reward: f64,
+}
+
+/// Stateful reward computer for one transfer lane.
+#[derive(Debug, Clone)]
+pub struct RewardTracker {
+    pub kind: RewardKind,
+    pub cfg: RewardConfig,
+    hist_util: VecDeque<f64>,
+    hist_thr: VecDeque<f64>,
+    hist_energy: VecDeque<f64>,
+    prev_metric: Option<f64>,
+}
+
+impl RewardTracker {
+    pub fn new(kind: RewardKind, cfg: RewardConfig) -> RewardTracker {
+        RewardTracker {
+            kind,
+            cfg,
+            hist_util: VecDeque::new(),
+            hist_thr: VecDeque::new(),
+            hist_energy: VecDeque::new(),
+            prev_metric: None,
+        }
+    }
+
+    /// Ingest one MI observation, returning the metric and shaped reward.
+    pub fn update(&mut self, obs: &Observation) -> RewardOut {
+        let w = self.cfg.window;
+        let metric = match self.kind {
+            RewardKind::FairnessEfficiency => {
+                let u = utility(&self.cfg, obs.throughput_gbps, obs.plr, obs.cc, obs.p);
+                push_cap(&mut self.hist_util, u, w);
+                mean(&self.hist_util)
+            }
+            RewardKind::ThroughputEnergy => {
+                push_cap(&mut self.hist_thr, obs.throughput_gbps, w);
+                // Energy per MI; missing counters (NaN) degrade to
+                // throughput-only signal with unit energy.
+                let e = if obs.energy_j.is_nan() { 1.0 } else { obs.energy_j.max(1e-9) };
+                push_cap(&mut self.hist_energy, e, w);
+                let t_bar = mean(&self.hist_thr);
+                let e_max = self.hist_energy.iter().cloned().fold(f64::MIN, f64::max);
+                t_bar * self.cfg.sc / e_max
+            }
+        };
+        let reward = match self.prev_metric {
+            None => 0.0,
+            Some(prev) => diff_reward(&self.cfg, metric, prev),
+        };
+        self.prev_metric = Some(metric);
+        RewardOut { metric, reward }
+    }
+
+    pub fn reset(&mut self) {
+        self.hist_util.clear();
+        self.hist_thr.clear();
+        self.hist_energy.clear();
+        self.prev_metric = None;
+    }
+}
+
+fn push_cap(q: &mut VecDeque<f64>, v: f64, cap: usize) {
+    q.push_back(v);
+    while q.len() > cap {
+        q.pop_front();
+    }
+}
+
+fn mean(q: &VecDeque<f64>) -> f64 {
+    if q.is_empty() { 0.0 } else { q.iter().sum::<f64>() / q.len() as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(thr: f64, plr: f64, e: f64, cc: u32, p: u32) -> Observation {
+        Observation {
+            throughput_gbps: thr,
+            plr,
+            rtt_s: 0.032,
+            energy_j: e,
+            cc,
+            p,
+            duration_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn utility_matches_paper_example() {
+        // §3.4 example log line: T = 8.32 Gbps, L = 0, cc = p = 7, score 3.0.
+        let cfg = RewardConfig::default();
+        let u = utility(&cfg, 8.32, 0.0, 7, 7);
+        assert!((u - 3.0).abs() < 0.25, "u={u}");
+    }
+
+    #[test]
+    fn utility_penalizes_loss() {
+        let cfg = RewardConfig::default();
+        let clean = utility(&cfg, 8.0, 0.0, 4, 4);
+        let lossy = utility(&cfg, 8.0, 0.02, 4, 4);
+        assert!(lossy < clean);
+    }
+
+    #[test]
+    fn utility_penalizes_stream_hoarding() {
+        let cfg = RewardConfig::default();
+        // Same throughput with many more streams is worth less (fairness).
+        let lean = utility(&cfg, 8.0, 0.0, 4, 4);
+        let hog = utility(&cfg, 8.0, 0.0, 16, 16);
+        assert!(hog < lean * 0.2, "lean={lean} hog={hog}");
+    }
+
+    #[test]
+    fn diff_reward_signs() {
+        let cfg = RewardConfig::default();
+        assert_eq!(diff_reward(&cfg, 1.10, 1.00), cfg.x);
+        assert_eq!(diff_reward(&cfg, 0.90, 1.00), -cfg.y);
+        assert_eq!(diff_reward(&cfg, 1.001, 1.000), 0.0); // within ε
+    }
+
+    #[test]
+    fn fe_tracker_rewards_improvement() {
+        let mut t = RewardTracker::new(RewardKind::FairnessEfficiency, RewardConfig::default());
+        t.update(&obs(2.0, 0.0, 100.0, 4, 4));
+        // Large jump in throughput -> positive reward.
+        let out = t.update(&obs(6.0, 0.0, 100.0, 4, 4));
+        assert_eq!(out.reward, 1.0);
+    }
+
+    #[test]
+    fn te_tracker_rewards_energy_efficiency() {
+        let cfg = RewardConfig { window: 1, ..RewardConfig::default() };
+        let mut t = RewardTracker::new(RewardKind::ThroughputEnergy, cfg);
+        t.update(&obs(5.0, 0.0, 200.0, 8, 8));
+        // Same throughput at half the energy -> improvement.
+        let out = t.update(&obs(5.0, 0.0, 100.0, 4, 4));
+        assert_eq!(out.reward, 1.0);
+        // Same throughput at much higher energy -> regression.
+        let out = t.update(&obs(5.0, 0.0, 400.0, 16, 16));
+        assert_eq!(out.reward, -1.0);
+    }
+
+    #[test]
+    fn te_tracker_handles_missing_counters() {
+        let mut t = RewardTracker::new(RewardKind::ThroughputEnergy, RewardConfig::default());
+        let out = t.update(&obs(5.0, 0.0, f64::NAN, 4, 4));
+        assert!(out.metric.is_finite());
+    }
+
+    #[test]
+    fn first_update_reward_zero() {
+        let mut t = RewardTracker::new(RewardKind::FairnessEfficiency, RewardConfig::default());
+        let out = t.update(&obs(5.0, 0.0, 100.0, 4, 4));
+        assert_eq!(out.reward, 0.0);
+    }
+
+    #[test]
+    fn windowed_metric_smooths() {
+        let cfg = RewardConfig { window: 4, ..RewardConfig::default() };
+        let mut t = RewardTracker::new(RewardKind::FairnessEfficiency, cfg.clone());
+        for _ in 0..4 {
+            t.update(&obs(8.0, 0.0, 100.0, 4, 4));
+        }
+        // One noisy bad MI barely moves the 4-MI average.
+        let out = t.update(&obs(7.2, 0.0, 100.0, 4, 4));
+        assert_eq!(out.reward, 0.0, "metric={}", out.metric);
+    }
+}

@@ -1,0 +1,187 @@
+//! DRL state-space construction (§3.3.1 of the paper).
+//!
+//! The agent never sees raw throughput or energy (those are the optimization
+//! targets); it sees stable congestion indicators extracted per MI:
+//!
+//! * `plr` — packet loss rate,
+//! * `rtt_gradient` — relative RTT change between consecutive MIs,
+//! * `rtt_ratio` — current mean RTT over the session's minimum mean RTT,
+//! * `cc`, `p` — the agent's own (normalized) settings, so the policy can
+//!   learn how past parameter choices shaped the present state.
+//!
+//! The state is the window of the last `n` feature vectors (Eq. 8).
+
+/// Features per monitoring interval (Eq. 7).
+pub const FEATURES: usize = 5;
+
+/// Raw per-MI observation, as produced by the substrates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub throughput_gbps: f64,
+    pub plr: f64,
+    pub rtt_s: f64,
+    /// Energy consumed during this MI (J); NaN when counters are absent
+    /// (FABRIC), in which case T/E rewards are undefined on that testbed.
+    pub energy_j: f64,
+    pub cc: u32,
+    pub p: u32,
+    pub duration_s: f64,
+}
+
+/// Sliding feature window turning observations into the flattened DRL state.
+#[derive(Debug, Clone)]
+pub struct FeatureWindow {
+    window: usize,
+    cc_max: f32,
+    p_max: f32,
+    rtt_min_s: f64,
+    prev_rtt_s: Option<f64>,
+    /// Flattened ring of feature vectors, oldest first, length window*FEATURES.
+    buf: Vec<f32>,
+}
+
+impl FeatureWindow {
+    /// `window` = n, the number of MIs the state spans; `cc_max`/`p_max`
+    /// normalize the parameter features into [0, 1].
+    pub fn new(window: usize, cc_max: u32, p_max: u32) -> FeatureWindow {
+        assert!(window >= 1);
+        FeatureWindow {
+            window,
+            cc_max: cc_max as f32,
+            p_max: p_max as f32,
+            rtt_min_s: f64::MAX,
+            prev_rtt_s: None,
+            buf: vec![0.0; window * FEATURES],
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Dimension of the flattened state.
+    pub fn state_len(&self) -> usize {
+        self.window * FEATURES
+    }
+
+    /// Ingest one observation; returns the feature vector for this MI.
+    pub fn push(&mut self, obs: &Observation) -> [f32; FEATURES] {
+        self.rtt_min_s = self.rtt_min_s.min(obs.rtt_s);
+        let gradient = match self.prev_rtt_s {
+            None => 0.0,
+            Some(prev) => ((obs.rtt_s - prev) / prev).clamp(-1.0, 1.0),
+        };
+        self.prev_rtt_s = Some(obs.rtt_s);
+        let ratio = (obs.rtt_s / self.rtt_min_s).min(8.0);
+        let x = [
+            obs.plr.clamp(0.0, 1.0) as f32,
+            gradient as f32,
+            ratio as f32,
+            obs.cc as f32 / self.cc_max,
+            obs.p as f32 / self.p_max,
+        ];
+        // Shift left one feature vector, append the new one.
+        self.buf.copy_within(FEATURES.., 0);
+        let start = (self.window - 1) * FEATURES;
+        self.buf[start..].copy_from_slice(&x);
+        x
+    }
+
+    /// The flattened state s_t = (x_{t-n+1}, ..., x_t), oldest first.
+    pub fn state(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Session-minimum mean RTT seen so far.
+    pub fn rtt_min_s(&self) -> f64 {
+        self.rtt_min_s
+    }
+
+    /// Reset for a new episode (keeps window size and normalizers).
+    pub fn reset(&mut self) {
+        self.rtt_min_s = f64::MAX;
+        self.prev_rtt_s = None;
+        self.buf.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(plr: f64, rtt: f64, cc: u32, p: u32) -> Observation {
+        Observation {
+            throughput_gbps: 5.0,
+            plr,
+            rtt_s: rtt,
+            energy_j: 100.0,
+            cc,
+            p,
+            duration_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn first_push_has_zero_gradient_unit_ratio() {
+        let mut w = FeatureWindow::new(4, 16, 16);
+        let x = w.push(&obs(0.01, 0.032, 4, 4));
+        assert_eq!(x[1], 0.0);
+        assert!((x[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_reflects_rtt_change() {
+        let mut w = FeatureWindow::new(4, 16, 16);
+        w.push(&obs(0.0, 0.032, 4, 4));
+        let x = w.push(&obs(0.0, 0.048, 4, 4)); // +50%
+        assert!((x[1] - 0.5).abs() < 1e-6);
+        let x = w.push(&obs(0.0, 0.024, 4, 4)); // -50%
+        assert!((x[1] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ratio_uses_session_minimum() {
+        let mut w = FeatureWindow::new(4, 16, 16);
+        w.push(&obs(0.0, 0.040, 4, 4));
+        w.push(&obs(0.0, 0.032, 4, 4)); // new minimum
+        let x = w.push(&obs(0.0, 0.064, 4, 4));
+        assert!((x[2] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn params_normalized() {
+        let mut w = FeatureWindow::new(2, 16, 8);
+        let x = w.push(&obs(0.0, 0.03, 8, 8));
+        assert!((x[3] - 0.5).abs() < 1e-6);
+        assert!((x[4] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn window_shifts_oldest_out() {
+        let mut w = FeatureWindow::new(2, 16, 16);
+        w.push(&obs(0.10, 0.03, 1, 1));
+        w.push(&obs(0.20, 0.03, 2, 2));
+        w.push(&obs(0.30, 0.03, 3, 3));
+        let s = w.state();
+        // Oldest remaining is the 0.20 observation.
+        assert!((s[0] - 0.20).abs() < 1e-6);
+        assert!((s[FEATURES] - 0.30).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_len_and_reset() {
+        let mut w = FeatureWindow::new(8, 16, 16);
+        assert_eq!(w.state_len(), 8 * FEATURES);
+        w.push(&obs(0.5, 0.03, 4, 4));
+        w.reset();
+        assert!(w.state().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gradient_clipped_to_unit() {
+        let mut w = FeatureWindow::new(2, 16, 16);
+        w.push(&obs(0.0, 0.010, 4, 4));
+        let x = w.push(&obs(0.0, 0.500, 4, 4)); // +4900%
+        assert_eq!(x[1], 1.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Cluster-lookup training environment (§3.4 steps 1–3).
+
+use super::env::{Env, StepOut};
+use super::kmeans::KMeans;
+use super::transition::Transition;
+use crate::coordinator::{
+    FeatureWindow, Observation, ParamBounds, RewardConfig, RewardKind, RewardTracker, FEATURES,
+};
+use crate::util::Rng;
+
+/// Emulated environment built from logged transitions.
+pub struct ClusterEnv {
+    transitions: Vec<Transition>,
+    km: KMeans,
+    members: Vec<Vec<usize>>,
+    bounds: ParamBounds,
+    window: FeatureWindow,
+    reward: RewardTracker,
+    episode_len: usize,
+    rng: Rng,
+    // Episode state.
+    cc: u32,
+    p: u32,
+    cur_features: [f32; FEATURES],
+    steps: usize,
+}
+
+impl ClusterEnv {
+    /// Cluster `transitions` into `k` scenarios and build the lookup env.
+    pub fn new(
+        transitions: Vec<Transition>,
+        k: usize,
+        bounds: ParamBounds,
+        reward_kind: RewardKind,
+        history: usize,
+        episode_len: usize,
+        seed: u64,
+    ) -> ClusterEnv {
+        assert!(!transitions.is_empty(), "ClusterEnv needs at least one transition");
+        let dim = FEATURES + 1;
+        let mut points = Vec::with_capacity(transitions.len() * dim);
+        for t in &transitions {
+            points.extend_from_slice(&t.cluster_key());
+        }
+        let km = KMeans::fit(&points, dim, k, 40, seed ^ 0xD00D);
+        let members = km.members();
+        let window = FeatureWindow::new(history, bounds.cc_max, bounds.p_max);
+        ClusterEnv {
+            transitions,
+            km,
+            members,
+            bounds,
+            window,
+            reward: RewardTracker::new(reward_kind, RewardConfig::default()),
+            episode_len,
+            rng: Rng::new(seed),
+            cc: 4,
+            p: 4,
+            cur_features: [0.0; FEATURES],
+            steps: 0,
+        }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.km.k
+    }
+
+    pub fn n_transitions(&self) -> usize {
+        self.transitions.len()
+    }
+
+    /// Observation assembled from a sampled transition outcome at (cc, p).
+    fn obs_from(&self, t: &Transition, cc: u32, p: u32) -> Observation {
+        Observation {
+            throughput_gbps: t.throughput_gbps,
+            plr: t.plr,
+            rtt_s: t.rtt_s,
+            energy_j: t.energy_j,
+            cc,
+            p,
+            duration_s: 1.0,
+        }
+    }
+
+    /// Track the emulated features: take the sampled next-state congestion
+    /// signals but pin the (cc, p) dimensions to the values we actually hold
+    /// (lookup noise must not corrupt the parameter trajectory).
+    fn update_features(&mut self, sampled: &Transition) {
+        self.cur_features = sampled.next_features;
+        self.cur_features[3] = self.cc as f32 / self.bounds.cc_max as f32;
+        self.cur_features[4] = self.p as f32 / self.bounds.p_max as f32;
+    }
+}
+
+impl Env for ClusterEnv {
+    fn reset(&mut self) -> Vec<f32> {
+        self.window.reset();
+        self.reward.reset();
+        self.steps = 0;
+        // Initialization: random recorded state (§3.4 "Initialization").
+        let idx = self.rng.below(self.transitions.len());
+        let t = self.transitions[idx].clone();
+        let (cc, p) = self.bounds.clamp(t.cc, t.p);
+        self.cc = cc;
+        self.p = p;
+        self.update_features(&t);
+        let obs = self.obs_from(&t, cc, p);
+        self.window.push(&obs);
+        self.reward.update(&obs);
+        self.window.state().to_vec()
+    }
+
+    fn step(&mut self, action: usize) -> StepOut {
+        // Apply the action to our (cc, p) with clipping.
+        let (cc, p) = self.bounds.apply(self.cc, self.p, action);
+        self.cc = cc;
+        self.p = p;
+
+        // Action selection + uniform sampling (§3.4 steps 2–3).
+        let mut query = self.cur_features.to_vec();
+        query.push(action as f32 / 4.0);
+        let cluster = self.km.assign(&query);
+        let pool = &self.members[cluster];
+        let sampled_idx = if pool.is_empty() {
+            self.rng.below(self.transitions.len())
+        } else {
+            pool[self.rng.below(pool.len())]
+        };
+        let t = self.transitions[sampled_idx].clone();
+
+        self.update_features(&t);
+        let obs = self.obs_from(&t, cc, p);
+        self.window.push(&obs);
+        let out = self.reward.update(&obs);
+        self.steps += 1;
+        StepOut {
+            state: self.window.state().to_vec(),
+            reward: out.reward,
+            done: self.steps >= self.episode_len,
+            throughput_gbps: t.throughput_gbps,
+            energy_j: t.energy_j,
+        }
+    }
+
+    fn state_len(&self) -> usize {
+        self.window.state_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic transition set: throughput rises with cc·p up to 36 streams
+    /// then collapses; energy rises with streams.
+    fn synth_transitions(n: usize, seed: u64) -> Vec<Transition> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for _ in 0..n {
+            let cc = 1 + rng.below(16) as u32;
+            let p = 1 + rng.below(16) as u32;
+            let action = rng.below(5);
+            let streams = (cc * p) as f64;
+            let thr = if streams <= 36.0 {
+                0.25 * streams
+            } else {
+                (9.0 - 0.01 * (streams - 36.0)).max(1.0)
+            };
+            let plr = if streams > 60.0 { 0.01 } else { 0.0 };
+            let f = |cc: u32, p: u32| -> [f32; FEATURES] {
+                [plr as f32, 0.0, 1.0, cc as f32 / 16.0, p as f32 / 16.0]
+            };
+            out.push(Transition {
+                features: f(cc, p),
+                action,
+                next_features: f(cc, p),
+                throughput_gbps: thr + rng.normal_ms(0.0, 0.2),
+                plr,
+                rtt_s: 0.032,
+                energy_j: 2.0 * (18.0 + 0.85 * streams.powf(0.9) + 6.0 * thr),
+                score: thr / 2.0,
+                cc,
+                p,
+            });
+        }
+        out
+    }
+
+    fn env(seed: u64) -> ClusterEnv {
+        ClusterEnv::new(
+            synth_transitions(2000, seed),
+            32,
+            ParamBounds::default(),
+            RewardKind::ThroughputEnergy,
+            8,
+            64,
+            seed,
+        )
+    }
+
+    #[test]
+    fn reset_returns_state_of_right_shape() {
+        let mut e = env(1);
+        let s = e.reset();
+        assert_eq!(s.len(), 8 * FEATURES);
+        assert_eq!(e.state_len(), s.len());
+    }
+
+    #[test]
+    fn episode_terminates_at_length() {
+        let mut e = env(2);
+        e.reset();
+        let mut done = false;
+        for i in 0..64 {
+            let out = e.step(0);
+            done = out.done;
+            if i < 63 {
+                assert!(!done);
+            }
+        }
+        assert!(done);
+    }
+
+    #[test]
+    fn actions_move_cc_p_features() {
+        let mut e = env(3);
+        e.reset();
+        let before = (e.cc, e.p);
+        e.step(3); // +2/+2
+        let after = (e.cc, e.p);
+        assert!(after.0 >= before.0 && after.1 >= before.1);
+        // State window's newest (cc, p) features reflect the tracked params.
+        let s = e.window.state();
+        let newest = &s[s.len() - FEATURES..];
+        assert!((newest[3] - after.0 as f32 / 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampled_outcomes_track_stream_count() {
+        // At small cc·p the emulator should report small throughput, at the
+        // sweet spot (~36 streams) larger throughput.
+        let mut e = env(4);
+        e.reset();
+        e.cc = 2;
+        e.p = 2;
+        e.cur_features[3] = 2.0 / 16.0;
+        e.cur_features[4] = 2.0 / 16.0;
+        let small: f64 = (0..30).map(|_| e.step(0).throughput_gbps).sum::<f64>() / 30.0;
+        e.cc = 6;
+        e.p = 6;
+        e.cur_features[3] = 6.0 / 16.0;
+        e.cur_features[4] = 6.0 / 16.0;
+        let sweet: f64 = (0..30).map(|_| e.step(0).throughput_gbps).sum::<f64>() / 30.0;
+        assert!(sweet > small + 2.0, "small={small:.2} sweet={sweet:.2}");
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let run = |seed| {
+            let mut e = env(seed);
+            e.reset();
+            (0..50).map(|i| e.step(i % 5).throughput_gbps).sum::<f64>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

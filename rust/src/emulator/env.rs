@@ -1,0 +1,28 @@
+//! The training-environment abstraction shared by the cluster-lookup
+//! emulator and the live network simulator.
+
+/// Result of one environment step.
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    /// Flattened state window after the step.
+    pub state: Vec<f32>,
+    /// Shaped reward for the action just taken.
+    pub reward: f64,
+    /// Episode termination.
+    pub done: bool,
+    /// Outcome metrics (for telemetry): goodput, energy of the step's MI.
+    pub throughput_gbps: f64,
+    pub energy_j: f64,
+}
+
+/// A DRL training environment over the paper's five-action space.
+pub trait Env {
+    /// Begin a new episode; returns the initial state window.
+    fn reset(&mut self) -> Vec<f32>;
+
+    /// Apply a discrete action (0..5) and advance one monitoring interval.
+    fn step(&mut self, action: usize) -> StepOut;
+
+    /// Flattened state length (window × features).
+    fn state_len(&self) -> usize;
+}

@@ -1,0 +1,221 @@
+//! Seeded Lloyd's k-means with k-means++ initialization.
+//!
+//! Clusters transition keys `(x_t, a_t)` into recurring "network scenarios"
+//! (§3.4). The assignment step can be delegated to the AOT-compiled Pallas
+//! `kmeans_assign` kernel (see `python/compile/kernels/kmeans.py`); the
+//! default implementation below is pure Rust so the emulator also works
+//! before artifacts are built. `benches/micro.rs` compares the two.
+
+use crate::util::Rng;
+
+/// Fitted k-means model.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    /// Flattened centroids, row-major [k × dim].
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub dim: usize,
+    /// Cluster membership of each training point.
+    pub assignments: Vec<usize>,
+}
+
+impl KMeans {
+    /// Fit with at most `iters` Lloyd iterations. Points are row-major
+    /// [n × dim]. Panics on empty input or k == 0.
+    pub fn fit(points: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> KMeans {
+        assert!(dim > 0 && k > 0);
+        let n = points.len() / dim;
+        assert!(n > 0, "kmeans on empty data");
+        assert_eq!(points.len(), n * dim);
+        let k = k.min(n);
+        let mut rng = Rng::new(seed);
+
+        // k-means++ seeding.
+        let mut centroids = Vec::with_capacity(k * dim);
+        let first = rng.below(n);
+        centroids.extend_from_slice(&points[first * dim..(first + 1) * dim]);
+        let mut d2: Vec<f64> = (0..n)
+            .map(|i| sq_dist(&points[i * dim..(i + 1) * dim], &centroids[0..dim]))
+            .collect();
+        for _ in 1..k {
+            let idx = rng.weighted(&d2);
+            let c0 = centroids.len();
+            centroids.extend_from_slice(&points[idx * dim..(idx + 1) * dim]);
+            let new_c = &centroids[c0..c0 + dim];
+            for i in 0..n {
+                let d = sq_dist(&points[i * dim..(i + 1) * dim], new_c);
+                if d < d2[i] {
+                    d2[i] = d;
+                }
+            }
+        }
+
+        // Lloyd iterations.
+        let mut assignments = vec![0usize; n];
+        for _ in 0..iters {
+            let mut changed = false;
+            for i in 0..n {
+                let a = nearest(&points[i * dim..(i + 1) * dim], &centroids, k, dim);
+                if a != assignments[i] {
+                    assignments[i] = a;
+                    changed = true;
+                }
+            }
+            // Recompute centroids.
+            let mut sums = vec![0.0f64; k * dim];
+            let mut counts = vec![0usize; k];
+            for i in 0..n {
+                let a = assignments[i];
+                counts[a] += 1;
+                for j in 0..dim {
+                    sums[a * dim + j] += points[i * dim + j] as f64;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // Re-seed an empty cluster at a random point.
+                    let idx = rng.below(n);
+                    for j in 0..dim {
+                        centroids[c * dim + j] = points[idx * dim + j];
+                    }
+                    changed = true;
+                } else {
+                    for j in 0..dim {
+                        centroids[c * dim + j] = (sums[c * dim + j] / counts[c] as f64) as f32;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        // Final assignment pass so memberships match the final centroids.
+        for i in 0..n {
+            assignments[i] = nearest(&points[i * dim..(i + 1) * dim], &centroids, k, dim);
+        }
+        KMeans { centroids, k, dim, assignments }
+    }
+
+    /// Index of the nearest centroid to `x`.
+    pub fn assign(&self, x: &[f32]) -> usize {
+        nearest(x, &self.centroids, self.k, self.dim)
+    }
+
+    /// Members of each cluster (indices into the training set).
+    pub fn members(&self) -> Vec<Vec<usize>> {
+        let mut m = vec![Vec::new(); self.k];
+        for (i, &a) in self.assignments.iter().enumerate() {
+            m[a].push(i);
+        }
+        m
+    }
+
+    /// Mean within-cluster squared distance (inertia / n).
+    pub fn inertia(&self, points: &[f32]) -> f64 {
+        let n = points.len() / self.dim;
+        let mut total = 0.0;
+        for i in 0..n {
+            let a = self.assignments[i];
+            total += sq_dist(
+                &points[i * self.dim..(i + 1) * self.dim],
+                &self.centroids[a * self.dim..(a + 1) * self.dim],
+            );
+        }
+        total / n as f64
+    }
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64) * ((x - y) as f64))
+        .sum()
+}
+
+fn nearest(x: &[f32], centroids: &[f32], k: usize, dim: usize) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::MAX;
+    for c in 0..k {
+        let d = sq_dist(x, &centroids[c * dim..(c + 1) * dim]);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs in 2-D.
+    fn blobs(seed: u64) -> (Vec<f32>, usize) {
+        let mut rng = Rng::new(seed);
+        let centers = [(0.0, 0.0), (10.0, 10.0), (-10.0, 8.0)];
+        let mut pts = Vec::new();
+        for _ in 0..300 {
+            let (cx, cy) = centers[rng.below(3)];
+            pts.push((cx + rng.normal()) as f32);
+            pts.push((cy + rng.normal()) as f32);
+        }
+        (pts, 2)
+    }
+
+    #[test]
+    fn recovers_blob_centers() {
+        let (pts, dim) = blobs(1);
+        let km = KMeans::fit(&pts, dim, 3, 50, 7);
+        // Every centroid should be near one of the true centers.
+        let truth = [(0.0, 0.0), (10.0, 10.0), (-10.0, 8.0)];
+        for c in 0..3 {
+            let (x, y) = (km.centroids[c * 2] as f64, km.centroids[c * 2 + 1] as f64);
+            let near = truth
+                .iter()
+                .any(|&(tx, ty)| ((x - tx).powi(2) + (y - ty).powi(2)).sqrt() < 2.0);
+            assert!(near, "centroid {c} at ({x:.1},{y:.1}) not near any blob");
+        }
+    }
+
+    #[test]
+    fn assign_is_consistent_with_fit() {
+        let (pts, dim) = blobs(2);
+        let km = KMeans::fit(&pts, dim, 3, 50, 7);
+        for i in 0..pts.len() / dim {
+            assert_eq!(km.assign(&pts[i * dim..(i + 1) * dim]), km.assignments[i]);
+        }
+    }
+
+    #[test]
+    fn members_partition_everything() {
+        let (pts, dim) = blobs(3);
+        let km = KMeans::fit(&pts, dim, 5, 30, 11);
+        let members = km.members();
+        let total: usize = members.iter().map(Vec::len).sum();
+        assert_eq!(total, pts.len() / dim);
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let pts = vec![0.0f32, 0.0, 1.0, 1.0];
+        let km = KMeans::fit(&pts, 2, 10, 10, 1);
+        assert_eq!(km.k, 2);
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let (pts, dim) = blobs(4);
+        let a = KMeans::fit(&pts, dim, 4, 25, 9);
+        let b = KMeans::fit(&pts, dim, 4, 25, 9);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn more_clusters_reduce_inertia() {
+        let (pts, dim) = blobs(5);
+        let k2 = KMeans::fit(&pts, dim, 2, 40, 3).inertia(&pts);
+        let k6 = KMeans::fit(&pts, dim, 6, 40, 3).inertia(&pts);
+        assert!(k6 < k2);
+    }
+}

@@ -1,0 +1,25 @@
+//! The emulated training environment (§3.4 of the paper).
+//!
+//! Real online DRL training would pay for every exploratory monitoring
+//! interval with wall-clock time and wasted energy. Instead, SPARTA:
+//!
+//! 1. runs a short *exploration* phase against the real substrate, logging a
+//!    per-MI transition line (the paper's log format) —
+//!    `<ts> -- INFO: Throughput:8.32Gbps lossRate:0 parallelism:7
+//!    concurrency:7 score:3.0 rtt:34.6ms energy:80.0J`;
+//! 2. clusters the `(state, action)` pairs with k-means, each centroid
+//!    representing a recurring "network scenario";
+//! 3. replays training episodes against a *lookup environment* that, for the
+//!    agent's `(x_t, a_t)`, finds the nearest cluster and uniformly samples
+//!    one of its recorded outcomes — variability included, physics not
+//!    re-simulated.
+
+pub mod cluster_env;
+pub mod env;
+pub mod kmeans;
+pub mod transition;
+
+pub use cluster_env::ClusterEnv;
+pub use env::{Env, StepOut};
+pub use kmeans::KMeans;
+pub use transition::{transitions_from_records, Transition, TransitionStore};

@@ -1,0 +1,253 @@
+//! State-action transition records and the paper's log-line format.
+
+use crate::coordinator::{MiRecord, FEATURES};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One logged transition: (x_t, a_t, x_{t+1}) plus the outcome metrics of
+/// the interval that followed the action.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    /// Feature vector x_t (plr, rtt_gradient, rtt_ratio, cc, p — normalized).
+    pub features: [f32; FEATURES],
+    /// Discrete action a_t.
+    pub action: usize,
+    /// Feature vector x_{t+1}.
+    pub next_features: [f32; FEATURES],
+    /// Outcome of the following MI.
+    pub throughput_gbps: f64,
+    pub plr: f64,
+    pub rtt_s: f64,
+    pub energy_j: f64,
+    /// Utility score of the following MI (the log line's `score`).
+    pub score: f64,
+    /// Raw (cc, p) after the action.
+    pub cc: u32,
+    pub p: u32,
+}
+
+impl Transition {
+    /// Render the paper's transfer-log line for this transition's outcome.
+    pub fn log_line(&self, timestamp: f64) -> String {
+        format!(
+            "{:.6} -- INFO: Throughput:{:.2}Gbps lossRate:{} parallelism:{} concurrency:{} score:{:.1} rtt:{:.1}ms energy:{:.1}J",
+            timestamp,
+            self.throughput_gbps,
+            trim_float(self.plr),
+            self.p,
+            self.cc,
+            self.score,
+            self.rtt_s * 1000.0,
+            if self.energy_j.is_nan() { 0.0 } else { self.energy_j },
+        )
+    }
+
+    /// The clustering key: (x_t, a_t) with the action normalized to [0, 1].
+    pub fn cluster_key(&self) -> Vec<f32> {
+        let mut k = self.features.to_vec();
+        k.push(self.action as f32 / 4.0);
+        k
+    }
+}
+
+fn trim_float(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Reconstruct transitions from a lane's consecutive MI records. A record
+/// holding action `a` pairs with the *next* record's state and outcome.
+pub fn transitions_from_records(records: &[MiRecord]) -> Vec<Transition> {
+    let mut out = Vec::new();
+    for pair in records.windows(2) {
+        let (cur, next) = (&pair[0], &pair[1]);
+        let Some(action) = cur.action else { continue };
+        let f = last_features(&cur.state);
+        let nf = last_features(&next.state);
+        out.push(Transition {
+            features: f,
+            action,
+            next_features: nf,
+            throughput_gbps: next.throughput_gbps,
+            plr: next.plr,
+            rtt_s: next.rtt_s,
+            energy_j: next.energy_j,
+            score: next.metric,
+            cc: next.cc,
+            p: next.p,
+        });
+    }
+    out
+}
+
+fn last_features(state: &[f32]) -> [f32; FEATURES] {
+    let mut f = [0.0; FEATURES];
+    let start = state.len() - FEATURES;
+    f.copy_from_slice(&state[start..]);
+    f
+}
+
+/// Binary transition store: fixed-width little-endian records. The textual
+/// paper-format lines are also written alongside (`.log`) for inspection.
+pub struct TransitionStore;
+
+const REC_F32: usize = FEATURES * 2 + 1 /*action*/ + 5 /*outcome*/ + 2 /*cc,p*/;
+
+impl TransitionStore {
+    /// Save transitions as `<path>.bin` plus a human-readable `<path>.log`.
+    pub fn save(path: &Path, transitions: &[Transition]) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut bytes = Vec::with_capacity(transitions.len() * REC_F32 * 4);
+        let mut log = String::new();
+        for (i, t) in transitions.iter().enumerate() {
+            let mut rec: Vec<f32> = Vec::with_capacity(REC_F32);
+            rec.extend_from_slice(&t.features);
+            rec.push(t.action as f32);
+            rec.extend_from_slice(&t.next_features);
+            rec.push(t.throughput_gbps as f32);
+            rec.push(t.plr as f32);
+            rec.push(t.rtt_s as f32);
+            rec.push(if t.energy_j.is_nan() { -1.0 } else { t.energy_j as f32 });
+            rec.push(t.score as f32);
+            rec.push(t.cc as f32);
+            rec.push(t.p as f32);
+            debug_assert_eq!(rec.len(), REC_F32);
+            for x in rec {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            log.push_str(&t.log_line(1707718539.0 + i as f64));
+            log.push('\n');
+        }
+        std::fs::write(path.with_extension("bin"), bytes)
+            .with_context(|| format!("writing {}", path.display()))?;
+        std::fs::write(path.with_extension("log"), log)?;
+        Ok(())
+    }
+
+    /// Load transitions from `<path>.bin`.
+    pub fn load(path: &Path) -> Result<Vec<Transition>> {
+        let bin = path.with_extension("bin");
+        let bytes = std::fs::read(&bin).with_context(|| format!("reading {}", bin.display()))?;
+        let stride = REC_F32 * 4;
+        if bytes.len() % stride != 0 {
+            return Err(anyhow!("{}: truncated transition store", bin.display()));
+        }
+        let mut out = Vec::with_capacity(bytes.len() / stride);
+        for rec in bytes.chunks_exact(stride) {
+            let f: Vec<f32> = rec
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let mut features = [0.0; FEATURES];
+            features.copy_from_slice(&f[0..FEATURES]);
+            let mut next_features = [0.0; FEATURES];
+            next_features.copy_from_slice(&f[FEATURES + 1..FEATURES + 1 + FEATURES]);
+            let o = FEATURES * 2 + 1;
+            out.push(Transition {
+                features,
+                action: f[FEATURES] as usize,
+                next_features,
+                throughput_gbps: f[o] as f64,
+                plr: f[o + 1] as f64,
+                rtt_s: f[o + 2] as f64,
+                energy_j: if f[o + 3] < 0.0 { f64::NAN } else { f[o + 3] as f64 },
+                score: f[o + 4] as f64,
+                cc: f[o + 5] as u32,
+                p: f[o + 6] as u32,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(i: usize) -> Transition {
+        Transition {
+            features: [0.01, 0.1, 1.2, 0.4, 0.4],
+            action: i % 5,
+            next_features: [0.02, -0.1, 1.3, 0.5, 0.5],
+            throughput_gbps: 8.32,
+            plr: 0.0,
+            rtt_s: 0.0346,
+            energy_j: 80.0,
+            score: 3.0,
+            cc: 7,
+            p: 7,
+        }
+    }
+
+    #[test]
+    fn log_line_matches_paper_format() {
+        let line = sample(0).log_line(1707718539.468927);
+        assert!(line.contains("Throughput:8.32Gbps"));
+        assert!(line.contains("lossRate:0"));
+        assert!(line.contains("parallelism:7 concurrency:7"));
+        assert!(line.contains("score:3.0"));
+        assert!(line.contains("rtt:34.6ms"));
+        assert!(line.contains("energy:80.0J"));
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let path = std::env::temp_dir().join("sparta_transitions_test/t");
+        let ts: Vec<Transition> = (0..10).map(sample).collect();
+        TransitionStore::save(&path, &ts).unwrap();
+        let back = TransitionStore::load(&path).unwrap();
+        assert_eq!(back.len(), 10);
+        assert_eq!(back[3].action, 3);
+        assert!((back[0].throughput_gbps - 8.32).abs() < 1e-5);
+        assert_eq!(back[0].cc, 7);
+    }
+
+    #[test]
+    fn nan_energy_survives_roundtrip() {
+        let path = std::env::temp_dir().join("sparta_transitions_test2/t");
+        let mut t = sample(0);
+        t.energy_j = f64::NAN;
+        TransitionStore::save(&path, &[t]).unwrap();
+        let back = TransitionStore::load(&path).unwrap();
+        assert!(back[0].energy_j.is_nan());
+    }
+
+    #[test]
+    fn cluster_key_includes_action() {
+        let t = sample(2);
+        let k = t.cluster_key();
+        assert_eq!(k.len(), FEATURES + 1);
+        assert!((k[FEATURES] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_records_pairs_consecutive() {
+        use crate::coordinator::MiRecord;
+        let rec = |mi: usize, action: Option<usize>, thr: f64| MiRecord {
+            mi,
+            time_s: mi as f64,
+            throughput_gbps: thr,
+            plr: 0.0,
+            rtt_s: 0.03,
+            energy_j: 50.0,
+            cc: 4,
+            p: 4,
+            metric: thr / 2.0,
+            reward: 0.0,
+            action,
+            state: vec![mi as f32; 2 * FEATURES],
+        };
+        let records = vec![rec(0, Some(1), 2.0), rec(1, Some(2), 3.0), rec(2, None, 4.0)];
+        let ts = transitions_from_records(&records);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].action, 1);
+        assert_eq!(ts[0].throughput_gbps, 3.0);
+        assert_eq!(ts[1].action, 2);
+        assert_eq!(ts[1].throughput_gbps, 4.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! End-system energy model — the RAPL analogue.
+//!
+//! The paper measures sender/receiver energy with Intel RAPL and subtracts
+//! each system's baseline power to isolate transfer energy. Physical counters
+//! are unavailable here, so this module models the *dynamic* (above-baseline)
+//! power of an end host during a transfer:
+//!
+//! ```text
+//! P_dyn = P_fixed + c_stream · N^0.9 + c_gbps · T + noise
+//! ```
+//!
+//! * `P_fixed` — cost of having the transfer engine running at all (event
+//!   loops, timers, page cache churn).
+//! * `c_stream · N^0.9` — per-active-stream CPU cost (interrupts, context
+//!   switches, TCP bookkeeping); mildly sub-linear because cores batch work.
+//! * `c_gbps · T` — per-bit cost of moving data (copies, checksums, DMA,
+//!   NIC + memory power).
+//!
+//! The model keeps the two gradients the paper's T/E reward learns from:
+//! excess streams burn power without adding goodput, and slow transfers burn
+//! fixed power for longer. `EnergyMeter` integrates power per monitoring
+//! interval exactly as a RAPL poller would.
+
+pub mod meter;
+pub mod power;
+
+pub use meter::EnergyMeter;
+pub use power::PowerModel;

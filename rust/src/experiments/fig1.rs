@@ -1,0 +1,112 @@
+//! Fig. 1: throughput and power vs (cc, p) under different background
+//! traffic regimes (the motivation figure).
+
+use crate::energy::PowerModel;
+use crate::net::background::Background;
+use crate::net::{NetworkSim, Testbed};
+use crate::telemetry::Table;
+use crate::util::Rng;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub regime: String,
+    pub cc: u32,
+    pub p: u32,
+    pub throughput_gbps: f64,
+    /// Mean dynamic power per MI, W (the paper's "energy per MI").
+    pub power_w: f64,
+}
+
+/// Sweep the (cc, p) grid under each background regime.
+pub fn sweep(testbed: &Testbed, grid: &[u32], regimes: &[&str], seed: u64) -> Vec<SweepPoint> {
+    let model = PowerModel::efficient();
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for regime in regimes {
+        for &cc in grid {
+            for &p in grid {
+                let bg = Background::regime(regime, testbed.capacity_gbps);
+                let mut sim = NetworkSim::new(testbed.clone(), rng.next_u64()).with_background(bg);
+                let id = sim.add_flow(cc, p, None);
+                // Warm-up past slow start, then measure.
+                for _ in 0..12 {
+                    sim.run_mi(1.0);
+                }
+                let mut thr = 0.0;
+                let mut pw = 0.0;
+                let mis = 15;
+                for _ in 0..mis {
+                    let m = &sim.run_mi(1.0)[id.0];
+                    thr += m.throughput_gbps;
+                    pw += model.power_w(m.active_streams, m.throughput_gbps);
+                }
+                out.push(SweepPoint {
+                    regime: regime.to_string(),
+                    cc,
+                    p,
+                    throughput_gbps: thr / mis as f64,
+                    power_w: pw / mis as f64,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Render the sweep as the two Fig.-1 panels (throughput, power).
+pub fn print(points: &[SweepPoint], grid: &[u32]) {
+    let regimes: Vec<String> = {
+        let mut r: Vec<String> = points.iter().map(|p| p.regime.clone()).collect();
+        r.dedup();
+        r
+    };
+    for metric in ["throughput (Gbps)", "power (W)"] {
+        println!("\nFig 1 — {metric} vs (cc, p):");
+        for regime in &regimes {
+            let mut header = vec!["cc \\ p".to_string()];
+            header.extend(grid.iter().map(|p| p.to_string()));
+            let mut table = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+            for &cc in grid {
+                let mut row = vec![cc.to_string()];
+                for &p in grid {
+                    let pt = points
+                        .iter()
+                        .find(|x| x.regime == *regime && x.cc == cc && x.p == p)
+                        .unwrap();
+                    let v = if metric.starts_with("throughput") { pt.throughput_gbps } else { pt.power_w };
+                    row.push(format!("{v:.2}"));
+                }
+                table.row(row);
+            }
+            println!("background = {regime}:");
+            table.print();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reproduces_fig1_shape() {
+        let tb = Testbed::chameleon();
+        let pts = sweep(&tb, &[1, 4, 16], &["low", "high"], 11);
+        assert_eq!(pts.len(), 2 * 9);
+        let get = |regime: &str, cc: u32, p: u32| {
+            pts.iter().find(|x| x.regime == regime && x.cc == cc && x.p == p).unwrap().clone()
+        };
+        // (1,1) is ~1 Gbps; the optimum is several times better (paper: up
+        // to 10x). Power grows strongly with stream count.
+        let base = get("low", 1, 1);
+        let mid = get("low", 4, 4);
+        let big = get("low", 16, 16);
+        assert!(base.throughput_gbps < 1.3, "base={}", base.throughput_gbps);
+        assert!(mid.throughput_gbps > 4.0 * base.throughput_gbps);
+        assert!(big.power_w > 2.0 * mid.power_w, "mid={} big={}", mid.power_w, big.power_w);
+        // Heavy background depresses achievable throughput.
+        let busy = get("high", 4, 4);
+        assert!(busy.throughput_gbps < mid.throughput_gbps + 0.3);
+    }
+}

@@ -1,0 +1,137 @@
+//! Fig. 4: the five DRL algorithms × two rewards, evaluated in simulation
+//! (the cluster emulator) and in "real-world" transfers (the live fluid
+//! simulator), on the Chameleon preset.
+
+use super::common::{transitions_for, Scale, SpartaCtx};
+use crate::agents::make_agent;
+use crate::coordinator::{ParamBounds, RewardKind};
+use crate::emulator::{ClusterEnv, Env};
+use crate::net::Testbed;
+use crate::runtime::WeightStore;
+use crate::telemetry::Table;
+use crate::trainer::LiveEnv;
+use crate::util::{stats, Summary};
+use anyhow::Result;
+
+/// Distribution of per-episode outcomes for one (algo, reward, world) cell.
+#[derive(Debug, Clone)]
+pub struct AlgoCell {
+    pub algo: String,
+    pub reward: RewardKind,
+    /// "sim" (emulator) or "real" (live simulator).
+    pub world: &'static str,
+    pub throughput_gbps: Vec<f64>,
+    pub energy_j_per_mi: Vec<f64>,
+}
+
+/// Evaluate one trained agent greedily in an environment for `episodes`.
+fn eval_in_env(
+    ctx: &SpartaCtx,
+    algo: &str,
+    reward: RewardKind,
+    env: &mut dyn Env,
+    episodes: usize,
+    seed: u64,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let store = WeightStore::new(ctx.paths.weights());
+    let n = ctx.runtime.manifest.algo(algo)?.n_params;
+    let weights = store.load(&SpartaCtx::weight_name(algo, reward), n)?;
+    let mut agent = make_agent(&ctx.runtime, algo, seed, Some(weights))?;
+    let mut thr = Vec::new();
+    let mut energy = Vec::new();
+    for _ in 0..episodes {
+        let mut state = env.reset();
+        let mut ep_thr = 0.0;
+        let mut ep_energy = 0.0;
+        let mut steps = 0;
+        loop {
+            // Sample the policy (the paper's agents act stochastically in
+            // deployment); no learning here — Fig. 4 isolates offline
+            // generalization.
+            let action = agent.act(&state, true);
+            let out = env.step(action);
+            ep_thr += out.throughput_gbps;
+            if out.energy_j.is_finite() {
+                ep_energy += out.energy_j;
+            }
+            steps += 1;
+            state = out.state;
+            if out.done {
+                break;
+            }
+        }
+        thr.push(ep_thr / steps as f64);
+        energy.push(ep_energy / steps as f64);
+    }
+    Ok((thr, energy))
+}
+
+/// Run the full algorithm comparison for one reward kind.
+pub fn run(
+    ctx: &SpartaCtx,
+    reward: RewardKind,
+    algos: &[&str],
+    scale: Scale,
+    seed: u64,
+) -> Result<Vec<AlgoCell>> {
+    let tb = Testbed::chameleon();
+    let episodes = match scale {
+        Scale::Quick => 6,
+        Scale::Paper => 20,
+    };
+    let mut out = Vec::new();
+    for algo in algos {
+        // Simulation world: the cluster emulator.
+        let transitions = transitions_for(ctx, &tb, scale, seed ^ 0x7E57)?;
+        let mut sim_env = ClusterEnv::new(
+            transitions,
+            scale.clusters(),
+            ParamBounds::default(),
+            reward,
+            8,
+            64,
+            seed ^ 0x51,
+        );
+        let (thr, en) = eval_in_env(ctx, algo, reward, &mut sim_env, episodes, seed)?;
+        out.push(AlgoCell {
+            algo: algo.to_string(),
+            reward,
+            world: "sim",
+            throughput_gbps: thr,
+            energy_j_per_mi: en,
+        });
+
+        // Real world: the live fluid simulator.
+        let mut live = LiveEnv::new(tb.clone(), reward, ParamBounds::default(), 8, 40, seed ^ 0x1F);
+        let (thr, en) = eval_in_env(ctx, algo, reward, &mut live, episodes, seed)?;
+        out.push(AlgoCell {
+            algo: algo.to_string(),
+            reward,
+            world: "real",
+            throughput_gbps: thr,
+            energy_j_per_mi: en,
+        });
+        crate::log_info!("fig4 {} ({}): done", algo, reward.short());
+    }
+    Ok(out)
+}
+
+pub fn print(cells: &[AlgoCell]) {
+    println!("\nFig 4 — DRL algorithms, throughput and per-MI energy distributions:");
+    let mut table = Table::new(&[
+        "algo", "reward", "world", "thr mean", "thr p25", "thr p75", "energy/MI mean",
+    ]);
+    for c in cells {
+        let t = Summary::of(&c.throughput_gbps);
+        table.row(vec![
+            c.algo.clone(),
+            c.reward.short().to_string(),
+            c.world.to_string(),
+            format!("{:.2}", t.mean),
+            format!("{:.2}", t.p25),
+            format!("{:.2}", t.p75),
+            format!("{:.1}", stats::mean(&c.energy_j_per_mi)),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,99 @@
+//! Fig. 5: online tuning — agents trained on Chameleon (T/E reward) are
+//! deployed on CloudLab and keep learning; cumulative reward per episode.
+
+use super::common::{Scale, SpartaCtx};
+use crate::agents::make_agent;
+use crate::coordinator::{ParamBounds, RewardKind};
+use crate::emulator::Env;
+use crate::net::Testbed;
+use crate::runtime::WeightStore;
+use crate::telemetry::Table;
+use crate::trainer::LiveEnv;
+use crate::util::stats;
+use anyhow::Result;
+
+/// Tuning trajectory of one algorithm.
+#[derive(Debug, Clone)]
+pub struct TuneCurve {
+    pub algo: String,
+    /// Episode rewards in deployment order.
+    pub episode_rewards: Vec<f64>,
+}
+
+impl TuneCurve {
+    /// Mean reward over an episode range (for table summaries).
+    pub fn window_mean(&self, from: usize, to: usize) -> f64 {
+        let hi = to.min(self.episode_rewards.len());
+        if from >= hi {
+            return 0.0;
+        }
+        stats::mean(&self.episode_rewards[from..hi])
+    }
+}
+
+/// Fine-tune each Chameleon-trained (T/E) agent on the CloudLab preset.
+pub fn run(ctx: &SpartaCtx, algos: &[&str], scale: Scale, seed: u64) -> Result<Vec<TuneCurve>> {
+    let episodes = match scale {
+        Scale::Quick => 60,
+        Scale::Paper => 500,
+    };
+    let episode_len = 30;
+    let store = WeightStore::new(ctx.paths.weights());
+    let mut out = Vec::new();
+    for algo in algos {
+        let n = ctx.runtime.manifest.algo(algo)?.n_params;
+        let weights = store.load(&SpartaCtx::weight_name(algo, RewardKind::ThroughputEnergy), n)?;
+        let mut agent = make_agent(&ctx.runtime, algo, seed, Some(weights))?;
+        let mut env = LiveEnv::new(
+            Testbed::cloudlab(),
+            RewardKind::ThroughputEnergy,
+            ParamBounds::default(),
+            8,
+            episode_len,
+            seed ^ 0xC10D,
+        );
+        let mut rewards = Vec::with_capacity(episodes);
+        for _ in 0..episodes {
+            let mut state = env.reset();
+            let mut ep = 0.0;
+            loop {
+                let action = agent.act(&state, true);
+                let step = env.step(action);
+                agent.observe(&state, action, step.reward, &step.state, step.done);
+                ep += step.reward;
+                state = step.state;
+                if step.done {
+                    break;
+                }
+            }
+            rewards.push(ep);
+        }
+        crate::log_info!("fig5 {}: first10={:.2} last10={:.2}", algo,
+            stats::mean(&rewards[..10.min(rewards.len())]),
+            stats::mean(&rewards[rewards.len().saturating_sub(10)..]));
+        out.push(TuneCurve { algo: algo.to_string(), episode_rewards: rewards });
+    }
+    Ok(out)
+}
+
+pub fn print(curves: &[TuneCurve]) {
+    println!("\nFig 5 — online tuning on CloudLab (T/E reward), episode-reward progression:");
+    let n = curves.iter().map(|c| c.episode_rewards.len()).max().unwrap_or(0);
+    let q = (n / 4).max(1);
+    let mut table = Table::new(&["algo", "ep 0-q1", "q1-q2", "q2-q3", "q3-end", "improvement"]);
+    for c in curves {
+        let a = c.window_mean(0, q);
+        let b = c.window_mean(q, 2 * q);
+        let d = c.window_mean(2 * q, 3 * q);
+        let e = c.window_mean(3 * q, n);
+        table.row(vec![
+            c.algo.clone(),
+            format!("{a:.2}"),
+            format!("{b:.2}"),
+            format!("{d:.2}"),
+            format!("{e:.2}"),
+            format!("{:+.2}", e - a),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,101 @@
+//! Fig. 6: six methods × three testbeds — transfer throughput and energy
+//! (the headline evaluation).
+
+use super::common::{make_optimizer, Scale, SpartaCtx, METHODS};
+use crate::coordinator::Controller;
+use crate::net::Testbed;
+use crate::telemetry::Table;
+use crate::transfer::TransferJob;
+use crate::util::{stats, Summary};
+use anyhow::Result;
+
+/// Results for one (method, testbed) cell over all trials.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub method: String,
+    pub testbed: String,
+    pub throughput_gbps: Vec<f64>,
+    /// Total transfer energy per trial, kJ (empty on FABRIC).
+    pub energy_kj: Vec<f64>,
+    pub duration_s: Vec<f64>,
+}
+
+/// Run the full methods × testbeds matrix.
+pub fn run(ctx: &SpartaCtx, testbeds: &[Testbed], scale: Scale, seed: u64) -> Result<Vec<Cell>> {
+    let (files, bytes) = scale.workload();
+    let mut cells = Vec::new();
+    for tb in testbeds {
+        for method in METHODS {
+            let mut cell = Cell {
+                method: method.to_string(),
+                testbed: tb.name.to_string(),
+                throughput_gbps: Vec::new(),
+                energy_kj: Vec::new(),
+                duration_s: Vec::new(),
+            };
+            for trial in 0..scale.trials() {
+                let trial_seed = seed ^ (trial as u64 * 0x9E3779B9);
+                let (opt, engine, reward) = make_optimizer(ctx, method, trial_seed)?;
+                let mut ctl = Controller::builder(tb.clone())
+                    .job(TransferJob::files(files, bytes))
+                    .engine(engine)
+                    .reward(reward)
+                    .seed(trial_seed)
+                    .build();
+                let report = ctl.run(opt, trial_seed);
+                let lane = report.lane();
+                cell.throughput_gbps.push(lane.avg_throughput_gbps());
+                cell.duration_s.push(lane.duration_s);
+                if tb.has_energy_counters {
+                    cell.energy_kj.push(lane.total_energy_j / 1000.0);
+                }
+            }
+            crate::log_info!(
+                "fig6 {}/{}: {:.2} Gbps, {:.1} kJ",
+                tb.name,
+                method,
+                stats::mean(&cell.throughput_gbps),
+                stats::mean(&cell.energy_kj)
+            );
+            cells.push(cell);
+        }
+    }
+    Ok(cells)
+}
+
+/// Paper-style table of the matrix.
+pub fn print(cells: &[Cell]) {
+    println!("\nFig 6 — transfer throughput (Gbps) and energy (kJ), mean over trials:");
+    let mut table = Table::new(&["testbed", "method", "thr mean", "thr p50", "thr std", "energy kJ", "duration s"]);
+    for c in cells {
+        let t = Summary::of(&c.throughput_gbps);
+        let e = stats::mean(&c.energy_kj);
+        table.row(vec![
+            c.testbed.clone(),
+            c.method.clone(),
+            format!("{:.2}", t.mean),
+            format!("{:.2}", t.median),
+            format!("{:.2}", t.std),
+            if c.energy_kj.is_empty() { "n/a".into() } else { format!("{e:.1}") },
+            format!("{:.0}", stats::mean(&c.duration_s)),
+        ]);
+    }
+    table.print();
+}
+
+/// Headline deltas vs the static baselines (the abstract's claims).
+pub fn headline(cells: &[Cell]) -> (f64, f64) {
+    let mean_of = |method: &str, f: &dyn Fn(&Cell) -> f64| -> f64 {
+        let xs: Vec<f64> = cells.iter().filter(|c| c.method == method).map(f).collect();
+        stats::mean(&xs)
+    };
+    let thr = |c: &Cell| stats::mean(&c.throughput_gbps);
+    let en = |c: &Cell| stats::mean(&c.energy_kj);
+    let static_thr = (mean_of("rclone", &thr) + mean_of("escp", &thr)) / 2.0;
+    let sparta_thr = mean_of("sparta-t", &thr).max(mean_of("sparta-fe", &thr));
+    let static_en = (mean_of("rclone", &en) + mean_of("escp", &en)) / 2.0;
+    let sparta_en = mean_of("sparta-fe", &en).min(mean_of("sparta-t", &en));
+    let thr_gain = (sparta_thr - static_thr) / static_thr * 100.0;
+    let energy_cut = (static_en - sparta_en) / static_en * 100.0;
+    (thr_gain, energy_cut)
+}

@@ -1,0 +1,105 @@
+//! Fig. 7: fairness of concurrent transfers (JFI timelines) in three
+//! scenarios on the Chameleon preset.
+
+use super::common::{make_optimizer, Scale, SpartaCtx};
+use crate::coordinator::Controller;
+use crate::net::Testbed;
+use crate::telemetry::Table;
+use crate::transfer::TransferJob;
+use crate::util::stats;
+use anyhow::Result;
+
+/// One concurrent-transfer scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub methods: Vec<String>,
+    /// Per-MI Jain's fairness index.
+    pub jfi: Vec<f64>,
+    /// Per-lane mean throughput.
+    pub lane_throughput: Vec<(String, f64)>,
+}
+
+impl Scenario {
+    pub fn avg_jfi(&self) -> f64 {
+        stats::mean(&self.jfi)
+    }
+
+    /// Mean JFI after the convergence phase (second half of the run).
+    pub fn converged_jfi(&self) -> f64 {
+        let half = self.jfi.len() / 2;
+        stats::mean(&self.jfi[half..])
+    }
+
+    /// Std-dev of JFI after convergence (SPARTA-T fluctuates more).
+    pub fn jfi_std(&self) -> f64 {
+        let half = self.jfi.len() / 2;
+        stats::Summary::of(&self.jfi[half..]).std
+    }
+}
+
+/// The paper's three scenarios: (a) 3 × SPARTA-T, (b) 3 × SPARTA-FE,
+/// (c) SPARTA-FE + Falcon_MP + rclone.
+pub fn scenarios() -> Vec<(&'static str, Vec<&'static str>)> {
+    vec![
+        ("3x sparta-t", vec!["sparta-t", "sparta-t", "sparta-t"]),
+        ("3x sparta-fe", vec!["sparta-fe", "sparta-fe", "sparta-fe"]),
+        ("mixed", vec!["sparta-fe", "falcon_mp", "rclone"]),
+    ]
+}
+
+/// Run one concurrent scenario.
+pub fn run_scenario(
+    ctx: &SpartaCtx,
+    name: &str,
+    methods: &[&str],
+    scale: Scale,
+    seed: u64,
+) -> Result<Scenario> {
+    let (files, bytes) = scale.workload();
+    let mut ctl = Controller::builder(Testbed::chameleon()).seed(seed).build();
+    for (i, method) in methods.iter().enumerate() {
+        let (opt, engine, reward) = make_optimizer(ctx, method, seed ^ (i as u64 + 1))?;
+        ctl.add_lane(opt, TransferJob::files(files, bytes), engine, reward);
+    }
+    let report = ctl.run_all();
+    Ok(Scenario {
+        name: name.to_string(),
+        methods: methods.iter().map(|s| s.to_string()).collect(),
+        jfi: report.jfi_series.clone(),
+        lane_throughput: report
+            .lanes
+            .iter()
+            .map(|l| (l.name.clone(), l.avg_throughput_gbps()))
+            .collect(),
+    })
+}
+
+/// Run all three scenarios.
+pub fn run(ctx: &SpartaCtx, scale: Scale, seed: u64) -> Result<Vec<Scenario>> {
+    scenarios()
+        .into_iter()
+        .map(|(name, methods)| run_scenario(ctx, name, &methods, scale, seed))
+        .collect()
+}
+
+pub fn print(scenarios: &[Scenario]) {
+    println!("\nFig 7 — fairness of concurrent transfers (Chameleon, shared 10G):");
+    let mut table = Table::new(&["scenario", "avg JFI", "converged JFI", "JFI std", "per-lane Gbps"]);
+    for s in scenarios {
+        let lanes = s
+            .lane_throughput
+            .iter()
+            .map(|(n, t)| format!("{n}={t:.1}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        table.row(vec![
+            s.name.clone(),
+            format!("{:.3}", s.avg_jfi()),
+            format!("{:.3}", s.converged_jfi()),
+            format!("{:.3}", s.jfi_std()),
+            lanes,
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,16 @@
+//! Experiment harness: one module per paper table/figure.
+//!
+//! The CLI subcommands and the `cargo bench` binaries are thin wrappers over
+//! these functions, so every reported number is regenerable both ways. Each
+//! experiment takes a [`Scale`] so tests/benches can run a reduced (but
+//! structurally identical) version of the paper's full workload.
+
+pub mod common;
+pub mod fig1;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+
+pub use common::{make_optimizer, train_pipeline, Scale, SpartaCtx};

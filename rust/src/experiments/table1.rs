@@ -1,0 +1,135 @@
+//! Table 1: per-algorithm training and inference cost comparison.
+
+use super::common::{train_pipeline, Scale, SpartaCtx};
+use crate::agents::make_agent;
+use crate::coordinator::{ParamBounds, RewardKind};
+use crate::emulator::Env;
+use crate::energy::PowerModel;
+use crate::net::Testbed;
+use crate::telemetry::Table;
+use crate::trainer::{LiveEnv, ResourceMeter};
+use anyhow::Result;
+
+/// One Table-1 row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub algo: String,
+    pub offline_train_min: f64,
+    pub steps_to_converge: usize,
+    pub cpu_pct: f64,
+    /// XLA-executable share of wall time — the "GPU%" analogue (DESIGN.md §1).
+    pub xla_pct: f64,
+    pub mem_pct: f64,
+    pub train_energy_kj: f64,
+    pub inference_ms: f64,
+    pub inference_energy_j: f64,
+    pub online_tuning_kj: f64,
+}
+
+/// Train each algorithm offline (T/E reward, Chameleon transitions), then
+/// microbench inference and measure a short online-tuning phase.
+pub fn run(ctx: &SpartaCtx, algos: &[&str], scale: Scale, seed: u64) -> Result<Vec<Row>> {
+    let tb = Testbed::chameleon();
+    let mut rows = Vec::new();
+    for algo in algos {
+        let stats = train_pipeline(ctx, algo, RewardKind::ThroughputEnergy, &tb, scale, seed)?;
+
+        // Inference microbench: steady-state per-decision latency.
+        let mut agent = make_agent(&ctx.runtime, algo, seed, None)?;
+        let state_len = ctx
+            .runtime
+            .compile(&format!("{algo}_forward"))?
+            .spec
+            .arg_len(1);
+        let state = vec![0.1f32; state_len];
+        for _ in 0..20 {
+            agent.act(&state, false); // warm-up
+        }
+        let reps = 200;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            agent.act(&state, false);
+        }
+        let inference_ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+        // Per-inference energy: latency × a one-core active-power figure
+        // (the paper measures ~0.09 J at sub-ms latencies on server CPUs).
+        let inference_energy_j = inference_ms / 1000.0 * 130.0;
+
+        // Online tuning energy: a short adaptation phase on CloudLab.
+        let meter = ResourceMeter::start();
+        let mut env = LiveEnv::new(
+            Testbed::cloudlab(),
+            RewardKind::ThroughputEnergy,
+            ParamBounds::default(),
+            8,
+            30,
+            seed ^ 0x0711,
+        );
+        let tune_episodes = match scale {
+            Scale::Quick => 4,
+            Scale::Paper => 20,
+        };
+        for _ in 0..tune_episodes {
+            let mut state = env.reset();
+            loop {
+                let a = agent.act(&state, true);
+                let out = env.step(a);
+                agent.observe(&state, a, out.reward, &out.state, out.done);
+                state = out.state;
+                if out.done {
+                    break;
+                }
+            }
+        }
+        let tune = meter.stop();
+        // Add the end-system transfer energy the tuning phase burned
+        // (suboptimal exploration transfers): approximate with the
+        // efficient-engine power at the tuning workload.
+        let transfer_kj = tune.wall_s * PowerModel::efficient().power_w(36, 5.0) / 1000.0;
+
+        rows.push(Row {
+            algo: algo.to_string(),
+            offline_train_min: stats.wall_s / 60.0,
+            steps_to_converge: stats.steps_to_converge,
+            cpu_pct: stats.cpu_pct,
+            xla_pct: stats.xla_pct,
+            mem_pct: stats.mem_pct,
+            train_energy_kj: stats.energy_kj,
+            inference_ms,
+            inference_energy_j,
+            online_tuning_kj: tune.energy_kj + transfer_kj,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Row]) {
+    println!("\nTable 1 — training/inference cost per algorithm:");
+    let mut table = Table::new(&[
+        "method",
+        "offline min",
+        "steps conv",
+        "CPU%",
+        "XLA% (GPU)",
+        "mem%",
+        "train kJ",
+        "infer ms",
+        "infer J",
+        "tuning kJ",
+    ]);
+    for r in rows {
+        table.row(vec![
+            r.algo.clone(),
+            format!("{:.1}", r.offline_train_min),
+            format!("{}", r.steps_to_converge),
+            format!("{:.1}", r.cpu_pct),
+            format!("{:.1}", r.xla_pct),
+            format!("{:.1}", r.mem_pct),
+            format!("{:.1}", r.train_energy_kj),
+            format!("{:.3}", r.inference_ms),
+            format!("{:.4}", r.inference_energy_j),
+            format!("{:.2}", r.online_tuning_kj),
+        ]);
+    }
+    table.print();
+}

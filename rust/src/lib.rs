@@ -1,0 +1,58 @@
+//! # SPARTA — Smart Parameter Adaptation via Reinforcement learning for data Transfer Acceleration
+//!
+//! A reproduction of *"Optimizing Data Transfer Performance and Energy Efficiency
+//! with Deep Reinforcement Learning"* (Jamil et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the transfer coordinator: the monitoring-interval
+//!   control loop, the five-action concurrency/parallelism tuner, the F&E and T/E
+//!   reward machinery, the DRL agents (DQN, DRQN, PPO, R_PPO, DDPG), the
+//!   cluster-lookup emulated training environment, the state-of-the-art baselines
+//!   (rclone/escp-style static tools, Falcon_MP, 2-phase), and the simulated
+//!   substrates the paper's testbeds provided: a fluid-model TCP/CUBIC wide-area
+//!   network ([`net`]) and a RAPL-like end-system energy meter ([`energy`]).
+//! * **Layer 2 (python/compile, build-time only)** — the agents' policy/value
+//!   networks and Adam update steps as pure JAX functions, AOT-lowered to HLO
+//!   text artifacts that this crate loads through the PJRT CPU client.
+//! * **Layer 1 (python/compile/kernels, build-time only)** — Pallas kernels for
+//!   the dense/LSTM hot paths and the emulator's k-means assignment, validated
+//!   against pure-jnp oracles.
+//!
+//! Python never runs on the transfer path: `make artifacts` lowers everything
+//! once, and the `sparta` binary is self-contained afterwards.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use sparta::net::{Testbed, NetworkSim};
+//! use sparta::transfer::TransferJob;
+//! use sparta::coordinator::{Controller, RewardKind};
+//! use sparta::baselines::StaticTool;
+//!
+//! // Simulate an rclone-style static transfer of 50 x 1 GiB on the
+//! // Chameleon (TACC->UC, 10 Gbps) testbed preset.
+//! let tb = Testbed::chameleon();
+//! let mut ctl = Controller::builder(tb)
+//!     .job(TransferJob::files(50, 1 << 30))
+//!     .reward(RewardKind::ThroughputEnergy)
+//!     .build();
+//! let report = ctl.run(Box::new(StaticTool::rclone()), 0xC0FFEE);
+//! println!("avg throughput {:.2} Gbps", report.avg_throughput_gbps());
+//! ```
+
+pub mod agents;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod emulator;
+pub mod energy;
+pub mod experiments;
+pub mod net;
+pub mod runtime;
+pub mod telemetry;
+pub mod trainer;
+pub mod transfer;
+pub mod util;
+
+/// Crate version, re-exported for the CLI `info` subcommand.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

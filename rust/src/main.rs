@@ -1,0 +1,243 @@
+//! `sparta` — the CLI entry point / launcher.
+//!
+//! ```text
+//! sparta info                         # artifacts, testbeds, trained weights
+//! sparta collect  --testbed chameleon --scale quick
+//! sparta train    --algo rppo --reward te --scale quick
+//! sparta train-all --scale quick      # all 5 algos x both rewards
+//! sparta transfer --method sparta-fe --testbed chameleon
+//! sparta sweep    --testbed chameleon             # Fig 1
+//! sparta algos    --reward te                     # Fig 4
+//! sparta tune                                      # Fig 5
+//! sparta compare                                   # Fig 6
+//! sparta fairness                                  # Fig 7
+//! sparta table1                                    # Table 1
+//! ```
+
+use anyhow::{anyhow, Result};
+use sparta::config::Paths;
+use sparta::coordinator::{Controller, RewardKind};
+use sparta::experiments::{self, make_optimizer, Scale, SpartaCtx};
+use sparta::net::Testbed;
+use sparta::telemetry::report::lane_json;
+use sparta::telemetry::Table;
+use sparta::transfer::TransferJob;
+use sparta::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("quiet") {
+        sparta::util::log::set_level(0);
+    }
+    if args.flag("verbose") {
+        sparta::util::log::set_level(2);
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn testbed_arg(args: &Args) -> Result<Testbed> {
+    let name = args.get_or("testbed", "chameleon");
+    Testbed::by_name(name).ok_or_else(|| anyhow!("unknown testbed '{name}'"))
+}
+
+fn ctx() -> Result<SpartaCtx> {
+    SpartaCtx::load(Paths::resolve())
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let scale = Scale::by_name(args.get_or("scale", "quick"));
+    let seed = args.get_u64("seed", 42).map_err(|e| anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        Some("info") => info(),
+        Some("collect") => {
+            let c = ctx()?;
+            let tb = testbed_arg(args)?;
+            let ts = experiments::common::transitions_for(&c, &tb, scale, seed)?;
+            println!("{} transitions cached for {}", ts.len(), tb.name);
+            Ok(())
+        }
+        Some("train") => {
+            let c = ctx()?;
+            let tb = testbed_arg(args)?;
+            let algo = args.get_or("algo", "rppo").to_string();
+            let reward = RewardKind::by_name(args.get_or("reward", "te"))
+                .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
+            let stats = experiments::train_pipeline(&c, &algo, reward, &tb, scale, seed)?;
+            println!(
+                "trained {algo} ({}) in {:.1}s: {} env steps, {} train calls, converged@{}",
+                reward.short(),
+                stats.wall_s,
+                stats.env_steps,
+                stats.train_calls,
+                stats.steps_to_converge
+            );
+            Ok(())
+        }
+        Some("train-all") => {
+            let c = ctx()?;
+            let tb = testbed_arg(args)?;
+            for algo in sparta::agents::ALGOS {
+                for reward in [RewardKind::ThroughputEnergy, RewardKind::FairnessEfficiency] {
+                    let stats = experiments::train_pipeline(&c, algo, reward, &tb, scale, seed)?;
+                    println!(
+                        "{algo}-{}: {:.1}s, {} steps, converged@{}",
+                        reward.short(),
+                        stats.wall_s,
+                        stats.env_steps,
+                        stats.steps_to_converge
+                    );
+                }
+            }
+            Ok(())
+        }
+        Some("transfer") => {
+            let c = ctx()?;
+            let tb = testbed_arg(args)?;
+            let method = args.get_or("method", "sparta-fe");
+            let (files, bytes) = scale.workload();
+            let files = args.get_usize("files", files).map_err(|e| anyhow!(e))?;
+            let (opt, engine, reward) = make_optimizer(&c, method, seed)?;
+            let mut ctl = Controller::builder(tb)
+                .job(TransferJob::files(files, bytes))
+                .engine(engine)
+                .reward(reward)
+                .seed(seed)
+                .build();
+            let report = ctl.run(opt, seed);
+            let lane = report.lane();
+            let mut t = Table::new(&["metric", "value"]);
+            t.row(vec!["method".into(), method.into()]);
+            t.row(vec!["completed".into(), lane.completed.to_string()]);
+            t.row(vec!["avg throughput (Gbps)".into(), format!("{:.2}", lane.avg_throughput_gbps())]);
+            t.row(vec!["duration (s)".into(), format!("{:.0}", lane.duration_s)]);
+            t.row(vec!["energy (kJ)".into(), format!("{:.1}", lane.total_energy_j / 1000.0)]);
+            t.row(vec!["energy/GB (J)".into(), format!("{:.1}", lane.energy_per_gb())]);
+            t.row(vec!["avg plr".into(), format!("{:.5}", lane.avg_plr())]);
+            t.print();
+            if let Some(out) = args.get("out") {
+                sparta::telemetry::save_report(std::path::Path::new(out), &lane_json(lane))?;
+            }
+            Ok(())
+        }
+        Some("sweep") => {
+            let tb = testbed_arg(args)?;
+            let grid = [1u32, 2, 4, 8, 16];
+            let pts = experiments::fig1::sweep(&tb, &grid, &["low", "medium", "high"], seed);
+            experiments::fig1::print(&pts, &grid);
+            Ok(())
+        }
+        Some("algos") => {
+            let c = ctx()?;
+            let reward = RewardKind::by_name(args.get_or("reward", "te"))
+                .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
+            let cells = experiments::fig4::run(&c, reward, &sparta::agents::ALGOS, scale, seed)?;
+            experiments::fig4::print(&cells);
+            Ok(())
+        }
+        Some("tune") => {
+            let c = ctx()?;
+            let curves = experiments::fig5::run(&c, &sparta::agents::ALGOS, scale, seed)?;
+            experiments::fig5::print(&curves);
+            Ok(())
+        }
+        Some("compare") => {
+            let c = ctx()?;
+            let testbeds = Testbed::all();
+            let cells = experiments::fig6::run(&c, &testbeds, scale, seed)?;
+            experiments::fig6::print(&cells);
+            let (thr, en) = experiments::fig6::headline(&cells);
+            println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");
+            Ok(())
+        }
+        Some("fairness") => {
+            let c = ctx()?;
+            let scenarios = experiments::fig7::run(&c, scale, seed)?;
+            experiments::fig7::print(&scenarios);
+            Ok(())
+        }
+        Some("table1") => {
+            let c = ctx()?;
+            let rows = experiments::table1::run(&c, &sparta::agents::ALGOS, scale, seed)?;
+            experiments::table1::print(&rows);
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' — try `sparta help`")),
+    }
+}
+
+fn info() -> Result<()> {
+    println!("sparta {} — DRL-optimized data transfers (SPARTA reproduction)", sparta::VERSION);
+    let paths = Paths::resolve();
+    match SpartaCtx::load(paths) {
+        Ok(c) => {
+            println!(
+                "artifacts: {} graphs, {} algorithms",
+                c.runtime.manifest.graphs.len(),
+                c.runtime.manifest.algos.len()
+            );
+            let store = c.weight_store();
+            let mut trained = Vec::new();
+            for algo in sparta::agents::ALGOS {
+                for r in ["te", "fe"] {
+                    let name = format!("{algo}_{r}");
+                    if store.exists(&name) {
+                        trained.push(name);
+                    }
+                }
+            }
+            println!(
+                "trained weights: {}",
+                if trained.is_empty() {
+                    "none (run `sparta train-all`)".into()
+                } else {
+                    trained.join(", ")
+                }
+            );
+        }
+        Err(e) => println!("artifacts: not loaded ({e})"),
+    }
+    let mut t = Table::new(&["testbed", "capacity", "RTT ms", "energy counters"]);
+    for tb in Testbed::all() {
+        t.row(vec![
+            tb.name.into(),
+            format!("{:.0} Gbps", tb.capacity_gbps),
+            format!("{:.0}", tb.base_rtt_s * 1000.0),
+            tb.has_energy_counters.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+const HELP: &str = "\
+sparta — SPARTA reproduction CLI
+
+subcommands:
+  info                      artifacts / testbeds / trained-weights status
+  collect   --testbed T --scale S          cache exploration transitions
+  train     --algo A --reward fe|te        offline-train one agent
+  train-all                                train all 5 algos x 2 rewards
+  transfer  --method M --testbed T         run one transfer (M: rclone, escp,
+                                           falcon_mp, 2-phase, sparta-t, sparta-fe)
+  sweep     --testbed T                    Fig 1   (cc,p) x background sweep
+  algos     --reward fe|te                 Fig 4   DRL algorithm comparison
+  tune                                     Fig 5   online tuning on CloudLab
+  compare                                  Fig 6   methods x testbeds
+  fairness                                 Fig 7   concurrent-transfer JFI
+  table1                                   Table 1 training/inference cost
+
+common flags: --scale quick|paper  --seed N  --quiet --verbose
+";

@@ -1,0 +1,198 @@
+//! Background (competing) traffic generators.
+//!
+//! The paper's testbeds share WAN paths with uncontrolled traffic, which is
+//! what moves the optimal (cc, p) around over time (Fig. 1). These generators
+//! reproduce the three regimes the paper samples — light, moderate and heavy —
+//! plus diurnal and bursty patterns for training diversity. Background traffic
+//! is modeled as partially loss-responsive: a fraction behaves like open-loop
+//! (UDP/video) load and the rest backs off when the link drops packets, like
+//! the aggregate of many small TCP flows.
+
+use crate::util::Rng;
+
+/// A background-traffic process. Call [`Background::rate_gbps`] once per tick.
+#[derive(Debug, Clone)]
+pub enum Background {
+    /// No competing traffic.
+    Idle,
+    /// Constant offered load.
+    Constant { gbps: f64 },
+    /// Sinusoidal "time of day" pattern plus Gaussian jitter.
+    Diurnal { mean_gbps: f64, amplitude_gbps: f64, period_s: f64, jitter_gbps: f64 },
+    /// Two-state Markov burst process (low/high).
+    Bursty { low_gbps: f64, high_gbps: f64, switch_prob: f64 },
+    /// Piecewise-constant schedule of (start_time_s, gbps), sorted by time.
+    Steps { schedule: Vec<(f64, f64)> },
+}
+
+/// Runtime state for a background process.
+#[derive(Debug, Clone)]
+pub struct BackgroundState {
+    spec: Background,
+    bursty_high: bool,
+    /// Loss-responsiveness: multiplier in (0, 1] applied to the nominal rate,
+    /// reduced when the link reports drops and recovering otherwise.
+    responsive_scale: f64,
+    /// Fraction of the background that reacts to loss (0 = pure UDP).
+    responsive_frac: f64,
+}
+
+impl Background {
+    /// The paper's three Fig.-1 regimes as fractions of link capacity.
+    pub fn regime(name: &str, capacity_gbps: f64) -> Background {
+        match name {
+            "low" => Background::Constant { gbps: 0.05 * capacity_gbps },
+            "medium" => Background::Diurnal {
+                mean_gbps: 0.25 * capacity_gbps,
+                amplitude_gbps: 0.10 * capacity_gbps,
+                period_s: 600.0,
+                jitter_gbps: 0.02 * capacity_gbps,
+            },
+            "high" => Background::Diurnal {
+                mean_gbps: 0.45 * capacity_gbps,
+                amplitude_gbps: 0.15 * capacity_gbps,
+                period_s: 400.0,
+                jitter_gbps: 0.04 * capacity_gbps,
+            },
+            other => panic!("unknown background regime '{other}' (low|medium|high)"),
+        }
+    }
+
+    pub fn into_state(self) -> BackgroundState {
+        BackgroundState {
+            spec: self,
+            bursty_high: false,
+            responsive_scale: 1.0,
+            responsive_frac: 0.6,
+        }
+    }
+}
+
+impl BackgroundState {
+    /// Offered background rate at simulation time `t` (seconds).
+    pub fn rate_gbps(&mut self, t: f64, dt: f64, rng: &mut Rng) -> f64 {
+        let nominal = match &self.spec {
+            Background::Idle => 0.0,
+            Background::Constant { gbps } => *gbps,
+            Background::Diurnal { mean_gbps, amplitude_gbps, period_s, jitter_gbps } => {
+                let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                (mean_gbps + amplitude_gbps * phase.sin() + rng.normal_ms(0.0, *jitter_gbps))
+                    .max(0.0)
+            }
+            Background::Bursty { low_gbps, high_gbps, switch_prob } => {
+                // Scale switching probability with dt so behaviour is
+                // tick-size independent (prob per second = switch_prob).
+                if rng.chance(switch_prob * dt) {
+                    self.bursty_high = !self.bursty_high;
+                }
+                if self.bursty_high { *high_gbps } else { *low_gbps }
+            }
+            Background::Steps { schedule } => {
+                let mut rate = 0.0;
+                for &(start, gbps) in schedule {
+                    if t >= start {
+                        rate = gbps;
+                    }
+                }
+                rate
+            }
+        };
+        let responsive = nominal * self.responsive_frac * self.responsive_scale;
+        let open_loop = nominal * (1.0 - self.responsive_frac);
+        responsive + open_loop
+    }
+
+    /// Feed back the link's drop fraction; responsive share backs off on loss
+    /// and additively recovers when the path is clean.
+    pub fn observe_loss(&mut self, drop_frac: f64, dt: f64) {
+        if drop_frac > 1e-6 {
+            self.responsive_scale = (self.responsive_scale * 0.92).max(0.2);
+        } else {
+            self.responsive_scale = (self.responsive_scale + 0.05 * dt).min(1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_is_zero() {
+        let mut b = Background::Idle.into_state();
+        let mut rng = Rng::new(1);
+        assert_eq!(b.rate_gbps(0.0, 0.05, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn constant_holds() {
+        let mut b = Background::Constant { gbps: 3.0 }.into_state();
+        let mut rng = Rng::new(1);
+        assert!((b.rate_gbps(10.0, 0.05, &mut rng) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_oscillates_nonnegative() {
+        let mut b = Background::Diurnal {
+            mean_gbps: 2.0,
+            amplitude_gbps: 1.5,
+            period_s: 100.0,
+            jitter_gbps: 0.1,
+        }
+        .into_state();
+        let mut rng = Rng::new(2);
+        let rates: Vec<f64> = (0..2000).map(|i| b.rate_gbps(i as f64 * 0.05, 0.05, &mut rng)).collect();
+        assert!(rates.iter().all(|&r| r >= 0.0));
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let min = rates.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min > 1.0, "should oscillate, spread={}", max - min);
+    }
+
+    #[test]
+    fn bursty_switches_states() {
+        let mut b = Background::Bursty { low_gbps: 0.5, high_gbps: 5.0, switch_prob: 0.5 }.into_state();
+        let mut rng = Rng::new(3);
+        let mut saw_low = false;
+        let mut saw_high = false;
+        for i in 0..4000 {
+            let r = b.rate_gbps(i as f64 * 0.05, 0.05, &mut rng);
+            if r < 1.0 { saw_low = true } else { saw_high = true }
+        }
+        assert!(saw_low && saw_high);
+    }
+
+    #[test]
+    fn steps_follow_schedule() {
+        let mut b = Background::Steps { schedule: vec![(0.0, 1.0), (10.0, 4.0)] }.into_state();
+        let mut rng = Rng::new(4);
+        assert!((b.rate_gbps(5.0, 0.05, &mut rng) - 1.0).abs() < 1e-9);
+        assert!((b.rate_gbps(15.0, 0.05, &mut rng) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backs_off_under_loss() {
+        let mut b = Background::Constant { gbps: 4.0 }.into_state();
+        let mut rng = Rng::new(5);
+        let before = b.rate_gbps(0.0, 0.05, &mut rng);
+        for _ in 0..50 {
+            b.observe_loss(0.1, 0.05);
+        }
+        let after = b.rate_gbps(1.0, 0.05, &mut rng);
+        assert!(after < before, "{after} !< {before}");
+        for _ in 0..2000 {
+            b.observe_loss(0.0, 0.05);
+        }
+        let recovered = b.rate_gbps(2.0, 0.05, &mut rng);
+        assert!((recovered - before).abs() < 1e-6);
+    }
+
+    #[test]
+    fn regimes_scale_with_capacity() {
+        let mut lo = Background::regime("low", 10.0).into_state();
+        let mut hi = Background::regime("high", 10.0).into_state();
+        let mut rng = Rng::new(6);
+        let l = lo.rate_gbps(0.0, 0.05, &mut rng);
+        let h = hi.rate_gbps(0.0, 0.05, &mut rng);
+        assert!(h > l);
+    }
+}

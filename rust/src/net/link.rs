@@ -1,0 +1,161 @@
+//! Shared bottleneck link with a droptail queue.
+
+/// A bottleneck link: fixed capacity, droptail buffer, propagation delay.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Capacity in Gbps.
+    pub capacity_gbps: f64,
+    /// One-way-equivalent base RTT in seconds (propagation, no queueing).
+    pub base_rtt_s: f64,
+    /// Buffer size in bits (droptail).
+    pub buffer_bits: f64,
+    /// Current queue occupancy in bits.
+    queue_bits: f64,
+}
+
+/// Outcome of offering one tick of traffic to the link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TickOutcome {
+    /// Fraction of offered bits that were dropped (0..1).
+    pub drop_frac: f64,
+    /// Fraction of offered bits delivered (serviced or queued).
+    pub accept_frac: f64,
+    /// Queueing delay experienced this tick, seconds.
+    pub queue_delay_s: f64,
+}
+
+impl Link {
+    /// Create a link; `buffer_bdp` sizes the droptail buffer as a multiple of
+    /// the bandwidth-delay product (1.0 = classic BDP rule).
+    pub fn new(capacity_gbps: f64, base_rtt_s: f64, buffer_bdp: f64) -> Link {
+        assert!(capacity_gbps > 0.0 && base_rtt_s > 0.0 && buffer_bdp > 0.0);
+        let bdp_bits = capacity_gbps * 1e9 * base_rtt_s;
+        Link {
+            capacity_gbps,
+            base_rtt_s,
+            buffer_bits: buffer_bdp * bdp_bits,
+            queue_bits: 0.0,
+        }
+    }
+
+    /// Offer `offered_gbps` of aggregate traffic for `dt` seconds.
+    ///
+    /// The queue drains at link capacity; arrivals beyond capacity fill the
+    /// queue; arrivals beyond the remaining buffer are dropped (droptail).
+    pub fn tick(&mut self, offered_gbps: f64, dt: f64) -> TickOutcome {
+        let capacity_bits = self.capacity_gbps * 1e9 * dt;
+        let offered_bits = offered_gbps.max(0.0) * 1e9 * dt;
+
+        // Serve the queue first, then arrivals.
+        let served_from_queue = self.queue_bits.min(capacity_bits);
+        self.queue_bits -= served_from_queue;
+        let remaining_capacity = capacity_bits - served_from_queue;
+
+        let direct = offered_bits.min(remaining_capacity);
+        let to_queue_want = offered_bits - direct;
+        let space = self.buffer_bits - self.queue_bits;
+        let queued = to_queue_want.min(space);
+        self.queue_bits += queued;
+        let dropped = to_queue_want - queued;
+
+        let drop_frac = if offered_bits > 0.0 { dropped / offered_bits } else { 0.0 };
+        TickOutcome {
+            drop_frac,
+            accept_frac: 1.0 - drop_frac,
+            queue_delay_s: self.queue_delay_s(),
+        }
+    }
+
+    /// Current queueing delay (queue occupancy / capacity).
+    pub fn queue_delay_s(&self) -> f64 {
+        self.queue_bits / (self.capacity_gbps * 1e9)
+    }
+
+    /// Current RTT including queueing delay.
+    pub fn rtt_s(&self) -> f64 {
+        self.base_rtt_s + self.queue_delay_s()
+    }
+
+    /// Queue occupancy as a fraction of the buffer (0..1).
+    pub fn queue_fill(&self) -> f64 {
+        self.queue_bits / self.buffer_bits
+    }
+
+    /// Reset queue state (new experiment).
+    pub fn reset(&mut self) {
+        self.queue_bits = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Link {
+        Link::new(10.0, 0.032, 1.0)
+    }
+
+    #[test]
+    fn under_capacity_no_drops_no_queue() {
+        let mut l = link();
+        for _ in 0..100 {
+            let o = l.tick(5.0, 0.05);
+            assert_eq!(o.drop_frac, 0.0);
+        }
+        assert!(l.queue_delay_s() < 1e-9);
+    }
+
+    #[test]
+    fn over_capacity_builds_queue_then_drops() {
+        let mut l = link();
+        let mut saw_queue = false;
+        let mut saw_drop = false;
+        for _ in 0..200 {
+            let o = l.tick(20.0, 0.05);
+            if o.queue_delay_s > 0.0 {
+                saw_queue = true;
+            }
+            if o.drop_frac > 0.0 {
+                saw_drop = true;
+            }
+        }
+        assert!(saw_queue && saw_drop);
+        // At steady state with 2x overload, half the offered bits are dropped.
+        let o = l.tick(20.0, 0.05);
+        assert!((o.drop_frac - 0.5).abs() < 0.05, "drop={}", o.drop_frac);
+    }
+
+    #[test]
+    fn queue_drains_when_idle() {
+        let mut l = link();
+        for _ in 0..100 {
+            l.tick(30.0, 0.05);
+        }
+        assert!(l.queue_delay_s() > 0.0);
+        for _ in 0..100 {
+            l.tick(0.0, 0.05);
+        }
+        assert!(l.queue_delay_s() < 1e-9);
+    }
+
+    #[test]
+    fn rtt_inflates_with_queue() {
+        let mut l = link();
+        let base = l.rtt_s();
+        for _ in 0..100 {
+            l.tick(30.0, 0.05);
+        }
+        assert!(l.rtt_s() > base);
+        // Max inflation = buffer/capacity = base_rtt * buffer_bdp.
+        assert!(l.rtt_s() <= base + 0.032 + 1e-9);
+    }
+
+    #[test]
+    fn drop_frac_bounded() {
+        let mut l = link();
+        for mult in [0.5, 1.0, 3.0, 10.0] {
+            let o = l.tick(10.0 * mult, 0.05);
+            assert!((0.0..=1.0).contains(&o.drop_frac));
+        }
+    }
+}

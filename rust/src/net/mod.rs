@@ -1,0 +1,30 @@
+//! Fluid-model wide-area network simulator.
+//!
+//! This substrate replaces the paper's physical testbeds (Chameleon, CloudLab,
+//! FABRIC — see DESIGN.md §1). It simulates, at a 50 ms tick granularity:
+//!
+//! * per-TCP-stream CUBIC congestion windows (slow start, cubic growth,
+//!   multiplicative decrease on loss events),
+//! * a shared droptail bottleneck queue (RTT inflation = queueing delay,
+//!   packet drops on overflow),
+//! * per-stream receiver-window caps and per-file-task application I/O caps
+//!   (the reason parallelism `p` and concurrency `cc` help at all),
+//! * time-varying background traffic (the reason the optimum moves).
+//!
+//! The coordinator only ever sees what a real end host would see: per
+//! monitoring-interval goodput, packet-loss rate, and (noisy) RTT samples.
+
+pub mod background;
+pub mod link;
+pub mod sim;
+pub mod stream;
+pub mod testbed;
+
+pub use background::Background;
+pub use link::Link;
+pub use sim::{FlowId, MiMetrics, NetworkSim, SimConfig};
+pub use stream::CubicStream;
+pub use testbed::Testbed;
+
+/// Bits per packet (1500-byte MSS).
+pub const MSS_BITS: f64 = 1500.0 * 8.0;

@@ -1,0 +1,517 @@
+//! Multi-flow network simulator: streams × tasks × flows over a shared link.
+//!
+//! A *flow* is one transfer application (one SPARTA agent or baseline tool)
+//! holding `cc` file-tasks with `p` TCP streams each. All flows plus the
+//! background process share one bottleneck [`Link`]. Each call to
+//! [`NetworkSim::run_mi`] advances one monitoring interval and returns the
+//! end-host-observable metrics per flow — exactly the signal set the paper's
+//! agents consume.
+
+use super::background::BackgroundState;
+use super::link::Link;
+use super::stream::CubicStream;
+use super::testbed::Testbed;
+use super::MSS_BITS;
+use crate::util::Rng;
+
+/// Identifies a flow within a [`NetworkSim`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlowId(pub usize);
+
+/// Simulator tick configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Fluid-model tick, seconds.
+    pub tick_s: f64,
+    /// Std-dev of RTT measurement noise, seconds.
+    pub rtt_noise_s: f64,
+    /// Maximum concurrent tasks / streams-per-task a flow may use.
+    pub max_cc: u32,
+    pub max_p: u32,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { tick_s: 0.05, rtt_noise_s: 0.0004, max_cc: 32, max_p: 32 }
+    }
+}
+
+/// One file-task: a group of `p` parallel streams.
+#[derive(Debug, Clone)]
+struct Task {
+    streams: Vec<CubicStream>,
+    /// Number of currently-active streams (prefix of `streams`).
+    p_active: usize,
+    /// Whether the task itself is admitted (prefix `cc` of tasks are).
+    active: bool,
+}
+
+/// One transfer application's traffic.
+#[derive(Debug, Clone)]
+struct Flow {
+    tasks: Vec<Task>,
+    cc_active: usize,
+    /// Per-task application I/O rate cap (engine property), Gbps.
+    task_io_gbps: f64,
+    /// Per-stream receiver-window rate cap, Gbps.
+    stream_cap_gbps: f64,
+    /// Optional cap on total demand (e.g. job nearly complete), Gbps.
+    demand_cap_gbps: f64,
+    // Per-MI accumulators.
+    acc_delivered_bits: f64,
+    acc_sent_bits: f64,
+    acc_lost_bits: f64,
+    acc_rtt_sum: f64,
+    acc_rtt_n: u64,
+}
+
+impl Flow {
+    fn new(cc: u32, p: u32, task_io_gbps: f64, stream_cap_gbps: f64, cfg: &SimConfig) -> Flow {
+        let mut f = Flow {
+            tasks: Vec::new(),
+            cc_active: 0,
+            task_io_gbps,
+            stream_cap_gbps,
+            demand_cap_gbps: f64::MAX,
+            acc_delivered_bits: 0.0,
+            acc_sent_bits: 0.0,
+            acc_lost_bits: 0.0,
+            acc_rtt_sum: 0.0,
+            acc_rtt_n: 0,
+        };
+        f.set_cc_p(cc, p, cfg);
+        f
+    }
+
+    /// Apply a (cc, p) setting: tasks/streams beyond the new limits are
+    /// *paused* (keeping TCP state), previously paused ones are *resumed* —
+    /// the paper's pause/resume thread semantics.
+    fn set_cc_p(&mut self, cc: u32, p: u32, cfg: &SimConfig) {
+        let cc = cc.clamp(1, cfg.max_cc) as usize;
+        let p = p.clamp(1, cfg.max_p) as usize;
+        while self.tasks.len() < cc {
+            self.tasks.push(Task { streams: Vec::new(), p_active: 0, active: false });
+        }
+        for (i, task) in self.tasks.iter_mut().enumerate() {
+            let task_active = i < cc;
+            while task.streams.len() < p {
+                task.streams.push(CubicStream::new());
+            }
+            for (j, s) in task.streams.iter_mut().enumerate() {
+                if task_active && j < p {
+                    s.resume();
+                } else {
+                    s.pause();
+                }
+            }
+            task.active = task_active;
+            task.p_active = if task_active { p } else { 0 };
+        }
+        self.cc_active = cc;
+    }
+
+    fn active_stream_count(&self) -> usize {
+        self.tasks.iter().map(|t| t.p_active).sum()
+    }
+}
+
+/// End-host-observable metrics for one flow over one monitoring interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MiMetrics {
+    /// Goodput over the MI, Gbps.
+    pub throughput_gbps: f64,
+    /// Packet loss rate over the MI (lost / sent).
+    pub plr: f64,
+    /// Mean measured RTT over the MI, seconds (with measurement noise).
+    pub rtt_s: f64,
+    /// Bytes delivered during the MI.
+    pub bytes_delivered: f64,
+    /// Number of active streams during the MI (cc × p, post-clamp).
+    pub active_streams: usize,
+    /// MI duration, seconds.
+    pub duration_s: f64,
+}
+
+/// The shared-bottleneck simulator.
+pub struct NetworkSim {
+    pub cfg: SimConfig,
+    link: Link,
+    background: BackgroundState,
+    flows: Vec<Flow>,
+    time_s: f64,
+    rng: Rng,
+    testbed: Testbed,
+    /// Reusable per-tick scratch of per-stream desired rates (flat, in
+    /// flow-major/task-major/stream-major order) — §Perf: the tick loop is
+    /// allocation-free at steady state.
+    scratch: Vec<f64>,
+}
+
+impl NetworkSim {
+    /// Build a simulator for a testbed preset with its default background.
+    pub fn new(testbed: Testbed, seed: u64) -> NetworkSim {
+        let background = testbed.default_background.clone().into_state();
+        NetworkSim {
+            cfg: SimConfig::default(),
+            link: testbed.link(),
+            background,
+            flows: Vec::new(),
+            time_s: 0.0,
+            rng: Rng::new(seed),
+            testbed,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Replace the background process.
+    pub fn with_background(mut self, bg: super::background::Background) -> NetworkSim {
+        self.background = bg.into_state();
+        self
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        &self.testbed
+    }
+
+    pub fn time_s(&self) -> f64 {
+        self.time_s
+    }
+
+    /// Add a flow with an engine-specific per-task I/O cap; returns its id.
+    /// `task_io_gbps = None` uses the testbed's efficient-engine default.
+    pub fn add_flow(&mut self, cc: u32, p: u32, task_io_gbps: Option<f64>) -> FlowId {
+        let io = task_io_gbps.unwrap_or(self.testbed.task_io_gbps);
+        let f = Flow::new(cc, p, io, self.testbed.per_stream_cap_gbps, &self.cfg);
+        self.flows.push(f);
+        FlowId(self.flows.len() - 1)
+    }
+
+    /// Apply a (cc, p) update to a flow (pause/resume semantics).
+    pub fn set_cc_p(&mut self, id: FlowId, cc: u32, p: u32) {
+        let cfg = self.cfg.clone();
+        self.flows[id.0].set_cc_p(cc, p, &cfg);
+    }
+
+    /// Cap a flow's total demand (Gbps) — used when a job is nearly done.
+    pub fn set_demand_cap(&mut self, id: FlowId, gbps: f64) {
+        self.flows[id.0].demand_cap_gbps = gbps;
+    }
+
+    /// Number of currently active streams of a flow.
+    pub fn active_streams(&self, id: FlowId) -> usize {
+        self.flows[id.0].active_stream_count()
+    }
+
+    /// Current link RTT (ground truth, for tests/telemetry).
+    pub fn link_rtt_s(&self) -> f64 {
+        self.link.rtt_s()
+    }
+
+    /// Advance one tick of the fluid model.
+    fn tick(&mut self) {
+        let dt = self.cfg.tick_s;
+        let rtt = self.link.rtt_s();
+
+        // Phase 1: compute each active stream's desired rate into the
+        // reusable flat scratch (flow-major, task-major, stream-major) —
+        // no allocation at steady state (§Perf).
+        let mut offered_total = 0.0;
+        let total_streams: usize =
+            self.flows.iter().map(|f| f.tasks.iter().map(|t| t.streams.len()).sum::<usize>()).sum();
+        self.scratch.clear();
+        self.scratch.resize(total_streams, 0.0);
+        let mut idx = 0usize;
+        for flow in &self.flows {
+            let flow_start = idx;
+            let mut per_flow = 0.0;
+            for task in &flow.tasks {
+                if !task.active || task.p_active == 0 {
+                    idx += task.streams.len();
+                    continue;
+                }
+                let io_share = flow.task_io_gbps / task.p_active as f64;
+                for s in &task.streams {
+                    let r = if s.active {
+                        s.cwnd_rate_gbps(rtt)
+                            .min(flow.stream_cap_gbps)
+                            .min(io_share)
+                    } else {
+                        0.0
+                    };
+                    self.scratch[idx] = r;
+                    idx += 1;
+                    per_flow += r;
+                }
+            }
+            // Demand cap: scale all stream rates down proportionally.
+            if per_flow > flow.demand_cap_gbps {
+                let scale = flow.demand_cap_gbps / per_flow;
+                for r in &mut self.scratch[flow_start..idx] {
+                    *r *= scale;
+                }
+                per_flow = flow.demand_cap_gbps;
+            }
+            offered_total += per_flow;
+        }
+        let bg_rate = self.background.rate_gbps(self.time_s, dt, &mut self.rng);
+        offered_total += bg_rate;
+
+        // Phase 2: offer to the link.
+        let outcome = self.link.tick(offered_total, dt);
+        self.background.observe_loss(outcome.drop_frac, dt);
+        let rtt_after = self.link.rtt_s();
+
+        // Phase 3: deliver, account, and evolve windows (same scratch walk
+        // order as phase 1).
+        let mut idx = 0usize;
+        for flow in self.flows.iter_mut() {
+            let mut delivered = 0.0;
+            let mut sent = 0.0;
+            let mut lost = 0.0;
+            for task in flow.tasks.iter_mut() {
+                if !task.active {
+                    idx += task.streams.len();
+                    continue;
+                }
+                let io_share = flow.task_io_gbps / task.p_active.max(1) as f64;
+                for s in task.streams.iter_mut() {
+                    let rate = self.scratch[idx];
+                    idx += 1;
+                    if !s.active {
+                        continue;
+                    }
+                    let sent_bits = rate * 1e9 * dt;
+                    let lost_bits = sent_bits * outcome.drop_frac;
+                    delivered += sent_bits - lost_bits;
+                    sent += sent_bits;
+                    lost += lost_bits;
+
+                    // Loss events: probability that at least one of this
+                    // stream's packets this tick was dropped.
+                    if outcome.drop_frac > 0.0 {
+                        let pkts = sent_bits / MSS_BITS;
+                        let p_event = 1.0 - (1.0 - outcome.drop_frac).powf(pkts.max(0.0));
+                        if self.rng.chance(p_event) {
+                            s.on_loss(rtt_after);
+                        }
+                    }
+                    // Growth: app-limited if a cap (not cwnd) was binding.
+                    let cwnd_rate = s.cwnd_rate_gbps(rtt_after);
+                    let app_limited = rate + 1e-12 < cwnd_rate
+                        || cwnd_rate >= flow.stream_cap_gbps.min(io_share);
+                    s.grow(dt, rtt_after, app_limited);
+                }
+            }
+            flow.acc_delivered_bits += delivered;
+            flow.acc_sent_bits += sent;
+            flow.acc_lost_bits += lost;
+            flow.acc_rtt_sum += rtt_after;
+            flow.acc_rtt_n += 1;
+        }
+        self.time_s += dt;
+    }
+
+    /// Run one monitoring interval of `dur_s` seconds; returns per-flow
+    /// metrics in flow-id order.
+    pub fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
+        for f in &mut self.flows {
+            f.acc_delivered_bits = 0.0;
+            f.acc_sent_bits = 0.0;
+            f.acc_lost_bits = 0.0;
+            f.acc_rtt_sum = 0.0;
+            f.acc_rtt_n = 0;
+        }
+        let ticks = (dur_s / self.cfg.tick_s).round().max(1.0) as usize;
+        for _ in 0..ticks {
+            self.tick();
+        }
+        let actual_dur = ticks as f64 * self.cfg.tick_s;
+        let noise = self.cfg.rtt_noise_s;
+        let mut out = Vec::with_capacity(self.flows.len());
+        // Borrow dance: collect metrics first, then add noise with rng.
+        let metrics: Vec<(f64, f64, f64, f64, usize)> = self
+            .flows
+            .iter()
+            .map(|f| {
+                let thr = f.acc_delivered_bits / actual_dur / 1e9;
+                let plr = if f.acc_sent_bits > 0.0 { f.acc_lost_bits / f.acc_sent_bits } else { 0.0 };
+                let rtt = if f.acc_rtt_n > 0 { f.acc_rtt_sum / f.acc_rtt_n as f64 } else { self.link.rtt_s() };
+                (thr, plr, rtt, f.acc_delivered_bits / 8.0, f.active_stream_count())
+            })
+            .collect();
+        for (thr, plr, rtt, bytes, streams) in metrics {
+            let rtt_noisy = (rtt + self.rng.normal_ms(0.0, noise)).max(1e-4);
+            out.push(MiMetrics {
+                throughput_gbps: thr,
+                plr,
+                rtt_s: rtt_noisy,
+                bytes_delivered: bytes,
+                active_streams: streams,
+                duration_s: actual_dur,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::background::Background;
+
+    fn sim(bg: Background) -> NetworkSim {
+        NetworkSim::new(Testbed::chameleon(), 42).with_background(bg)
+    }
+
+    /// Warm up (slow start + convergence), then measure average throughput.
+    fn steady_throughput(cc: u32, p: u32, bg: Background, mis: usize) -> (f64, f64) {
+        let mut s = sim(bg);
+        let id = s.add_flow(cc, p, None);
+        for _ in 0..15 {
+            s.run_mi(1.0);
+        }
+        let mut thr = 0.0;
+        let mut plr = 0.0;
+        for _ in 0..mis {
+            let m = s.run_mi(1.0);
+            thr += m[id.0].throughput_gbps;
+            plr += m[id.0].plr;
+        }
+        (thr / mis as f64, plr / mis as f64)
+    }
+
+    #[test]
+    fn single_stream_is_rwnd_capped() {
+        let (thr, _) = steady_throughput(1, 1, Background::Idle, 10);
+        // cap = 1 Gbps per stream on chameleon
+        assert!(thr > 0.7 && thr < 1.1, "thr={thr}");
+    }
+
+    #[test]
+    fn parallelism_scales_until_io_cap() {
+        let (t1, _) = steady_throughput(1, 1, Background::Idle, 10);
+        let (t2, _) = steady_throughput(1, 2, Background::Idle, 10);
+        let (t8, _) = steady_throughput(1, 8, Background::Idle, 10);
+        assert!(t2 > t1 * 1.5, "t1={t1} t2={t2}");
+        // One task's I/O cap is 3 Gbps on chameleon.
+        assert!(t8 < 3.3, "t8={t8}");
+        assert!(t8 > 2.4, "t8={t8}");
+    }
+
+    #[test]
+    fn concurrency_and_parallelism_approach_capacity() {
+        let (thr, _) = steady_throughput(4, 4, Background::Idle, 10);
+        assert!(thr > 7.5, "thr={thr}");
+        assert!(thr <= 10.0 + 1e-6);
+    }
+
+    #[test]
+    fn oversubscription_raises_loss() {
+        let (_, plr_small) = steady_throughput(2, 2, Background::Idle, 10);
+        let (_, plr_big) = steady_throughput(16, 16, Background::Idle, 10);
+        // 256 CUBIC streams on a 10G link sit at a small but clearly nonzero
+        // equilibrium loss rate (Mathis: L ∝ (MSS/(RTT·T_stream))²).
+        assert!(plr_big > plr_small, "small={plr_small} big={plr_big}");
+        assert!(plr_big > 1e-5, "plr_big={plr_big}");
+    }
+
+    #[test]
+    fn background_reduces_foreground_share() {
+        let (free, _) = steady_throughput(4, 4, Background::Idle, 10);
+        let (busy, _) = steady_throughput(4, 4, Background::Constant { gbps: 4.5 }, 10);
+        assert!(busy < free - 0.7, "free={free} busy={busy}");
+    }
+
+    #[test]
+    fn two_equal_flows_share_roughly_equally() {
+        let mut s = sim(Background::Idle);
+        let a = s.add_flow(4, 4, None);
+        let b = s.add_flow(4, 4, None);
+        for _ in 0..20 {
+            s.run_mi(1.0);
+        }
+        let mut ta = 0.0;
+        let mut tb = 0.0;
+        for _ in 0..10 {
+            let m = s.run_mi(1.0);
+            ta += m[a.0].throughput_gbps;
+            tb += m[b.0].throughput_gbps;
+        }
+        let ratio = ta / tb;
+        assert!(ratio > 0.7 && ratio < 1.4, "ratio={ratio}");
+    }
+
+    #[test]
+    fn more_streams_grab_bigger_share() {
+        let mut s = sim(Background::Idle);
+        let big = s.add_flow(6, 6, None);
+        let small = s.add_flow(1, 2, None);
+        for _ in 0..20 {
+            s.run_mi(1.0);
+        }
+        let m = s.run_mi(1.0);
+        assert!(m[big.0].throughput_gbps > 2.0 * m[small.0].throughput_gbps);
+    }
+
+    #[test]
+    fn set_cc_p_changes_active_streams() {
+        let mut s = sim(Background::Idle);
+        let id = s.add_flow(4, 4, None);
+        assert_eq!(s.active_streams(id), 16);
+        s.set_cc_p(id, 2, 3);
+        assert_eq!(s.active_streams(id), 6);
+        s.set_cc_p(id, 6, 6);
+        assert_eq!(s.active_streams(id), 36);
+    }
+
+    #[test]
+    fn cc_p_clamped_to_config() {
+        let mut s = sim(Background::Idle);
+        let id = s.add_flow(100, 100, None);
+        let max = (s.cfg.max_cc * s.cfg.max_p) as usize;
+        assert_eq!(s.active_streams(id), max);
+    }
+
+    #[test]
+    fn rtt_metric_tracks_congestion() {
+        let mut s = sim(Background::Idle);
+        let id = s.add_flow(1, 1, None);
+        for _ in 0..10 {
+            s.run_mi(1.0);
+        }
+        let calm = s.run_mi(1.0)[id.0].rtt_s;
+        s.set_cc_p(id, 16, 16);
+        for _ in 0..10 {
+            s.run_mi(1.0);
+        }
+        let busy = s.run_mi(1.0)[id.0].rtt_s;
+        assert!(busy > calm, "calm={calm} busy={busy}");
+    }
+
+    #[test]
+    fn demand_cap_limits_throughput() {
+        let mut s = sim(Background::Idle);
+        let id = s.add_flow(4, 4, None);
+        s.set_demand_cap(id, 1.5);
+        for _ in 0..10 {
+            s.run_mi(1.0);
+        }
+        let m = s.run_mi(1.0);
+        assert!(m[id.0].throughput_gbps <= 1.6);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let run = || {
+            let mut s = NetworkSim::new(Testbed::chameleon(), 7)
+                .with_background(Background::Constant { gbps: 2.0 });
+            let id = s.add_flow(3, 3, None);
+            let mut total = 0.0;
+            for _ in 0..20 {
+                total += s.run_mi(1.0)[id.0].throughput_gbps;
+            }
+            total
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,243 @@
+//! Fluid-model TCP CUBIC stream.
+//!
+//! Each application-layer stream (one of a file-task's `p` parallel sockets)
+//! carries a CUBIC congestion window evolved at tick granularity:
+//! slow start → cubic concave/convex growth around `w_max`, multiplicative
+//! decrease (β = 0.7) on loss events, at most one decrease per RTT, and
+//! growth freezing while application-limited (sender has nothing to push).
+//!
+//! The fluid approximation follows Ha/Rhee/Xu's CUBIC window function
+//! W(t) = C·(t−K)³ + W_max with C = 0.4, K = ∛(W_max·β_dec/C).
+
+use super::MSS_BITS;
+
+/// CUBIC constant C (MSS/s³).
+const CUBIC_C: f64 = 0.4;
+/// Multiplicative decrease factor: cwnd ← cwnd · BETA on loss.
+const CUBIC_BETA: f64 = 0.7;
+
+/// One TCP CUBIC stream (fluid model).
+#[derive(Debug, Clone)]
+pub struct CubicStream {
+    /// Congestion window in MSS.
+    pub cwnd: f64,
+    /// Window size before the last decrease, in MSS.
+    w_max: f64,
+    /// Slow-start threshold in MSS.
+    ssthresh: f64,
+    /// Seconds since the last loss epoch began.
+    epoch_t: f64,
+    /// Seconds since the last multiplicative decrease (rate-limits cuts).
+    since_cut: f64,
+    /// True until the first loss event.
+    pub in_slow_start: bool,
+    /// Whether the stream is admitted (paused streams keep state but send 0).
+    pub active: bool,
+}
+
+impl Default for CubicStream {
+    fn default() -> Self {
+        CubicStream::new()
+    }
+}
+
+impl CubicStream {
+    pub fn new() -> CubicStream {
+        CubicStream {
+            cwnd: 10.0, // RFC 6928 initial window
+            w_max: 0.0,
+            ssthresh: f64::MAX,
+            epoch_t: 0.0,
+            since_cut: f64::MAX / 2.0,
+            in_slow_start: true,
+            active: true,
+        }
+    }
+
+    /// Offered rate in Gbps given the current RTT, before caps.
+    pub fn cwnd_rate_gbps(&self, rtt_s: f64) -> f64 {
+        if !self.active {
+            return 0.0;
+        }
+        self.cwnd * MSS_BITS / rtt_s / 1e9
+    }
+
+    /// Advance the window by `dt` seconds.
+    ///
+    /// * `rtt_s` — current path RTT.
+    /// * `app_limited` — the application could not fill the current window
+    ///   this tick (I/O cap or receive-window cap binding); growth freezes.
+    pub fn grow(&mut self, dt: f64, rtt_s: f64, app_limited: bool) {
+        if !self.active {
+            return;
+        }
+        self.since_cut += dt;
+        if app_limited {
+            // Don't build an unusable window (mirrors Linux cwnd validation).
+            return;
+        }
+        self.epoch_t += dt;
+        if self.in_slow_start {
+            // Double per RTT: dW/dt = W/RTT * ln 2 ~ W/RTT.
+            self.cwnd += self.cwnd * dt / rtt_s;
+            if self.cwnd >= self.ssthresh {
+                self.in_slow_start = false;
+                self.w_max = self.cwnd;
+                self.epoch_t = 0.0;
+            }
+            return;
+        }
+        // CUBIC window function.
+        let k = (self.w_max * (1.0 - CUBIC_BETA) / CUBIC_C).cbrt();
+        let target = CUBIC_C * (self.epoch_t - k).powi(3) + self.w_max;
+        // TCP-friendly AIMD floor: at least 1 MSS per RTT of growth headroom.
+        let aimd_floor = self.cwnd + dt / rtt_s;
+        if target > self.cwnd {
+            // Fluid pacing toward the cubic target over roughly one RTT.
+            self.cwnd += ((target - self.cwnd) * dt / rtt_s).max(0.0);
+        }
+        self.cwnd = self.cwnd.max(aimd_floor.min(target.max(aimd_floor)));
+    }
+
+    /// Register a loss event. Returns true if a multiplicative decrease was
+    /// applied (at most one per RTT).
+    pub fn on_loss(&mut self, rtt_s: f64) -> bool {
+        if !self.active || self.since_cut < rtt_s {
+            return false;
+        }
+        self.w_max = self.cwnd;
+        self.cwnd = (self.cwnd * CUBIC_BETA).max(2.0);
+        self.ssthresh = self.cwnd;
+        self.in_slow_start = false;
+        self.epoch_t = 0.0;
+        self.since_cut = 0.0;
+        true
+    }
+
+    /// Pause the stream (keeps window state; sends nothing while paused).
+    pub fn pause(&mut self) {
+        self.active = false;
+    }
+
+    /// Resume a paused stream. The window restarts conservatively from
+    /// slow-start with a reduced threshold, like a TCP connection coming back
+    /// from idle (RFC 5681 restart).
+    pub fn resume(&mut self) {
+        if !self.active {
+            self.active = true;
+            self.ssthresh = self.cwnd.max(10.0);
+            self.cwnd = 10.0;
+            self.in_slow_start = true;
+            self.epoch_t = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RTT: f64 = 0.032;
+    const DT: f64 = 0.05;
+
+    #[test]
+    fn slow_start_doubles_quickly() {
+        let mut s = CubicStream::new();
+        let w0 = s.cwnd;
+        for _ in 0..40 {
+            s.grow(DT, RTT, false);
+        }
+        // 2 seconds of slow start at 32 ms RTT: enormous growth.
+        assert!(s.cwnd > w0 * 100.0, "cwnd={}", s.cwnd);
+    }
+
+    #[test]
+    fn loss_cuts_window_by_beta() {
+        let mut s = CubicStream::new();
+        for _ in 0..40 {
+            s.grow(DT, RTT, false);
+        }
+        let before = s.cwnd;
+        assert!(s.on_loss(RTT));
+        assert!((s.cwnd - before * CUBIC_BETA).abs() < 1e-9);
+        assert!(!s.in_slow_start);
+    }
+
+    #[test]
+    fn at_most_one_cut_per_rtt() {
+        let mut s = CubicStream::new();
+        for _ in 0..40 {
+            s.grow(DT, RTT, false);
+        }
+        assert!(s.on_loss(RTT));
+        assert!(!s.on_loss(RTT)); // within the same RTT
+        s.grow(RTT * 1.1, RTT, false);
+        assert!(s.on_loss(RTT));
+    }
+
+    #[test]
+    fn cubic_regrows_toward_wmax() {
+        let mut s = CubicStream::new();
+        // Modest slow-start phase (unbounded slow start would explode the
+        // window; real streams are rwnd/app capped by the simulator).
+        for _ in 0..10 {
+            s.grow(DT, RTT, false);
+        }
+        s.on_loss(RTT);
+        let after_cut = s.cwnd;
+        let w_max = s.w_max;
+        // Regrow for 30 simulated seconds.
+        for _ in 0..600 {
+            s.grow(DT, RTT, false);
+        }
+        assert!(s.cwnd > after_cut);
+        assert!(s.cwnd >= w_max * 0.9, "cwnd={} w_max={}", s.cwnd, w_max);
+    }
+
+    #[test]
+    fn app_limited_freezes_growth() {
+        let mut s = CubicStream::new();
+        for _ in 0..20 {
+            s.grow(DT, RTT, false);
+        }
+        let w = s.cwnd;
+        for _ in 0..100 {
+            s.grow(DT, RTT, true);
+        }
+        assert_eq!(s.cwnd, w);
+    }
+
+    #[test]
+    fn paused_stream_sends_nothing_and_resumes_in_slow_start() {
+        let mut s = CubicStream::new();
+        for _ in 0..100 {
+            s.grow(DT, RTT, false);
+        }
+        s.pause();
+        assert_eq!(s.cwnd_rate_gbps(RTT), 0.0);
+        s.grow(DT, RTT, false);
+        s.resume();
+        assert!(s.active && s.in_slow_start);
+        assert!(s.cwnd <= 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn rate_matches_window_over_rtt() {
+        let s = CubicStream::new();
+        let expect = 10.0 * MSS_BITS / RTT / 1e9;
+        assert!((s.cwnd_rate_gbps(RTT) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_never_below_two_mss() {
+        let mut s = CubicStream::new();
+        for i in 0..200 {
+            s.grow(DT, RTT, false);
+            if i % 3 == 0 {
+                s.grow(RTT * 1.01, RTT, false);
+                s.on_loss(RTT);
+            }
+            assert!(s.cwnd >= 2.0);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Testbed presets mirroring the paper's three experimental environments.
+
+use super::background::Background;
+use super::link::Link;
+
+/// A named testbed configuration (link + node characteristics).
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub name: &'static str,
+    /// Bottleneck capacity in Gbps (effective, not nominal).
+    pub capacity_gbps: f64,
+    /// Base RTT in seconds.
+    pub base_rtt_s: f64,
+    /// Droptail buffer as a multiple of BDP.
+    pub buffer_bdp: f64,
+    /// Per-stream receiver-window rate cap in Gbps (OS socket buffers / RTT).
+    pub per_stream_cap_gbps: f64,
+    /// Per-file-task application I/O rate for an efficient engine, Gbps.
+    pub task_io_gbps: f64,
+    /// Whether RAPL-like energy counters exist (FABRIC: no — VMs).
+    pub has_energy_counters: bool,
+    /// Default background regime for evaluation runs.
+    pub default_background: Background,
+}
+
+impl Testbed {
+    /// Chameleon Cloud, TACC ↔ UC: shared 10 Gbps WAN, ~32 ms RTT,
+    /// gpu_p100 nodes (Xeon E5-2670 v3), 10 GbE NICs.
+    pub fn chameleon() -> Testbed {
+        Testbed {
+            name: "chameleon",
+            capacity_gbps: 10.0,
+            base_rtt_s: 0.032,
+            buffer_bdp: 1.0,
+            per_stream_cap_gbps: 1.0,  // 4 MB socket buffers at 32 ms
+            task_io_gbps: 3.0,
+            has_energy_counters: true,
+            default_background: Background::regime("medium", 10.0),
+        }
+    }
+
+    /// CloudLab, Utah (c6525-100g) ↔ Wisconsin (d7525): WAN capped at
+    /// 25 Gbps, ~36 ms RTT, NVMe-class local storage.
+    pub fn cloudlab() -> Testbed {
+        Testbed {
+            name: "cloudlab",
+            capacity_gbps: 25.0,
+            base_rtt_s: 0.036,
+            buffer_bdp: 1.0,
+            per_stream_cap_gbps: 1.8,  // 8 MB socket buffers at 36 ms
+            task_io_gbps: 10.0,
+            has_energy_counters: true,
+            default_background: Background::regime("medium", 25.0),
+        }
+    }
+
+    /// FABRIC, Princeton ↔ Utah VMs: ConnectX-6 100 GbE NICs but ~30 Gbps
+    /// effective WAN (shared NIC among VMs), 56 ms RTT, no hardware energy
+    /// counters (virtualized).
+    pub fn fabric() -> Testbed {
+        Testbed {
+            name: "fabric",
+            capacity_gbps: 30.0,
+            base_rtt_s: 0.056,
+            buffer_bdp: 0.8,
+            per_stream_cap_gbps: 1.2,  // 8 MB socket buffers at 56 ms
+            task_io_gbps: 8.0,
+            has_energy_counters: false,
+            default_background: Background::regime("medium", 30.0),
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Option<Testbed> {
+        match name {
+            "chameleon" => Some(Testbed::chameleon()),
+            "cloudlab" => Some(Testbed::cloudlab()),
+            "fabric" => Some(Testbed::fabric()),
+            _ => None,
+        }
+    }
+
+    /// All presets.
+    pub fn all() -> Vec<Testbed> {
+        vec![Testbed::chameleon(), Testbed::cloudlab(), Testbed::fabric()]
+    }
+
+    /// Build the bottleneck link for this testbed.
+    pub fn link(&self) -> Link {
+        Link::new(self.capacity_gbps, self.base_rtt_s, self.buffer_bdp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in ["chameleon", "cloudlab", "fabric"] {
+            let tb = Testbed::by_name(name).unwrap();
+            assert_eq!(tb.name, name);
+            assert!(tb.capacity_gbps > 0.0);
+        }
+        assert!(Testbed::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn fabric_has_no_energy_counters() {
+        assert!(!Testbed::fabric().has_energy_counters);
+        assert!(Testbed::chameleon().has_energy_counters);
+    }
+
+    #[test]
+    fn single_stream_cannot_fill_any_link() {
+        for tb in Testbed::all() {
+            assert!(tb.per_stream_cap_gbps < tb.capacity_gbps / 5.0);
+        }
+    }
+}

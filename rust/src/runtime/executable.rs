@@ -1,0 +1,122 @@
+//! Compiled-HLO execution on the PJRT CPU client.
+
+use super::manifest::{GraphSpec, Manifest};
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+
+/// Shared PJRT client + compiled executables for one artifacts directory.
+pub struct Runtime {
+    client: Rc<xla::PjRtClient>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn load(artifacts_dir: &std::path::Path) -> Result<Runtime> {
+        // Perf (EXPERIMENTS.md §Perf): the agent graphs are small; Eigen's
+        // intra-op threading costs ~2x wall time in thread churn at these
+        // sizes. Respect a user-provided XLA_FLAGS, otherwise disable it.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+        }
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client: Rc::new(client), manifest })
+    }
+
+    /// Compile one exported graph by manifest name.
+    pub fn compile(&self, graph: &str) -> Result<Executable> {
+        let spec = self.manifest.graph(graph)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {graph}: {e:?}"))?;
+        Ok(Executable { spec, exe, client: self.client.clone() })
+    }
+}
+
+/// One compiled HLO graph, callable with flat `f32` argument buffers.
+pub struct Executable {
+    pub spec: GraphSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: Rc<xla::PjRtClient>,
+}
+
+impl Executable {
+    /// Execute with one flat `f32` slice per argument (lengths must match
+    /// the manifest's shapes). Returns the flattened outputs, in tuple order.
+    ///
+    /// All SPARTA graphs are exported with `return_tuple=True`, so the
+    /// result is always a tuple literal — even for single outputs.
+    ///
+    /// NOTE: this deliberately uses `execute_b` with caller-owned device
+    /// buffers. The crate's `execute(&[Literal])` path leaks every input
+    /// device buffer on the C++ side (`buffer.release()` without a matching
+    /// free) — at DDPG's training rate that OOM-kills the process within
+    /// minutes (EXPERIMENTS.md §Perf).
+    pub fn call(&self, args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.spec.arg_names.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                self.spec.name,
+                self.spec.arg_names.len(),
+                args.len()
+            ));
+        }
+        let mut buffers = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            let want = self.spec.arg_len(i);
+            if a.len() != want {
+                return Err(anyhow!(
+                    "{}: arg {} ({}) expected {} elements, got {}",
+                    self.spec.name,
+                    i,
+                    self.spec.arg_names[i],
+                    want,
+                    a.len()
+                ));
+            }
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(a, &self.spec.arg_shapes[i], None)
+                .map_err(|e| anyhow!("{}: arg {i} upload: {e:?}", self.spec.name))?;
+            buffers.push(buf);
+        }
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.spec.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.spec.name))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("{}: decompose: {e:?}", self.spec.name))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            // Convert any non-f32 outputs (e.g. argmax indices) to f32.
+            let p32 = match p.ty() {
+                Ok(xla::ElementType::F32) => p,
+                _ => p
+                    .convert(xla::PrimitiveType::F32)
+                    .map_err(|e| anyhow!("{}: convert: {e:?}", self.spec.name))?,
+            };
+            out.push(
+                p32.to_vec::<f32>()
+                    .map_err(|e| anyhow!("{}: to_vec: {e:?}", self.spec.name))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Per-call argument validation helper used by agents in debug builds.
+    pub fn n_args(&self) -> usize {
+        self.spec.arg_names.len()
+    }
+}

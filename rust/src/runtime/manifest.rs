@@ -1,0 +1,244 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT step and
+//! the Rust runtime.
+//!
+//! The manifest records, per exported graph: the HLO file, the ordered
+//! argument list with shapes, and the outputs; plus, per algorithm, the flat
+//! parameter-vector length and hyperparameters both sides must agree on
+//! (state window, feature count, hidden sizes, γ, learning rate, ...).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One exported HLO graph.
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Ordered argument names.
+    pub arg_names: Vec<String>,
+    /// Ordered argument shapes (row-major dims; scalar = empty).
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Number of outputs in the result tuple.
+    pub n_outputs: usize,
+}
+
+impl GraphSpec {
+    /// Flat element count of argument `i`.
+    pub fn arg_len(&self, i: usize) -> usize {
+        self.arg_shapes[i].iter().product::<usize>().max(1)
+    }
+
+    pub fn arg_index(&self, name: &str) -> Option<usize> {
+        self.arg_names.iter().position(|n| n == name)
+    }
+}
+
+/// Per-algorithm metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct AlgoSpec {
+    pub name: String,
+    /// Flat parameter-vector length.
+    pub n_params: usize,
+    /// Scalar hyperparameters exported by the Python side.
+    pub hparams: BTreeMap<String, f64>,
+    /// Graph names owned by this algorithm (e.g. "dqn_forward", "dqn_train").
+    pub graphs: Vec<String>,
+}
+
+impl AlgoSpec {
+    pub fn hparam(&self, key: &str) -> Result<f64> {
+        self.hparams
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("algorithm '{}' missing hparam '{key}'", self.name))
+    }
+
+    pub fn hparam_or(&self, key: &str, default: f64) -> f64 {
+        self.hparams.get(key).copied().unwrap_or(default)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    pub algos: BTreeMap<String, AlgoSpec>,
+    /// Global settings the state construction must match (window, features).
+    pub globals: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let mut graphs = BTreeMap::new();
+        for (name, g) in root
+            .get("graphs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'graphs'"))?
+        {
+            let arg_names = g
+                .get("arg_names")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("graph {name}: missing arg_names"))?
+                .iter()
+                .map(|v| v.as_str().unwrap_or("").to_string())
+                .collect();
+            let arg_shapes = g
+                .get("arg_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("graph {name}: missing arg_shapes"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect()
+                })
+                .collect();
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    name: name.clone(),
+                    file: g
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("graph {name}: missing file"))?
+                        .to_string(),
+                    arg_names,
+                    arg_shapes,
+                    n_outputs: g.get("n_outputs").and_then(Json::as_usize).unwrap_or(1),
+                },
+            );
+        }
+
+        let mut algos = BTreeMap::new();
+        if let Some(obj) = root.get("algos").and_then(Json::as_obj) {
+            for (name, a) in obj {
+                let hparams = a
+                    .get("hparams")
+                    .and_then(Json::as_obj)
+                    .map(|m| {
+                        m.iter()
+                            .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let graphs_list = a
+                    .get("graphs")
+                    .and_then(Json::as_arr)
+                    .map(|v| v.iter().filter_map(|g| g.as_str().map(str::to_string)).collect())
+                    .unwrap_or_default();
+                algos.insert(
+                    name.clone(),
+                    AlgoSpec {
+                        name: name.clone(),
+                        n_params: a
+                            .get("n_params")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("algo {name}: missing n_params"))?,
+                        hparams,
+                        graphs: graphs_list,
+                    },
+                );
+            }
+        }
+
+        let globals = root
+            .get("globals")
+            .and_then(Json::as_obj)
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        Ok(Manifest { dir: dir.to_path_buf(), graphs, algos, globals })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no graph '{name}'"))
+    }
+
+    pub fn algo(&self, name: &str) -> Result<&AlgoSpec> {
+        self.algos
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no algorithm '{name}'"))
+    }
+
+    pub fn global(&self, key: &str) -> Result<f64> {
+        self.globals
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("manifest missing global '{key}'"))
+    }
+
+    /// Absolute path of a graph's HLO file.
+    pub fn hlo_path(&self, spec: &GraphSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Path of an algorithm's initial flat-parameter binary.
+    pub fn init_params_path(&self, algo: &str) -> PathBuf {
+        self.dir.join(format!("{algo}_init.f32"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("sparta_manifest_test1");
+        write_manifest(
+            &dir,
+            r#"{
+              "graphs": {
+                "dqn_forward": {
+                  "file": "dqn_forward.hlo.txt",
+                  "arg_names": ["params", "obs"],
+                  "arg_shapes": [[100], [8, 5]],
+                  "n_outputs": 1
+                }
+              },
+              "algos": {
+                "dqn": {"n_params": 100, "hparams": {"gamma": 0.99}, "graphs": ["dqn_forward"]}
+              },
+              "globals": {"window": 8, "features": 5}
+            }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let g = m.graph("dqn_forward").unwrap();
+        assert_eq!(g.arg_len(0), 100);
+        assert_eq!(g.arg_len(1), 40);
+        assert_eq!(g.arg_index("obs"), Some(1));
+        assert_eq!(m.algo("dqn").unwrap().hparam("gamma").unwrap(), 0.99);
+        assert_eq!(m.global("window").unwrap(), 8.0);
+        assert!(m.graph("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_friendly_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//!
+//! `make artifacts` (build-time Python) lowers every policy/value network and
+//! training step to HLO *text* — the interchange format that round-trips
+//! through xla_extension 0.5.1 (serialized jax ≥ 0.5 protos are rejected;
+//! see DESIGN.md). This module wraps the `xla` crate's PJRT CPU client to
+//! compile those artifacts once and execute them from the transfer hot path
+//! with flat `f32` buffers; Python is never involved at run time.
+
+pub mod executable;
+pub mod manifest;
+pub mod weights;
+
+pub use executable::{Executable, Runtime};
+pub use manifest::{GraphSpec, Manifest};
+pub use weights::WeightStore;

@@ -1,0 +1,102 @@
+//! Flat-parameter persistence: init params from the AOT step, trained
+//! weights saved/loaded by the trainer.
+//!
+//! Format: raw little-endian `f32` array, no header — the length is checked
+//! against the manifest's `n_params`, which catches architecture drift
+//! between Python and Rust.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Reads/writes flat f32 parameter vectors under a directory.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub dir: PathBuf,
+}
+
+impl WeightStore {
+    pub fn new(dir: impl Into<PathBuf>) -> WeightStore {
+        WeightStore { dir: dir.into() }
+    }
+
+    /// `<dir>/<name>.f32`
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.f32"))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+
+    /// Load a flat vector, verifying the expected length (0 = any).
+    pub fn load(&self, name: &str, expect_len: usize) -> Result<Vec<f32>> {
+        load_f32(&self.path(name), expect_len)
+    }
+
+    /// Save a flat vector (creates the directory).
+    pub fn save(&self, name: &str, data: &[f32]) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(self.path(name), bytes)
+            .with_context(|| format!("writing {}", self.path(name).display()))
+    }
+}
+
+/// Load a raw little-endian f32 file, checking length when `expect_len > 0`.
+pub fn load_f32(path: &Path, expect_len: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("{}: size {} not a multiple of 4", path.display(), bytes.len()));
+    }
+    let n = bytes.len() / 4;
+    if expect_len > 0 && n != expect_len {
+        return Err(anyhow!(
+            "{}: expected {} f32 values, found {} — artifacts out of date? (re-run `make artifacts`)",
+            path.display(),
+            expect_len,
+            n
+        ));
+    }
+    let mut out = Vec::with_capacity(n);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sparta_weights_test");
+        let store = WeightStore::new(&dir);
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 7.0).collect();
+        store.save("unit", &data).unwrap();
+        assert!(store.exists("unit"));
+        let back = store.load("unit", 100).unwrap();
+        assert_eq!(data, back);
+    }
+
+    #[test]
+    fn length_mismatch_is_error() {
+        let dir = std::env::temp_dir().join("sparta_weights_test2");
+        let store = WeightStore::new(&dir);
+        store.save("short", &[1.0, 2.0]).unwrap();
+        let err = store.load("short", 3).unwrap_err();
+        assert!(err.to_string().contains("expected 3"));
+        // expect_len = 0 skips the check.
+        assert_eq!(store.load("short", 0).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let store = WeightStore::new(std::env::temp_dir().join("sparta_weights_test3"));
+        assert!(store.load("nope", 0).is_err());
+    }
+}

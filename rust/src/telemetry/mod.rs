@@ -1,0 +1,7 @@
+//! Experiment telemetry: tables, timelines and machine-readable reports.
+
+pub mod report;
+pub mod table;
+
+pub use report::save_report;
+pub use table::Table;

@@ -1,0 +1,44 @@
+//! Machine-readable experiment reports (JSON files under `data/reports/`).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write a JSON report, creating parent directories.
+pub fn save_report(path: &Path, value: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    std::fs::write(path, value.to_string()).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Build a JSON summary of a [`crate::coordinator::LaneReport`].
+pub fn lane_json(lane: &crate::coordinator::LaneReport) -> Json {
+    Json::obj(vec![
+        ("name", Json::from(lane.name.clone())),
+        ("completed", Json::from(lane.completed)),
+        ("duration_s", Json::from(lane.duration_s)),
+        ("avg_throughput_gbps", Json::from(lane.avg_throughput_gbps())),
+        ("total_energy_j", Json::from(lane.total_energy_j)),
+        ("energy_per_gb_j", Json::from(lane.energy_per_gb())),
+        ("avg_plr", Json::from(lane.avg_plr())),
+        ("bytes_delivered", Json::from(lane.bytes_delivered)),
+        ("mis", Json::from(lane.records.len())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saves_and_parses_back() {
+        let path = std::env::temp_dir().join("sparta_report_test/r.json");
+        let j = Json::obj(vec![("x", Json::from(1.5))]);
+        save_report(&path, &j).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("x").unwrap().as_f64(), Some(1.5));
+    }
+}

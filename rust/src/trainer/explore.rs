@@ -1,0 +1,134 @@
+//! Exploration-phase transition collection (§3.4 step 1).
+
+use crate::coordinator::{
+    Controller, Decision, MiContext, Optimizer, ParamBounds, RewardKind,
+};
+use crate::emulator::{transitions_from_records, Transition};
+use crate::net::background::Background;
+use crate::net::Testbed;
+use crate::transfer::{EngineProfile, TransferJob};
+use crate::util::Rng;
+
+/// High-exploration policy: walks toward random (cc, p) way-points using the
+/// five-action space, with a floor of uniformly random actions. Covers the
+/// parameter grid with *labeled* actions — exactly what the cluster-lookup
+/// emulator needs.
+pub struct ExplorePolicy {
+    rng: Rng,
+    target: (u32, u32),
+    retarget_in: usize,
+    /// Probability of a uniformly random action.
+    pub random_frac: f64,
+}
+
+impl ExplorePolicy {
+    pub fn new(seed: u64) -> ExplorePolicy {
+        ExplorePolicy { rng: Rng::new(seed), target: (4, 4), retarget_in: 0, random_frac: 0.3 }
+    }
+
+    fn retarget(&mut self, bounds: &ParamBounds) {
+        self.target = (
+            bounds.cc_min + self.rng.below((bounds.cc_max - bounds.cc_min + 1) as usize) as u32,
+            bounds.p_min + self.rng.below((bounds.p_max - bounds.p_min + 1) as usize) as u32,
+        );
+        self.retarget_in = 8 + self.rng.below(16);
+    }
+}
+
+impl Optimizer for ExplorePolicy {
+    fn name(&self) -> &str {
+        "explore"
+    }
+
+    fn start(&mut self, bounds: &ParamBounds) -> (u32, u32) {
+        self.retarget(bounds);
+        (
+            bounds.cc_min + self.rng.below((bounds.cc_max - bounds.cc_min + 1) as usize) as u32,
+            bounds.p_min + self.rng.below((bounds.p_max - bounds.p_min + 1) as usize) as u32,
+        )
+    }
+
+    fn decide(&mut self, ctx: &MiContext<'_>) -> Decision {
+        if self.retarget_in == 0 {
+            self.retarget(ctx.bounds);
+        }
+        self.retarget_in -= 1;
+        let action = if self.rng.chance(self.random_frac) {
+            self.rng.below(crate::coordinator::N_ACTIONS)
+        } else {
+            // Step toward the way-point (cc and p move together in the
+            // paper's action set; follow the dominant axis).
+            let d = (self.target.0 as i64 - ctx.cc as i64) + (self.target.1 as i64 - ctx.p as i64);
+            match d {
+                d if d >= 3 => 3,
+                1..=2 => 1,
+                0 => 0,
+                -2..=-1 => 2,
+                _ => 4,
+            }
+        };
+        let (cc, p) = ctx.bounds.apply(ctx.cc, ctx.p, action);
+        Decision { cc, p, action: Some(action) }
+    }
+}
+
+/// Run `runs` exploratory transfers of `mis` monitoring intervals each over
+/// a mix of background regimes and return the pooled transitions.
+pub fn collect_transitions(
+    testbed: &Testbed,
+    runs: usize,
+    mis: usize,
+    seed: u64,
+) -> Vec<Transition> {
+    let mut rng = Rng::new(seed);
+    let regimes = ["low", "medium", "high"];
+    let mut all = Vec::new();
+    for run in 0..runs {
+        let bg = Background::regime(regimes[run % regimes.len()], testbed.capacity_gbps);
+        let mut ctl = Controller::builder(testbed.clone())
+            .background(bg)
+            .max_mis(mis)
+            // Large enough to never complete within `mis` intervals.
+            .job(TransferJob::files(10_000, 1 << 30))
+            .reward(RewardKind::FairnessEfficiency)
+            .engine(EngineProfile::efficient())
+            .seed(rng.next_u64())
+            .build();
+        let report = ctl.run(Box::new(ExplorePolicy::new(rng.next_u64())), 0);
+        all.extend(transitions_from_records(&report.lane().records));
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_labeled_transitions_across_the_grid() {
+        let tb = Testbed::chameleon();
+        let ts = collect_transitions(&tb, 2, 60, 42);
+        assert!(ts.len() >= 100, "got {}", ts.len());
+        // All five actions appear.
+        let mut seen = [false; 5];
+        for t in &ts {
+            seen[t.action] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "actions seen: {seen:?}");
+        // A reasonable spread of (cc, p) values.
+        let distinct: std::collections::BTreeSet<(u32, u32)> =
+            ts.iter().map(|t| (t.cc, t.p)).collect();
+        assert!(distinct.len() > 10, "only {} distinct settings", distinct.len());
+    }
+
+    #[test]
+    fn explore_policy_respects_bounds() {
+        let tb = Testbed::chameleon();
+        let ts = collect_transitions(&tb, 1, 80, 7);
+        let b = ParamBounds::default();
+        for t in &ts {
+            assert!(t.cc >= b.cc_min && t.cc <= b.cc_max);
+            assert!(t.p >= b.p_min && t.p <= b.p_max);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Live training environment: the network simulator exposed through the
+//! [`Env`] interface (used for online tuning — Fig. 5 — and for validating
+//! emulator-trained policies against "real" dynamics — Fig. 4 bottom row).
+
+use crate::coordinator::{
+    FeatureWindow, Observation, ParamBounds, RewardConfig, RewardKind, RewardTracker,
+};
+use crate::emulator::{Env, StepOut};
+use crate::energy::{EnergyMeter, PowerModel};
+use crate::net::{FlowId, NetworkSim, Testbed};
+use crate::util::Rng;
+
+/// A fixed-horizon episodic environment over the live simulator.
+pub struct LiveEnv {
+    testbed: Testbed,
+    bounds: ParamBounds,
+    reward_kind: RewardKind,
+    history: usize,
+    episode_len: usize,
+    mi_s: f64,
+    rng: Rng,
+    // Episode state.
+    sim: Option<NetworkSim>,
+    flow: FlowId,
+    meter: EnergyMeter,
+    window: FeatureWindow,
+    tracker: RewardTracker,
+    cc: u32,
+    p: u32,
+    steps: usize,
+}
+
+impl LiveEnv {
+    pub fn new(
+        testbed: Testbed,
+        reward_kind: RewardKind,
+        bounds: ParamBounds,
+        history: usize,
+        episode_len: usize,
+        seed: u64,
+    ) -> LiveEnv {
+        let window = FeatureWindow::new(history, bounds.cc_max, bounds.p_max);
+        LiveEnv {
+            testbed,
+            bounds,
+            reward_kind,
+            history,
+            episode_len,
+            mi_s: 1.0,
+            rng: Rng::new(seed),
+            sim: None,
+            flow: FlowId(0),
+            meter: EnergyMeter::new(PowerModel::efficient(), seed),
+            window,
+            tracker: RewardTracker::new(reward_kind, RewardConfig::default()),
+            cc: 4,
+            p: 4,
+            steps: 0,
+        }
+    }
+
+    fn observe_mi(&mut self) -> Observation {
+        let sim = self.sim.as_mut().unwrap();
+        let m = sim.run_mi(self.mi_s);
+        let m = &m[self.flow.0];
+        let energy = if self.testbed.has_energy_counters {
+            self.meter.record_mi(m.active_streams, m.throughput_gbps, m.duration_s)
+        } else {
+            f64::NAN
+        };
+        Observation {
+            throughput_gbps: m.throughput_gbps,
+            plr: m.plr,
+            rtt_s: m.rtt_s,
+            energy_j: energy,
+            cc: self.cc,
+            p: self.p,
+            duration_s: m.duration_s,
+        }
+    }
+
+    /// Throughput/energy of the last MI (telemetry convenience).
+    pub fn testbed(&self) -> &Testbed {
+        &self.testbed
+    }
+}
+
+impl Env for LiveEnv {
+    fn reset(&mut self) -> Vec<f32> {
+        let seed = self.rng.next_u64();
+        let mut sim = NetworkSim::new(self.testbed.clone(), seed);
+        self.cc = self.bounds.cc0;
+        self.p = self.bounds.p0;
+        self.flow = sim.add_flow(self.cc, self.p, None);
+        self.sim = Some(sim);
+        self.meter = EnergyMeter::new(PowerModel::efficient(), seed ^ 0xEE);
+        self.window = FeatureWindow::new(self.history, self.bounds.cc_max, self.bounds.p_max);
+        self.tracker = RewardTracker::new(self.reward_kind, RewardConfig::default());
+        self.steps = 0;
+        // Warm up past slow-start so episode starts see steady dynamics.
+        for _ in 0..3 {
+            let obs = self.observe_mi();
+            self.window.push(&obs);
+            self.tracker.update(&obs);
+        }
+        self.window.state().to_vec()
+    }
+
+    fn step(&mut self, action: usize) -> StepOut {
+        let (cc, p) = self.bounds.apply(self.cc, self.p, action);
+        if (cc, p) != (self.cc, self.p) {
+            self.cc = cc;
+            self.p = p;
+            self.sim.as_mut().unwrap().set_cc_p(self.flow, cc, p);
+        }
+        let obs = self.observe_mi();
+        self.window.push(&obs);
+        let out = self.tracker.update(&obs);
+        self.steps += 1;
+        StepOut {
+            state: self.window.state().to_vec(),
+            reward: out.reward,
+            done: self.steps >= self.episode_len,
+            throughput_gbps: obs.throughput_gbps,
+            energy_j: obs.energy_j,
+        }
+    }
+
+    fn state_len(&self) -> usize {
+        self.window.state_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episodes_run_and_terminate() {
+        let mut env = LiveEnv::new(
+            Testbed::chameleon(),
+            RewardKind::ThroughputEnergy,
+            ParamBounds::default(),
+            8,
+            20,
+            3,
+        );
+        let s = env.reset();
+        assert_eq!(s.len(), env.state_len());
+        let mut done = false;
+        let mut total_thr = 0.0;
+        for _ in 0..20 {
+            let out = env.step(1);
+            done = out.done;
+            total_thr += out.throughput_gbps;
+        }
+        assert!(done);
+        assert!(total_thr > 0.0);
+    }
+
+    #[test]
+    fn increasing_actions_grow_streams() {
+        let mut env = LiveEnv::new(
+            Testbed::chameleon(),
+            RewardKind::FairnessEfficiency,
+            ParamBounds::default(),
+            4,
+            50,
+            5,
+        );
+        env.reset();
+        for _ in 0..6 {
+            env.step(3); // +2/+2 each MI
+        }
+        assert_eq!((env.cc, env.p), (16, 16));
+    }
+}

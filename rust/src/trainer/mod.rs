@@ -1,0 +1,20 @@
+//! Training drivers: exploration-phase collection, offline (emulated)
+//! training, online tuning, and the resource meters behind Table 1.
+//!
+//! The paper's offline-online process (Fig. 2):
+//! 1. [`explore::collect_transitions`] runs high-exploration transfers on
+//!    the live substrate and logs per-MI transitions;
+//! 2. the transitions are clustered into a [`crate::emulator::ClusterEnv`];
+//! 3. [`offline::train_offline`] trains each agent against the emulator;
+//! 4. the trained policy is validated/tuned on the live substrate
+//!    ([`live_env::LiveEnv`], used by the Fig.-5 experiment).
+
+pub mod explore;
+pub mod live_env;
+pub mod meters;
+pub mod offline;
+
+pub use explore::{collect_transitions, ExplorePolicy};
+pub use live_env::LiveEnv;
+pub use meters::ResourceMeter;
+pub use offline::{train_offline, TrainConfig, TrainStats};

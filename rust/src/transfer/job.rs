@@ -1,0 +1,109 @@
+//! File-set transfer job with byte-accurate progress.
+
+/// A transfer job: an ordered set of files to deliver.
+#[derive(Debug, Clone)]
+pub struct TransferJob {
+    /// File sizes in bytes.
+    pub file_bytes: Vec<u64>,
+    /// Bytes delivered so far (monotone).
+    delivered: f64,
+}
+
+impl TransferJob {
+    /// `count` files of `size_bytes` each (the paper's 1000 × 1 GB workload).
+    pub fn files(count: usize, size_bytes: u64) -> TransferJob {
+        TransferJob { file_bytes: vec![size_bytes; count], delivered: 0.0 }
+    }
+
+    /// A job from explicit file sizes (for mixed workloads).
+    pub fn from_sizes(sizes: Vec<u64>) -> TransferJob {
+        TransferJob { file_bytes: sizes, delivered: 0.0 }
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.file_bytes.iter().map(|&b| b as f64).sum()
+    }
+
+    pub fn delivered_bytes(&self) -> f64 {
+        self.delivered
+    }
+
+    pub fn remaining_bytes(&self) -> f64 {
+        (self.total_bytes() - self.delivered).max(0.0)
+    }
+
+    /// Record progress; returns the bytes actually credited (clamped so the
+    /// job never over-delivers).
+    pub fn advance(&mut self, bytes: f64) -> f64 {
+        let credit = bytes.min(self.remaining_bytes()).max(0.0);
+        self.delivered += credit;
+        credit
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.remaining_bytes() <= 0.5 // sub-byte residue counts as done
+    }
+
+    /// Fraction complete in [0, 1].
+    pub fn progress(&self) -> f64 {
+        let t = self.total_bytes();
+        if t <= 0.0 { 1.0 } else { (self.delivered / t).min(1.0) }
+    }
+
+    /// Number of files fully delivered (files complete in order).
+    pub fn files_complete(&self) -> usize {
+        let mut acc = 0.0;
+        let mut n = 0;
+        for &b in &self.file_bytes {
+            acc += b as f64;
+            if self.delivered + 0.5 >= acc {
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progress_accumulates_and_clamps() {
+        let mut j = TransferJob::files(2, 100);
+        assert_eq!(j.total_bytes(), 200.0);
+        assert_eq!(j.advance(150.0), 150.0);
+        assert!(!j.is_complete());
+        // Over-delivery clamps.
+        assert_eq!(j.advance(100.0), 50.0);
+        assert!(j.is_complete());
+        assert_eq!(j.progress(), 1.0);
+    }
+
+    #[test]
+    fn files_complete_counts_in_order() {
+        let mut j = TransferJob::from_sizes(vec![100, 200, 300]);
+        j.advance(250.0);
+        assert_eq!(j.files_complete(), 1);
+        j.advance(50.0);
+        assert_eq!(j.files_complete(), 2);
+        j.advance(1000.0);
+        assert_eq!(j.files_complete(), 3);
+    }
+
+    #[test]
+    fn negative_advance_ignored() {
+        let mut j = TransferJob::files(1, 100);
+        assert_eq!(j.advance(-5.0), 0.0);
+        assert_eq!(j.delivered_bytes(), 0.0);
+    }
+
+    #[test]
+    fn empty_job_is_complete() {
+        let j = TransferJob::from_sizes(vec![]);
+        assert!(j.is_complete());
+        assert_eq!(j.progress(), 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Transfer-job model: the file set being moved and the engine moving it.
+//!
+//! A [`TransferJob`] is the unit the paper evaluates: a set of files (e.g.
+//! 1000 × 1 GB) pushed from a sender to a receiver by an engine holding `cc`
+//! concurrent file-tasks with `p` parallel streams each. Byte progress is
+//! integrated from the simulator's per-MI goodput; the job completes when
+//! every file is delivered.
+
+pub mod engine;
+pub mod job;
+
+pub use engine::EngineProfile;
+pub use job::TransferJob;

@@ -1,0 +1,136 @@
+//! Tiny argument parser for the `sparta` CLI and the bench binaries.
+//!
+//! Grammar: `sparta <subcommand> [--flag] [--key value]...`. Unknown keys are
+//! reported as errors so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    /// Validate that every provided option/flag is in the allowed set.
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k} (allowed: {})", allowed.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("transfer --testbed chameleon --files 50 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("transfer"));
+        assert_eq!(a.get("testbed"), Some("chameleon"));
+        assert_eq!(a.get_usize("files", 0).unwrap(), 50);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("x --k=v");
+        assert_eq!(a.get("k"), Some("v"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run a b --k v c");
+        assert_eq!(a.positional, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert!(parse("x --n abc").get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("x --good 1 --bad 2");
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+}

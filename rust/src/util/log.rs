@@ -1,0 +1,46 @@
+//! Leveled stderr logging plus the paper's transition-log line format.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log verbosity: 0 = quiet (warnings only), 1 = info, 2 = debug.
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn info(msg: &str) {
+    if level() >= 1 {
+        let _ = writeln!(std::io::stderr(), "[sparta] {msg}");
+    }
+}
+
+pub fn debug(msg: &str) {
+    if level() >= 2 {
+        let _ = writeln!(std::io::stderr(), "[sparta:debug] {msg}");
+    }
+}
+
+pub fn warn(msg: &str) {
+    let _ = writeln!(std::io::stderr(), "[sparta:warn] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => { $crate::util::log::info(&format!($($t)*)) }
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => { $crate::util::log::debug(&format!($($t)*)) }
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => { $crate::util::log::warn(&format!($($t)*)) }
+}

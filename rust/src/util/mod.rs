@@ -1,0 +1,14 @@
+//! Self-contained utility layer.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (rand, serde, clap, criterion) are unavailable; the pieces SPARTA needs
+//! from them are implemented here and tested like any other module.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,204 @@
+//! Descriptive statistics used by the telemetry layer and the bench harness.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns an all-zero summary for an empty slice.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p25: 0.0, median: 0.0, p75: 0.0, p95: 0.0, max: 0.0 };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p25: percentile_sorted(&sorted, 0.25),
+            median: percentile_sorted(&sorted, 0.50),
+            p75: percentile_sorted(&sorted, 0.75),
+            p95: percentile_sorted(&sorted, 0.95),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// One-line rendering used by the bench tables.
+    pub fn line(&self) -> String {
+        format!(
+            "n={:<4} mean={:<8.3} std={:<8.3} min={:<8.3} p50={:<8.3} p95={:<8.3} max={:<8.3}",
+            self.n, self.mean, self.std, self.min, self.median, self.p95, self.max
+        )
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Arithmetic mean (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Exponentially-weighted moving average accumulator.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Jain's Fairness Index over per-flow throughputs (Eq. 18 of the paper).
+///
+/// JFI = (sum T_k)^2 / (n * sum T_k^2); 1.0 = perfectly fair. Defined as 1.0
+/// for an empty set or an all-zero set (no flow is being disadvantaged).
+pub fn jain_fairness(throughputs: &[f64]) -> f64 {
+    let n = throughputs.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let s: f64 = throughputs.iter().sum();
+    let s2: f64 = throughputs.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    (s * s) / (n as f64 * s2)
+}
+
+/// Simple online mean/min/max accumulator for hot loops (no allocation).
+#[derive(Debug, Clone, Default)]
+pub struct Acc {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Acc {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            if x < self.min { self.min = x; }
+            if x > self.max { self.max = x; }
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.median - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jfi_equal_flows_is_one() {
+        assert!((jain_fairness(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jfi_single_hog() {
+        // One flow takes everything among n flows -> JFI = 1/n.
+        let j = jain_fairness(&[9.0, 0.0, 0.0]);
+        assert!((j - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jfi_bounds() {
+        let j = jain_fairness(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(j > 0.25 && j <= 1.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..50 {
+            e.push(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn acc_tracks_min_max_mean() {
+        let mut a = Acc::default();
+        for x in [4.0, -1.0, 7.5] {
+            a.push(x);
+        }
+        assert_eq!(a.min, -1.0);
+        assert_eq!(a.max, 7.5);
+        assert!((a.mean() - 3.5).abs() < 1e-12);
+    }
+}

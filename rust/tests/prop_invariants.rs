@@ -1,0 +1,246 @@
+//! Property-based invariant tests (hand-rolled: seeded generators + many
+//! random cases per property; proptest is unavailable offline).
+
+use sparta::agents::rollout::{Rollout, RolloutStep};
+use sparta::coordinator::reward::{diff_reward, utility, RewardConfig};
+use sparta::coordinator::{FeatureWindow, Observation, ParamBounds, N_ACTIONS};
+use sparta::emulator::{KMeans, Transition, TransitionStore};
+use sparta::net::background::Background;
+use sparta::net::{Link, NetworkSim, Testbed};
+use sparta::util::stats::jain_fairness;
+use sparta::util::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_link_conserves_and_bounds_drops() {
+    let mut rng = Rng::new(0xA1);
+    for _ in 0..CASES {
+        let cap = rng.range_f64(1.0, 100.0);
+        let rtt = rng.range_f64(0.005, 0.2);
+        let mut link = Link::new(cap, rtt, rng.range_f64(0.3, 2.0));
+        for _ in 0..50 {
+            let offered = rng.range_f64(0.0, cap * 4.0);
+            let out = link.tick(offered, 0.05);
+            assert!((0.0..=1.0).contains(&out.drop_frac), "drop={}", out.drop_frac);
+            assert!((out.accept_frac + out.drop_frac - 1.0).abs() < 1e-9);
+            assert!(out.queue_delay_s >= 0.0);
+            assert!(link.queue_fill() <= 1.0 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_sim_goodput_never_exceeds_capacity() {
+    let mut rng = Rng::new(0xB2);
+    for case in 0..30 {
+        let tb = match case % 3 {
+            0 => Testbed::chameleon(),
+            1 => Testbed::cloudlab(),
+            _ => Testbed::fabric(),
+        };
+        let cap = tb.capacity_gbps;
+        let mut sim = NetworkSim::new(tb, rng.next_u64())
+            .with_background(Background::Constant { gbps: rng.range_f64(0.0, cap * 0.4) });
+        let n_flows = 1 + rng.below(3);
+        let ids: Vec<_> = (0..n_flows)
+            .map(|_| sim.add_flow(1 + rng.below(16) as u32, 1 + rng.below(16) as u32, None))
+            .collect();
+        for _ in 0..15 {
+            let m = sim.run_mi(1.0);
+            let total: f64 = ids.iter().map(|id| m[id.0].throughput_gbps).sum();
+            assert!(total <= cap * 1.02, "goodput {total} > capacity {cap}");
+            for id in &ids {
+                assert!(m[id.0].plr >= 0.0 && m[id.0].plr <= 1.0);
+                assert!(m[id.0].rtt_s > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_jfi_in_unit_interval_and_extremes() {
+    let mut rng = Rng::new(0xC3);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(10);
+        let thr: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 50.0)).collect();
+        let j = jain_fairness(&thr);
+        assert!(j > 0.0 && j <= 1.0 + 1e-12, "jfi={j}");
+        // Equal flows -> exactly 1.
+        let eq = vec![rng.range_f64(0.1, 10.0); n];
+        assert!((jain_fairness(&eq) - 1.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_action_sequences_stay_in_bounds() {
+    let mut rng = Rng::new(0xD4);
+    for _ in 0..CASES {
+        let bounds = ParamBounds {
+            cc_min: 1 + rng.below(3) as u32,
+            cc_max: 8 + rng.below(24) as u32,
+            p_min: 1 + rng.below(3) as u32,
+            p_max: 8 + rng.below(24) as u32,
+            cc0: 4,
+            p0: 4,
+        };
+        let (mut cc, mut p) = bounds.clamp(4, 4);
+        for _ in 0..100 {
+            let a = rng.below(N_ACTIONS);
+            let (ncc, np) = bounds.apply(cc, p, a);
+            assert!((bounds.cc_min..=bounds.cc_max).contains(&ncc));
+            assert!((bounds.p_min..=bounds.p_max).contains(&np));
+            cc = ncc;
+            p = np;
+        }
+    }
+}
+
+#[test]
+fn prop_feature_window_outputs_bounded() {
+    let mut rng = Rng::new(0xE5);
+    for _ in 0..50 {
+        let mut w = FeatureWindow::new(1 + rng.below(12), 16, 16);
+        for _ in 0..60 {
+            let obs = Observation {
+                throughput_gbps: rng.range_f64(0.0, 30.0),
+                plr: rng.range_f64(0.0, 1.0),
+                rtt_s: rng.range_f64(0.001, 0.5),
+                energy_j: rng.range_f64(0.0, 500.0),
+                cc: 1 + rng.below(16) as u32,
+                p: 1 + rng.below(16) as u32,
+                duration_s: 1.0,
+            };
+            let x = w.push(&obs);
+            assert!((0.0..=1.0).contains(&x[0]), "plr feature");
+            assert!((-1.0..=1.0).contains(&x[1]), "gradient clipped");
+            assert!(x[2] >= 1.0 - 1e-6 && x[2] <= 8.0, "ratio bounded: {}", x[2]);
+            assert!((0.0..=1.0).contains(&x[3]) && (0.0..=1.0).contains(&x[4]));
+            assert!(w.state().iter().all(|v| v.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn prop_reward_shaping_is_ternary_and_utility_monotone() {
+    let mut rng = Rng::new(0xF6);
+    let cfg = RewardConfig::default();
+    for _ in 0..CASES {
+        let cur = rng.range_f64(-10.0, 10.0);
+        let prev = rng.range_f64(-10.0, 10.0);
+        let r = diff_reward(&cfg, cur, prev);
+        assert!(r == cfg.x || r == -cfg.y || r == 0.0);
+        // Utility is monotone in throughput at fixed loss/params...
+        let (cc, p) = (1 + rng.below(16) as u32, 1 + rng.below(16) as u32);
+        let l = rng.range_f64(0.0, 0.02);
+        let t = rng.range_f64(0.1, 20.0);
+        // ...as long as the loss penalty doesn't dominate (B·L < 1/K^n).
+        let cfg_ok = 1.0 / cfg.k.powf((cc * p) as f64) > cfg.b * l;
+        if cfg_ok {
+            assert!(utility(&cfg, t + 1.0, l, cc, p) > utility(&cfg, t, l, cc, p));
+        }
+        // And decreasing in loss at fixed throughput.
+        assert!(utility(&cfg, t, l + 0.01, cc, p) < utility(&cfg, t, l, cc, p));
+    }
+}
+
+#[test]
+fn prop_gae_matches_bruteforce_montecarlo() {
+    let mut rng = Rng::new(0x17);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(20);
+        let mut r = Rollout::new();
+        let rewards: Vec<f32> = (0..n).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+        for i in 0..n {
+            r.push(RolloutStep {
+                state: vec![0.0],
+                action: 0,
+                reward: rewards[i],
+                value: 0.0,
+                logp: 0.0,
+                done: false,
+            });
+        }
+        // gamma = lambda = 1, values = 0: advantage = suffix sum of rewards.
+        let (adv, ret) = r.gae(1.0, 1.0, 0.0);
+        for i in 0..n {
+            let want: f32 = rewards[i..].iter().sum();
+            assert!((adv[i] - want).abs() < 1e-4, "i={i} adv={} want={want}", adv[i]);
+            assert!((ret[i] - adv[i]).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn prop_kmeans_assign_is_argmin() {
+    let mut rng = Rng::new(0x28);
+    for _ in 0..30 {
+        let dim = 1 + rng.below(8);
+        let k = 1 + rng.below(12);
+        let n = 10 + rng.below(100);
+        let pts: Vec<f32> = (0..n * dim).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let km = KMeans::fit(&pts, dim, k, 15, rng.next_u64());
+        for i in 0..n {
+            let x = &pts[i * dim..(i + 1) * dim];
+            let a = km.assign(x);
+            let d_a = dist2(x, &km.centroids[a * dim..(a + 1) * dim]);
+            for c in 0..km.k {
+                let d_c = dist2(x, &km.centroids[c * dim..(c + 1) * dim]);
+                assert!(d_a <= d_c + 1e-6, "assign not argmin");
+            }
+        }
+    }
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum()
+}
+
+#[test]
+fn prop_transition_store_roundtrips_random_data() {
+    let mut rng = Rng::new(0x39);
+    let dir = std::env::temp_dir().join("sparta_prop_store");
+    for case in 0..20 {
+        let n = 1 + rng.below(50);
+        let ts: Vec<Transition> = (0..n)
+            .map(|_| Transition {
+                features: [rng.f32(), rng.f32() * 2.0 - 1.0, 1.0 + rng.f32(), rng.f32(), rng.f32()],
+                action: rng.below(5),
+                next_features: [rng.f32(), 0.0, 1.0, rng.f32(), rng.f32()],
+                throughput_gbps: rng.range_f64(0.0, 30.0),
+                plr: rng.range_f64(0.0, 0.2),
+                rtt_s: rng.range_f64(0.01, 0.2),
+                energy_j: if rng.chance(0.1) { f64::NAN } else { rng.range_f64(0.0, 400.0) },
+                score: rng.range_f64(-5.0, 10.0),
+                cc: 1 + rng.below(16) as u32,
+                p: 1 + rng.below(16) as u32,
+            })
+            .collect();
+        let path = dir.join(format!("case{case}"));
+        TransitionStore::save(&path, &ts).unwrap();
+        let back = TransitionStore::load(&path).unwrap();
+        assert_eq!(back.len(), ts.len());
+        for (a, b) in ts.iter().zip(&back) {
+            assert_eq!(a.action, b.action);
+            assert_eq!(a.cc, b.cc);
+            assert!((a.throughput_gbps - b.throughput_gbps).abs() < 1e-4);
+            assert_eq!(a.energy_j.is_nan(), b.energy_j.is_nan());
+        }
+    }
+}
+
+#[test]
+fn prop_pause_resume_preserves_stream_accounting() {
+    let mut rng = Rng::new(0x4A);
+    for _ in 0..30 {
+        let mut sim = NetworkSim::new(Testbed::chameleon(), rng.next_u64());
+        let id = sim.add_flow(4, 4, None);
+        for _ in 0..40 {
+            let cc = 1 + rng.below(16) as u32;
+            let p = 1 + rng.below(16) as u32;
+            sim.set_cc_p(id, cc, p);
+            assert_eq!(sim.active_streams(id), (cc * p) as usize);
+            sim.run_mi(1.0);
+        }
+    }
+}

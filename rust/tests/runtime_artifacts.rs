@@ -1,0 +1,148 @@
+//! Integration: the Rust runtime loads and executes every AOT artifact.
+//!
+//! Requires `make artifacts` to have run; tests are skipped (pass with a
+//! note) when the artifacts directory is missing so `cargo test` stays
+//! usable on a fresh checkout.
+
+use sparta::agents::{self, DrlAgent};
+use sparta::runtime::Runtime;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+#[test]
+fn manifest_lists_all_graphs() {
+    let Some(rt) = runtime() else { return };
+    for algo in agents::ALGOS {
+        assert!(rt.manifest.algo(algo).is_ok(), "missing algo {algo}");
+        assert!(rt.manifest.graph(&format!("{algo}_forward")).is_ok());
+        assert!(rt.manifest.graph(&format!("{algo}_train")).is_ok());
+    }
+    assert!(rt.manifest.graph("kmeans_assign").is_ok());
+    assert_eq!(rt.manifest.global("features").unwrap() as usize, sparta::coordinator::FEATURES);
+}
+
+#[test]
+fn forward_graphs_execute_and_are_finite() {
+    let Some(rt) = runtime() else { return };
+    for algo in agents::ALGOS {
+        let exe = rt.compile(&format!("{algo}_forward")).expect(algo);
+        let params = agents::init_params(&rt, algo).expect(algo);
+        let obs = vec![0.1f32; exe.spec.arg_len(1)];
+        let out = exe.call(&[&params, &obs]).expect(algo);
+        assert!(!out.is_empty());
+        for o in &out {
+            assert!(o.iter().all(|x| x.is_finite()), "{algo}: non-finite output");
+        }
+        // Q/logit heads emit N_ACTIONS values; DDPG emits the action pair.
+        let head = &out[0];
+        if algo == "ddpg" {
+            assert_eq!(head.len(), 2);
+            assert!(head.iter().all(|x| x.abs() <= 2.0 + 1e-5));
+        } else {
+            assert_eq!(head.len(), sparta::coordinator::N_ACTIONS);
+        }
+    }
+}
+
+#[test]
+fn dqn_train_step_changes_params_and_reduces_td_loss() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("dqn_train").unwrap();
+    let fwd = rt.compile("dqn_forward").unwrap();
+    let params = agents::init_params(&rt, "dqn").unwrap();
+    let n = params.len();
+    let batch = rt.manifest.algo("dqn").unwrap().hparam("batch").unwrap() as usize;
+    let obs_len = fwd.spec.arg_len(1);
+
+    let obs = vec![0.2f32; batch * obs_len];
+    let act = vec![1.0f32; batch];
+    let rew = vec![1.0f32; batch];
+    let done = vec![1.0f32; batch]; // terminal: target = reward exactly
+    let (mut p, mut m, mut v) = (params.clone(), vec![0.0f32; n], vec![0.0f32; n]);
+    let mut losses = Vec::new();
+    for step in 1..=50 {
+        let s = [step as f32];
+        let out = exe
+            .call(&[&p, &params, &m, &v, &s, &obs, &act, &rew, &obs, &done])
+            .unwrap();
+        let mut it = out.into_iter();
+        p = it.next().unwrap();
+        m = it.next().unwrap();
+        v = it.next().unwrap();
+        losses.push(it.next().unwrap()[0]);
+    }
+    assert_ne!(p, params, "params unchanged after training");
+    assert!(
+        losses[49] < losses[0] * 0.5,
+        "TD loss should fall: first={} last={}",
+        losses[0],
+        losses[49]
+    );
+    // After training toward target=1 for action 1, Q(s, 1) should approach 1.
+    let q = fwd.call(&[&p, &obs[0..obs_len]]).unwrap();
+    assert!((q[0][1] - 1.0).abs() < 0.35, "q1={}", q[0][1]);
+}
+
+#[test]
+fn kmeans_artifact_matches_rust_kmeans() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("kmeans_assign").unwrap();
+    let n = rt.manifest.global("kmeans_n").unwrap() as usize;
+    let k = rt.manifest.global("kmeans_k").unwrap() as usize;
+    let d = rt.manifest.global("kmeans_d").unwrap() as usize;
+
+    let mut rng = sparta::util::Rng::new(5);
+    let points: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+    let centroids: Vec<f32> = (0..k * d).map(|_| rng.f32()).collect();
+    let out = exe.call(&[&points, &centroids]).unwrap();
+    let assign = &out[0];
+    assert_eq!(assign.len(), n);
+
+    // Compare against the Rust emulator's own assignment.
+    let km = sparta::emulator::KMeans {
+        centroids: centroids.clone(),
+        k,
+        dim: d,
+        assignments: vec![],
+    };
+    for i in 0..n {
+        let rust_a = km.assign(&points[i * d..(i + 1) * d]);
+        assert_eq!(assign[i] as usize, rust_a, "disagreement at point {i}");
+    }
+}
+
+#[test]
+fn agents_act_and_learn_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    for algo in agents::ALGOS {
+        let mut agent = agents::make_agent(&rt, algo, 7, None).expect(algo);
+        let state_len = rt
+            .compile(&format!("{algo}_forward"))
+            .unwrap()
+            .spec
+            .arg_len(1);
+        let s0 = vec![0.1f32; state_len];
+        let s1 = vec![0.2f32; state_len];
+        let mut acted = [false; 5];
+        // Enough steps to trigger at least one HLO train call for the
+        // off-policy agents (learn_start is 100-200).
+        for i in 0..260 {
+            let a = agent.act(&s0, true);
+            assert!(a < 5, "{algo}: action out of range");
+            acted[a] = true;
+            agent.observe(&s0, a, if a == 1 { 1.0 } else { -0.1 }, &s1, i % 20 == 19);
+        }
+        assert!(agent.xla_seconds() > 0.0, "{algo}: no XLA time recorded");
+        if algo != "ppo" && algo != "rppo" {
+            assert!(agent.train_steps() > 0, "{algo}: never trained");
+        }
+    }
+}
