@@ -5,7 +5,7 @@
 //! cargo run --release --example energy_sweep [testbed]
 //! ```
 
-use sparta::experiments::fig1;
+use sparta::experiments::{default_jobs, fig1};
 use sparta::net::Testbed;
 
 fn main() {
@@ -19,7 +19,7 @@ fn main() {
         "sweeping (cc, p) ∈ {{1,2,4,8,16}}² x 3 background regimes on {} ({} Gbps)...",
         tb.name, tb.capacity_gbps
     );
-    let pts = fig1::sweep(&tb, &grid, &["low", "medium", "high"], 7);
+    let pts = fig1::sweep(&tb, &grid, &["low", "medium", "high"], 7, default_jobs());
     fig1::print(&pts, &grid);
 
     // The paper's observation: the optimum moves with background traffic.

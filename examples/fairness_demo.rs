@@ -9,11 +9,10 @@
 
 use anyhow::Result;
 use sparta::config::Paths;
-use sparta::experiments::{fig7, Scale, SpartaCtx};
+use sparta::experiments::{default_jobs, fig7, Scale};
 
 fn main() -> Result<()> {
-    let ctx = SpartaCtx::load(Paths::resolve())?;
-    let scenarios = fig7::run(&ctx, Scale::Quick, 99)?;
+    let scenarios = fig7::run(&Paths::resolve(), Scale::Quick, 99, default_jobs())?;
     fig7::print(&scenarios);
 
     // The paper's finding: the F&E reward (loss-aware) yields higher, more

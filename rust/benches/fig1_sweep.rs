@@ -1,12 +1,12 @@
 //! Bench: regenerate Fig. 1 — throughput/power vs (cc, p) x background.
-use sparta::experiments::fig1;
+use sparta::experiments::{default_jobs, fig1};
 use sparta::net::Testbed;
 
 fn main() {
     let t0 = std::time::Instant::now();
     let tb = Testbed::chameleon();
     let grid = [1u32, 2, 4, 8, 16];
-    let pts = fig1::sweep(&tb, &grid, &["low", "medium", "high"], 7);
+    let pts = fig1::sweep(&tb, &grid, &["low", "medium", "high"], 7, default_jobs());
     fig1::print(&pts, &grid);
     println!("\n[bench fig1_sweep: {} points in {:.1}s]", pts.len(), t0.elapsed().as_secs_f64());
 }

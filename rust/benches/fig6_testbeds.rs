@@ -1,14 +1,13 @@
-//! Bench: regenerate Fig. 6 — six methods x three testbeds (headline).
+//! Bench: regenerate Fig. 6 — six methods x evaluation scenarios (headline).
 use sparta::config::Paths;
-use sparta::experiments::{fig6, Scale, SpartaCtx};
-use sparta::net::Testbed;
+use sparta::experiments::{default_jobs, fig6, Scale};
+use sparta::scenarios::Scenario;
 
 fn main() {
     let scale = Scale::by_name(&std::env::var("SPARTA_BENCH_SCALE").unwrap_or_default());
     let t0 = std::time::Instant::now();
-    let ctx = SpartaCtx::load(Paths::resolve()).expect("run `make artifacts` first");
-    let cells = fig6::run(&ctx, &Testbed::all(), scale, 42)
-        .expect("fig6 (train SPARTA first: `sparta train-all`)");
+    let cells = fig6::run(&Paths::resolve(), &Scenario::defaults(), scale, 42, default_jobs())
+        .expect("fig6 (needs `make artifacts` + `sparta train-all`)");
     fig6::print(&cells);
     let (thr, en) = fig6::headline(&cells);
     println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");

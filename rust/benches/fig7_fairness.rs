@@ -1,12 +1,12 @@
 //! Bench: regenerate Fig. 7 — concurrent-transfer fairness (JFI).
 use sparta::config::Paths;
-use sparta::experiments::{fig7, Scale, SpartaCtx};
+use sparta::experiments::{default_jobs, fig7, Scale};
 
 fn main() {
     let scale = Scale::by_name(&std::env::var("SPARTA_BENCH_SCALE").unwrap_or_default());
     let t0 = std::time::Instant::now();
-    let ctx = SpartaCtx::load(Paths::resolve()).expect("run `make artifacts` first");
-    let scenarios = fig7::run(&ctx, scale, 42).expect("fig7 (train SPARTA first)");
+    let scenarios = fig7::run(&Paths::resolve(), scale, 42, default_jobs())
+        .expect("fig7 (needs `make artifacts` + trained SPARTA weights)");
     fig7::print(&scenarios);
     println!("\n[bench fig7_fairness: {:.1}s]", t0.elapsed().as_secs_f64());
 }

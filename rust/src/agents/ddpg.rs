@@ -119,8 +119,8 @@ impl DrlAgent for DdpgAgent {
     fn act(&mut self, state: &[f32], explore: bool) -> usize {
         let mut a = self.actor(state);
         if explore {
-            a[0] = (a[0] as f64 + self.rng.normal_ms(0.0, self.noise * 2.0)) as f32;
-            a[1] = (a[1] as f64 + self.rng.normal_ms(0.0, self.noise * 2.0)) as f32;
+            a[0] = (a[0] as f64 + self.rng.normal_mean_sd(0.0, self.noise * 2.0)) as f32;
+            a[1] = (a[1] as f64 + self.rng.normal_mean_sd(0.0, self.noise * 2.0)) as f32;
         }
         a[0] = a[0].clamp(-2.0, 2.0);
         a[1] = a[1].clamp(-2.0, 2.0);

@@ -1,6 +1,8 @@
 //! The monitoring-interval control loop.
 //!
-//! A [`Controller`] owns one simulated testbed and any number of *lanes*
+//! A [`Controller`] owns one network substrate (held as `Box<dyn Substrate>`,
+//! so single-bottleneck testbeds, multi-segment scenario topologies and any
+//! future substrate all drive the same loop) and any number of *lanes*
 //! (transfer applications): each lane couples a transfer job, an engine
 //! profile, an energy meter, a reward tracker and an [`Optimizer`]. Each MI
 //! the controller advances the shared network, updates every lane's state
@@ -13,12 +15,12 @@ use super::state::{FeatureWindow, Observation};
 use super::{Decision, MiContext, Optimizer};
 use crate::energy::EnergyMeter;
 use crate::net::background::Background;
-use crate::net::{FlowId, NetworkSim, Testbed};
+use crate::net::{FlowId, NetworkSim, Substrate, Testbed, Topology};
 use crate::transfer::{EngineProfile, TransferJob};
 use crate::util::stats;
 
 /// Everything recorded about one lane during one monitoring interval.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MiRecord {
     pub mi: usize,
     pub time_s: f64,
@@ -40,7 +42,7 @@ pub struct MiRecord {
 }
 
 /// Per-lane results of a run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LaneReport {
     pub name: String,
     pub records: Vec<MiRecord>,
@@ -77,8 +79,9 @@ impl LaneReport {
     }
 }
 
-/// Results of a full run (all lanes).
-#[derive(Debug, Clone)]
+/// Results of a full run (all lanes). `PartialEq` supports the
+/// bit-identical-reports guarantee of the parallel trial runner.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
     pub lanes: Vec<LaneReport>,
     pub duration_s: f64,
@@ -124,6 +127,7 @@ struct Lane {
 pub struct ControllerBuilder {
     testbed: Testbed,
     background: Option<Background>,
+    topology: Option<Topology>,
     mi_s: f64,
     bounds: ParamBounds,
     reward_cfg: RewardConfig,
@@ -139,6 +143,13 @@ pub struct ControllerBuilder {
 impl ControllerBuilder {
     pub fn background(mut self, bg: Background) -> Self {
         self.background = Some(bg);
+        self
+    }
+
+    /// Run over a multi-segment path instead of the testbed's single
+    /// bottleneck (see [`crate::net::Topology`]; scenario presets use this).
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.topology = Some(t);
         self
     }
 
@@ -189,12 +200,15 @@ impl ControllerBuilder {
     }
 
     pub fn build(self) -> Controller {
-        let mut sim = NetworkSim::new(self.testbed.clone(), self.seed);
+        let mut sim = match &self.topology {
+            Some(t) => NetworkSim::from_topology(self.testbed.clone(), t, self.seed),
+            None => NetworkSim::new(self.testbed.clone(), self.seed),
+        };
         if let Some(bg) = self.background.clone() {
             sim = sim.with_background(bg);
         }
         Controller {
-            sim,
+            sim: Box::new(sim),
             testbed: self.testbed,
             mi_s: self.mi_s,
             bounds: self.bounds,
@@ -210,9 +224,9 @@ impl ControllerBuilder {
     }
 }
 
-/// The MI control loop over one simulated testbed.
+/// The MI control loop over one network substrate.
 pub struct Controller {
-    sim: NetworkSim,
+    sim: Box<dyn Substrate>,
     testbed: Testbed,
     mi_s: f64,
     pub bounds: ParamBounds,
@@ -231,6 +245,7 @@ impl Controller {
         ControllerBuilder {
             testbed,
             background: None,
+            topology: None,
             mi_s: 1.0,
             bounds: ParamBounds::default(),
             reward_cfg: RewardConfig::default(),
@@ -482,6 +497,22 @@ mod tests {
         let report = ctl.run_all();
         assert!(report.lanes.iter().all(|l| l.completed));
         assert!(report.avg_jfi() > 0.8, "jfi={}", report.avg_jfi());
+    }
+
+    #[test]
+    fn controller_runs_over_multi_segment_topology() {
+        let tb = Testbed::chameleon();
+        let topo = Topology::three_stage(&tb, 5.0, tb.capacity_gbps);
+        let mut ctl = Controller::builder(tb)
+            .topology(topo)
+            .background(Background::Idle)
+            .job(quick_job())
+            .seed(9)
+            .build();
+        let report = ctl.run(Box::new(StaticTool::efficient_static(4, 4)), 9);
+        assert!(report.lane().completed);
+        // The 5 Gbps NIC stage caps the transfer below the 10 Gbps WAN.
+        assert!(report.lane().avg_throughput_gbps() <= 5.05);
     }
 
     #[test]

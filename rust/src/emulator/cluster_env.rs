@@ -174,7 +174,7 @@ mod tests {
                 features: f(cc, p),
                 action,
                 next_features: f(cc, p),
-                throughput_gbps: thr + rng.normal_ms(0.0, 0.2),
+                throughput_gbps: thr + rng.normal_mean_sd(0.0, 0.2),
                 plr,
                 rtt_s: 0.032,
                 energy_j: 2.0 * (18.0 + 0.85 * streams.powf(0.9) + 6.0 * thr),

@@ -52,7 +52,7 @@ impl PowerModel {
 
     /// Power with measurement noise, clamped non-negative.
     pub fn sample_power_w(&self, streams: usize, throughput_gbps: f64, rng: &mut Rng) -> f64 {
-        (self.power_w(streams, throughput_gbps) + rng.normal_ms(0.0, self.noise_w)).max(0.0)
+        (self.power_w(streams, throughput_gbps) + rng.normal_mean_sd(0.0, self.noise_w)).max(0.0)
     }
 }
 

@@ -8,7 +8,10 @@ use crate::coordinator::{Optimizer, ParamBounds, RewardKind};
 use crate::emulator::{ClusterEnv, Transition, TransitionStore};
 use crate::net::Testbed;
 use crate::runtime::{Runtime, WeightStore};
-use crate::trainer::{collect_transitions, train_offline, TrainConfig, TrainStats};
+use crate::scenarios::Scenario;
+use crate::trainer::{
+    collect_transitions, collect_transitions_scenario, train_offline, TrainConfig, TrainStats,
+};
 use crate::transfer::EngineProfile;
 use anyhow::{anyhow, Result};
 
@@ -111,7 +114,10 @@ pub fn make_optimizer(
     seed: u64,
 ) -> Result<(Box<dyn Optimizer>, EngineProfile, RewardKind)> {
     let store = ctx.weight_store();
-    let load = |algo: &str, kind: RewardKind| -> Result<Box<dyn Optimizer>> {
+    // `display` becomes the lane's reported name: SPARTA variants label
+    // themselves "sparta-t"/"sparta-fe" rather than the underlying
+    // "rppo-te"/"rppo-fe" core.
+    let load = |algo: &str, kind: RewardKind, display: String| -> Result<Box<dyn Optimizer>> {
         let name = SpartaCtx::weight_name(algo, kind);
         let n = ctx.runtime.manifest.algo(algo)?.n_params;
         let weights = store
@@ -121,10 +127,7 @@ pub fn make_optimizer(
         // Deployment: frozen greedy policy plus the coordinator's
         // resume-guardrail (see DrlOptimizer::decide). Online tuning is
         // exercised separately by Fig. 5 / `sparta tune`.
-        Ok(Box::new(DrlOptimizer::new(
-            agent,
-            format!("{algo}-{}", kind.short().to_lowercase()),
-        )))
+        Ok(Box::new(DrlOptimizer::new(agent, display)))
     };
 
     Ok(match method {
@@ -148,16 +151,16 @@ pub fn make_optimizer(
             EngineProfile::efficient(),
             RewardKind::ThroughputEnergy,
         ),
-        "sparta-t" => {
-            let mut opt = load("rppo", RewardKind::ThroughputEnergy)?;
-            rename(&mut opt, "sparta-t");
-            (opt, EngineProfile::efficient(), RewardKind::ThroughputEnergy)
-        }
-        "sparta-fe" => {
-            let mut opt = load("rppo", RewardKind::FairnessEfficiency)?;
-            rename(&mut opt, "sparta-fe");
-            (opt, EngineProfile::efficient(), RewardKind::FairnessEfficiency)
-        }
+        "sparta-t" => (
+            load("rppo", RewardKind::ThroughputEnergy, "sparta-t".into())?,
+            EngineProfile::efficient(),
+            RewardKind::ThroughputEnergy,
+        ),
+        "sparta-fe" => (
+            load("rppo", RewardKind::FairnessEfficiency, "sparta-fe".into())?,
+            EngineProfile::efficient(),
+            RewardKind::FairnessEfficiency,
+        ),
         other => {
             // "algo" or "algo:te"/"algo:fe" — a trained DRL agent.
             let (algo, kind) = match other.split_once(':') {
@@ -165,15 +168,10 @@ pub fn make_optimizer(
                 Some((a, _)) => (a, RewardKind::ThroughputEnergy),
                 None => (other, RewardKind::ThroughputEnergy),
             };
-            (load(algo, kind)?, EngineProfile::efficient(), kind)
+            let display = format!("{algo}-{}", kind.short().to_lowercase());
+            (load(algo, kind, display)?, EngineProfile::efficient(), kind)
         }
     })
-}
-
-fn rename(opt: &mut Box<dyn Optimizer>, _name: &str) {
-    // Display names are baked into DrlOptimizer at construction; this hook
-    // exists for future renaming without re-wrapping.
-    let _ = opt;
 }
 
 /// Load cached exploration transitions for a testbed, collecting and saving
@@ -191,6 +189,35 @@ pub fn transitions_for(ctx: &SpartaCtx, testbed: &Testbed, scale: Scale, seed: u
     let (runs, mis) = scale.explore();
     crate::log_info!("collecting {} exploration runs x {} MIs on {}", runs, mis, testbed.name);
     let ts = collect_transitions(testbed, runs, mis, seed);
+    TransitionStore::save(&path, &ts)?;
+    Ok(ts)
+}
+
+/// Like [`transitions_for`], but explored under a registered scenario's
+/// topology and cross traffic (cached per scenario name).
+pub fn transitions_for_scenario(
+    ctx: &SpartaCtx,
+    scenario: &Scenario,
+    scale: Scale,
+    seed: u64,
+) -> Result<Vec<Transition>> {
+    let path = ctx
+        .paths
+        .transitions()
+        .join(format!("sc_{}_{:?}", scenario.name, scale).to_lowercase());
+    if let Ok(ts) = TransitionStore::load(&path) {
+        if !ts.is_empty() {
+            return Ok(ts);
+        }
+    }
+    let (runs, mis) = scale.explore();
+    crate::log_info!(
+        "collecting {} exploration runs x {} MIs under scenario {}",
+        runs,
+        mis,
+        scenario.name
+    );
+    let ts = collect_transitions_scenario(scenario, runs, mis, seed);
     TransitionStore::save(&path, &ts)?;
     Ok(ts)
 }
@@ -260,5 +287,46 @@ mod tests {
     fn weight_names_distinguish_rewards() {
         assert_eq!(SpartaCtx::weight_name("rppo", RewardKind::ThroughputEnergy), "rppo_te");
         assert_eq!(SpartaCtx::weight_name("rppo", RewardKind::FairnessEfficiency), "rppo_fe");
+    }
+
+    /// Regression: SPARTA lanes must report their method names ("sparta-t",
+    /// "sparta-fe"), not the underlying "rppo-te"/"rppo-fe" core labels —
+    /// the display name is baked in at construction.
+    #[test]
+    fn sparta_variants_report_display_names() {
+        struct NullAgent {
+            params: Vec<f32>,
+        }
+        impl crate::agents::DrlAgent for NullAgent {
+            fn name(&self) -> &str {
+                "null"
+            }
+            fn act(&mut self, _state: &[f32], _explore: bool) -> usize {
+                0
+            }
+            fn observe(
+                &mut self,
+                _state: &[f32],
+                _action: usize,
+                _reward: f64,
+                _next_state: &[f32],
+                _done: bool,
+            ) {
+            }
+            fn params(&self) -> &[f32] {
+                &self.params
+            }
+            fn set_params(&mut self, params: Vec<f32>) {
+                self.params = params;
+            }
+            fn train_steps(&self) -> u64 {
+                0
+            }
+            fn xla_seconds(&self) -> f64 {
+                0.0
+            }
+        }
+        let opt = DrlOptimizer::new(Box::new(NullAgent { params: Vec::new() }), "sparta-t");
+        assert_eq!(opt.name(), "sparta-t");
     }
 }

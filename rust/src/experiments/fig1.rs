@@ -1,9 +1,16 @@
 //! Fig. 1: throughput and power vs (cc, p) under different background
 //! traffic regimes (the motivation figure).
+//!
+//! Grid points are independent simulations, so they shard across worker
+//! threads ([`super::runner`]); per-point seeds are pre-drawn in grid order
+//! from the caller's seed, making the sweep bit-identical at any `jobs`
+//! count (and to the seed repo's serial sweep).
 
+use super::runner;
 use crate::energy::PowerModel;
 use crate::net::background::Background;
-use crate::net::{NetworkSim, Testbed};
+use crate::net::{NetworkSim, Substrate, Testbed};
+use crate::scenarios::Scenario;
 use crate::telemetry::Table;
 use crate::util::Rng;
 
@@ -18,40 +25,78 @@ pub struct SweepPoint {
     pub power_w: f64,
 }
 
-/// Sweep the (cc, p) grid under each background regime.
-pub fn sweep(testbed: &Testbed, grid: &[u32], regimes: &[&str], seed: u64) -> Vec<SweepPoint> {
+/// Measure one substrate at one (cc, p): warm-up, then average 15 MIs.
+fn measure(mut sub: Box<dyn Substrate>, cc: u32, p: u32) -> (f64, f64) {
     let model = PowerModel::efficient();
+    let id = sub.add_flow(cc, p, None);
+    // Warm-up past slow start, then measure.
+    for _ in 0..12 {
+        sub.run_mi(1.0);
+    }
+    let mut thr = 0.0;
+    let mut pw = 0.0;
+    let mis = 15;
+    for _ in 0..mis {
+        let m = sub.run_mi(1.0)[id.0];
+        thr += m.throughput_gbps;
+        pw += model.power_w(m.active_streams, m.throughput_gbps);
+    }
+    (thr / mis as f64, pw / mis as f64)
+}
+
+/// Sweep the (cc, p) grid under each background regime, sharded over `jobs`
+/// workers.
+pub fn sweep(
+    testbed: &Testbed,
+    grid: &[u32],
+    regimes: &[&str],
+    seed: u64,
+    jobs: usize,
+) -> Vec<SweepPoint> {
+    // Pre-draw per-point seeds in grid order (matches the serial sweep).
     let mut rng = Rng::new(seed);
-    let mut out = Vec::new();
+    let mut specs = Vec::new();
     for regime in regimes {
         for &cc in grid {
             for &p in grid {
-                let bg = Background::regime(regime, testbed.capacity_gbps);
-                let mut sim = NetworkSim::new(testbed.clone(), rng.next_u64()).with_background(bg);
-                let id = sim.add_flow(cc, p, None);
-                // Warm-up past slow start, then measure.
-                for _ in 0..12 {
-                    sim.run_mi(1.0);
-                }
-                let mut thr = 0.0;
-                let mut pw = 0.0;
-                let mis = 15;
-                for _ in 0..mis {
-                    let m = &sim.run_mi(1.0)[id.0];
-                    thr += m.throughput_gbps;
-                    pw += model.power_w(m.active_streams, m.throughput_gbps);
-                }
-                out.push(SweepPoint {
-                    regime: regime.to_string(),
-                    cc,
-                    p,
-                    throughput_gbps: thr / mis as f64,
-                    power_w: pw / mis as f64,
-                });
+                specs.push((regime.to_string(), cc, p, rng.next_u64()));
             }
         }
     }
-    out
+    runner::parallel_map(&specs, jobs, |_, (regime, cc, p, point_seed)| {
+        let bg = Background::regime(regime, testbed.capacity_gbps);
+        let sim = NetworkSim::new(testbed.clone(), *point_seed).with_background(bg);
+        let (throughput_gbps, power_w) = measure(Box::new(sim), *cc, *p);
+        SweepPoint {
+            regime: regime.clone(),
+            cc: *cc,
+            p: *p,
+            throughput_gbps,
+            power_w,
+        }
+    })
+}
+
+/// Sweep the (cc, p) grid under one registered scenario's conditions (the
+/// scenario replaces the regime axis).
+pub fn sweep_scenario(scenario: &Scenario, grid: &[u32], seed: u64, jobs: usize) -> Vec<SweepPoint> {
+    let mut rng = Rng::new(seed);
+    let mut specs = Vec::new();
+    for &cc in grid {
+        for &p in grid {
+            specs.push((cc, p, rng.next_u64()));
+        }
+    }
+    runner::parallel_map(&specs, jobs, |_, (cc, p, point_seed)| {
+        let (throughput_gbps, power_w) = measure(scenario.substrate(*point_seed), *cc, *p);
+        SweepPoint {
+            regime: scenario.name.to_string(),
+            cc: *cc,
+            p: *p,
+            throughput_gbps,
+            power_w,
+        }
+    })
 }
 
 /// Render the sweep as the two Fig.-1 panels (throughput, power).
@@ -92,7 +137,7 @@ mod tests {
     #[test]
     fn sweep_reproduces_fig1_shape() {
         let tb = Testbed::chameleon();
-        let pts = sweep(&tb, &[1, 4, 16], &["low", "high"], 11);
+        let pts = sweep(&tb, &[1, 4, 16], &["low", "high"], 11, 1);
         assert_eq!(pts.len(), 2 * 9);
         let get = |regime: &str, cc: u32, p: u32| {
             pts.iter().find(|x| x.regime == regime && x.cc == cc && x.p == p).unwrap().clone()
@@ -108,5 +153,28 @@ mod tests {
         // Heavy background depresses achievable throughput.
         let busy = get("high", 4, 4);
         assert!(busy.throughput_gbps < mid.throughput_gbps + 0.3);
+    }
+
+    #[test]
+    fn sweep_is_thread_count_invariant() {
+        let tb = Testbed::chameleon();
+        let serial = sweep(&tb, &[1, 8], &["low"], 3, 1);
+        let parallel = sweep(&tb, &[1, 8], &["low"], 3, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.throughput_gbps.to_bits(), b.throughput_gbps.to_bits());
+            assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        }
+    }
+
+    #[test]
+    fn scenario_sweep_respects_bottleneck() {
+        let sc = Scenario::by_name("nic-limited").unwrap();
+        let pts = sweep_scenario(&sc, &[2, 8], 5, 2);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.throughput_gbps <= 4.0 + 1e-6, "{:?}", p);
+            assert_eq!(p.regime, "nic-limited");
+        }
     }
 }

@@ -1,63 +1,139 @@
-//! Fig. 6: six methods × three testbeds — transfer throughput and energy
-//! (the headline evaluation).
+//! Fig. 6: six methods × evaluation scenarios — transfer throughput and
+//! energy (the headline evaluation).
+//!
+//! The paper's matrix is methods × three testbeds; this generalizes the
+//! column axis to any set of registered [`Scenario`]s (the testbed presets
+//! are scenarios themselves) and shards the (scenario × method × trial)
+//! cells across worker threads. Per-cell seeding depends only on the cell's
+//! identity, so reports are bit-identical at any `jobs` count.
 
 use super::common::{make_optimizer, Scale, SpartaCtx, METHODS};
-use crate::coordinator::Controller;
-use crate::net::Testbed;
+use super::runner;
+use crate::config::Paths;
+use crate::scenarios::Scenario;
 use crate::telemetry::Table;
 use crate::transfer::TransferJob;
 use crate::util::{stats, Summary};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-/// Results for one (method, testbed) cell over all trials.
+/// Results for one (method, scenario) cell over all trials.
 #[derive(Debug, Clone)]
 pub struct Cell {
     pub method: String,
-    pub testbed: String,
+    pub scenario: String,
     pub throughput_gbps: Vec<f64>,
-    /// Total transfer energy per trial, kJ (empty on FABRIC).
+    /// Total transfer energy per trial, kJ (empty where the testbed has no
+    /// energy counters, e.g. FABRIC).
     pub energy_kj: Vec<f64>,
     pub duration_s: Vec<f64>,
 }
 
-/// Run the full methods × testbeds matrix.
-pub fn run(ctx: &SpartaCtx, testbeds: &[Testbed], scale: Scale, seed: u64) -> Result<Vec<Cell>> {
+/// One (scenario, method, trial) unit of work.
+struct TrialSpec {
+    scenario: Scenario,
+    method: &'static str,
+    seed: u64,
+}
+
+/// One trial's extracted results.
+struct TrialOut {
+    throughput_gbps: f64,
+    energy_kj: Option<f64>,
+    duration_s: f64,
+}
+
+/// Run the methods × scenarios matrix, sharding trials over `jobs` workers.
+/// Takes [`Paths`] rather than a loaded context: workers cannot share a
+/// `SpartaCtx` (the PJRT runtime is thread-local), so each builds its own.
+pub fn run(
+    paths: &Paths,
+    scenarios: &[Scenario],
+    scale: Scale,
+    seed: u64,
+    jobs: usize,
+) -> Result<Vec<Cell>> {
     let (files, bytes) = scale.workload();
-    let mut cells = Vec::new();
-    for tb in testbeds {
+    let mut specs = Vec::new();
+    for sc in scenarios {
         for method in METHODS {
-            let mut cell = Cell {
-                method: method.to_string(),
-                testbed: tb.name.to_string(),
+            for trial in 0..scale.trials() {
+                specs.push(TrialSpec {
+                    scenario: sc.clone(),
+                    method,
+                    // Identity-derived seeding: the seed depends only on
+                    // this cell's (scenario, method, trial), so reports are
+                    // bit-identical at any thread count.
+                    seed: runner::cell_seed(
+                        seed,
+                        &format!("{}/{}", sc.name, method),
+                        trial as u64,
+                    ),
+                });
+            }
+        }
+    }
+
+    let paths = paths.clone();
+    let outs: Vec<Result<TrialOut>> = runner::parallel_map_with(
+        &specs,
+        jobs,
+        move || SpartaCtx::load(paths.clone()),
+        |worker_ctx, _i, spec| -> Result<TrialOut> {
+            let ctx = worker_ctx
+                .as_ref()
+                .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
+            let (opt, engine, reward) = make_optimizer(ctx, spec.method, spec.seed)?;
+            let mut ctl = spec
+                .scenario
+                .controller()
+                .job(TransferJob::files(files, bytes))
+                .engine(engine)
+                .reward(reward)
+                .seed(spec.seed)
+                .build();
+            let report = ctl.run(opt, spec.seed);
+            let lane = report.lane();
+            crate::log_info!(
+                "fig6 {}/{}: {:.2} Gbps, {:.1} kJ ({:.0} s)",
+                spec.scenario.name,
+                spec.method,
+                lane.avg_throughput_gbps(),
+                lane.total_energy_j / 1000.0,
+                lane.duration_s
+            );
+            Ok(TrialOut {
+                throughput_gbps: lane.avg_throughput_gbps(),
+                energy_kj: spec
+                    .scenario
+                    .testbed
+                    .has_energy_counters
+                    .then_some(lane.total_energy_j / 1000.0),
+                duration_s: lane.duration_s,
+            })
+        },
+    );
+
+    // Fold trial results (spec order == result order) into cells.
+    let mut cells: Vec<Cell> = Vec::new();
+    for (spec, out) in specs.iter().zip(outs) {
+        let out = out?;
+        let matches = cells
+            .last()
+            .is_some_and(|c| c.method == spec.method && c.scenario == spec.scenario.name);
+        if !matches {
+            cells.push(Cell {
+                method: spec.method.to_string(),
+                scenario: spec.scenario.name.to_string(),
                 throughput_gbps: Vec::new(),
                 energy_kj: Vec::new(),
                 duration_s: Vec::new(),
-            };
-            for trial in 0..scale.trials() {
-                let trial_seed = seed ^ (trial as u64 * 0x9E3779B9);
-                let (opt, engine, reward) = make_optimizer(ctx, method, trial_seed)?;
-                let mut ctl = Controller::builder(tb.clone())
-                    .job(TransferJob::files(files, bytes))
-                    .engine(engine)
-                    .reward(reward)
-                    .seed(trial_seed)
-                    .build();
-                let report = ctl.run(opt, trial_seed);
-                let lane = report.lane();
-                cell.throughput_gbps.push(lane.avg_throughput_gbps());
-                cell.duration_s.push(lane.duration_s);
-                if tb.has_energy_counters {
-                    cell.energy_kj.push(lane.total_energy_j / 1000.0);
-                }
-            }
-            crate::log_info!(
-                "fig6 {}/{}: {:.2} Gbps, {:.1} kJ",
-                tb.name,
-                method,
-                stats::mean(&cell.throughput_gbps),
-                stats::mean(&cell.energy_kj)
-            );
-            cells.push(cell);
+            });
+        }
+        let cell = cells.last_mut().unwrap();
+        cell.throughput_gbps.push(out.throughput_gbps);
+        cell.duration_s.push(out.duration_s);
+        if let Some(e) = out.energy_kj {
+            cell.energy_kj.push(e);
         }
     }
     Ok(cells)
@@ -66,12 +142,12 @@ pub fn run(ctx: &SpartaCtx, testbeds: &[Testbed], scale: Scale, seed: u64) -> Re
 /// Paper-style table of the matrix.
 pub fn print(cells: &[Cell]) {
     println!("\nFig 6 — transfer throughput (Gbps) and energy (kJ), mean over trials:");
-    let mut table = Table::new(&["testbed", "method", "thr mean", "thr p50", "thr std", "energy kJ", "duration s"]);
+    let mut table = Table::new(&["scenario", "method", "thr mean", "thr p50", "thr std", "energy kJ", "duration s"]);
     for c in cells {
         let t = Summary::of(&c.throughput_gbps);
         let e = stats::mean(&c.energy_kj);
         table.row(vec![
-            c.testbed.clone(),
+            c.scenario.clone(),
             c.method.clone(),
             format!("{:.2}", t.mean),
             format!("{:.2}", t.median),

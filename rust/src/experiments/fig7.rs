@@ -2,12 +2,14 @@
 //! scenarios on the Chameleon preset.
 
 use super::common::{make_optimizer, Scale, SpartaCtx};
+use super::runner;
+use crate::config::Paths;
 use crate::coordinator::Controller;
 use crate::net::Testbed;
 use crate::telemetry::Table;
 use crate::transfer::TransferJob;
 use crate::util::stats;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// One concurrent-transfer scenario.
 #[derive(Debug, Clone)]
@@ -75,12 +77,26 @@ pub fn run_scenario(
     })
 }
 
-/// Run all three scenarios.
-pub fn run(ctx: &SpartaCtx, scale: Scale, seed: u64) -> Result<Vec<Scenario>> {
-    scenarios()
-        .into_iter()
-        .map(|(name, methods)| run_scenario(ctx, name, &methods, scale, seed))
-        .collect()
+/// Run all three scenarios, sharded over `jobs` workers (each concurrent
+/// scenario is an independent simulation). Takes [`Paths`] rather than a
+/// loaded context: the PJRT runtime is thread-local, so every worker builds
+/// its own.
+pub fn run(paths: &Paths, scale: Scale, seed: u64, jobs: usize) -> Result<Vec<Scenario>> {
+    let specs = scenarios();
+    let paths = paths.clone();
+    runner::parallel_map_with(
+        &specs,
+        jobs,
+        move || SpartaCtx::load(paths.clone()),
+        |worker_ctx, _i, (name, methods)| {
+            let ctx = worker_ctx
+                .as_ref()
+                .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
+            run_scenario(ctx, name, methods, scale, seed)
+        },
+    )
+    .into_iter()
+    .collect()
 }
 
 pub fn print(scenarios: &[Scenario]) {

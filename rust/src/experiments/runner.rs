@@ -1,0 +1,157 @@
+//! Deterministic parallel trial runner.
+//!
+//! Experiments fan a grid of independent cells — (method × trial × scenario)
+//! for Fig. 6, (regime × cc × p) for Fig. 1 — across worker threads with
+//! [`std::thread::scope`]. Determinism contract: every cell derives its RNG
+//! seeding purely from its own identity (never from a shared RNG drawn in
+//! execution order) and results are written back by cell index, so the same
+//! inputs produce **bit-identical** outputs at any thread count, including
+//! `jobs = 1`.
+//!
+//! Workers that need per-thread state that is neither `Send` nor cheap (the
+//! PJRT runtime behind [`super::SpartaCtx`]) build it once per worker via
+//! [`parallel_map_with`]'s `init` hook.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use when the CLI doesn't pin `--jobs`.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` with up to `jobs` worker threads; returns outputs in
+/// item order. `f(i, &items[i])` must derive any randomness from the item
+/// itself for the bit-identical-at-any-thread-count guarantee to hold.
+pub fn parallel_map<I, O, F>(items: &[I], jobs: usize, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    parallel_map_with(items, jobs, || (), move |_, i, item| f(i, item))
+}
+
+/// [`parallel_map`] with per-worker state: each worker thread calls `init`
+/// once and passes the state to every `f` call it executes (used to build
+/// one [`super::SpartaCtx`] per worker instead of per cell).
+pub fn parallel_map_with<I, O, S, FS, F>(items: &[I], jobs: usize, init: FS, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    FS: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &I) -> O + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs <= 1 {
+        let mut state = init();
+        return items.iter().enumerate().map(|(i, item)| f(&mut state, i, item)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<O>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = f(&mut state, i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker left a cell unfilled"))
+        .collect()
+}
+
+/// Stable 64-bit mix of a base seed and a cell label — the per-cell seeding
+/// helper (FNV-1a over the label, XORed into the base).
+pub fn cell_seed(base: u64, label: &str, index: u64) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in label.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h = (h ^ index).wrapping_mul(0x0000_0100_0000_01B3);
+    base ^ h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_item_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = parallel_map(&items, 4, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..37).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn identical_results_at_any_thread_count() {
+        let items: Vec<u64> = (0..64).collect();
+        let work = |_: usize, &x: &u64| {
+            // Deterministic per-item pseudo-work seeded by the item alone.
+            let mut rng = crate::util::Rng::new(cell_seed(99, "t", x));
+            (0..100).map(|_| rng.f64()).sum::<f64>().to_bits()
+        };
+        let serial = parallel_map(&items, 1, work);
+        for jobs in [2, 4, 8] {
+            assert_eq!(serial, parallel_map(&items, jobs, work), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_grids() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 4, |_, x| *x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |_, x| *x), vec![7]);
+    }
+
+    #[test]
+    fn worker_state_is_reused_within_a_worker() {
+        let items: Vec<usize> = (0..16).collect();
+        let inits = AtomicUsize::new(0);
+        let out = parallel_map_with(
+            &items,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |calls, _, &x| {
+                *calls += 1;
+                x
+            },
+        );
+        assert_eq!(out, items);
+        // At most one init per worker (and at least one overall).
+        let n = inits.load(Ordering::Relaxed);
+        assert!(n >= 1 && n <= 4, "inits={n}");
+    }
+
+    #[test]
+    fn cell_seed_is_stable_and_label_sensitive() {
+        assert_eq!(cell_seed(1, "rclone", 0), cell_seed(1, "rclone", 0));
+        assert_ne!(cell_seed(1, "rclone", 0), cell_seed(1, "escp", 0));
+        assert_ne!(cell_seed(1, "rclone", 0), cell_seed(1, "rclone", 1));
+        assert_ne!(cell_seed(1, "rclone", 0), cell_seed(2, "rclone", 0));
+    }
+
+    #[test]
+    fn errors_propagate_as_values() {
+        let items: Vec<u32> = (0..8).collect();
+        let out: Vec<Result<u32, String>> = parallel_map(&items, 3, |_, &x| {
+            if x % 2 == 0 { Ok(x) } else { Err(format!("odd {x}")) }
+        });
+        assert_eq!(out.iter().filter(|r| r.is_err()).count(), 4);
+    }
+}

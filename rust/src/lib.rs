@@ -21,18 +21,37 @@
 //! Python never runs on the transfer path: `make artifacts` lowers everything
 //! once, and the `sparta` binary is self-contained afterwards.
 //!
+//! ## Architecture: substrates, scenarios, experiments
+//!
+//! The control plane never touches a concrete simulator: [`Controller`],
+//! the live training environment and the experiments all drive a
+//! [`net::Substrate`] trait object. [`net::NetworkSim`] implements it over a
+//! multi-segment [`net::Topology`] (sender NIC → shared WAN → receiver I/O,
+//! each an independent droptail link), so flows can bottleneck at any stage.
+//! The [`scenarios`] registry names ≥6 seeded presets over these topologies
+//! (`calm`, `diurnal-bg`, `bursty-incast`, `lossy-wan`, `receiver-limited`,
+//! `nic-limited`, `contended-peers`, plus the paper's testbeds) — select
+//! one with `--scenario <name>` on the CLI. Grid experiments shard their
+//! (method × trial × scenario) cells over worker threads
+//! ([`experiments::runner`], `--jobs N`) with identity-derived per-cell
+//! seeding, so reports are bit-identical at any thread count.
+//!
+//! [`Controller`]: coordinator::Controller
+//!
 //! ## Quick tour
 //!
 //! ```no_run
-//! use sparta::net::{Testbed, NetworkSim};
+//! use sparta::scenarios::Scenario;
 //! use sparta::transfer::TransferJob;
-//! use sparta::coordinator::{Controller, RewardKind};
+//! use sparta::coordinator::RewardKind;
 //! use sparta::baselines::StaticTool;
 //!
-//! // Simulate an rclone-style static transfer of 50 x 1 GiB on the
-//! // Chameleon (TACC->UC, 10 Gbps) testbed preset.
-//! let tb = Testbed::chameleon();
-//! let mut ctl = Controller::builder(tb)
+//! // Simulate an rclone-style static transfer of 50 x 1 GiB under the
+//! // "receiver-limited" scenario (cloudlab WAN behind an 8 Gbps receiver
+//! // I/O stage). `Scenario::by_name` resolves any registered preset,
+//! // including the plain testbeds ("chameleon", "cloudlab", "fabric").
+//! let sc = Scenario::by_name("receiver-limited").unwrap();
+//! let mut ctl = sc.controller()
 //!     .job(TransferJob::files(50, 1 << 30))
 //!     .reward(RewardKind::ThroughputEnergy)
 //!     .build();
@@ -49,6 +68,7 @@ pub mod energy;
 pub mod experiments;
 pub mod net;
 pub mod runtime;
+pub mod scenarios;
 pub mod telemetry;
 pub mod trainer;
 pub mod transfer;

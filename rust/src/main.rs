@@ -2,23 +2,25 @@
 //!
 //! ```text
 //! sparta info                         # artifacts, testbeds, trained weights
+//! sparta scenarios                    # list registered evaluation scenarios
 //! sparta collect  --testbed chameleon --scale quick
 //! sparta train    --algo rppo --reward te --scale quick
 //! sparta train-all --scale quick      # all 5 algos x both rewards
-//! sparta transfer --method sparta-fe --testbed chameleon
+//! sparta transfer --method sparta-fe --scenario lossy-wan
 //! sparta sweep    --testbed chameleon             # Fig 1
 //! sparta algos    --reward te                     # Fig 4
 //! sparta tune                                      # Fig 5
-//! sparta compare                                   # Fig 6
+//! sparta compare  --scenario receiver-limited      # Fig 6
 //! sparta fairness                                  # Fig 7
 //! sparta table1                                    # Table 1
 //! ```
 
 use anyhow::{anyhow, Result};
 use sparta::config::Paths;
-use sparta::coordinator::{Controller, RewardKind};
+use sparta::coordinator::{Controller, ControllerBuilder, RewardKind};
 use sparta::experiments::{self, make_optimizer, Scale, SpartaCtx};
 use sparta::net::Testbed;
+use sparta::scenarios::Scenario;
 use sparta::telemetry::report::lane_json;
 use sparta::telemetry::Table;
 use sparta::transfer::TransferJob;
@@ -49,6 +51,42 @@ fn testbed_arg(args: &Args) -> Result<Testbed> {
     Testbed::by_name(name).ok_or_else(|| anyhow!("unknown testbed '{name}'"))
 }
 
+/// `--scenario <name>` when given (see `sparta scenarios` for the registry).
+/// A scenario pins its own testbed, so combining it with `--testbed` is
+/// rejected rather than silently ignoring one of the two.
+fn scenario_arg(args: &Args) -> Result<Option<Scenario>> {
+    match args.get("scenario") {
+        None => Ok(None),
+        Some(name) => {
+            if args.get("testbed").is_some() {
+                return Err(anyhow!(
+                    "--scenario and --testbed conflict: scenario '{name}' already \
+                     pins its testbed (drop one of the two flags)"
+                ));
+            }
+            Scenario::by_name(name).map(Some).ok_or_else(|| {
+                anyhow!("unknown scenario '{name}' — `sparta scenarios` lists the registry")
+            })
+        }
+    }
+}
+
+/// `--scenario a,b,c` as a list, defaulting to the three testbed presets.
+fn scenario_list_arg(args: &Args) -> Result<Vec<Scenario>> {
+    match args.get("scenario") {
+        None => Ok(Scenario::defaults()),
+        Some(list) => list
+            .split(',')
+            .map(|n| {
+                let n = n.trim();
+                Scenario::by_name(n).ok_or_else(|| {
+                    anyhow!("unknown scenario '{n}' — `sparta scenarios` lists the registry")
+                })
+            })
+            .collect(),
+    }
+}
+
 fn ctx() -> Result<SpartaCtx> {
     SpartaCtx::load(Paths::resolve())
 }
@@ -56,17 +94,49 @@ fn ctx() -> Result<SpartaCtx> {
 fn dispatch(args: &Args) -> Result<()> {
     let scale = Scale::by_name(args.get_or("scale", "quick"));
     let seed = args.get_u64("seed", 42).map_err(|e| anyhow!(e))?;
+    let jobs = args
+        .get_usize("jobs", experiments::default_jobs())
+        .map_err(|e| anyhow!(e))?;
     match args.subcommand.as_deref() {
         None | Some("help") => {
             println!("{}", HELP);
             Ok(())
         }
         Some("info") => info(),
+        Some("scenarios") => {
+            println!("registered scenarios (use with --scenario <name>):");
+            let mut t = Table::new(&["name", "testbed", "path", "description"]);
+            for sc in Scenario::all() {
+                let path = sc
+                    .topology
+                    .segments
+                    .iter()
+                    .map(|s| format!("{} {:.0}G", s.name, s.capacity_gbps))
+                    .collect::<Vec<_>>()
+                    .join(" -> ");
+                t.row(vec![
+                    sc.name.into(),
+                    sc.testbed.name.into(),
+                    path,
+                    sc.summary.into(),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
         Some("collect") => {
             let c = ctx()?;
-            let tb = testbed_arg(args)?;
-            let ts = experiments::common::transitions_for(&c, &tb, scale, seed)?;
-            println!("{} transitions cached for {}", ts.len(), tb.name);
+            match scenario_arg(args)? {
+                Some(sc) => {
+                    let ts = experiments::transitions_for_scenario(&c, &sc, scale, seed)?;
+                    println!("{} transitions cached for scenario {}", ts.len(), sc.name);
+                }
+                None => {
+                    let tb = testbed_arg(args)?;
+                    let ts = experiments::common::transitions_for(&c, &tb, scale, seed)?;
+                    println!("{} transitions cached for {}", ts.len(), tb.name);
+                }
+            }
             Ok(())
         }
         Some("train") => {
@@ -105,12 +175,16 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("transfer") => {
             let c = ctx()?;
-            let tb = testbed_arg(args)?;
+            let scenario = scenario_arg(args)?;
             let method = args.get_or("method", "sparta-fe");
             let (files, bytes) = scale.workload();
             let files = args.get_usize("files", files).map_err(|e| anyhow!(e))?;
             let (opt, engine, reward) = make_optimizer(&c, method, seed)?;
-            let mut ctl = Controller::builder(tb)
+            let builder: ControllerBuilder = match &scenario {
+                Some(sc) => sc.controller(),
+                None => Controller::builder(testbed_arg(args)?),
+            };
+            let mut ctl = builder
                 .job(TransferJob::files(files, bytes))
                 .engine(engine)
                 .reward(reward)
@@ -120,6 +194,9 @@ fn dispatch(args: &Args) -> Result<()> {
             let lane = report.lane();
             let mut t = Table::new(&["metric", "value"]);
             t.row(vec!["method".into(), method.into()]);
+            if let Some(sc) = &scenario {
+                t.row(vec!["scenario".into(), sc.name.into()]);
+            }
             t.row(vec!["completed".into(), lane.completed.to_string()]);
             t.row(vec!["avg throughput (Gbps)".into(), format!("{:.2}", lane.avg_throughput_gbps())]);
             t.row(vec!["duration (s)".into(), format!("{:.0}", lane.duration_s)]);
@@ -133,9 +210,14 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("sweep") => {
-            let tb = testbed_arg(args)?;
             let grid = [1u32, 2, 4, 8, 16];
-            let pts = experiments::fig1::sweep(&tb, &grid, &["low", "medium", "high"], seed);
+            let pts = match scenario_arg(args)? {
+                Some(sc) => experiments::fig1::sweep_scenario(&sc, &grid, seed, jobs),
+                None => {
+                    let tb = testbed_arg(args)?;
+                    experiments::fig1::sweep(&tb, &grid, &["low", "medium", "high"], seed, jobs)
+                }
+            };
             experiments::fig1::print(&pts, &grid);
             Ok(())
         }
@@ -154,17 +236,15 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("compare") => {
-            let c = ctx()?;
-            let testbeds = Testbed::all();
-            let cells = experiments::fig6::run(&c, &testbeds, scale, seed)?;
+            let scenarios = scenario_list_arg(args)?;
+            let cells = experiments::fig6::run(&Paths::resolve(), &scenarios, scale, seed, jobs)?;
             experiments::fig6::print(&cells);
             let (thr, en) = experiments::fig6::headline(&cells);
             println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");
             Ok(())
         }
         Some("fairness") => {
-            let c = ctx()?;
-            let scenarios = experiments::fig7::run(&c, scale, seed)?;
+            let scenarios = experiments::fig7::run(&Paths::resolve(), scale, seed, jobs)?;
             experiments::fig7::print(&scenarios);
             Ok(())
         }
@@ -219,6 +299,7 @@ fn info() -> Result<()> {
         ]);
     }
     t.print();
+    println!("\n{} scenarios registered (see `sparta scenarios`)", Scenario::all().len());
     Ok(())
 }
 
@@ -227,17 +308,22 @@ sparta — SPARTA reproduction CLI
 
 subcommands:
   info                      artifacts / testbeds / trained-weights status
-  collect   --testbed T --scale S          cache exploration transitions
+  scenarios                 list registered evaluation scenarios
+  collect   --testbed T|--scenario S --scale X     cache exploration transitions
   train     --algo A --reward fe|te        offline-train one agent
   train-all                                train all 5 algos x 2 rewards
-  transfer  --method M --testbed T         run one transfer (M: rclone, escp,
+  transfer  --method M [--scenario S]      run one transfer (M: rclone, escp,
                                            falcon_mp, 2-phase, sparta-t, sparta-fe)
-  sweep     --testbed T                    Fig 1   (cc,p) x background sweep
+  sweep     --testbed T|--scenario S       Fig 1   (cc,p) x background sweep
   algos     --reward fe|te                 Fig 4   DRL algorithm comparison
   tune                                     Fig 5   online tuning on CloudLab
-  compare                                  Fig 6   methods x testbeds
+  compare   [--scenario S1,S2,...]         Fig 6   methods x scenarios
   fairness                                 Fig 7   concurrent-transfer JFI
   table1                                   Table 1 training/inference cost
 
-common flags: --scale quick|paper  --seed N  --quiet --verbose
+common flags: --scale quick|paper  --seed N  --jobs N  --quiet --verbose
+  --scenario takes names from `sparta scenarios` (e.g. calm, diurnal-bg,
+  bursty-incast, lossy-wan, receiver-limited, nic-limited, contended-peers)
+  --jobs N shards experiment cells over N worker threads (default: all
+  cores); reports are bit-identical at any jobs count for a fixed seed
 ";

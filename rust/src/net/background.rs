@@ -76,7 +76,7 @@ impl BackgroundState {
             Background::Constant { gbps } => *gbps,
             Background::Diurnal { mean_gbps, amplitude_gbps, period_s, jitter_gbps } => {
                 let phase = 2.0 * std::f64::consts::PI * t / period_s;
-                (mean_gbps + amplitude_gbps * phase.sin() + rng.normal_ms(0.0, *jitter_gbps))
+                (mean_gbps + amplitude_gbps * phase.sin() + rng.normal_mean_sd(0.0, *jitter_gbps))
                     .max(0.0)
             }
             Background::Bursty { low_gbps, high_gbps, switch_prob } => {

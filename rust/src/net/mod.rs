@@ -18,13 +18,17 @@ pub mod background;
 pub mod link;
 pub mod sim;
 pub mod stream;
+pub mod substrate;
 pub mod testbed;
+pub mod topology;
 
 pub use background::Background;
 pub use link::Link;
 pub use sim::{FlowId, MiMetrics, NetworkSim, SimConfig};
 pub use stream::CubicStream;
+pub use substrate::Substrate;
 pub use testbed::Testbed;
+pub use topology::{SegmentSpec, Topology};
 
 /// Bits per packet (1500-byte MSS).
 pub const MSS_BITS: f64 = 1500.0 * 8.0;

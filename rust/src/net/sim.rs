@@ -1,16 +1,23 @@
-//! Multi-flow network simulator: streams × tasks × flows over a shared link.
+//! Multi-flow network simulator: streams × tasks × flows over a shared path.
 //!
 //! A *flow* is one transfer application (one SPARTA agent or baseline tool)
-//! holding `cc` file-tasks with `p` TCP streams each. All flows plus the
-//! background process share one bottleneck [`Link`]. Each call to
+//! holding `cc` file-tasks with `p` TCP streams each. All flows traverse the
+//! same multi-segment [`Topology`] (sender NIC → shared WAN → receiver I/O in
+//! the general case; a single WAN bottleneck for the testbed presets). Each
+//! segment is an independent droptail [`super::Link`] with its own optional
+//! cross traffic, so flows can bottleneck at different stages. Each call to
 //! [`NetworkSim::run_mi`] advances one monitoring interval and returns the
 //! end-host-observable metrics per flow — exactly the signal set the paper's
 //! agents consume.
+//!
+//! The control plane consumes this simulator through the
+//! [`super::Substrate`] trait rather than the concrete type.
 
-use super::background::BackgroundState;
+use super::background::{Background, BackgroundState};
 use super::link::Link;
 use super::stream::CubicStream;
 use super::testbed::Testbed;
+use super::topology::Topology;
 use super::MSS_BITS;
 use crate::util::Rng;
 
@@ -23,7 +30,10 @@ pub struct FlowId(pub usize);
 pub struct SimConfig {
     /// Fluid-model tick, seconds.
     pub tick_s: f64,
-    /// Std-dev of RTT measurement noise, seconds.
+    /// Std-dev of RTT measurement noise, in **seconds** (the default models
+    /// ~0.4 ms of kernel timestamping jitter; the
+    /// `rtt_noise_magnitude_is_sub_millisecond` regression test pins the
+    /// unit).
     pub rtt_noise_s: f64,
     /// Maximum concurrent tasks / streams-per-task a flow may use.
     pub max_cc: u32,
@@ -132,11 +142,19 @@ pub struct MiMetrics {
     pub duration_s: f64,
 }
 
-/// The shared-bottleneck simulator.
+/// One path stage at runtime: its droptail link plus optional cross traffic.
+struct Segment {
+    name: &'static str,
+    link: Link,
+    background: Option<BackgroundState>,
+}
+
+/// The shared-path simulator.
 pub struct NetworkSim {
     pub cfg: SimConfig,
-    link: Link,
-    background: BackgroundState,
+    segments: Vec<Segment>,
+    /// Index of the shared WAN stage ([`NetworkSim::with_background`] target).
+    wan_idx: usize,
     flows: Vec<Flow>,
     time_s: f64,
     rng: Rng,
@@ -148,13 +166,38 @@ pub struct NetworkSim {
 }
 
 impl NetworkSim {
-    /// Build a simulator for a testbed preset with its default background.
+    /// Build a single-bottleneck simulator for a testbed preset with its
+    /// default background (the seed simulator's shape).
     pub fn new(testbed: Testbed, seed: u64) -> NetworkSim {
-        let background = testbed.default_background.clone().into_state();
+        let topology = Topology::single(&testbed);
+        NetworkSim::from_topology(testbed, &topology, seed)
+    }
+
+    /// Build a simulator over an explicit multi-segment topology. A WAN
+    /// segment without its own cross traffic inherits the testbed's default
+    /// background; other segments default to idle.
+    pub fn from_topology(testbed: Testbed, topology: &Topology, seed: u64) -> NetworkSim {
+        let wan_idx = topology.wan_index();
+        let segments: Vec<Segment> = topology
+            .segments
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let bg = spec
+                    .background
+                    .clone()
+                    .or_else(|| (i == wan_idx).then(|| testbed.default_background.clone()));
+                Segment {
+                    name: spec.name,
+                    link: spec.link(),
+                    background: bg.map(Background::into_state),
+                }
+            })
+            .collect();
         NetworkSim {
             cfg: SimConfig::default(),
-            link: testbed.link(),
-            background,
+            segments,
+            wan_idx,
             flows: Vec::new(),
             time_s: 0.0,
             rng: Rng::new(seed),
@@ -163,9 +206,9 @@ impl NetworkSim {
         }
     }
 
-    /// Replace the background process.
-    pub fn with_background(mut self, bg: super::background::Background) -> NetworkSim {
-        self.background = bg.into_state();
+    /// Replace the WAN stage's cross-traffic process.
+    pub fn with_background(mut self, bg: Background) -> NetworkSim {
+        self.segments[self.wan_idx].background = Some(bg.into_state());
         self
     }
 
@@ -202,15 +245,21 @@ impl NetworkSim {
         self.flows[id.0].active_stream_count()
     }
 
-    /// Current link RTT (ground truth, for tests/telemetry).
+    /// Current ground-truth path RTT: the sum of every segment's propagation
+    /// and queueing delay (for tests/telemetry).
     pub fn link_rtt_s(&self) -> f64 {
-        self.link.rtt_s()
+        self.segments.iter().map(|s| s.link.rtt_s()).sum()
+    }
+
+    /// Per-segment (name, queue-fill) snapshot, in path order.
+    pub fn segment_queue_fills(&self) -> Vec<(&'static str, f64)> {
+        self.segments.iter().map(|s| (s.name, s.link.queue_fill())).collect()
     }
 
     /// Advance one tick of the fluid model.
     fn tick(&mut self) {
         let dt = self.cfg.tick_s;
-        let rtt = self.link.rtt_s();
+        let rtt = self.link_rtt_s();
 
         // Phase 1: compute each active stream's desired rate into the
         // reusable flat scratch (flow-major, task-major, stream-major) —
@@ -253,13 +302,30 @@ impl NetworkSim {
             }
             offered_total += per_flow;
         }
-        let bg_rate = self.background.rate_gbps(self.time_s, dt, &mut self.rng);
-        offered_total += bg_rate;
 
-        // Phase 2: offer to the link.
-        let outcome = self.link.tick(offered_total, dt);
-        self.background.observe_loss(outcome.drop_frac, dt);
-        let rtt_after = self.link.rtt_s();
+        // Phase 2: carry the aggregate through every path stage in order.
+        // Each stage's drops thin the foreground before the next stage sees
+        // it; a stage's cross traffic joins (and exits) at that stage only.
+        let time_s = self.time_s;
+        let mut fg_in = offered_total;
+        // Cumulative foreground drop fraction across the path, accumulated as
+        // d ← d + (1 − d)·dᵢ so a single-segment path yields the segment's
+        // own drop_frac bit-for-bit (the seed simulator's value).
+        let mut fg_drop = 0.0;
+        for seg in &mut self.segments {
+            let bg_rate = match seg.background.as_mut() {
+                Some(bg) => bg.rate_gbps(time_s, dt, &mut self.rng),
+                None => 0.0,
+            };
+            let outcome = seg.link.tick(fg_in + bg_rate, dt);
+            if let Some(bg) = seg.background.as_mut() {
+                bg.observe_loss(outcome.drop_frac, dt);
+            }
+            fg_in *= outcome.accept_frac;
+            fg_drop += (1.0 - fg_drop) * outcome.drop_frac;
+        }
+        let drop_frac = fg_drop.clamp(0.0, 1.0);
+        let rtt_after = self.link_rtt_s();
 
         // Phase 3: deliver, account, and evolve windows (same scratch walk
         // order as phase 1).
@@ -281,16 +347,16 @@ impl NetworkSim {
                         continue;
                     }
                     let sent_bits = rate * 1e9 * dt;
-                    let lost_bits = sent_bits * outcome.drop_frac;
+                    let lost_bits = sent_bits * drop_frac;
                     delivered += sent_bits - lost_bits;
                     sent += sent_bits;
                     lost += lost_bits;
 
                     // Loss events: probability that at least one of this
                     // stream's packets this tick was dropped.
-                    if outcome.drop_frac > 0.0 {
+                    if drop_frac > 0.0 {
                         let pkts = sent_bits / MSS_BITS;
-                        let p_event = 1.0 - (1.0 - outcome.drop_frac).powf(pkts.max(0.0));
+                        let p_event = 1.0 - (1.0 - drop_frac).powf(pkts.max(0.0));
                         if self.rng.chance(p_event) {
                             s.on_loss(rtt_after);
                         }
@@ -327,6 +393,7 @@ impl NetworkSim {
         }
         let actual_dur = ticks as f64 * self.cfg.tick_s;
         let noise = self.cfg.rtt_noise_s;
+        let fallback_rtt = self.link_rtt_s();
         let mut out = Vec::with_capacity(self.flows.len());
         // Borrow dance: collect metrics first, then add noise with rng.
         let metrics: Vec<(f64, f64, f64, f64, usize)> = self
@@ -335,12 +402,12 @@ impl NetworkSim {
             .map(|f| {
                 let thr = f.acc_delivered_bits / actual_dur / 1e9;
                 let plr = if f.acc_sent_bits > 0.0 { f.acc_lost_bits / f.acc_sent_bits } else { 0.0 };
-                let rtt = if f.acc_rtt_n > 0 { f.acc_rtt_sum / f.acc_rtt_n as f64 } else { self.link.rtt_s() };
+                let rtt = if f.acc_rtt_n > 0 { f.acc_rtt_sum / f.acc_rtt_n as f64 } else { fallback_rtt };
                 (thr, plr, rtt, f.acc_delivered_bits / 8.0, f.active_stream_count())
             })
             .collect();
         for (thr, plr, rtt, bytes, streams) in metrics {
-            let rtt_noisy = (rtt + self.rng.normal_ms(0.0, noise)).max(1e-4);
+            let rtt_noisy = (rtt + self.rng.normal_mean_sd(0.0, noise)).max(1e-4);
             out.push(MiMetrics {
                 throughput_gbps: thr,
                 plr,
@@ -506,6 +573,110 @@ mod tests {
             let mut s = NetworkSim::new(Testbed::chameleon(), 7)
                 .with_background(Background::Constant { gbps: 2.0 });
             let id = s.add_flow(3, 3, None);
+            let mut total = 0.0;
+            for _ in 0..20 {
+                total += s.run_mi(1.0)[id.0].throughput_gbps;
+            }
+            total
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// Regression (units audit): `rtt_noise_s` is *seconds*. The default
+    /// 0.0004 s must show up as ~0.4 ms of measurement jitter — three orders
+    /// of magnitude below a seconds-vs-milliseconds mixup.
+    #[test]
+    fn rtt_noise_magnitude_is_sub_millisecond() {
+        let mut s = sim(Background::Idle);
+        let id = s.add_flow(1, 1, None);
+        for _ in 0..5 {
+            s.run_mi(1.0);
+        }
+        // One-tick MIs: the measured RTT is a single ground-truth sample
+        // plus measurement noise, so (measured − ground truth) isolates the
+        // noise term (a 1×1 flow never builds a queue on a 10G link).
+        let mut devs = Vec::new();
+        for _ in 0..300 {
+            let m = s.run_mi(0.05);
+            devs.push(m[id.0].rtt_s - s.link_rtt_s());
+        }
+        let n = devs.len() as f64;
+        let mean = devs.iter().sum::<f64>() / n;
+        let var = devs.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / n;
+        let sd = var.sqrt();
+        let want = SimConfig::default().rtt_noise_s;
+        assert!(mean.abs() < want, "noise should be zero-mean: mean={mean}");
+        assert!(sd > 0.5 * want && sd < 2.0 * want, "sd={sd} want~{want}");
+        // A seconds-vs-ms mixup would put sd near 0.4 s.
+        assert!(sd < 0.002, "sd={sd} is not sub-millisecond");
+    }
+
+    #[test]
+    fn receiver_limited_path_bottlenecks_at_rx() {
+        let tb = Testbed::cloudlab();
+        let topo = Topology::three_stage(&tb, tb.capacity_gbps, 5.0);
+        let mut s = NetworkSim::from_topology(tb, &topo, 11).with_background(Background::Idle);
+        let id = s.add_flow(8, 8, None);
+        for _ in 0..15 {
+            s.run_mi(1.0);
+        }
+        let mut thr = 0.0;
+        for _ in 0..10 {
+            thr += s.run_mi(1.0)[id.0].throughput_gbps;
+        }
+        thr /= 10.0;
+        // Goodput pins to the 5 Gbps receiver stage, far below the 25G WAN.
+        assert!(thr <= 5.0 + 1e-6, "thr={thr}");
+        assert!(thr > 2.0, "thr={thr}");
+        // And the WAN itself stays uncongested: the receiver stage, not the
+        // WAN, carries whatever standing queue exists.
+        let fills = s.segment_queue_fills();
+        let wan = fills.iter().find(|(n, _)| *n == "wan").unwrap().1;
+        let rx = fills.iter().find(|(n, _)| *n == "rx").unwrap().1;
+        assert!(rx >= wan, "rx={rx} wan={wan}");
+        assert!(wan < 0.1, "wan queue should be empty: {wan}");
+    }
+
+    #[test]
+    fn nic_limited_path_bottlenecks_at_sender() {
+        let tb = Testbed::chameleon();
+        let topo = Topology::three_stage(&tb, 3.0, tb.capacity_gbps);
+        let mut s = NetworkSim::from_topology(tb, &topo, 13).with_background(Background::Idle);
+        let id = s.add_flow(8, 8, None);
+        for _ in 0..15 {
+            s.run_mi(1.0);
+        }
+        let mut thr = 0.0;
+        for _ in 0..10 {
+            thr += s.run_mi(1.0)[id.0].throughput_gbps;
+        }
+        thr /= 10.0;
+        assert!(thr <= 3.0 + 1e-6, "thr={thr}");
+        assert!(thr > 1.2, "thr={thr}");
+    }
+
+    #[test]
+    fn three_stage_rtt_sums_segments() {
+        let tb = Testbed::chameleon();
+        let topo = Topology::three_stage(&tb, 10.0, 10.0);
+        let expected = topo.base_rtt_s();
+        let s = NetworkSim::from_topology(tb, &topo, 1);
+        assert!((s.link_rtt_s() - expected).abs() < 1e-12);
+        assert!(s.link_rtt_s() > Testbed::chameleon().base_rtt_s);
+    }
+
+    #[test]
+    fn multi_segment_determinism() {
+        let run = || {
+            let tb = Testbed::chameleon();
+            let topo = Topology::three_stage(&tb, 6.0, 8.0)
+                .with_wan_background(Background::Bursty {
+                    low_gbps: 0.5,
+                    high_gbps: 5.0,
+                    switch_prob: 0.2,
+                });
+            let mut s = NetworkSim::from_topology(tb, &topo, 23);
+            let id = s.add_flow(4, 4, None);
             let mut total = 0.0;
             for _ in 0..20 {
                 total += s.run_mi(1.0)[id.0].throughput_gbps;

@@ -1,0 +1,97 @@
+//! The network-substrate abstraction the control plane runs against.
+//!
+//! [`Substrate`] is the exact surface the coordinator, the live training
+//! environment and the experiments need from a network: admit flows, apply
+//! (cc, p) pause/resume updates, advance monitoring intervals, and read
+//! end-host-observable metrics. The fluid-model [`NetworkSim`] (single- or
+//! multi-segment) is the in-tree implementation; an emulator- or
+//! kernel-backed substrate can slot in behind the same trait without
+//! touching the control loop.
+
+use super::sim::{FlowId, MiMetrics, NetworkSim};
+use super::testbed::Testbed;
+
+/// A network substrate: the `add_flow` / `set_cc_p` / `run_mi` surface of
+/// [`NetworkSim`], object-safe so controllers can hold `Box<dyn Substrate>`.
+pub trait Substrate: Send {
+    /// Add a flow with an engine-specific per-task I/O cap; returns its id.
+    /// `task_io_gbps = None` uses the testbed's efficient-engine default.
+    fn add_flow(&mut self, cc: u32, p: u32, task_io_gbps: Option<f64>) -> FlowId;
+
+    /// Apply a (cc, p) update to a flow (pause/resume semantics).
+    fn set_cc_p(&mut self, id: FlowId, cc: u32, p: u32);
+
+    /// Cap a flow's total demand (Gbps) — used when a job is nearly done.
+    fn set_demand_cap(&mut self, id: FlowId, gbps: f64);
+
+    /// Number of currently active streams of a flow.
+    fn active_streams(&self, id: FlowId) -> usize;
+
+    /// Advance one monitoring interval of `dur_s` seconds; returns per-flow
+    /// metrics in flow-id order.
+    fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics>;
+
+    /// Simulated time elapsed, seconds.
+    fn time_s(&self) -> f64;
+
+    /// Ground-truth path RTT including queueing (tests/telemetry).
+    fn link_rtt_s(&self) -> f64;
+
+    /// The testbed preset this substrate models.
+    fn testbed(&self) -> &Testbed;
+}
+
+impl Substrate for NetworkSim {
+    fn add_flow(&mut self, cc: u32, p: u32, task_io_gbps: Option<f64>) -> FlowId {
+        NetworkSim::add_flow(self, cc, p, task_io_gbps)
+    }
+
+    fn set_cc_p(&mut self, id: FlowId, cc: u32, p: u32) {
+        NetworkSim::set_cc_p(self, id, cc, p)
+    }
+
+    fn set_demand_cap(&mut self, id: FlowId, gbps: f64) {
+        NetworkSim::set_demand_cap(self, id, gbps)
+    }
+
+    fn active_streams(&self, id: FlowId) -> usize {
+        NetworkSim::active_streams(self, id)
+    }
+
+    fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
+        NetworkSim::run_mi(self, dur_s)
+    }
+
+    fn time_s(&self) -> f64 {
+        NetworkSim::time_s(self)
+    }
+
+    fn link_rtt_s(&self) -> f64 {
+        NetworkSim::link_rtt_s(self)
+    }
+
+    fn testbed(&self) -> &Testbed {
+        NetworkSim::testbed(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The trait surface drives a simulation end to end through `dyn`.
+    #[test]
+    fn network_sim_is_usable_as_dyn_substrate() {
+        let mut sub: Box<dyn Substrate> =
+            Box::new(NetworkSim::new(Testbed::chameleon(), 7));
+        let id = sub.add_flow(4, 4, None);
+        assert_eq!(sub.active_streams(id), 16);
+        sub.set_cc_p(id, 2, 2);
+        assert_eq!(sub.active_streams(id), 4);
+        let m = sub.run_mi(1.0);
+        assert_eq!(m.len(), 1);
+        assert!(m[0].rtt_s > 0.0);
+        assert!(sub.time_s() > 0.0);
+        assert_eq!(sub.testbed().name, "chameleon");
+    }
+}

@@ -1,0 +1,177 @@
+//! Multi-segment transfer paths: sender NIC → shared WAN → receiver I/O.
+//!
+//! The paper evaluates on single-bottleneck testbeds, but real transfers can
+//! bottleneck at any stage of the path: the sender's NIC / host egress, the
+//! shared wide-area segment, or the receiver's storage/ingest stage. A
+//! [`Topology`] describes the path as an ordered list of [`SegmentSpec`]s,
+//! each an independent droptail [`Link`] with its own capacity, propagation
+//! delay, buffering and (optional) cross traffic. [`super::NetworkSim`]
+//! carries flows through every segment in order: a segment's drops remove
+//! traffic before the next segment sees it, and the observable RTT is the sum
+//! of all segments' base delays and queueing delays.
+//!
+//! A [`Topology::single`] path (one WAN segment) reproduces the seed
+//! simulator's behavior exactly, so every testbed preset remains available
+//! unchanged; scenarios compose richer paths on top.
+
+use super::background::Background;
+use super::link::Link;
+use super::testbed::Testbed;
+
+/// One path segment: an independent bottleneck stage.
+#[derive(Debug, Clone)]
+pub struct SegmentSpec {
+    /// Short stage name ("nic", "wan", "rx", ...), used in telemetry.
+    pub name: &'static str,
+    /// Stage capacity in Gbps.
+    pub capacity_gbps: f64,
+    /// Propagation-delay contribution of this stage, seconds (> 0).
+    pub delay_s: f64,
+    /// Buffer depth in seconds at stage capacity (> 0). Droptail.
+    pub buffer_s: f64,
+    /// Cross traffic that shares *only* this stage (None = idle stage).
+    pub background: Option<Background>,
+    /// Marks the shared WAN bottleneck — the stage whose background is
+    /// replaced by [`super::NetworkSim::with_background`] and by testbed
+    /// defaults.
+    pub wan: bool,
+}
+
+impl SegmentSpec {
+    /// The shared WAN stage of a testbed, sized exactly like the seed
+    /// simulator's single link (buffer = `buffer_bdp` × BDP).
+    pub fn wan_of(tb: &Testbed) -> SegmentSpec {
+        SegmentSpec {
+            name: "wan",
+            capacity_gbps: tb.capacity_gbps,
+            delay_s: tb.base_rtt_s,
+            buffer_s: tb.buffer_bdp * tb.base_rtt_s,
+            background: None,
+            wan: true,
+        }
+    }
+
+    /// An end-system edge stage (sender NIC or receiver I/O): negligible
+    /// propagation delay, a few milliseconds of buffering.
+    pub fn edge(name: &'static str, capacity_gbps: f64) -> SegmentSpec {
+        SegmentSpec {
+            name,
+            capacity_gbps,
+            delay_s: 0.0005,
+            buffer_s: 0.004,
+            background: None,
+            wan: false,
+        }
+    }
+
+    /// Attach cross traffic to this stage.
+    pub fn with_background(mut self, bg: Background) -> SegmentSpec {
+        self.background = Some(bg);
+        self
+    }
+
+    /// Build the droptail link for this stage.
+    pub fn link(&self) -> Link {
+        // Link sizes its buffer as a multiple of capacity × delay, so a
+        // buffer of `buffer_s` seconds is the ratio of the two durations.
+        Link::new(self.capacity_gbps, self.delay_s, self.buffer_s / self.delay_s)
+    }
+}
+
+/// An ordered multi-segment path.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub segments: Vec<SegmentSpec>,
+}
+
+impl Topology {
+    /// The seed simulator's shape: one shared WAN bottleneck.
+    pub fn single(tb: &Testbed) -> Topology {
+        Topology { segments: vec![SegmentSpec::wan_of(tb)] }
+    }
+
+    /// Three-stage path: sender NIC → shared WAN → receiver I/O. The WAN
+    /// stage keeps the testbed's RTT and buffering; the edges bottleneck
+    /// independently at `nic_gbps` / `rx_gbps`.
+    pub fn three_stage(tb: &Testbed, nic_gbps: f64, rx_gbps: f64) -> Topology {
+        Topology {
+            segments: vec![
+                SegmentSpec::edge("nic", nic_gbps),
+                SegmentSpec::wan_of(tb),
+                SegmentSpec::edge("rx", rx_gbps),
+            ],
+        }
+    }
+
+    /// Index of the shared WAN stage (first `wan` segment; stage 0 when the
+    /// topology marks none).
+    pub fn wan_index(&self) -> usize {
+        self.segments.iter().position(|s| s.wan).unwrap_or(0)
+    }
+
+    /// Replace the WAN stage's cross traffic.
+    pub fn with_wan_background(mut self, bg: Background) -> Topology {
+        let i = self.wan_index();
+        self.segments[i].background = Some(bg);
+        self
+    }
+
+    /// Total propagation delay of the path, seconds.
+    pub fn base_rtt_s(&self) -> f64 {
+        self.segments.iter().map(|s| s.delay_s).sum()
+    }
+
+    /// Capacity of the tightest stage, Gbps.
+    pub fn min_capacity_gbps(&self) -> f64 {
+        self.segments.iter().map(|s| s.capacity_gbps).fold(f64::MAX, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_matches_testbed_link() {
+        let tb = Testbed::chameleon();
+        let topo = Topology::single(&tb);
+        assert_eq!(topo.segments.len(), 1);
+        assert_eq!(topo.wan_index(), 0);
+        let link = topo.segments[0].link();
+        let seed_link = tb.link();
+        assert_eq!(link.capacity_gbps, seed_link.capacity_gbps);
+        assert_eq!(link.base_rtt_s, seed_link.base_rtt_s);
+        assert!((link.buffer_bits - seed_link.buffer_bits).abs() < 1.0);
+        assert!((topo.base_rtt_s() - tb.base_rtt_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn three_stage_orders_and_finds_wan() {
+        let tb = Testbed::cloudlab();
+        let topo = Topology::three_stage(&tb, 40.0, 8.0);
+        let names: Vec<&str> = topo.segments.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["nic", "wan", "rx"]);
+        assert_eq!(topo.wan_index(), 1);
+        assert_eq!(topo.min_capacity_gbps(), 8.0);
+        // Edge delays are negligible next to the WAN RTT.
+        assert!(topo.base_rtt_s() < tb.base_rtt_s * 1.1);
+    }
+
+    #[test]
+    fn wan_background_lands_on_wan_stage() {
+        let tb = Testbed::chameleon();
+        let topo = Topology::three_stage(&tb, 10.0, 10.0)
+            .with_wan_background(Background::Constant { gbps: 2.0 });
+        assert!(topo.segments[0].background.is_none());
+        assert!(topo.segments[1].background.is_some());
+        assert!(topo.segments[2].background.is_none());
+    }
+
+    #[test]
+    fn edge_links_have_positive_buffers() {
+        let e = SegmentSpec::edge("nic", 10.0);
+        let l = e.link();
+        assert!(l.buffer_bits > 0.0);
+        assert!(l.base_rtt_s > 0.0);
+    }
+}

@@ -1,30 +1,47 @@
 //! Compiled-HLO execution on the PJRT CPU client.
+//!
+//! The PJRT path needs the external `xla` crate, which the offline build
+//! environment does not provide; it is gated behind the `xla` cargo feature.
+//! Without the feature, [`Runtime::load`] still loads the manifest (so
+//! `sparta info` and manifest-only consumers work), but [`Runtime::compile`]
+//! returns a descriptive error and no agent can execute HLO.
 
 use super::manifest::{GraphSpec, Manifest};
-use anyhow::{anyhow, Result};
+use anyhow::Result;
+#[cfg(feature = "xla")]
+use anyhow::anyhow;
+#[cfg(feature = "xla")]
 use std::rc::Rc;
 
 /// Shared PJRT client + compiled executables for one artifacts directory.
 pub struct Runtime {
+    #[cfg(feature = "xla")]
     client: Rc<xla::PjRtClient>,
     pub manifest: Manifest,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and load the manifest.
+    /// Create a CPU PJRT client (when built with the `xla` feature) and load
+    /// the manifest.
     pub fn load(artifacts_dir: &std::path::Path) -> Result<Runtime> {
-        // Perf (EXPERIMENTS.md §Perf): the agent graphs are small; Eigen's
-        // intra-op threading costs ~2x wall time in thread churn at these
-        // sizes. Respect a user-provided XLA_FLAGS, otherwise disable it.
-        if std::env::var_os("XLA_FLAGS").is_none() {
-            std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
-        }
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client: Rc::new(client), manifest })
+        #[cfg(feature = "xla")]
+        {
+            // Perf (EXPERIMENTS.md §Perf): the agent graphs are small; Eigen's
+            // intra-op threading costs ~2x wall time in thread churn at these
+            // sizes. Respect a user-provided XLA_FLAGS, otherwise disable it.
+            if std::env::var_os("XLA_FLAGS").is_none() {
+                std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+            }
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(Runtime { client: Rc::new(client), manifest })
+        }
+        #[cfg(not(feature = "xla"))]
+        Ok(Runtime { manifest })
     }
 
     /// Compile one exported graph by manifest name.
+    #[cfg(feature = "xla")]
     pub fn compile(&self, graph: &str) -> Result<Executable> {
         let spec = self.manifest.graph(graph)?.clone();
         let path = self.manifest.hlo_path(&spec);
@@ -39,12 +56,26 @@ impl Runtime {
             .map_err(|e| anyhow!("compiling {graph}: {e:?}"))?;
         Ok(Executable { spec, exe, client: self.client.clone() })
     }
+
+    /// Compile one exported graph by manifest name (stub: always errors).
+    #[cfg(not(feature = "xla"))]
+    pub fn compile(&self, graph: &str) -> Result<Executable> {
+        let spec = self.manifest.graph(graph)?;
+        anyhow::bail!(
+            "cannot compile '{}': sparta was built without the `xla` feature, \
+             so HLO execution is unavailable (rebuild with `--features xla` in \
+             an environment that provides the xla crate)",
+            spec.name
+        )
+    }
 }
 
 /// One compiled HLO graph, callable with flat `f32` argument buffers.
 pub struct Executable {
     pub spec: GraphSpec,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
+    #[cfg(feature = "xla")]
     client: Rc<xla::PjRtClient>,
 }
 
@@ -60,6 +91,7 @@ impl Executable {
     /// device buffer on the C++ side (`buffer.release()` without a matching
     /// free) — at DDPG's training rate that OOM-kills the process within
     /// minutes (EXPERIMENTS.md §Perf).
+    #[cfg(feature = "xla")]
     pub fn call(&self, args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         if args.len() != self.spec.arg_names.len() {
             return Err(anyhow!(
@@ -113,6 +145,14 @@ impl Executable {
             );
         }
         Ok(out)
+    }
+
+    /// Stub: the `xla` feature is off, so nothing can execute. Unreachable in
+    /// practice because [`Runtime::compile`] never constructs an [`Executable`]
+    /// in stub builds.
+    #[cfg(not(feature = "xla"))]
+    pub fn call(&self, _args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("{}: built without the `xla` feature", self.spec.name)
     }
 
     /// Per-call argument validation helper used by agents in debug builds.

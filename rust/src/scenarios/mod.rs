@@ -1,0 +1,295 @@
+//! Named, seeded evaluation scenarios.
+//!
+//! The paper evaluates on two-ish testbed links with one background pattern
+//! each; the registry below diversifies that into a library of reproducible
+//! network conditions — different bottleneck locations (sender NIC, shared
+//! WAN, receiver I/O), buffer depths and cross-traffic processes — all
+//! expressed as [`Topology`]s over the paper's testbed presets and consumed
+//! through the [`Substrate`] trait. Every scenario is fully determined by
+//! `(name, seed)`: the same pair reproduces the same run bit-for-bit.
+//!
+//! Select one from the CLI with `--scenario <name>` (`sparta scenarios`
+//! lists the registry), or programmatically:
+//!
+//! ```
+//! use sparta::scenarios::Scenario;
+//!
+//! let sc = Scenario::by_name("receiver-limited").unwrap();
+//! let mut sub = sc.substrate(42);
+//! let id = sub.add_flow(4, 4, None);
+//! let metrics = sub.run_mi(1.0);
+//! assert!(metrics[id.0].rtt_s > 0.0);
+//! ```
+
+use crate::coordinator::{Controller, ControllerBuilder};
+use crate::net::background::Background;
+use crate::net::{NetworkSim, Substrate, Testbed, Topology};
+
+/// A named, reproducible evaluation condition: a testbed preset plus the
+/// path topology (and cross traffic) to run it under.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Registry name (`sparta ... --scenario <name>`).
+    pub name: &'static str,
+    /// One-line description for `sparta scenarios`.
+    pub summary: &'static str,
+    pub testbed: Testbed,
+    pub topology: Topology,
+}
+
+impl Scenario {
+    /// Build the concrete simulator for this scenario. Deterministic:
+    /// the same `(scenario, seed)` yields bit-identical runs.
+    pub fn sim(&self, seed: u64) -> NetworkSim {
+        NetworkSim::from_topology(self.testbed.clone(), &self.topology, seed)
+    }
+
+    /// Build the scenario's substrate behind the trait the control plane
+    /// consumes.
+    pub fn substrate(&self, seed: u64) -> Box<dyn Substrate> {
+        Box::new(self.sim(seed))
+    }
+
+    /// A controller builder preconfigured for this scenario (call `.job()`,
+    /// `.seed()` etc. and `.build()` as usual).
+    pub fn controller(&self) -> ControllerBuilder {
+        Controller::builder(self.testbed.clone()).topology(self.topology.clone())
+    }
+
+    /// Look up a registered scenario by name.
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Scenario::all().into_iter().find(|s| s.name == name)
+    }
+
+    /// Registry names, in registry order.
+    pub fn names() -> Vec<&'static str> {
+        Scenario::all().iter().map(|s| s.name).collect()
+    }
+
+    /// The full registry: the three paper testbeds under their default
+    /// conditions, plus the stress presets.
+    pub fn all() -> Vec<Scenario> {
+        let mut v = Scenario::defaults();
+        v.extend([
+            Scenario::calm(),
+            Scenario::diurnal_bg(),
+            Scenario::bursty_incast(),
+            Scenario::lossy_wan(),
+            Scenario::receiver_limited(),
+            Scenario::nic_limited(),
+            Scenario::contended_peers(),
+        ]);
+        v
+    }
+
+    /// The paper's three testbeds as scenarios (single WAN bottleneck,
+    /// default background) — the default `sparta compare` matrix.
+    pub fn defaults() -> Vec<Scenario> {
+        Testbed::all()
+            .into_iter()
+            .map(|tb| Scenario {
+                name: tb.name,
+                summary: "paper testbed preset, default (medium) background",
+                topology: Topology::single(&tb),
+                testbed: tb,
+            })
+            .collect()
+    }
+
+    /// Near-idle shared WAN: the background never exceeds 5% of capacity,
+    /// so the optimum (cc, p) is wherever the end systems saturate.
+    pub fn calm() -> Scenario {
+        let tb = Testbed::chameleon();
+        let bg = Background::regime("low", tb.capacity_gbps);
+        Scenario {
+            name: "calm",
+            summary: "chameleon, near-idle WAN (5% background)",
+            topology: Topology::single(&tb).with_wan_background(bg),
+            testbed: tb,
+        }
+    }
+
+    /// Strong time-of-day swing: the background moves between ~10% and ~60%
+    /// of capacity over a 5-minute period, so the optimum keeps shifting.
+    pub fn diurnal_bg() -> Scenario {
+        let tb = Testbed::chameleon();
+        let cap = tb.capacity_gbps;
+        let bg = Background::Diurnal {
+            mean_gbps: 0.35 * cap,
+            amplitude_gbps: 0.25 * cap,
+            period_s: 300.0,
+            jitter_gbps: 0.03 * cap,
+        };
+        Scenario {
+            name: "diurnal-bg",
+            summary: "chameleon, strong 5-minute diurnal background swing",
+            topology: Topology::single(&tb).with_wan_background(bg),
+            testbed: tb,
+        }
+    }
+
+    /// Incast-like on/off bursts on a shallow-buffered link: the background
+    /// jumps between 5% and 70% of capacity with ~0.15/s switching.
+    pub fn bursty_incast() -> Scenario {
+        let mut tb = Testbed::cloudlab();
+        tb.buffer_bdp = 0.5; // shallow buffer: bursts overflow it quickly
+        let cap = tb.capacity_gbps;
+        let bg = Background::Bursty {
+            low_gbps: 0.05 * cap,
+            high_gbps: 0.70 * cap,
+            switch_prob: 0.15,
+        };
+        Scenario {
+            name: "bursty-incast",
+            summary: "cloudlab, shallow buffer, on/off incast bursts to 70%",
+            topology: Topology::single(&tb).with_wan_background(bg),
+            testbed: tb,
+        }
+    }
+
+    /// Persistently lossy wide area: a quarter-BDP buffer under heavy
+    /// background keeps the path at a visible standing loss rate.
+    pub fn lossy_wan() -> Scenario {
+        let mut tb = Testbed::fabric();
+        tb.buffer_bdp = 0.25;
+        let bg = Background::regime("high", tb.capacity_gbps);
+        Scenario {
+            name: "lossy-wan",
+            summary: "fabric, quarter-BDP buffer under heavy background",
+            topology: Topology::single(&tb).with_wan_background(bg),
+            testbed: tb,
+        }
+    }
+
+    /// The receiver's storage/ingest stage (8 Gbps) is the bottleneck, not
+    /// the 25 Gbps WAN — ramping (cc, p) past the ingest rate only buys loss.
+    pub fn receiver_limited() -> Scenario {
+        let tb = Testbed::cloudlab();
+        let bg = Background::regime("medium", tb.capacity_gbps);
+        Scenario {
+            name: "receiver-limited",
+            summary: "cloudlab WAN behind an 8 Gbps receiver I/O stage",
+            topology: Topology::three_stage(&tb, tb.capacity_gbps, 8.0)
+                .with_wan_background(bg),
+            testbed: tb,
+        }
+    }
+
+    /// The sender's NIC/host egress (4 Gbps) is the bottleneck; the WAN is
+    /// comfortable.
+    pub fn nic_limited() -> Scenario {
+        let tb = Testbed::chameleon();
+        let bg = Background::regime("low", tb.capacity_gbps);
+        Scenario {
+            name: "nic-limited",
+            summary: "chameleon WAN behind a 4 Gbps sender NIC stage",
+            topology: Topology::three_stage(&tb, 4.0, tb.capacity_gbps)
+                .with_wan_background(bg),
+            testbed: tb,
+        }
+    }
+
+    /// Peer transfers arriving and departing on the shared WAN: a
+    /// piecewise-constant schedule steps the contention between ~10% and
+    /// ~75% of capacity every one to two minutes.
+    pub fn contended_peers() -> Scenario {
+        let tb = Testbed::chameleon();
+        let cap = tb.capacity_gbps;
+        let schedule = vec![
+            (0.0, 0.10 * cap),
+            (60.0, 0.65 * cap),
+            (150.0, 0.25 * cap),
+            (240.0, 0.75 * cap),
+            (330.0, 0.15 * cap),
+            (420.0, 0.55 * cap),
+            (540.0, 0.10 * cap),
+        ];
+        Scenario {
+            name: "contended-peers",
+            summary: "chameleon, peer transfers joining/leaving the WAN",
+            topology: Topology::three_stage(&tb, cap, cap)
+                .with_wan_background(Background::Steps { schedule }),
+            testbed: tb,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_stress_presets_and_defaults() {
+        let names = Scenario::names();
+        for want in [
+            "chameleon",
+            "cloudlab",
+            "fabric",
+            "calm",
+            "diurnal-bg",
+            "bursty-incast",
+            "lossy-wan",
+            "receiver-limited",
+            "nic-limited",
+            "contended-peers",
+        ] {
+            assert!(names.contains(&want), "missing scenario '{want}'");
+        }
+        // ≥ 6 presets beyond the paper's testbeds.
+        assert!(names.len() - Scenario::defaults().len() >= 6);
+    }
+
+    #[test]
+    fn names_are_unique_and_resolve() {
+        let names = Scenario::names();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate scenario names");
+        for n in names {
+            let sc = Scenario::by_name(n).expect(n);
+            assert_eq!(sc.name, n);
+        }
+        assert!(Scenario::by_name("no-such-scenario").is_none());
+    }
+
+    /// Every registered scenario builds and runs 5 MIs deterministically:
+    /// identical under the same seed, divergent across seeds.
+    #[test]
+    fn every_scenario_runs_deterministically() {
+        for sc in Scenario::all() {
+            let run = |seed: u64| {
+                let mut sub = sc.substrate(seed);
+                let id = sub.add_flow(4, 4, None);
+                let mut out = Vec::new();
+                for _ in 0..5 {
+                    out.push(sub.run_mi(1.0)[id.0]);
+                }
+                out
+            };
+            let a = run(1);
+            let b = run(1);
+            assert_eq!(a, b, "{}: same seed must reproduce", sc.name);
+            let c = run(2);
+            assert_ne!(a, c, "{}: different seeds should diverge", sc.name);
+            for m in &a {
+                assert!(m.throughput_gbps >= 0.0 && m.rtt_s > 0.0, "{}", sc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bottleneck_scenarios_have_three_stages() {
+        for name in ["receiver-limited", "nic-limited", "contended-peers"] {
+            let sc = Scenario::by_name(name).unwrap();
+            assert_eq!(sc.topology.segments.len(), 3, "{name}");
+        }
+        assert_eq!(Scenario::by_name("calm").unwrap().topology.segments.len(), 1);
+    }
+
+    #[test]
+    fn receiver_limited_caps_below_wan() {
+        let sc = Scenario::by_name("receiver-limited").unwrap();
+        assert!(sc.topology.min_capacity_gbps() < sc.testbed.capacity_gbps);
+    }
+}

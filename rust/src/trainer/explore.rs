@@ -6,6 +6,7 @@ use crate::coordinator::{
 use crate::emulator::{transitions_from_records, Transition};
 use crate::net::background::Background;
 use crate::net::Testbed;
+use crate::scenarios::Scenario;
 use crate::transfer::{EngineProfile, TransferJob};
 use crate::util::Rng;
 
@@ -85,19 +86,45 @@ pub fn collect_transitions(
     let mut all = Vec::new();
     for run in 0..runs {
         let bg = Background::regime(regimes[run % regimes.len()], testbed.capacity_gbps);
-        let mut ctl = Controller::builder(testbed.clone())
-            .background(bg)
-            .max_mis(mis)
-            // Large enough to never complete within `mis` intervals.
-            .job(TransferJob::files(10_000, 1 << 30))
-            .reward(RewardKind::FairnessEfficiency)
-            .engine(EngineProfile::efficient())
-            .seed(rng.next_u64())
-            .build();
-        let report = ctl.run(Box::new(ExplorePolicy::new(rng.next_u64())), 0);
-        all.extend(transitions_from_records(&report.lane().records));
+        let builder = Controller::builder(testbed.clone()).background(bg);
+        all.extend(explore_run(builder, mis, &mut rng));
     }
     all
+}
+
+/// Like [`collect_transitions`], but over a registered scenario's topology
+/// and cross traffic (the scenario fixes the conditions; only seeds vary
+/// across runs).
+pub fn collect_transitions_scenario(
+    scenario: &Scenario,
+    runs: usize,
+    mis: usize,
+    seed: u64,
+) -> Vec<Transition> {
+    let mut rng = Rng::new(seed);
+    let mut all = Vec::new();
+    for _ in 0..runs {
+        all.extend(explore_run(scenario.controller(), mis, &mut rng));
+    }
+    all
+}
+
+/// One exploration transfer on a preconfigured controller builder.
+fn explore_run(
+    builder: crate::coordinator::ControllerBuilder,
+    mis: usize,
+    rng: &mut Rng,
+) -> Vec<Transition> {
+    let mut ctl = builder
+        .max_mis(mis)
+        // Large enough to never complete within `mis` intervals.
+        .job(TransferJob::files(10_000, 1 << 30))
+        .reward(RewardKind::FairnessEfficiency)
+        .engine(EngineProfile::efficient())
+        .seed(rng.next_u64())
+        .build();
+    let report = ctl.run(Box::new(ExplorePolicy::new(rng.next_u64())), 0);
+    transitions_from_records(&report.lane().records)
 }
 
 #[cfg(test)]
@@ -119,6 +146,16 @@ mod tests {
         let distinct: std::collections::BTreeSet<(u32, u32)> =
             ts.iter().map(|t| (t.cc, t.p)).collect();
         assert!(distinct.len() > 10, "only {} distinct settings", distinct.len());
+    }
+
+    #[test]
+    fn scenario_collection_yields_labeled_transitions() {
+        let sc = Scenario::by_name("calm").unwrap();
+        let ts = collect_transitions_scenario(&sc, 1, 60, 5);
+        assert!(ts.len() >= 50, "got {}", ts.len());
+        let distinct: std::collections::BTreeSet<(u32, u32)> =
+            ts.iter().map(|t| (t.cc, t.p)).collect();
+        assert!(distinct.len() > 5, "only {} distinct settings", distinct.len());
     }
 
     #[test]

@@ -1,18 +1,22 @@
-//! Live training environment: the network simulator exposed through the
+//! Live training environment: the network substrate exposed through the
 //! [`Env`] interface (used for online tuning — Fig. 5 — and for validating
 //! emulator-trained policies against "real" dynamics — Fig. 4 bottom row).
+//! Episodes run against any [`Substrate`] — the testbed's single bottleneck
+//! by default, or a scenario's multi-segment topology.
 
 use crate::coordinator::{
     FeatureWindow, Observation, ParamBounds, RewardConfig, RewardKind, RewardTracker,
 };
 use crate::emulator::{Env, StepOut};
 use crate::energy::{EnergyMeter, PowerModel};
-use crate::net::{FlowId, NetworkSim, Testbed};
+use crate::net::{FlowId, NetworkSim, Substrate, Testbed, Topology};
+use crate::scenarios::Scenario;
 use crate::util::Rng;
 
-/// A fixed-horizon episodic environment over the live simulator.
+/// A fixed-horizon episodic environment over the live substrate.
 pub struct LiveEnv {
     testbed: Testbed,
+    topology: Option<Topology>,
     bounds: ParamBounds,
     reward_kind: RewardKind,
     history: usize,
@@ -20,7 +24,7 @@ pub struct LiveEnv {
     mi_s: f64,
     rng: Rng,
     // Episode state.
-    sim: Option<NetworkSim>,
+    sim: Option<Box<dyn Substrate>>,
     flow: FlowId,
     meter: EnergyMeter,
     window: FeatureWindow,
@@ -42,6 +46,7 @@ impl LiveEnv {
         let window = FeatureWindow::new(history, bounds.cc_max, bounds.p_max);
         LiveEnv {
             testbed,
+            topology: None,
             bounds,
             reward_kind,
             history,
@@ -57,6 +62,28 @@ impl LiveEnv {
             p: 4,
             steps: 0,
         }
+    }
+
+    /// An environment whose episodes run under a registered scenario's
+    /// topology and cross traffic instead of the bare testbed.
+    pub fn for_scenario(
+        scenario: &Scenario,
+        reward_kind: RewardKind,
+        bounds: ParamBounds,
+        history: usize,
+        episode_len: usize,
+        seed: u64,
+    ) -> LiveEnv {
+        let mut env = LiveEnv::new(
+            scenario.testbed.clone(),
+            reward_kind,
+            bounds,
+            history,
+            episode_len,
+            seed,
+        );
+        env.topology = Some(scenario.topology.clone());
+        env
     }
 
     fn observe_mi(&mut self) -> Observation {
@@ -88,7 +115,10 @@ impl LiveEnv {
 impl Env for LiveEnv {
     fn reset(&mut self) -> Vec<f32> {
         let seed = self.rng.next_u64();
-        let mut sim = NetworkSim::new(self.testbed.clone(), seed);
+        let mut sim: Box<dyn Substrate> = match &self.topology {
+            Some(t) => Box::new(NetworkSim::from_topology(self.testbed.clone(), t, seed)),
+            None => Box::new(NetworkSim::new(self.testbed.clone(), seed)),
+        };
         self.cc = self.bounds.cc0;
         self.p = self.bounds.p0;
         self.flow = sim.add_flow(self.cc, self.p, None);
@@ -156,6 +186,28 @@ mod tests {
         }
         assert!(done);
         assert!(total_thr > 0.0);
+    }
+
+    #[test]
+    fn scenario_episodes_respect_bottleneck() {
+        let sc = Scenario::by_name("nic-limited").unwrap();
+        let mut env = LiveEnv::for_scenario(
+            &sc,
+            RewardKind::ThroughputEnergy,
+            ParamBounds::default(),
+            4,
+            10,
+            7,
+        );
+        env.reset();
+        let mut peak: f64 = 0.0;
+        for _ in 0..10 {
+            let out = env.step(1);
+            peak = peak.max(out.throughput_gbps);
+        }
+        // The scenario's 4 Gbps sender NIC caps goodput on a 10 Gbps WAN.
+        assert!(peak > 0.0);
+        assert!(peak <= 4.0 + 1e-6, "peak={peak}");
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod live_env;
 pub mod meters;
 pub mod offline;
 
-pub use explore::{collect_transitions, ExplorePolicy};
+pub use explore::{collect_transitions, collect_transitions_scenario, ExplorePolicy};
 pub use live_env::LiveEnv;
 pub use meters::ResourceMeter;
 pub use offline::{train_offline, TrainConfig, TrainStats};

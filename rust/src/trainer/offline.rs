@@ -136,7 +136,7 @@ mod tests {
 
         fn step(&mut self, action: usize) -> StepOut {
             self.steps += 1;
-            let reward = if action == 1 { 1.0 } else { -0.2 } + self.rng.normal_ms(0.0, 0.05);
+            let reward = if action == 1 { 1.0 } else { -0.2 } + self.rng.normal_mean_sd(0.0, 0.05);
             StepOut {
                 state: vec![self.rng.f32(); 4],
                 reward,

@@ -83,8 +83,11 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
-    /// Normal with the given mean and standard deviation.
-    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+    /// Normal with the given **m**ean and **s**tandard **d**eviation, in
+    /// whatever unit the caller works in (unit-agnostic; renamed from
+    /// `normal_ms`, whose suffix read like "milliseconds" at call sites
+    /// that pass seconds — e.g. the simulator's RTT noise).
+    pub fn normal_mean_sd(&mut self, mean: f64, sd: f64) -> f64 {
         mean + sd * self.normal()
     }
 
