@@ -14,13 +14,13 @@
 use anyhow::Result;
 use sparta::config::Paths;
 use sparta::coordinator::{Controller, RewardKind};
-use sparta::experiments::{make_optimizer, train_pipeline, Scale, SpartaCtx};
+use sparta::experiments::{make_optimizer, train_pipeline, Scale, SpartaCtx, TrainSource};
 use sparta::net::Testbed;
 use sparta::telemetry::Table;
 use sparta::transfer::TransferJob;
 
 fn main() -> Result<()> {
-    let ctx = SpartaCtx::load(Paths::resolve())?;
+    let mut ctx = SpartaCtx::load(Paths::resolve())?;
     let tb = Testbed::chameleon();
     let scale = Scale::Quick;
     let seed = 2026;
@@ -31,13 +31,17 @@ fn main() -> Result<()> {
         let name = SpartaCtx::weight_name("rppo", reward);
         if !store.exists(&name) {
             println!("training {name} (offline, cluster emulator)...");
-            let stats = train_pipeline(&ctx, "rppo", reward, &tb, scale, seed)?;
+            let stats =
+                train_pipeline(&ctx, "rppo", reward, TrainSource::Testbed(&tb), scale, seed)?;
             println!(
                 "  {:.0}s, {} env steps, converged at step {}",
                 stats.wall_s, stats.env_steps, stats.steps_to_converge
             );
         }
     }
+    // Evaluation reads trained weights through the context's read-only
+    // snapshot; refresh it so it sees anything trained above.
+    ctx.refresh_snapshot()?;
 
     // 2. Move 30 x 256 MiB from TACC to UC (simulated 10 Gbps shared WAN)
     //    with each method and compare.

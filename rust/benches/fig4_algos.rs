@@ -1,7 +1,7 @@
 //! Bench: regenerate Fig. 4 — five DRL algorithms x two rewards, sim + real.
 use sparta::config::Paths;
 use sparta::coordinator::RewardKind;
-use sparta::experiments::{fig4, train_pipeline, Scale, SpartaCtx};
+use sparta::experiments::{default_jobs, fig4, train_pipeline, Scale, SpartaCtx, TrainSource};
 use sparta::net::Testbed;
 
 fn main() {
@@ -15,10 +15,21 @@ fn main() {
             let name = SpartaCtx::weight_name(algo, reward);
             if !ctx.weight_store().exists(&name) {
                 eprintln!("training {name}...");
-                train_pipeline(&ctx, algo, reward, &tb, scale, 42).expect("train");
+                train_pipeline(&ctx, algo, reward, TrainSource::Testbed(&tb), scale, 42)
+                    .expect("train");
             }
         }
-        let cells = fig4::run(&ctx, reward, &sparta::agents::ALGOS, scale, 42).expect("fig4");
+        // fig4::run loads its own context, so it snapshots any weights
+        // trained above.
+        let cells = fig4::run(
+            &Paths::resolve(),
+            reward,
+            &sparta::agents::ALGOS,
+            scale,
+            42,
+            default_jobs(),
+        )
+        .expect("fig4");
         fig4::print(&cells);
     }
     println!("\n[bench fig4_algos: {:.1}s]", t0.elapsed().as_secs_f64());

@@ -1,12 +1,11 @@
 //! Bench: regenerate Fig. 5 — online tuning Chameleon -> CloudLab.
 use sparta::config::Paths;
-use sparta::experiments::{fig5, Scale, SpartaCtx};
+use sparta::experiments::{default_jobs, fig5, Scale};
 
 fn main() {
     let scale = Scale::by_name(&std::env::var("SPARTA_BENCH_SCALE").unwrap_or_default());
     let t0 = std::time::Instant::now();
-    let ctx = SpartaCtx::load(Paths::resolve()).expect("run `make artifacts` first");
-    let curves = fig5::run(&ctx, &sparta::agents::ALGOS, scale, 42)
+    let curves = fig5::run(&Paths::resolve(), &sparta::agents::ALGOS, scale, 42, default_jobs())
         .expect("fig5 (train all algos with --reward te first: `sparta train-all`)");
     fig5::print(&curves);
     println!("\n[bench fig5_tuning: {:.1}s]", t0.elapsed().as_secs_f64());

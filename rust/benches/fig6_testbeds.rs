@@ -1,13 +1,15 @@
 //! Bench: regenerate Fig. 6 — six methods x evaluation scenarios (headline).
 use sparta::config::Paths;
-use sparta::experiments::{default_jobs, fig6, Scale};
+use sparta::experiments::{common, default_jobs, fig6, Scale};
 use sparta::scenarios::Scenario;
 
 fn main() {
     let scale = Scale::by_name(&std::env::var("SPARTA_BENCH_SCALE").unwrap_or_default());
     let t0 = std::time::Instant::now();
-    let cells = fig6::run(&Paths::resolve(), &Scenario::defaults(), scale, 42, default_jobs())
-        .expect("fig6 (needs `make artifacts` + `sparta train-all`)");
+    let methods: Vec<String> = common::METHODS.iter().map(|m| m.to_string()).collect();
+    let cells =
+        fig6::run(&Paths::resolve(), &Scenario::defaults(), &methods, scale, 42, default_jobs())
+            .expect("fig6 (needs `make artifacts` + `sparta train-all`)");
     fig6::print(&cells);
     let (thr, en) = fig6::headline(&cells);
     println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");

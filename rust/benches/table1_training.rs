@@ -1,12 +1,12 @@
 //! Bench: regenerate Table 1 — per-algorithm training/inference cost.
 use sparta::config::Paths;
-use sparta::experiments::{table1, Scale, SpartaCtx};
+use sparta::experiments::{default_jobs, table1, Scale};
 
 fn main() {
     let scale = Scale::by_name(&std::env::var("SPARTA_BENCH_SCALE").unwrap_or_default());
     let t0 = std::time::Instant::now();
-    let ctx = SpartaCtx::load(Paths::resolve()).expect("run `make artifacts` first");
-    let rows = table1::run(&ctx, &sparta::agents::ALGOS, scale, 42).expect("table1");
+    let rows = table1::run(&Paths::resolve(), &sparta::agents::ALGOS, scale, 42, default_jobs())
+        .expect("table1 (run `make artifacts` first)");
     table1::print(&rows);
     println!("\n[bench table1_training: {:.1}s]", t0.elapsed().as_secs_f64());
 }

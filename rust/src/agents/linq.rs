@@ -1,0 +1,221 @@
+//! Linear Q-learning fallback core (no HLO runtime required).
+//!
+//! The five paper agents execute their networks as AOT-compiled HLO, which
+//! needs the artifacts plus the `xla`-feature runtime. `linq` is a
+//! deliberately small pure-Rust stand-in — a linear state-action value
+//! function trained by TD(0) with ε-greedy exploration — so the full
+//! train → snapshot → evaluate pipeline (`sparta train`, `sparta
+//! generalize`, the figure runners and CI) is exercisable on a fresh
+//! checkout with no artifacts at all. It is not a paper algorithm: use it
+//! to drive plumbing and determinism checks, not to reproduce figures.
+
+use crate::agents::DrlAgent;
+use crate::coordinator::N_ACTIONS;
+use crate::util::Rng;
+
+/// Linear Q(s, a) = w_a · s + b_a, updated by TD(0).
+pub struct LinQAgent {
+    /// Flat parameters: per action, `state_len` weights then one bias —
+    /// `N_ACTIONS * (state_len + 1)` values total. Sized lazily from the
+    /// first state seen (or from loaded weights), since the state length
+    /// is owned by the environment, not a manifest.
+    w: Vec<f32>,
+    state_len: usize,
+    rng: Rng,
+    /// ε-greedy exploration probability, annealed per observed transition.
+    eps: f64,
+    alpha: f32,
+    gamma: f32,
+    train_calls: u64,
+}
+
+impl LinQAgent {
+    pub fn new(seed: u64) -> LinQAgent {
+        LinQAgent {
+            w: Vec::new(),
+            state_len: 0,
+            rng: Rng::new(seed),
+            eps: 0.3,
+            alpha: 0.01,
+            gamma: 0.95,
+            train_calls: 0,
+        }
+    }
+
+    fn ensure_init(&mut self, state_len: usize) {
+        if self.state_len == 0 && state_len > 0 {
+            self.state_len = state_len;
+            let n = N_ACTIONS * (state_len + 1);
+            if self.w.len() != n {
+                // Tiny symmetric init so argmax ties break deterministically
+                // per seed rather than always favoring action 0.
+                let mut w = Vec::with_capacity(n);
+                for _ in 0..n {
+                    w.push((self.rng.f32() - 0.5) * 1e-3);
+                }
+                self.w = w;
+            }
+        }
+    }
+
+    fn q(&self, a: usize, s: &[f32]) -> f32 {
+        let base = a * (self.state_len + 1);
+        let mut acc = self.w[base + self.state_len]; // bias
+        for (i, x) in s.iter().take(self.state_len).enumerate() {
+            acc += self.w[base + i] * x;
+        }
+        acc
+    }
+
+    fn greedy(&self, s: &[f32]) -> usize {
+        let mut best = 0;
+        let mut best_q = f32::NEG_INFINITY;
+        for a in 0..N_ACTIONS {
+            let q = self.q(a, s);
+            if q > best_q {
+                best_q = q;
+                best = a;
+            }
+        }
+        best
+    }
+}
+
+impl DrlAgent for LinQAgent {
+    fn name(&self) -> &str {
+        "linq"
+    }
+
+    fn act(&mut self, state: &[f32], explore: bool) -> usize {
+        self.ensure_init(state.len());
+        if self.state_len == 0 {
+            return 0;
+        }
+        if explore && self.rng.chance(self.eps) {
+            self.rng.below(N_ACTIONS)
+        } else {
+            self.greedy(state)
+        }
+    }
+
+    fn observe(
+        &mut self,
+        state: &[f32],
+        action: usize,
+        reward: f64,
+        next_state: &[f32],
+        done: bool,
+    ) {
+        self.ensure_init(state.len());
+        if self.state_len == 0 || action >= N_ACTIONS {
+            return;
+        }
+        let bootstrap = if done {
+            0.0
+        } else {
+            self.gamma * self.q(self.greedy(next_state), next_state)
+        };
+        let delta = (reward as f32 + bootstrap - self.q(action, state)).clamp(-10.0, 10.0);
+        let base = action * (self.state_len + 1);
+        let step = self.alpha * delta;
+        for (i, x) in state.iter().take(self.state_len).enumerate() {
+            self.w[base + i] += step * x;
+        }
+        self.w[base + self.state_len] += step;
+        self.train_calls += 1;
+        self.eps = (self.eps * 0.9995).max(0.05);
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn set_params(&mut self, params: Vec<f32>) {
+        if !params.is_empty() && params.len() % N_ACTIONS == 0 {
+            self.state_len = params.len() / N_ACTIONS - 1;
+        }
+        self.w = params;
+    }
+
+    fn train_steps(&self) -> u64 {
+        self.train_calls
+    }
+
+    fn xla_seconds(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 2-feature contextual bandit: the best action is 1 when feature 0 is
+    /// high, 2 when it is low.
+    fn best_action(s: &[f32]) -> usize {
+        if s[0] > 0.5 {
+            1
+        } else {
+            2
+        }
+    }
+
+    #[test]
+    fn learns_a_contextual_bandit() {
+        let mut agent = LinQAgent::new(7);
+        let mut rng = Rng::new(99);
+        for _ in 0..6000 {
+            let s = vec![rng.f32(), rng.f32()];
+            let a = agent.act(&s, true);
+            let reward = if a == best_action(&s) { 1.0 } else { -0.5 };
+            let next = vec![rng.f32(), rng.f32()];
+            agent.observe(&s, a, reward, &next, true);
+        }
+        // Greedy policy should now match the bandit's optimum on both sides.
+        let mut correct = 0;
+        for k in 0..100 {
+            let s = vec![(k as f32) / 100.0, 0.3];
+            if agent.act(&s, false) == best_action(&s) {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 70, "only {correct}/100 greedy actions optimal");
+        assert_eq!(agent.train_steps(), 6000);
+    }
+
+    #[test]
+    fn params_roundtrip_preserves_policy() {
+        let mut a = LinQAgent::new(3);
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let s = vec![rng.f32(), rng.f32(), rng.f32()];
+            let act = a.act(&s, true);
+            a.observe(&s, act, rng.f64(), &[0.1, 0.2, 0.3], false);
+        }
+        let saved = a.params().to_vec();
+        assert_eq!(saved.len(), N_ACTIONS * 4);
+        let mut b = LinQAgent::new(1234);
+        b.set_params(saved.clone());
+        for k in 0..20 {
+            let s = vec![k as f32 * 0.05, 0.5, 0.9];
+            assert_eq!(a.act(&s, false), b.act(&s, false), "state {k}");
+        }
+        assert_eq!(b.params(), &saved[..]);
+    }
+
+    #[test]
+    fn deterministic_under_a_fixed_seed() {
+        let run = |seed: u64| {
+            let mut agent = LinQAgent::new(seed);
+            let mut rng = Rng::new(11);
+            for _ in 0..500 {
+                let s = vec![rng.f32(), rng.f32()];
+                let a = agent.act(&s, true);
+                agent.observe(&s, a, rng.f64() - 0.5, &[rng.f32(), rng.f32()], false);
+            }
+            agent.params().iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+}

@@ -11,6 +11,7 @@
 //! DDPG has its own actor-critic flow in [`ddpg::DdpgAgent`].
 
 pub mod ddpg;
+pub mod linq;
 pub mod pg;
 pub mod replay;
 pub mod rollout;
@@ -18,6 +19,7 @@ pub mod td;
 pub mod wrapper;
 
 pub use ddpg::DdpgAgent;
+pub use linq::LinQAgent;
 pub use pg::PgAgent;
 pub use replay::Replay;
 pub use rollout::Rollout;
@@ -54,8 +56,13 @@ pub trait DrlAgent {
     fn xla_seconds(&self) -> f64;
 }
 
-/// Algorithm names understood by [`make_agent`].
+/// The paper's algorithm names understood by [`make_agent`].
 pub const ALGOS: [&str; 5] = ["dqn", "drqn", "ppo", "rppo", "ddpg"];
+
+/// The artifact-free fallback core ([`linq`]): trains and evaluates without
+/// the HLO runtime, so pipelines and CI run on a fresh checkout. Also
+/// accepted by [`make_agent`], but deliberately not part of [`ALGOS`].
+pub const FALLBACK_ALGO: &str = "linq";
 
 /// Construct an agent core by algorithm name, with freshly-initialized
 /// parameters from the artifacts (or `weights` if provided).
@@ -71,7 +78,13 @@ pub fn make_agent(
         "ppo" => Box::new(PgAgent::new(runtime, "ppo", seed)?),
         "rppo" => Box::new(PgAgent::new(runtime, "rppo", seed)?),
         "ddpg" => Box::new(DdpgAgent::new(runtime, seed)?),
-        other => return Err(anyhow!("unknown algorithm '{other}' (expected one of {ALGOS:?})")),
+        // The pure-Rust fallback needs no runtime at all.
+        "linq" => Box::new(LinQAgent::new(seed)),
+        other => {
+            return Err(anyhow!(
+                "unknown algorithm '{other}' (expected one of {ALGOS:?}, or '{FALLBACK_ALGO}')"
+            ))
+        }
     };
     if let Some(w) = weights {
         agent.set_params(w);

@@ -7,13 +7,15 @@ use crate::config::Paths;
 use crate::coordinator::{Optimizer, ParamBounds, RewardKind};
 use crate::emulator::{ClusterEnv, Transition, TransitionStore};
 use crate::net::Testbed;
-use crate::runtime::{Runtime, WeightStore};
+use crate::runtime::{Runtime, WeightSnapshot, WeightStore};
 use crate::scenarios::Scenario;
 use crate::trainer::{
-    collect_transitions, collect_transitions_scenario, train_offline, TrainConfig, TrainStats,
+    collect_transitions, collect_transitions_scenario, train_offline, LiveEnv, TrainConfig,
+    TrainStats,
 };
 use crate::transfer::EngineProfile;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Experiment size: `Quick` for tests/benches/CI, `Paper` for full runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,25 +80,119 @@ impl Scale {
     }
 }
 
-/// Everything the experiments need: artifact runtime + data directories.
+/// Everything the experiments need: artifact runtime, data directories and
+/// a read-only snapshot of the trained weights.
+///
+/// The snapshot is taken once at load time and shared behind an [`Arc`]:
+/// parallel experiment workers each build their own `SpartaCtx` (the PJRT
+/// runtime is thread-local) via [`SpartaCtx::with_snapshot`], but all read
+/// trained parameters from the same in-memory snapshot, so evaluation never
+/// touches the weights directory concurrently.
 pub struct SpartaCtx {
     pub runtime: Runtime,
     pub paths: Paths,
+    pub snapshot: Arc<WeightSnapshot>,
 }
 
 impl SpartaCtx {
     pub fn load(paths: Paths) -> Result<SpartaCtx> {
-        let runtime = Runtime::load(&paths.artifacts)?;
-        Ok(SpartaCtx { runtime, paths })
+        let snapshot = Arc::new(WeightSnapshot::load_dir(paths.weights())?);
+        SpartaCtx::with_snapshot(paths, snapshot)
     }
 
+    /// Build a context around an existing (shared) weight snapshot — the
+    /// per-worker constructor used by the parallel experiment runners.
+    pub fn with_snapshot(paths: Paths, snapshot: Arc<WeightSnapshot>) -> Result<SpartaCtx> {
+        let runtime = Runtime::load(&paths.artifacts)?;
+        Ok(SpartaCtx { runtime, paths, snapshot })
+    }
+
+    /// Re-read the weights directory into a fresh snapshot (after a
+    /// training phase wrote new files).
+    pub fn refresh_snapshot(&mut self) -> Result<()> {
+        self.snapshot = Arc::new(WeightSnapshot::load_dir(self.paths.weights())?);
+        Ok(())
+    }
+
+    /// The *write* path for trained weights (training only; evaluation
+    /// reads through [`SpartaCtx::snapshot`]).
     pub fn weight_store(&self) -> WeightStore {
         WeightStore::new(self.paths.weights())
     }
 
-    /// Weight file name for a trained agent.
+    /// Weight file name for an agent trained on a bare testbed.
     pub fn weight_name(algo: &str, reward: RewardKind) -> String {
         format!("{algo}_{}", reward.short().to_lowercase())
+    }
+}
+
+/// Weight file name for an agent trained under a registered scenario —
+/// scoped so scenario training never clobbers the bare-testbed defaults.
+pub fn scoped_weight_name(algo: &str, reward: RewardKind, scenario: &str) -> String {
+    format!("{}@{}", SpartaCtx::weight_name(algo, reward), scenario)
+}
+
+/// Expected flat-parameter length for `algo`: manifest-driven for the HLO
+/// algorithms, 0 (= any length) for the self-sizing `linq` fallback core.
+/// When the manifest has no entry for an HLO algorithm (no artifacts, or
+/// the algorithm was removed), the check is also skipped — agent
+/// construction fails right after with a clear missing-graph error, so no
+/// wrong-length vector ever reaches an executing agent.
+pub fn expected_params(ctx: &SpartaCtx, algo: &str) -> usize {
+    if algo == crate::agents::FALLBACK_ALGO {
+        return 0;
+    }
+    ctx.runtime.manifest.algo(algo).map(|a| a.n_params).unwrap_or(0)
+}
+
+/// Where the training pipeline explores, fine-tunes and (for the scenario
+/// variant) scopes its weight names: a bare testbed — the seed behavior —
+/// or a registered scenario's topology and cross traffic.
+#[derive(Clone, Copy)]
+pub enum TrainSource<'a> {
+    Testbed(&'a Testbed),
+    Scenario(&'a Scenario),
+}
+
+impl TrainSource<'_> {
+    pub fn name(&self) -> &str {
+        match self {
+            TrainSource::Testbed(t) => t.name,
+            TrainSource::Scenario(s) => s.name,
+        }
+    }
+
+    /// Name the trained weights are saved under (see [`scoped_weight_name`]).
+    pub fn weight_name(&self, algo: &str, reward: RewardKind) -> String {
+        match self {
+            TrainSource::Testbed(_) => SpartaCtx::weight_name(algo, reward),
+            TrainSource::Scenario(s) => scoped_weight_name(algo, reward, s.name),
+        }
+    }
+
+    fn transitions(&self, ctx: &SpartaCtx, scale: Scale, seed: u64) -> Result<Vec<Transition>> {
+        match self {
+            TrainSource::Testbed(t) => transitions_for(ctx, t, scale, seed),
+            TrainSource::Scenario(s) => transitions_for_scenario(ctx, s, scale, seed),
+        }
+    }
+
+    fn live_env(
+        &self,
+        reward: RewardKind,
+        bounds: ParamBounds,
+        history: usize,
+        episode_len: usize,
+        seed: u64,
+    ) -> LiveEnv {
+        match self {
+            TrainSource::Testbed(t) => {
+                LiveEnv::new((*t).clone(), reward, bounds, history, episode_len, seed)
+            }
+            TrainSource::Scenario(s) => {
+                LiveEnv::for_scenario(s, reward, bounds, history, episode_len, seed)
+            }
+        }
     }
 }
 
@@ -107,21 +203,23 @@ pub const METHODS: [&str; 6] =
 /// Build an optimizer + engine for a method name. SPARTA variants load
 /// trained R_PPO weights (`sparta-t` = T/E reward, `sparta-fe` = F&E); DRL
 /// algorithm names ("dqn", ..., with a `:fe`/`:te` suffix) load that
-/// algorithm's trained weights for Fig. 4.
+/// algorithm's trained weights for Fig. 4. Trained weights are read from
+/// the context's in-memory [`WeightSnapshot`] — never from disk — so any
+/// number of concurrent workers can build optimizers over one shared
+/// snapshot.
 pub fn make_optimizer(
     ctx: &SpartaCtx,
     method: &str,
     seed: u64,
 ) -> Result<(Box<dyn Optimizer>, EngineProfile, RewardKind)> {
-    let store = ctx.weight_store();
     // `display` becomes the lane's reported name: SPARTA variants label
     // themselves "sparta-t"/"sparta-fe" rather than the underlying
     // "rppo-te"/"rppo-fe" core.
     let load = |algo: &str, kind: RewardKind, display: String| -> Result<Box<dyn Optimizer>> {
         let name = SpartaCtx::weight_name(algo, kind);
-        let n = ctx.runtime.manifest.algo(algo)?.n_params;
-        let weights = store
-            .load(&name, n)
+        let weights = ctx
+            .snapshot
+            .params(&name, expected_params(ctx, algo))
             .map_err(|e| anyhow!("{e} — train first: `sparta train --algo {algo} --reward {}`", kind.short()))?;
         let agent = make_agent(&ctx.runtime, algo, seed, Some(weights))?;
         // Deployment: frozen greedy policy plus the coordinator's
@@ -190,7 +288,11 @@ pub fn transitions_for(ctx: &SpartaCtx, testbed: &Testbed, scale: Scale, seed: u
     crate::log_info!("collecting {} exploration runs x {} MIs on {}", runs, mis, testbed.name);
     let ts = collect_transitions(testbed, runs, mis, seed);
     TransitionStore::save(&path, &ts)?;
-    Ok(ts)
+    // Round-trip through the store: saving quantizes f64 outcome fields to
+    // f32, so returning the freshly-collected vector would differ (in the
+    // last bits) from every later cache hit — reload so first use and cache
+    // hits are bit-identical.
+    TransitionStore::load(&path)
 }
 
 /// Like [`transitions_for`], but explored under a registered scenario's
@@ -219,20 +321,29 @@ pub fn transitions_for_scenario(
     );
     let ts = collect_transitions_scenario(scenario, runs, mis, seed);
     TransitionStore::save(&path, &ts)?;
-    Ok(ts)
+    // Same round-trip as [`transitions_for`]: the store's f32 quantization
+    // makes the cache canonical.
+    TransitionStore::load(&path)
 }
 
 /// Full offline pipeline: transitions → cluster emulator → train → persist.
 /// Returns the training stats (Table 1 rows are built from these).
+///
+/// The `source` picks where exploration and live fine-tuning happen: a bare
+/// testbed (the seed behavior, weights saved as `algo_te`) or a registered
+/// scenario's topology and cross traffic (weights saved scoped, e.g.
+/// `rppo_te@lossy-wan` — see [`scoped_weight_name`]). Fully deterministic
+/// for a given `(algo, reward, source, scale, seed)` tuple, which is what
+/// lets `sparta generalize` shard training rows across workers.
 pub fn train_pipeline(
     ctx: &SpartaCtx,
     algo: &str,
     reward: RewardKind,
-    testbed: &Testbed,
+    source: TrainSource<'_>,
     scale: Scale,
     seed: u64,
 ) -> Result<TrainStats> {
-    let transitions = transitions_for(ctx, testbed, scale, seed ^ 0x7E57)?;
+    let transitions = source.transitions(ctx, scale, seed ^ 0x7E57)?;
     let mut env = ClusterEnv::new(
         transitions,
         scale.clusters(),
@@ -250,14 +361,7 @@ pub fn train_pipeline(
     // validate and re-train against the live substrate so the deployed
     // policy has seen real steady-state dynamics (the emulator's sampled
     // transitions under-represent perfectly calm links).
-    let mut live = crate::trainer::LiveEnv::new(
-        testbed.clone(),
-        reward,
-        ParamBounds::default(),
-        8,
-        48,
-        seed ^ 0xF1E1D,
-    );
+    let mut live = source.live_env(reward, ParamBounds::default(), 8, 48, seed ^ 0xF1E1D);
     let fine_cfg = TrainConfig { max_env_steps: scale.finetune_steps(), ..TrainConfig::default() };
     let fine = train_offline(&mut agent, &mut live, &fine_cfg);
     stats.wall_s += fine.wall_s;
@@ -266,7 +370,7 @@ pub fn train_pipeline(
     stats.energy_kj += fine.energy_kj;
 
     let store = ctx.weight_store();
-    store.save(&SpartaCtx::weight_name(algo, reward), agent.params())?;
+    store.save(&source.weight_name(algo, reward), agent.params())?;
     Ok(stats)
 }
 
@@ -287,6 +391,24 @@ mod tests {
     fn weight_names_distinguish_rewards() {
         assert_eq!(SpartaCtx::weight_name("rppo", RewardKind::ThroughputEnergy), "rppo_te");
         assert_eq!(SpartaCtx::weight_name("rppo", RewardKind::FairnessEfficiency), "rppo_fe");
+    }
+
+    /// Scenario-trained weights are scoped (`algo_reward@scenario`) so they
+    /// never clobber the bare-testbed defaults.
+    #[test]
+    fn scenario_weight_names_are_scoped() {
+        assert_eq!(
+            scoped_weight_name("rppo", RewardKind::ThroughputEnergy, "lossy-wan"),
+            "rppo_te@lossy-wan"
+        );
+        let sc = crate::scenarios::Scenario::by_name("calm").unwrap();
+        let src = TrainSource::Scenario(&sc);
+        assert_eq!(src.name(), "calm");
+        assert_eq!(src.weight_name("linq", RewardKind::FairnessEfficiency), "linq_fe@calm");
+        let tb = Testbed::chameleon();
+        let src = TrainSource::Testbed(&tb);
+        assert_eq!(src.name(), "chameleon");
+        assert_eq!(src.weight_name("rppo", RewardKind::ThroughputEnergy), "rppo_te");
     }
 
     /// Regression: SPARTA lanes must report their method names ("sparta-t",

@@ -1,20 +1,30 @@
-//! Fig. 4: the five DRL algorithms × two rewards, evaluated in simulation
-//! (the cluster emulator) and in "real-world" transfers (the live fluid
+//! Fig. 4: DRL algorithms × two rewards, evaluated in simulation (the
+//! cluster emulator) and in "real-world" transfers (the live fluid
 //! simulator), on the Chameleon preset.
+//!
+//! The (algo × world) cells are independent, so they shard across worker
+//! threads like Fig. 1/6/7: exploration transitions are collected (or
+//! cache-loaded) once by the parent and shared, trained weights come from
+//! the parent's read-only [`crate::runtime::WeightSnapshot`], and every
+//! cell derives its seeding purely from its own identity — reports are
+//! bit-identical at any `--jobs` count.
 
-use super::common::{transitions_for, Scale, SpartaCtx};
+use super::common::{expected_params, transitions_for, Scale, SpartaCtx};
+use super::runner;
 use crate::agents::make_agent;
+use crate::config::Paths;
 use crate::coordinator::{ParamBounds, RewardKind};
 use crate::emulator::{ClusterEnv, Env};
 use crate::net::Testbed;
-use crate::runtime::WeightStore;
 use crate::telemetry::Table;
 use crate::trainer::LiveEnv;
+use crate::util::json::Json;
 use crate::util::{stats, Summary};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Distribution of per-episode outcomes for one (algo, reward, world) cell.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AlgoCell {
     pub algo: String,
     pub reward: RewardKind,
@@ -24,7 +34,8 @@ pub struct AlgoCell {
     pub energy_j_per_mi: Vec<f64>,
 }
 
-/// Evaluate one trained agent greedily in an environment for `episodes`.
+/// Evaluate one trained agent in an environment for `episodes`, reading the
+/// trained weights from the shared in-memory snapshot (never from disk).
 fn eval_in_env(
     ctx: &SpartaCtx,
     algo: &str,
@@ -33,9 +44,9 @@ fn eval_in_env(
     episodes: usize,
     seed: u64,
 ) -> Result<(Vec<f64>, Vec<f64>)> {
-    let store = WeightStore::new(ctx.paths.weights());
-    let n = ctx.runtime.manifest.algo(algo)?.n_params;
-    let weights = store.load(&SpartaCtx::weight_name(algo, reward), n)?;
+    let weights = ctx
+        .snapshot
+        .params(&SpartaCtx::weight_name(algo, reward), expected_params(ctx, algo))?;
     let mut agent = make_agent(&ctx.runtime, algo, seed, Some(weights))?;
     let mut thr = Vec::new();
     let mut energy = Vec::new();
@@ -66,54 +77,98 @@ fn eval_in_env(
     Ok((thr, energy))
 }
 
-/// Run the full algorithm comparison for one reward kind.
+/// One (algo, world) unit of work.
+struct CellSpec {
+    algo: String,
+    world: &'static str,
+}
+
+/// Run the full algorithm comparison for one reward kind, sharding the
+/// (algo × world) cells over `jobs` workers.
 pub fn run(
-    ctx: &SpartaCtx,
+    paths: &Paths,
     reward: RewardKind,
     algos: &[&str],
     scale: Scale,
     seed: u64,
+    jobs: usize,
 ) -> Result<Vec<AlgoCell>> {
+    let ctx = SpartaCtx::load(paths.clone())?;
     let tb = Testbed::chameleon();
     let episodes = match scale {
         Scale::Quick => 6,
         Scale::Paper => 20,
     };
-    let mut out = Vec::new();
-    for algo in algos {
-        // Simulation world: the cluster emulator.
-        let transitions = transitions_for(ctx, &tb, scale, seed ^ 0x7E57)?;
-        let mut sim_env = ClusterEnv::new(
-            transitions,
-            scale.clusters(),
-            ParamBounds::default(),
-            reward,
-            8,
-            64,
-            seed ^ 0x51,
-        );
-        let (thr, en) = eval_in_env(ctx, algo, reward, &mut sim_env, episodes, seed)?;
-        out.push(AlgoCell {
-            algo: algo.to_string(),
-            reward,
-            world: "sim",
-            throughput_gbps: thr,
-            energy_j_per_mi: en,
-        });
+    // Collected (or cache-loaded) once, shared read-only by every sim cell.
+    let transitions = Arc::new(transitions_for(&ctx, &tb, scale, seed ^ 0x7E57)?);
 
-        // Real world: the live fluid simulator.
-        let mut live = LiveEnv::new(tb.clone(), reward, ParamBounds::default(), 8, 40, seed ^ 0x1F);
-        let (thr, en) = eval_in_env(ctx, algo, reward, &mut live, episodes, seed)?;
-        out.push(AlgoCell {
-            algo: algo.to_string(),
+    let mut specs = Vec::new();
+    for algo in algos {
+        for world in ["sim", "real"] {
+            specs.push(CellSpec { algo: algo.to_string(), world });
+        }
+    }
+
+    let snapshot = ctx.snapshot.clone();
+    let worker_paths = paths.clone();
+    let outs: Vec<Result<(Vec<f64>, Vec<f64>)>> = runner::parallel_map_with(
+        &specs,
+        jobs,
+        move || SpartaCtx::with_snapshot(worker_paths.clone(), snapshot.clone()),
+        |worker_ctx, _i, spec| -> Result<(Vec<f64>, Vec<f64>)> {
+            let ctx = worker_ctx
+                .as_ref()
+                .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
+            // Identity-derived seeding: depends only on this cell's
+            // (algo, reward, world), so reports are bit-identical at any
+            // thread count.
+            let cs = runner::cell_seed(
+                seed,
+                &format!("fig4/{}/{}/{}", spec.algo, reward.short(), spec.world),
+                0,
+            );
+            let out = match spec.world {
+                "sim" => {
+                    let mut env = ClusterEnv::new(
+                        transitions.as_ref().clone(),
+                        scale.clusters(),
+                        ParamBounds::default(),
+                        reward,
+                        8,
+                        64,
+                        cs ^ 0x51,
+                    );
+                    eval_in_env(ctx, &spec.algo, reward, &mut env, episodes, cs)?
+                }
+                _ => {
+                    let mut env = LiveEnv::new(
+                        tb.clone(),
+                        reward,
+                        ParamBounds::default(),
+                        8,
+                        40,
+                        cs ^ 0x1F,
+                    );
+                    eval_in_env(ctx, &spec.algo, reward, &mut env, episodes, cs)?
+                }
+            };
+            crate::log_info!("fig4 {}/{} ({}): done", spec.algo, spec.world, reward.short());
+            Ok(out)
+        },
+    );
+
+    let mut cells = Vec::new();
+    for (spec, out) in specs.iter().zip(outs) {
+        let (thr, en) = out?;
+        cells.push(AlgoCell {
+            algo: spec.algo.clone(),
             reward,
-            world: "real",
+            world: spec.world,
             throughput_gbps: thr,
             energy_j_per_mi: en,
         });
-        crate::log_info!("fig4 {} ({}): done", algo, reward.short());
     }
-    Ok(out)
+    Ok(cells)
 }
 
 pub fn print(cells: &[AlgoCell]) {
@@ -134,4 +189,22 @@ pub fn print(cells: &[AlgoCell]) {
         ]);
     }
     table.print();
+}
+
+/// Machine-readable report (for `--out` and the CI determinism check).
+pub fn to_json(cells: &[AlgoCell]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("algo", Json::from(c.algo.clone())),
+                    ("reward", Json::from(c.reward.short())),
+                    ("world", Json::from(c.world)),
+                    ("throughput_gbps", Json::arr_f64(&c.throughput_gbps)),
+                    ("energy_j_per_mi", Json::arr_f64(&c.energy_j_per_mi)),
+                ])
+            })
+            .collect(),
+    )
 }

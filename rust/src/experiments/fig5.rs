@@ -1,19 +1,28 @@
 //! Fig. 5: online tuning — agents trained on Chameleon (T/E reward) are
 //! deployed on CloudLab and keep learning; cumulative reward per episode.
+//!
+//! Each algorithm's tuning run is an independent cell: the starting weights
+//! come from the shared read-only [`crate::runtime::WeightSnapshot`] (one
+//! disk read at startup, total), and per-cell seeding is identity-derived,
+//! so the curves are bit-identical at any `--jobs` count.
 
-use super::common::{Scale, SpartaCtx};
+use super::common::{expected_params, Scale, SpartaCtx};
+use super::runner;
 use crate::agents::make_agent;
+use crate::config::Paths;
 use crate::coordinator::{ParamBounds, RewardKind};
 use crate::emulator::Env;
 use crate::net::Testbed;
-use crate::runtime::WeightStore;
+use crate::runtime::WeightSnapshot;
 use crate::telemetry::Table;
 use crate::trainer::LiveEnv;
+use crate::util::json::Json;
 use crate::util::stats;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Tuning trajectory of one algorithm.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TuneCurve {
     pub algo: String,
     /// Episode rewards in deployment order.
@@ -31,47 +40,76 @@ impl TuneCurve {
     }
 }
 
-/// Fine-tune each Chameleon-trained (T/E) agent on the CloudLab preset.
-pub fn run(ctx: &SpartaCtx, algos: &[&str], scale: Scale, seed: u64) -> Result<Vec<TuneCurve>> {
+/// Fine-tune each Chameleon-trained (T/E) agent on the CloudLab preset,
+/// sharding the per-algorithm cells over `jobs` workers.
+pub fn run(
+    paths: &Paths,
+    algos: &[&str],
+    scale: Scale,
+    seed: u64,
+    jobs: usize,
+) -> Result<Vec<TuneCurve>> {
     let episodes = match scale {
         Scale::Quick => 60,
         Scale::Paper => 500,
     };
     let episode_len = 30;
-    let store = WeightStore::new(ctx.paths.weights());
-    let mut out = Vec::new();
-    for algo in algos {
-        let n = ctx.runtime.manifest.algo(algo)?.n_params;
-        let weights = store.load(&SpartaCtx::weight_name(algo, RewardKind::ThroughputEnergy), n)?;
-        let mut agent = make_agent(&ctx.runtime, algo, seed, Some(weights))?;
-        let mut env = LiveEnv::new(
-            Testbed::cloudlab(),
-            RewardKind::ThroughputEnergy,
-            ParamBounds::default(),
-            8,
-            episode_len,
-            seed ^ 0xC10D,
-        );
-        let mut rewards = Vec::with_capacity(episodes);
-        for _ in 0..episodes {
-            let mut state = env.reset();
-            let mut ep = 0.0;
-            loop {
-                let action = agent.act(&state, true);
-                let step = env.step(action);
-                agent.observe(&state, action, step.reward, &step.state, step.done);
-                ep += step.reward;
-                state = step.state;
-                if step.done {
-                    break;
+    // Snapshot only — the parent does not need a runtime of its own.
+    let snapshot = Arc::new(WeightSnapshot::load_dir(paths.weights())?);
+    let worker_paths = paths.clone();
+
+    let specs: Vec<String> = algos.iter().map(|a| a.to_string()).collect();
+    let outs: Vec<Result<Vec<f64>>> = runner::parallel_map_with(
+        &specs,
+        jobs,
+        move || SpartaCtx::with_snapshot(worker_paths.clone(), snapshot.clone()),
+        |worker_ctx, _i, algo| -> Result<Vec<f64>> {
+            let ctx = worker_ctx
+                .as_ref()
+                .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
+            let cs = runner::cell_seed(seed, &format!("fig5/{algo}"), 0);
+            let weights = ctx.snapshot.params(
+                &SpartaCtx::weight_name(algo, RewardKind::ThroughputEnergy),
+                expected_params(ctx, algo),
+            )?;
+            let mut agent = make_agent(&ctx.runtime, algo, cs, Some(weights))?;
+            let mut env = LiveEnv::new(
+                Testbed::cloudlab(),
+                RewardKind::ThroughputEnergy,
+                ParamBounds::default(),
+                8,
+                episode_len,
+                cs ^ 0xC10D,
+            );
+            let mut rewards = Vec::with_capacity(episodes);
+            for _ in 0..episodes {
+                let mut state = env.reset();
+                let mut ep = 0.0;
+                loop {
+                    let action = agent.act(&state, true);
+                    let step = env.step(action);
+                    agent.observe(&state, action, step.reward, &step.state, step.done);
+                    ep += step.reward;
+                    state = step.state;
+                    if step.done {
+                        break;
+                    }
                 }
+                rewards.push(ep);
             }
-            rewards.push(ep);
-        }
-        crate::log_info!("fig5 {}: first10={:.2} last10={:.2}", algo,
-            stats::mean(&rewards[..10.min(rewards.len())]),
-            stats::mean(&rewards[rewards.len().saturating_sub(10)..]));
-        out.push(TuneCurve { algo: algo.to_string(), episode_rewards: rewards });
+            crate::log_info!(
+                "fig5 {}: first10={:.2} last10={:.2}",
+                algo,
+                stats::mean(&rewards[..10.min(rewards.len())]),
+                stats::mean(&rewards[rewards.len().saturating_sub(10)..])
+            );
+            Ok(rewards)
+        },
+    );
+
+    let mut out = Vec::new();
+    for (algo, rewards) in specs.iter().zip(outs) {
+        out.push(TuneCurve { algo: algo.clone(), episode_rewards: rewards? });
     }
     Ok(out)
 }
@@ -96,4 +134,19 @@ pub fn print(curves: &[TuneCurve]) {
         ]);
     }
     table.print();
+}
+
+/// Machine-readable report (for `--out` and the CI determinism check).
+pub fn to_json(curves: &[TuneCurve]) -> Json {
+    Json::Arr(
+        curves
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("algo", Json::from(c.algo.clone())),
+                    ("episode_rewards", Json::arr_f64(&c.episode_rewards)),
+                ])
+            })
+            .collect(),
+    )
 }

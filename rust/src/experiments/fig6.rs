@@ -7,14 +7,17 @@
 //! cells across worker threads. Per-cell seeding depends only on the cell's
 //! identity, so reports are bit-identical at any `jobs` count.
 
-use super::common::{make_optimizer, Scale, SpartaCtx, METHODS};
+use super::common::{make_optimizer, Scale, SpartaCtx};
 use super::runner;
 use crate::config::Paths;
+use crate::runtime::WeightSnapshot;
 use crate::scenarios::Scenario;
 use crate::telemetry::Table;
 use crate::transfer::TransferJob;
+use crate::util::json::Json;
 use crate::util::{stats, Summary};
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Results for one (method, scenario) cell over all trials.
 #[derive(Debug, Clone)]
@@ -31,7 +34,7 @@ pub struct Cell {
 /// One (scenario, method, trial) unit of work.
 struct TrialSpec {
     scenario: Scenario,
-    method: &'static str,
+    method: String,
     seed: u64,
 }
 
@@ -44,10 +47,14 @@ struct TrialOut {
 
 /// Run the methods × scenarios matrix, sharding trials over `jobs` workers.
 /// Takes [`Paths`] rather than a loaded context: workers cannot share a
-/// `SpartaCtx` (the PJRT runtime is thread-local), so each builds its own.
+/// `SpartaCtx` (the PJRT runtime is thread-local), so each builds its own —
+/// but all of them read trained weights from one shared, read-only
+/// [`crate::runtime::WeightSnapshot`] taken by the parent, so evaluation
+/// never touches the weights directory concurrently.
 pub fn run(
     paths: &Paths,
     scenarios: &[Scenario],
+    methods: &[String],
     scale: Scale,
     seed: u64,
     jobs: usize,
@@ -55,11 +62,11 @@ pub fn run(
     let (files, bytes) = scale.workload();
     let mut specs = Vec::new();
     for sc in scenarios {
-        for method in METHODS {
+        for method in methods {
             for trial in 0..scale.trials() {
                 specs.push(TrialSpec {
                     scenario: sc.clone(),
-                    method,
+                    method: method.clone(),
                     // Identity-derived seeding: the seed depends only on
                     // this cell's (scenario, method, trial), so reports are
                     // bit-identical at any thread count.
@@ -73,16 +80,18 @@ pub fn run(
         }
     }
 
+    // Snapshot only — the parent does not need a runtime of its own.
+    let snapshot = Arc::new(WeightSnapshot::load_dir(paths.weights())?);
     let paths = paths.clone();
     let outs: Vec<Result<TrialOut>> = runner::parallel_map_with(
         &specs,
         jobs,
-        move || SpartaCtx::load(paths.clone()),
+        move || SpartaCtx::with_snapshot(paths.clone(), snapshot.clone()),
         |worker_ctx, _i, spec| -> Result<TrialOut> {
             let ctx = worker_ctx
                 .as_ref()
                 .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
-            let (opt, engine, reward) = make_optimizer(ctx, spec.method, spec.seed)?;
+            let (opt, engine, reward) = make_optimizer(ctx, &spec.method, spec.seed)?;
             let mut ctl = spec
                 .scenario
                 .controller()
@@ -122,7 +131,7 @@ pub fn run(
             .is_some_and(|c| c.method == spec.method && c.scenario == spec.scenario.name);
         if !matches {
             cells.push(Cell {
-                method: spec.method.to_string(),
+                method: spec.method.clone(),
                 scenario: spec.scenario.name.to_string(),
                 throughput_gbps: Vec::new(),
                 energy_kj: Vec::new(),
@@ -157,6 +166,24 @@ pub fn print(cells: &[Cell]) {
         ]);
     }
     table.print();
+}
+
+/// Machine-readable report (for `--out` and the CI determinism check).
+pub fn to_json(cells: &[Cell]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("scenario", Json::from(c.scenario.clone())),
+                    ("method", Json::from(c.method.clone())),
+                    ("throughput_gbps", Json::arr_f64(&c.throughput_gbps)),
+                    ("energy_kj", Json::arr_f64(&c.energy_kj)),
+                    ("duration_s", Json::arr_f64(&c.duration_s)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 /// Headline deltas vs the static baselines (the abstract's claims).

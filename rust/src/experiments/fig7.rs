@@ -6,10 +6,12 @@ use super::runner;
 use crate::config::Paths;
 use crate::coordinator::Controller;
 use crate::net::Testbed;
+use crate::runtime::WeightSnapshot;
 use crate::telemetry::Table;
 use crate::transfer::TransferJob;
 use crate::util::stats;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// One concurrent-transfer scenario.
 #[derive(Debug, Clone)]
@@ -80,14 +82,16 @@ pub fn run_scenario(
 /// Run all three scenarios, sharded over `jobs` workers (each concurrent
 /// scenario is an independent simulation). Takes [`Paths`] rather than a
 /// loaded context: the PJRT runtime is thread-local, so every worker builds
-/// its own.
+/// its own — over one shared, read-only weight snapshot taken by the parent.
 pub fn run(paths: &Paths, scale: Scale, seed: u64, jobs: usize) -> Result<Vec<Scenario>> {
     let specs = scenarios();
+    // Snapshot only — the parent does not need a runtime of its own.
+    let snapshot = Arc::new(WeightSnapshot::load_dir(paths.weights())?);
     let paths = paths.clone();
     runner::parallel_map_with(
         &specs,
         jobs,
-        move || SpartaCtx::load(paths.clone()),
+        move || SpartaCtx::with_snapshot(paths.clone(), snapshot.clone()),
         |worker_ctx, _i, (name, methods)| {
             let ctx = worker_ctx
                 .as_ref()

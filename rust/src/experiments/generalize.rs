@@ -1,0 +1,251 @@
+//! Cross-scenario generalization: train one agent per training scenario,
+//! then deploy each trained policy greedily on every evaluation scenario.
+//!
+//! This is the experiment the scenario registry exists for: the paper's
+//! claim rests on agents trained once generalizing across conditions
+//! (cf. Swargo et al. 2025 on elastic cross-condition transfer tuning).
+//! Phase 1 shards the independent training rows over `--jobs` workers
+//! (each writes its own scoped weight file, e.g. `linq_te@lossy-wan`);
+//! phase 2 takes one fresh read-only [`crate::runtime::WeightSnapshot`]
+//! and shards the (train × eval) matrix cells over the same workers, all
+//! reading from that shared snapshot. Per-cell seeding is identity-derived
+//! throughout, so the emitted matrix is bit-identical at any `--jobs`
+//! count.
+
+use super::common::{
+    expected_params, scoped_weight_name, train_pipeline, Scale, SpartaCtx, TrainSource,
+};
+use super::runner;
+use crate::agents::make_agent;
+use crate::config::Paths;
+use crate::coordinator::{ParamBounds, RewardKind};
+use crate::emulator::Env;
+use crate::scenarios::Scenario;
+use crate::telemetry::Table;
+use crate::trainer::LiveEnv;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// One (train scenario, eval scenario) matrix cell: greedy deployment of
+/// the train-scenario policy under the eval scenario's conditions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenCell {
+    pub train_scenario: String,
+    pub eval_scenario: String,
+    pub mean_reward: f64,
+    pub mean_throughput_gbps: f64,
+    pub mean_energy_j_per_mi: f64,
+}
+
+/// The full generalization matrix (cells in row-major train × eval order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenReport {
+    pub algo: String,
+    pub reward: RewardKind,
+    pub train_scenarios: Vec<String>,
+    pub eval_scenarios: Vec<String>,
+    pub cells: Vec<GenCell>,
+}
+
+/// One (train, eval) unit of phase-2 work.
+struct EvalSpec {
+    train: String,
+    eval: Scenario,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    paths: &Paths,
+    algo: &str,
+    reward: RewardKind,
+    train_on: &[Scenario],
+    eval_on: &[Scenario],
+    scale: Scale,
+    seed: u64,
+    jobs: usize,
+) -> Result<GenReport> {
+    // Phase 1 — train one policy per training scenario. Rows are
+    // independent: each explores/fine-tunes under its own scenario and
+    // writes its own scoped weight file, so they shard cleanly.
+    let mut ctx = SpartaCtx::load(paths.clone())?;
+    let phase1_snapshot = ctx.snapshot.clone();
+    let phase1_paths = paths.clone();
+    let train_outs: Vec<Result<()>> = runner::parallel_map_with(
+        train_on,
+        jobs,
+        move || SpartaCtx::with_snapshot(phase1_paths.clone(), phase1_snapshot.clone()),
+        |worker_ctx, _i, sc| -> Result<()> {
+            let ctx = worker_ctx
+                .as_ref()
+                .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
+            let cs = runner::cell_seed(seed, &format!("gen-train/{}", sc.name), 0);
+            let stats = train_pipeline(ctx, algo, reward, TrainSource::Scenario(sc), scale, cs)?;
+            crate::log_info!(
+                "generalize: trained {} on {} ({} env steps, converged@{})",
+                algo,
+                sc.name,
+                stats.env_steps,
+                stats.steps_to_converge
+            );
+            Ok(())
+        },
+    );
+    for r in train_outs {
+        r?;
+    }
+
+    // Phase 2 — one fresh snapshot of everything phase 1 wrote; all matrix
+    // cells evaluate over it concurrently, read-only, never touching disk.
+    ctx.refresh_snapshot()?;
+    let snapshot = ctx.snapshot.clone();
+    let worker_paths = paths.clone();
+
+    let (episodes, episode_len) = match scale {
+        Scale::Quick => (4, 24),
+        Scale::Paper => (12, 60),
+    };
+    let mut specs = Vec::new();
+    for t in train_on {
+        for e in eval_on {
+            specs.push(EvalSpec { train: t.name.to_string(), eval: e.clone() });
+        }
+    }
+
+    let outs: Vec<Result<GenCell>> = runner::parallel_map_with(
+        &specs,
+        jobs,
+        move || SpartaCtx::with_snapshot(worker_paths.clone(), snapshot.clone()),
+        |worker_ctx, _i, spec| -> Result<GenCell> {
+            let ctx = worker_ctx
+                .as_ref()
+                .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
+            let cs = runner::cell_seed(
+                seed,
+                &format!("gen-eval/{}/{}", spec.train, spec.eval.name),
+                0,
+            );
+            let weights = ctx.snapshot.params(
+                &scoped_weight_name(algo, reward, &spec.train),
+                expected_params(ctx, algo),
+            )?;
+            let mut agent = make_agent(&ctx.runtime, algo, cs, Some(weights))?;
+            let mut env = LiveEnv::for_scenario(
+                &spec.eval,
+                reward,
+                ParamBounds::default(),
+                8,
+                episode_len,
+                cs ^ 0xE7A1,
+            );
+            let mut reward_sum = 0.0;
+            let mut thr_sum = 0.0;
+            let mut energy_sum = 0.0;
+            let mut steps = 0usize;
+            for _ in 0..episodes {
+                let mut state = env.reset();
+                loop {
+                    // Greedy deployment: no exploration, no learning — the
+                    // matrix isolates cross-condition generalization.
+                    let action = agent.act(&state, false);
+                    let out = env.step(action);
+                    reward_sum += out.reward;
+                    thr_sum += out.throughput_gbps;
+                    if out.energy_j.is_finite() {
+                        energy_sum += out.energy_j;
+                    }
+                    steps += 1;
+                    state = out.state;
+                    if out.done {
+                        break;
+                    }
+                }
+            }
+            let n = steps.max(1) as f64;
+            Ok(GenCell {
+                train_scenario: spec.train.clone(),
+                eval_scenario: spec.eval.name.to_string(),
+                mean_reward: reward_sum / episodes.max(1) as f64,
+                mean_throughput_gbps: thr_sum / n,
+                mean_energy_j_per_mi: energy_sum / n,
+            })
+        },
+    );
+
+    let mut cells = Vec::new();
+    for out in outs {
+        cells.push(out?);
+    }
+    Ok(GenReport {
+        algo: algo.to_string(),
+        reward,
+        train_scenarios: train_on.iter().map(|s| s.name.to_string()).collect(),
+        eval_scenarios: eval_on.iter().map(|s| s.name.to_string()).collect(),
+        cells,
+    })
+}
+
+/// Print the train-scenario × eval-scenario matrices (mean episode reward,
+/// then mean throughput).
+pub fn print(report: &GenReport) {
+    let cell = |t: &str, e: &str| -> Option<&GenCell> {
+        report
+            .cells
+            .iter()
+            .find(|c| c.train_scenario == t && c.eval_scenario == e)
+    };
+    let matrix = |title: &str, f: &dyn Fn(&GenCell) -> f64| {
+        println!("\n{title}");
+        let mut header: Vec<&str> = vec!["train \\ eval"];
+        header.extend(report.eval_scenarios.iter().map(|s| s.as_str()));
+        let mut table = Table::new(&header);
+        for t in &report.train_scenarios {
+            let mut row = vec![t.clone()];
+            for e in &report.eval_scenarios {
+                row.push(match cell(t, e) {
+                    Some(c) => format!("{:.2}", f(c)),
+                    None => "-".into(),
+                });
+            }
+            table.row(row);
+        }
+        table.print();
+    };
+    println!(
+        "\nGeneralization — {} ({}), trained per row scenario, deployed greedily per column:",
+        report.algo,
+        report.reward.short()
+    );
+    matrix("mean episode reward:", &|c| c.mean_reward);
+    matrix("mean throughput (Gbps):", &|c| c.mean_throughput_gbps);
+}
+
+/// Machine-readable report (for `--out` and the CI determinism check).
+pub fn to_json(report: &GenReport) -> Json {
+    fn names(xs: &[String]) -> Json {
+        Json::arr_str(&xs.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+    }
+    Json::obj(vec![
+        ("algo", Json::from(report.algo.clone())),
+        ("reward", Json::from(report.reward.short())),
+        ("train_scenarios", names(&report.train_scenarios)),
+        ("eval_scenarios", names(&report.eval_scenarios)),
+        (
+            "cells",
+            Json::Arr(
+                report
+                    .cells
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("train_scenario", Json::from(c.train_scenario.clone())),
+                            ("eval_scenario", Json::from(c.eval_scenario.clone())),
+                            ("mean_reward", Json::from(c.mean_reward)),
+                            ("mean_throughput_gbps", Json::from(c.mean_throughput_gbps)),
+                            ("mean_energy_j_per_mi", Json::from(c.mean_energy_j_per_mi)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

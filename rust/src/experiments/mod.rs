@@ -3,10 +3,12 @@
 //! The CLI subcommands and the `cargo bench` binaries are thin wrappers over
 //! these functions, so every reported number is regenerable both ways. Each
 //! experiment takes a [`Scale`] so tests/benches can run a reduced (but
-//! structurally identical) version of the paper's full workload. Grid-shaped
-//! experiments (Fig. 1, Fig. 6, Fig. 7) shard their independent cells across
-//! worker threads via [`runner`]; per-cell seeding is identity-derived, so
-//! reports are bit-identical at any `--jobs` count.
+//! structurally identical) version of the paper's full workload. Every
+//! grid-shaped experiment (Fig. 1/4/5/6/7, Table 1 and the [`generalize`]
+//! matrix) shards its independent cells across worker threads via
+//! [`runner`]; trained weights are read from a shared, read-only
+//! [`crate::runtime::WeightSnapshot`] and per-cell seeding is
+//! identity-derived, so reports are bit-identical at any `--jobs` count.
 
 pub mod common;
 pub mod fig1;
@@ -14,10 +16,12 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod generalize;
 pub mod runner;
 pub mod table1;
 
 pub use common::{
-    make_optimizer, train_pipeline, transitions_for_scenario, Scale, SpartaCtx,
+    make_optimizer, scoped_weight_name, train_pipeline, transitions_for_scenario, Scale,
+    SpartaCtx, TrainSource,
 };
 pub use runner::{default_jobs, parallel_map, parallel_map_with};

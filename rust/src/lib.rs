@@ -31,10 +31,27 @@
 //! The [`scenarios`] registry names ≥6 seeded presets over these topologies
 //! (`calm`, `diurnal-bg`, `bursty-incast`, `lossy-wan`, `receiver-limited`,
 //! `nic-limited`, `contended-peers`, plus the paper's testbeds) — select
-//! one with `--scenario <name>` on the CLI. Grid experiments shard their
-//! (method × trial × scenario) cells over worker threads
-//! ([`experiments::runner`], `--jobs N`) with identity-derived per-cell
-//! seeding, so reports are bit-identical at any thread count.
+//! one with `--scenario <name>` on the CLI.
+//!
+//! Scenarios are the *training* substrate too, not just an evaluation toy:
+//! [`experiments::train_pipeline`] takes a [`experiments::TrainSource`]
+//! (bare testbed or registered scenario), explores and fine-tunes under it,
+//! and saves scenario-scoped weight files (`rppo_te@lossy-wan`); `sparta
+//! generalize` trains per scenario and deploys every trained policy on
+//! every registered scenario, printing the cross-scenario generalization
+//! matrix ([`experiments::generalize`]).
+//!
+//! Trained weights split into a write path ([`runtime::WeightStore`]) and a
+//! read path ([`runtime::WeightSnapshot`]): evaluation loads every weight
+//! file once into an `Arc`-shared immutable snapshot, so every grid
+//! experiment (Fig. 1/4/5/6/7, Table 1, the generalize matrix) shards its
+//! cells over worker threads ([`experiments::runner`], `--jobs N`) without
+//! ever touching the weights directory concurrently. Per-cell seeding is
+//! identity-derived, so reports are bit-identical at any thread count — CI
+//! enforces this byte-for-byte on the real CLI path. On checkouts without
+//! AOT artifacts, the pure-Rust `linq` fallback core
+//! ([`agents::LinQAgent`]) keeps the whole train → snapshot → evaluate
+//! pipeline runnable.
 //!
 //! [`Controller`]: coordinator::Controller
 //!
@@ -57,6 +74,29 @@
 //!     .build();
 //! let report = ctl.run(Box::new(StaticTool::rclone()), 0xC0FFEE);
 //! println!("avg throughput {:.2} Gbps", report.avg_throughput_gbps());
+//! ```
+//!
+//! Scenario-aware training and the cross-scenario generalization matrix
+//! (runs on a fresh checkout — the `linq` fallback core needs no AOT
+//! artifacts):
+//!
+//! ```no_run
+//! use sparta::config::Paths;
+//! use sparta::coordinator::RewardKind;
+//! use sparta::experiments::{generalize, Scale};
+//! use sparta::scenarios::Scenario;
+//!
+//! let report = generalize::run(
+//!     &Paths::resolve(),
+//!     "linq",
+//!     RewardKind::ThroughputEnergy,
+//!     &Scenario::all(),   // train one policy per registered scenario...
+//!     &Scenario::all(),   // ...and deploy each on every scenario
+//!     Scale::Quick,
+//!     42,
+//!     4,                  // worker threads; reports are bit-identical at any count
+//! ).unwrap();
+//! generalize::print(&report);
 //! ```
 
 pub mod agents;

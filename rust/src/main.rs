@@ -5,7 +5,9 @@
 //! sparta scenarios                    # list registered evaluation scenarios
 //! sparta collect  --testbed chameleon --scale quick
 //! sparta train    --algo rppo --reward te --scale quick
+//! sparta train    --algo linq --scenario lossy-wan  # scenario-scoped weights
 //! sparta train-all --scale quick      # all 5 algos x both rewards
+//! sparta generalize --scale quick     # train x eval scenario matrix
 //! sparta transfer --method sparta-fe --scenario lossy-wan
 //! sparta sweep    --testbed chameleon             # Fig 1
 //! sparta algos    --reward te                     # Fig 4
@@ -18,13 +20,15 @@
 use anyhow::{anyhow, Result};
 use sparta::config::Paths;
 use sparta::coordinator::{Controller, ControllerBuilder, RewardKind};
-use sparta::experiments::{self, make_optimizer, Scale, SpartaCtx};
+use sparta::experiments::{self, make_optimizer, Scale, SpartaCtx, TrainSource};
 use sparta::net::Testbed;
 use sparta::scenarios::Scenario;
 use sparta::telemetry::report::lane_json;
-use sparta::telemetry::Table;
+use sparta::telemetry::{save_report, Table};
 use sparta::transfer::TransferJob;
 use sparta::util::cli::Args;
+use sparta::util::json::Json;
+use std::path::Path;
 
 fn main() {
     let args = match Args::from_env() {
@@ -71,24 +75,45 @@ fn scenario_arg(args: &Args) -> Result<Option<Scenario>> {
     }
 }
 
+/// Parse a comma-separated scenario list against the registry.
+fn parse_scenarios(list: &str) -> Result<Vec<Scenario>> {
+    list.split(',')
+        .map(|n| {
+            let n = n.trim();
+            Scenario::by_name(n).ok_or_else(|| {
+                anyhow!("unknown scenario '{n}' — `sparta scenarios` lists the registry")
+            })
+        })
+        .collect()
+}
+
 /// `--scenario a,b,c` as a list, defaulting to the three testbed presets.
 fn scenario_list_arg(args: &Args) -> Result<Vec<Scenario>> {
     match args.get("scenario") {
         None => Ok(Scenario::defaults()),
-        Some(list) => list
-            .split(',')
-            .map(|n| {
-                let n = n.trim();
-                Scenario::by_name(n).ok_or_else(|| {
-                    anyhow!("unknown scenario '{n}' — `sparta scenarios` lists the registry")
-                })
-            })
-            .collect(),
+        Some(list) => parse_scenarios(list),
     }
 }
 
 fn ctx() -> Result<SpartaCtx> {
     SpartaCtx::load(Paths::resolve())
+}
+
+/// `--out <path>`: write a machine-readable report file.
+fn maybe_save(args: &Args, json: &Json) -> Result<()> {
+    if let Some(out) = args.get("out") {
+        save_report(Path::new(out), json)?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+/// `--methods a,b,c` on `compare`, defaulting to the paper's six methods.
+fn methods_arg(args: &Args) -> Vec<String> {
+    match args.get("methods") {
+        None => experiments::common::METHODS.iter().map(|m| m.to_string()).collect(),
+        Some(list) => list.split(',').map(|m| m.trim().to_string()).collect(),
+    }
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -141,13 +166,25 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("train") => {
             let c = ctx()?;
-            let tb = testbed_arg(args)?;
             let algo = args.get_or("algo", "rppo").to_string();
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
                 .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
-            let stats = experiments::train_pipeline(&c, &algo, reward, &tb, scale, seed)?;
+            let scenario = scenario_arg(args)?;
+            let (stats, weight_name) = match &scenario {
+                Some(sc) => {
+                    let src = TrainSource::Scenario(sc);
+                    let name = src.weight_name(&algo, reward);
+                    (experiments::train_pipeline(&c, &algo, reward, src, scale, seed)?, name)
+                }
+                None => {
+                    let tb = testbed_arg(args)?;
+                    let src = TrainSource::Testbed(&tb);
+                    let name = src.weight_name(&algo, reward);
+                    (experiments::train_pipeline(&c, &algo, reward, src, scale, seed)?, name)
+                }
+            };
             println!(
-                "trained {algo} ({}) in {:.1}s: {} env steps, {} train calls, converged@{}",
+                "trained {algo} ({}) in {:.1}s: {} env steps, {} train calls, converged@{} -> {weight_name}",
                 reward.short(),
                 stats.wall_s,
                 stats.env_steps,
@@ -158,10 +195,16 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("train-all") => {
             let c = ctx()?;
-            let tb = testbed_arg(args)?;
+            let scenario = scenario_arg(args)?;
+            let tb = if scenario.is_none() { Some(testbed_arg(args)?) } else { None };
             for algo in sparta::agents::ALGOS {
                 for reward in [RewardKind::ThroughputEnergy, RewardKind::FairnessEfficiency] {
-                    let stats = experiments::train_pipeline(&c, algo, reward, &tb, scale, seed)?;
+                    let src = match (&scenario, &tb) {
+                        (Some(sc), _) => TrainSource::Scenario(sc),
+                        (None, Some(t)) => TrainSource::Testbed(t),
+                        (None, None) => unreachable!(),
+                    };
+                    let stats = experiments::train_pipeline(&c, algo, reward, src, scale, seed)?;
                     println!(
                         "{algo}-{}: {:.1}s, {} steps, converged@{}",
                         reward.short(),
@@ -171,6 +214,34 @@ fn dispatch(args: &Args) -> Result<()> {
                     );
                 }
             }
+            Ok(())
+        }
+        Some("generalize") => {
+            // Train one agent per training scenario, then deploy each
+            // trained policy greedily on every registered scenario — the
+            // cross-scenario generalization matrix. Defaults to the
+            // artifact-free `linq` core so it runs on a fresh checkout;
+            // pass `--algo rppo` (etc.) once artifacts are built.
+            let algo = args.get_or("algo", sparta::agents::FALLBACK_ALGO).to_string();
+            let reward = RewardKind::by_name(args.get_or("reward", "te"))
+                .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
+            let train_on = match args.get("scenario") {
+                None => Scenario::all(),
+                Some(list) => parse_scenarios(list)?,
+            };
+            let eval_on = Scenario::all();
+            let report = experiments::generalize::run(
+                &Paths::resolve(),
+                &algo,
+                reward,
+                &train_on,
+                &eval_on,
+                scale,
+                seed,
+                jobs,
+            )?;
+            experiments::generalize::print(&report);
+            maybe_save(args, &experiments::generalize::to_json(&report))?;
             Ok(())
         }
         Some("transfer") => {
@@ -222,25 +293,51 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("algos") => {
-            let c = ctx()?;
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
                 .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
-            let cells = experiments::fig4::run(&c, reward, &sparta::agents::ALGOS, scale, seed)?;
+            let cells = experiments::fig4::run(
+                &Paths::resolve(),
+                reward,
+                &sparta::agents::ALGOS,
+                scale,
+                seed,
+                jobs,
+            )?;
             experiments::fig4::print(&cells);
+            maybe_save(args, &experiments::fig4::to_json(&cells))?;
             Ok(())
         }
         Some("tune") => {
-            let c = ctx()?;
-            let curves = experiments::fig5::run(&c, &sparta::agents::ALGOS, scale, seed)?;
+            let curves = experiments::fig5::run(
+                &Paths::resolve(),
+                &sparta::agents::ALGOS,
+                scale,
+                seed,
+                jobs,
+            )?;
             experiments::fig5::print(&curves);
+            maybe_save(args, &experiments::fig5::to_json(&curves))?;
             Ok(())
         }
         Some("compare") => {
             let scenarios = scenario_list_arg(args)?;
-            let cells = experiments::fig6::run(&Paths::resolve(), &scenarios, scale, seed, jobs)?;
+            let methods = methods_arg(args);
+            let cells = experiments::fig6::run(
+                &Paths::resolve(),
+                &scenarios,
+                &methods,
+                scale,
+                seed,
+                jobs,
+            )?;
             experiments::fig6::print(&cells);
-            let (thr, en) = experiments::fig6::headline(&cells);
-            println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");
+            // The headline compares the paper's six methods; it is
+            // meaningless for a custom --methods subset.
+            if args.get("methods").is_none() {
+                let (thr, en) = experiments::fig6::headline(&cells);
+                println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");
+            }
+            maybe_save(args, &experiments::fig6::to_json(&cells))?;
             Ok(())
         }
         Some("fairness") => {
@@ -249,9 +346,15 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("table1") => {
-            let c = ctx()?;
-            let rows = experiments::table1::run(&c, &sparta::agents::ALGOS, scale, seed)?;
+            let rows = experiments::table1::run(
+                &Paths::resolve(),
+                &sparta::agents::ALGOS,
+                scale,
+                seed,
+                jobs,
+            )?;
             experiments::table1::print(&rows);
+            maybe_save(args, &experiments::table1::to_json(&rows))?;
             Ok(())
         }
         Some(other) => Err(anyhow!("unknown subcommand '{other}' — try `sparta help`")),
@@ -268,20 +371,13 @@ fn info() -> Result<()> {
                 c.runtime.manifest.graphs.len(),
                 c.runtime.manifest.algos.len()
             );
-            let store = c.weight_store();
-            let mut trained = Vec::new();
-            for algo in sparta::agents::ALGOS {
-                for r in ["te", "fe"] {
-                    let name = format!("{algo}_{r}");
-                    if store.exists(&name) {
-                        trained.push(name);
-                    }
-                }
-            }
+            // The snapshot is the evaluation read path: everything under
+            // data/weights, including scenario-scoped names (`rppo_te@calm`).
+            let trained = c.snapshot.names();
             println!(
-                "trained weights: {}",
+                "trained weights (snapshot): {}",
                 if trained.is_empty() {
-                    "none (run `sparta train-all`)".into()
+                    "none (`sparta train-all`; `--algo linq` needs no artifacts)".into()
                 } else {
                     trained.join(", ")
                 }
@@ -310,14 +406,24 @@ subcommands:
   info                      artifacts / testbeds / trained-weights status
   scenarios                 list registered evaluation scenarios
   collect   --testbed T|--scenario S --scale X     cache exploration transitions
-  train     --algo A --reward fe|te        offline-train one agent
-  train-all                                train all 5 algos x 2 rewards
+  train     --algo A --reward fe|te [--scenario S] offline-train one agent
+                                           (--scenario explores/fine-tunes under
+                                           S and saves scoped weights, A_te@S)
+  train-all [--scenario S]                 train all 5 algos x 2 rewards
+  generalize [--algo A] [--scenario S1,..] train per scenario (default: all),
+                                           then deploy each policy greedily on
+                                           every registered scenario and print
+                                           the train x eval matrix. Default
+                                           algo 'linq' (pure-Rust fallback)
+                                           runs without artifacts
   transfer  --method M [--scenario S]      run one transfer (M: rclone, escp,
                                            falcon_mp, 2-phase, sparta-t, sparta-fe)
   sweep     --testbed T|--scenario S       Fig 1   (cc,p) x background sweep
   algos     --reward fe|te                 Fig 4   DRL algorithm comparison
   tune                                     Fig 5   online tuning on CloudLab
   compare   [--scenario S1,S2,...]         Fig 6   methods x scenarios
+            [--methods M1,M2,...]          (subset/extend the method lanes,
+                                           e.g. linq:te for the fallback core)
   fairness                                 Fig 7   concurrent-transfer JFI
   table1                                   Table 1 training/inference cost
 
@@ -325,5 +431,8 @@ common flags: --scale quick|paper  --seed N  --jobs N  --quiet --verbose
   --scenario takes names from `sparta scenarios` (e.g. calm, diurnal-bg,
   bursty-incast, lossy-wan, receiver-limited, nic-limited, contended-peers)
   --jobs N shards experiment cells over N worker threads (default: all
-  cores); reports are bit-identical at any jobs count for a fixed seed
+  cores); every experiment evaluates over one shared read-only weight
+  snapshot and seeds each cell from its own identity, so reports are
+  bit-identical at any jobs count for a fixed seed
+  --out FILE (algos/tune/compare/table1/generalize) writes a JSON report
 ";

@@ -22,9 +22,11 @@ pub struct Runtime {
 
 impl Runtime {
     /// Create a CPU PJRT client (when built with the `xla` feature) and load
-    /// the manifest.
+    /// the manifest. A missing artifacts directory yields an empty manifest
+    /// (see [`Manifest::load_or_empty`]) so artifact-free paths — baselines
+    /// and the pure-Rust `linq` agent — work on a fresh checkout.
     pub fn load(artifacts_dir: &std::path::Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
+        let manifest = Manifest::load_or_empty(artifacts_dir)?;
         #[cfg(feature = "xla")]
         {
             // Perf (EXPERIMENTS.md §Perf): the agent graphs are small; Eigen's

@@ -167,6 +167,28 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), graphs, algos, globals })
     }
 
+    /// Like [`Manifest::load`], but a missing `manifest.json` yields an
+    /// empty manifest (no graphs, no algorithms) instead of an error, so
+    /// artifact-free consumers — the baselines, the scenario registry and
+    /// the pure-Rust `linq` fallback agent — run on a fresh checkout.
+    /// A *present but malformed* manifest is still an error.
+    pub fn load_or_empty(dir: &Path) -> Result<Manifest> {
+        if !dir.join("manifest.json").exists() {
+            crate::log_info!(
+                "no artifacts under {} — HLO agents unavailable (run `make artifacts`); \
+                 baselines and the linq fallback agent still work",
+                dir.display()
+            );
+            return Ok(Manifest {
+                dir: dir.to_path_buf(),
+                graphs: BTreeMap::new(),
+                algos: BTreeMap::new(),
+                globals: BTreeMap::new(),
+            });
+        }
+        Manifest::load(dir)
+    }
+
     pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
         self.graphs
             .get(name)

@@ -13,4 +13,4 @@ pub mod weights;
 
 pub use executable::{Executable, Runtime};
 pub use manifest::{GraphSpec, Manifest};
-pub use weights::WeightStore;
+pub use weights::{WeightSnapshot, WeightStore};

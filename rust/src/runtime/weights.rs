@@ -6,7 +6,9 @@
 //! between Python and Rust.
 
 use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Reads/writes flat f32 parameter vectors under a directory.
 #[derive(Debug, Clone)]
@@ -33,7 +35,9 @@ impl WeightStore {
         load_f32(&self.path(name), expect_len)
     }
 
-    /// Save a flat vector (creates the directory).
+    /// Save a flat vector (creates the directory). Writes to a temp file
+    /// and renames so an interrupted save never leaves a truncated `.f32`
+    /// behind — [`WeightSnapshot`] loads the whole directory at startup.
     pub fn save(&self, name: &str, data: &[f32]) -> Result<()> {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating {}", self.dir.display()))?;
@@ -41,8 +45,100 @@ impl WeightStore {
         for x in data {
             bytes.extend_from_slice(&x.to_le_bytes());
         }
-        std::fs::write(self.path(name), bytes)
-            .with_context(|| format!("writing {}", self.path(name).display()))
+        let tmp = self.dir.join(format!("{name}.f32.tmp"));
+        std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.path(name))
+            .with_context(|| format!("renaming into {}", self.path(name).display()))
+    }
+}
+
+/// Immutable, load-once view of every trained parameter vector under a
+/// weights directory.
+///
+/// [`WeightStore`] is the *write* path (the trainer saves through it);
+/// `WeightSnapshot` is the *read* path for evaluation: all `<name>.f32`
+/// files are read into memory exactly once at construction, and the
+/// snapshot is then shared across experiment workers behind an [`Arc`], so
+/// concurrent evaluation cells never touch the filesystem. Weights saved
+/// after the snapshot was taken are invisible to it — take a fresh
+/// snapshot after a training phase (see `sparta generalize`).
+#[derive(Debug, Clone, Default)]
+pub struct WeightSnapshot {
+    dir: PathBuf,
+    by_name: BTreeMap<String, Arc<Vec<f32>>>,
+}
+
+impl WeightSnapshot {
+    /// Snapshot every `<name>.f32` under `dir`. A missing directory yields
+    /// an empty snapshot (nothing has been trained yet). Unreadable or
+    /// malformed files are skipped with a warning rather than failing the
+    /// whole snapshot — one damaged weight file must not brick every CLI
+    /// command; the damage surfaces as a "no trained weights" error only
+    /// for consumers of that name.
+    pub fn load_dir(dir: impl Into<PathBuf>) -> Result<WeightSnapshot> {
+        let dir = dir.into();
+        let mut by_name = BTreeMap::new();
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(WeightSnapshot { dir, by_name }),
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("f32") {
+                continue;
+            }
+            let Some(name) = path.file_stem().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            match load_f32(&path, 0) {
+                Ok(v) => {
+                    by_name.insert(name.to_string(), Arc::new(v));
+                }
+                Err(e) => {
+                    crate::log_warn!("snapshot: skipping {}: {e:#}", path.display());
+                }
+            }
+        }
+        Ok(WeightSnapshot { dir, by_name })
+    }
+
+    /// Snapshot the directory a [`WeightStore`] writes to.
+    pub fn of_store(store: &WeightStore) -> Result<WeightSnapshot> {
+        WeightSnapshot::load_dir(store.dir.clone())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    /// Saved names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.by_name.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// A cloned parameter vector for `name` (agents own and mutate their
+    /// copy), with the same length check as [`WeightStore::load`]
+    /// (`expect_len == 0` skips it).
+    pub fn params(&self, name: &str, expect_len: usize) -> Result<Vec<f32>> {
+        let v = self.by_name.get(name).ok_or_else(|| {
+            anyhow!("no trained weights '{name}' in the snapshot of {}", self.dir.display())
+        })?;
+        if expect_len > 0 && v.len() != expect_len {
+            return Err(anyhow!(
+                "{name}: expected {expect_len} f32 values, snapshot holds {} — \
+                 artifacts out of date? (re-run `make artifacts` and retrain)",
+                v.len()
+            ));
+        }
+        Ok(v.as_ref().clone())
     }
 }
 
@@ -98,5 +194,70 @@ mod tests {
     fn missing_file_is_error() {
         let store = WeightStore::new(std::env::temp_dir().join("sparta_weights_test3"));
         assert!(store.load("nope", 0).is_err());
+    }
+
+    /// The snapshot returns bit-identical params to `WeightStore::load` for
+    /// every saved name.
+    #[test]
+    fn snapshot_matches_store_bit_for_bit() {
+        let dir = std::env::temp_dir().join("sparta_weights_snap");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = WeightStore::new(&dir);
+        let vecs: Vec<(String, Vec<f32>)> = (0..4)
+            .map(|k| {
+                let name = format!("algo{k}_te");
+                let data: Vec<f32> =
+                    (0..50 + k).map(|i| (i as f32 * 0.37 - k as f32).sin()).collect();
+                (name, data)
+            })
+            .collect();
+        for (name, data) in &vecs {
+            store.save(name, data).unwrap();
+        }
+        let snap = WeightSnapshot::of_store(&store).unwrap();
+        assert_eq!(snap.len(), vecs.len());
+        for (name, data) in &vecs {
+            assert!(snap.contains(name));
+            let from_store = store.load(name, data.len()).unwrap();
+            let from_snap = snap.params(name, data.len()).unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&from_store), bits(&from_snap), "{name}");
+        }
+        assert_eq!(snap.names(), vecs.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>());
+    }
+
+    /// One damaged file (size not a multiple of 4) is skipped; the rest of
+    /// the snapshot still loads.
+    #[test]
+    fn snapshot_skips_corrupt_files() {
+        let dir = std::env::temp_dir().join("sparta_weights_snap_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = WeightStore::new(&dir);
+        store.save("good", &[1.0, 2.0]).unwrap();
+        std::fs::write(dir.join("bad.f32"), [0u8; 5]).unwrap();
+        let snap = WeightSnapshot::of_store(&store).unwrap();
+        assert!(snap.contains("good"));
+        assert!(!snap.contains("bad"));
+        assert_eq!(snap.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_of_missing_dir_is_empty() {
+        let snap =
+            WeightSnapshot::load_dir(std::env::temp_dir().join("sparta_no_such_dir")).unwrap();
+        assert!(snap.is_empty());
+        assert!(snap.params("anything", 0).is_err());
+    }
+
+    #[test]
+    fn snapshot_length_mismatch_is_error() {
+        let dir = std::env::temp_dir().join("sparta_weights_snap_len");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = WeightStore::new(&dir);
+        store.save("w", &[1.0, 2.0, 3.0]).unwrap();
+        let snap = WeightSnapshot::of_store(&store).unwrap();
+        assert!(snap.params("w", 4).is_err());
+        assert_eq!(snap.params("w", 0).unwrap().len(), 3);
+        assert_eq!(snap.params("w", 3).unwrap(), vec![1.0, 2.0, 3.0]);
     }
 }

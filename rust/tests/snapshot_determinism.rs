@@ -1,0 +1,160 @@
+//! Integration: the read-only `WeightSnapshot` matches the `WeightStore`
+//! bit-for-bit, the artifact-free `linq` fallback trains through the full
+//! scenario-aware pipeline, and the snapshot-backed experiments (Fig. 4,
+//! the generalization matrix) are bit-identical at any `--jobs` count.
+//!
+//! Everything here runs without AOT artifacts — that is the point: the
+//! train → snapshot → evaluate plumbing must be exercisable on a fresh
+//! checkout (and in CI).
+
+use sparta::config::Paths;
+use sparta::coordinator::{Optimizer as _, RewardKind};
+use sparta::experiments::{
+    fig4, generalize, make_optimizer, train_pipeline, Scale, SpartaCtx, TrainSource,
+};
+use sparta::net::Testbed;
+use sparta::runtime::{WeightSnapshot, WeightStore};
+use sparta::scenarios::Scenario;
+
+fn temp_root(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparta_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Snapshot returns bit-identical params to `WeightStore::load` for every
+/// saved name, including scenario-scoped (`@`) ones.
+#[test]
+fn snapshot_equals_store_for_all_saved_names() {
+    let root = temp_root("snap_vs_store");
+    let store = WeightStore::new(root.join("data/weights"));
+    let names = ["linq_te", "linq_fe@lossy-wan", "rppo_te@calm"];
+    for (k, name) in names.iter().enumerate() {
+        let data: Vec<f32> = (0..120 + k).map(|i| ((i * 7 + k) as f32 * 0.123).cos()).collect();
+        store.save(name, &data).unwrap();
+    }
+    let snap = WeightSnapshot::of_store(&store).unwrap();
+    assert_eq!(snap.len(), names.len());
+    for name in names {
+        let a = store.load(name, 0).unwrap();
+        let b = snap.params(name, 0).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a), bits(&b), "{name}");
+    }
+}
+
+/// The artifact-free pipeline end to end: train `linq` on a bare testbed,
+/// then regenerate Fig. 4 for it at 1 and 4 workers — the `AlgoCell`
+/// vectors must be identical (the snapshot is shared, per-cell seeding is
+/// identity-derived).
+#[test]
+fn fig4_cells_identical_across_jobs() {
+    let root = temp_root("fig4_jobs");
+    let paths = Paths::with_root(&root);
+    let ctx = SpartaCtx::load(paths.clone()).unwrap();
+    let tb = Testbed::chameleon();
+    train_pipeline(
+        &ctx,
+        "linq",
+        RewardKind::ThroughputEnergy,
+        TrainSource::Testbed(&tb),
+        Scale::Quick,
+        42,
+    )
+    .unwrap();
+
+    let run = |jobs: usize| {
+        fig4::run(&paths, RewardKind::ThroughputEnergy, &["linq"], Scale::Quick, 7, jobs).unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial, parallel, "fig4 diverged between --jobs 1 and --jobs 4");
+    // Sanity: one sim + one real cell, with real work in both.
+    assert_eq!(serial.len(), 2);
+    for cell in &serial {
+        assert_eq!(cell.algo, "linq");
+        assert!(!cell.throughput_gbps.is_empty());
+        assert!(cell.throughput_gbps.iter().all(|t| t.is_finite() && *t >= 0.0));
+    }
+}
+
+/// Scenario-aware training writes scoped weights, and the generalization
+/// matrix covers every requested (train × eval) cell identically at any
+/// thread count.
+#[test]
+fn generalize_matrix_is_jobs_invariant() {
+    let root = temp_root("gen_jobs");
+    let paths = Paths::with_root(&root);
+    let train_on = vec![
+        Scenario::by_name("calm").unwrap(),
+        Scenario::by_name("nic-limited").unwrap(),
+    ];
+    let eval_on = vec![
+        Scenario::by_name("calm").unwrap(),
+        Scenario::by_name("nic-limited").unwrap(),
+        Scenario::by_name("receiver-limited").unwrap(),
+    ];
+    let run = |jobs: usize| {
+        generalize::run(
+            &paths,
+            "linq",
+            RewardKind::ThroughputEnergy,
+            &train_on,
+            &eval_on,
+            Scale::Quick,
+            9,
+            jobs,
+        )
+        .unwrap()
+    };
+    let a = run(1);
+    let b = run(3);
+    assert_eq!(a, b, "generalize diverged between --jobs 1 and --jobs 3");
+    assert_eq!(a.cells.len(), train_on.len() * eval_on.len());
+    for sc in &eval_on {
+        assert!(a.eval_scenarios.contains(&sc.name.to_string()));
+    }
+    // Scenario training persisted scoped weight files, visible to a fresh
+    // snapshot.
+    let snap = WeightSnapshot::load_dir(paths.weights()).unwrap();
+    for sc in &train_on {
+        let name = sparta::experiments::scoped_weight_name(
+            "linq",
+            RewardKind::ThroughputEnergy,
+            sc.name,
+        );
+        assert!(snap.contains(&name), "missing {name}");
+    }
+    // Cells did real work: throughput is non-negative and finite.
+    for c in &a.cells {
+        assert!(c.mean_throughput_gbps.is_finite() && c.mean_throughput_gbps >= 0.0);
+    }
+}
+
+/// `make_optimizer` resolves DRL-style method names through the shared
+/// snapshot (never the disk store) — the path `sparta compare
+/// --methods linq:te` takes in CI.
+#[test]
+fn method_lane_loads_from_snapshot() {
+    let root = temp_root("lane");
+    let paths = Paths::with_root(&root);
+    let ctx = SpartaCtx::load(paths.clone()).unwrap();
+    let tb = Testbed::chameleon();
+    train_pipeline(
+        &ctx,
+        "linq",
+        RewardKind::ThroughputEnergy,
+        TrainSource::Testbed(&tb),
+        Scale::Quick,
+        3,
+    )
+    .unwrap();
+    // The pre-training snapshot must not see the new weights (read-only,
+    // load-once semantics)...
+    assert!(make_optimizer(&ctx, "linq:te", 5).is_err());
+    // ...while a fresh context does.
+    let ctx = SpartaCtx::load(paths).unwrap();
+    let (opt, _engine, reward) = make_optimizer(&ctx, "linq:te", 5).unwrap();
+    assert_eq!(reward, RewardKind::ThroughputEnergy);
+    assert_eq!(opt.name(), "linq-te");
+}
