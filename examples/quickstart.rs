@@ -10,13 +10,19 @@
 //! Chameleon testbed → k-means emulator → offline R_PPO training through the
 //! AOT-compiled HLO train step → evaluation transfers (SPARTA-FE, SPARTA-T,
 //! rclone) with energy metering — all three stack layers composing.
+//!
+//! Evaluation runs through the step-driven `Session` API: each method's
+//! transfer is admitted as a lane, the session is stepped MI by MI, and a
+//! `ReportSink` rebuilds the summary from the event stream. The same
+//! session can admit lanes mid-run, pause/resume them externally, or cancel
+//! them — see `sparta fleet` for the dynamic-workload experiment.
 
 use anyhow::Result;
 use sparta::config::Paths;
-use sparta::coordinator::{Controller, RewardKind};
+use sparta::coordinator::{Event, LaneSpec, RewardKind, Session, DEFAULT_MAX_MIS};
 use sparta::experiments::{make_optimizer, train_pipeline, Scale, SpartaCtx, TrainSource};
 use sparta::net::Testbed;
-use sparta::telemetry::Table;
+use sparta::telemetry::{ReportSink, Table, TelemetrySink};
 use sparta::transfer::TransferJob;
 
 fn main() -> Result<()> {
@@ -43,8 +49,10 @@ fn main() -> Result<()> {
     // snapshot; refresh it so it sees anything trained above.
     ctx.refresh_snapshot()?;
 
-    // 2. Move 30 x 256 MiB from TACC to UC (simulated 10 Gbps shared WAN)
-    //    with each method and compare.
+    // 2. Move the quick-scale workload from TACC to UC (simulated 10 Gbps
+    //    shared WAN) with each method and compare. One step-driven session
+    //    per method: admit the lane, step to completion, rebuild the report
+    //    from the event stream.
     let (files, bytes) = scale.workload();
     println!(
         "\ntransferring {} x {} MiB on {} ({} Gbps, shared)...",
@@ -57,15 +65,25 @@ fn main() -> Result<()> {
     let mut results: Vec<(String, f64, f64)> = Vec::new();
     for method in ["rclone", "sparta-t", "sparta-fe"] {
         let (opt, engine, reward) = make_optimizer(&ctx, method, seed)?;
-        let mut ctl = Controller::builder(tb.clone())
-            .job(TransferJob::files(files, bytes))
-            .engine(engine)
-            .reward(reward)
-            .seed(seed)
-            .build();
-        let report = ctl.run(opt, seed);
+        let mut session = Session::builder(tb.clone()).seed(seed).build();
+        let lane_id = session.admit(
+            LaneSpec::new(opt, TransferJob::files(files, bytes)).engine(engine).reward(reward),
+        );
+        let mut sink = ReportSink::new();
+        let mut mi_events = 0usize;
+        while session.mi() < DEFAULT_MAX_MIS && !session.is_idle() {
+            for ev in session.step() {
+                if matches!(ev, Event::MiCompleted { .. }) {
+                    mi_events += 1;
+                }
+                sink.on_event(&ev);
+            }
+        }
+        let report = sink.finish(session.time_s());
         let lane = report.lane();
         assert!(lane.completed, "{method}: transfer did not complete");
+        assert_eq!(mi_events, lane.records.len());
+        assert_eq!(session.lane_name(lane_id), Some(lane.name.as_str()));
         table.row(vec![
             method.to_string(),
             format!("{:.2}", lane.avg_throughput_gbps()),

@@ -7,6 +7,6 @@ fn main() {
     let t0 = std::time::Instant::now();
     let rows = table1::run(&Paths::resolve(), &sparta::agents::ALGOS, scale, 42, default_jobs())
         .expect("table1 (run `make artifacts` first)");
-    table1::print(&rows);
+    table1::print(&rows, false);
     println!("\n[bench table1_training: {:.1}s]", t0.elapsed().as_secs_f64());
 }

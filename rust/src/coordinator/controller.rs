@@ -1,45 +1,23 @@
-//! The monitoring-interval control loop.
+//! Batch compatibility layer over the step-driven [`Session`] API.
 //!
-//! A [`Controller`] owns one network substrate (held as `Box<dyn Substrate>`,
-//! so single-bottleneck testbeds, multi-segment scenario topologies and any
-//! future substrate all drive the same loop) and any number of *lanes*
-//! (transfer applications): each lane couples a transfer job, an engine
-//! profile, an energy meter, a reward tracker and an [`Optimizer`]. Each MI
-//! the controller advances the shared network, updates every lane's state
-//! window, feeds rewards back to learning optimizers, and applies their
-//! (cc, p) decisions via pause/resume.
+//! [`Controller`] is the pre-redesign run-to-completion surface: fix every
+//! lane up front, call [`Controller::run_all`], get a [`RunReport`]. It is
+//! now a thin wrapper — lanes are admitted into a [`Session`], the run
+//! drives [`Session::run_to_completion`], and the report is rebuilt from
+//! the event stream by [`crate::telemetry::ReportSink`]. The wrapper
+//! reproduces the batch-era numbers bit-for-bit (the session's MI body is
+//! the old loop, verbatim), so every figure/table regenerates unchanged
+//! while new code targets [`Session`] directly for dynamic admission,
+//! churn workloads and streaming telemetry.
 
-use super::actions::ParamBounds;
-use super::reward::{RewardConfig, RewardKind, RewardTracker};
-use super::state::{FeatureWindow, Observation};
-use super::{Decision, MiContext, Optimizer};
-use crate::energy::EnergyMeter;
+use super::reward::{RewardConfig, RewardKind};
+use super::session::{LaneSpec, Session, SessionBuilder, DEFAULT_MAX_MIS};
+use super::{actions::ParamBounds, MiRecord, Optimizer};
 use crate::net::background::Background;
-use crate::net::{FlowId, NetworkSim, Substrate, Testbed, Topology};
+use crate::net::{Testbed, Topology};
+use crate::telemetry::ReportSink;
 use crate::transfer::{EngineProfile, TransferJob};
 use crate::util::stats;
-
-/// Everything recorded about one lane during one monitoring interval.
-#[derive(Debug, Clone, PartialEq)]
-pub struct MiRecord {
-    pub mi: usize,
-    pub time_s: f64,
-    pub throughput_gbps: f64,
-    pub plr: f64,
-    pub rtt_s: f64,
-    pub energy_j: f64,
-    pub cc: u32,
-    pub p: u32,
-    /// Windowed objective metric (utility score / T-per-E).
-    pub metric: f64,
-    /// Shaped reward handed to the optimizer.
-    pub reward: f64,
-    /// Discrete action taken *at the end of* this MI (None for baselines
-    /// that set (cc, p) directly).
-    pub action: Option<usize>,
-    /// Flattened state window after ingesting this MI.
-    pub state: Vec<f32>,
-}
 
 /// Per-lane results of a run.
 #[derive(Debug, Clone, PartialEq)]
@@ -108,32 +86,10 @@ impl RunReport {
     }
 }
 
-struct Lane {
-    flow: FlowId,
-    optimizer: Box<dyn Optimizer>,
-    job: TransferJob,
-    window: FeatureWindow,
-    reward: RewardTracker,
-    meter: EnergyMeter,
-    cc: u32,
-    p: u32,
-    has_pending_decision: bool,
-    records: Vec<MiRecord>,
-    done: bool,
-    done_at_s: f64,
-}
-
-/// Builder for [`Controller`].
+/// Builder for [`Controller`] (the batch-era knobs, unchanged).
 pub struct ControllerBuilder {
-    testbed: Testbed,
-    background: Option<Background>,
-    topology: Option<Topology>,
-    mi_s: f64,
-    bounds: ParamBounds,
-    reward_cfg: RewardConfig,
+    inner: SessionBuilder,
     max_mis: usize,
-    seed: u64,
-    history: usize,
     // Single-lane convenience state.
     job: Option<TransferJob>,
     reward_kind: RewardKind,
@@ -142,29 +98,29 @@ pub struct ControllerBuilder {
 
 impl ControllerBuilder {
     pub fn background(mut self, bg: Background) -> Self {
-        self.background = Some(bg);
+        self.inner = self.inner.background(bg);
         self
     }
 
     /// Run over a multi-segment path instead of the testbed's single
     /// bottleneck (see [`crate::net::Topology`]; scenario presets use this).
     pub fn topology(mut self, t: Topology) -> Self {
-        self.topology = Some(t);
+        self.inner = self.inner.topology(t);
         self
     }
 
     pub fn mi(mut self, seconds: f64) -> Self {
-        self.mi_s = seconds;
+        self.inner = self.inner.mi(seconds);
         self
     }
 
     pub fn bounds(mut self, b: ParamBounds) -> Self {
-        self.bounds = b;
+        self.inner = self.inner.bounds(b);
         self
     }
 
     pub fn reward_cfg(mut self, c: RewardConfig) -> Self {
-        self.reward_cfg = c;
+        self.inner = self.inner.reward_cfg(c);
         self
     }
 
@@ -174,13 +130,13 @@ impl ControllerBuilder {
     }
 
     pub fn seed(mut self, s: u64) -> Self {
-        self.seed = s;
+        self.inner = self.inner.seed(s);
         self
     }
 
     /// State-window length n (MIs).
     pub fn history(mut self, n: usize) -> Self {
-        self.history = n;
+        self.inner = self.inner.history(n);
         self
     }
 
@@ -200,23 +156,10 @@ impl ControllerBuilder {
     }
 
     pub fn build(self) -> Controller {
-        let mut sim = match &self.topology {
-            Some(t) => NetworkSim::from_topology(self.testbed.clone(), t, self.seed),
-            None => NetworkSim::new(self.testbed.clone(), self.seed),
-        };
-        if let Some(bg) = self.background.clone() {
-            sim = sim.with_background(bg);
-        }
         Controller {
-            sim: Box::new(sim),
-            testbed: self.testbed,
-            mi_s: self.mi_s,
-            bounds: self.bounds,
-            reward_cfg: self.reward_cfg,
+            session: self.inner.build(),
             max_mis: self.max_mis,
-            seed: self.seed,
-            history: self.history,
-            lanes: Vec::new(),
+            sink: ReportSink::new(),
             default_job: self.job,
             default_reward: self.reward_kind,
             default_engine: self.engine,
@@ -224,17 +167,13 @@ impl ControllerBuilder {
     }
 }
 
-/// The MI control loop over one network substrate.
+/// Run-to-completion wrapper over a [`Session`].
 pub struct Controller {
-    sim: Box<dyn Substrate>,
-    testbed: Testbed,
-    mi_s: f64,
-    pub bounds: ParamBounds,
-    reward_cfg: RewardConfig,
+    session: Session,
     max_mis: usize,
-    seed: u64,
-    history: usize,
-    lanes: Vec<Lane>,
+    /// Persistent across `run`/`run_all` calls so sequential batch runs
+    /// accumulate every lane's history, like the pre-redesign controller.
+    sink: ReportSink,
     default_job: Option<TransferJob>,
     default_reward: RewardKind,
     default_engine: EngineProfile,
@@ -243,15 +182,8 @@ pub struct Controller {
 impl Controller {
     pub fn builder(testbed: Testbed) -> ControllerBuilder {
         ControllerBuilder {
-            testbed,
-            background: None,
-            topology: None,
-            mi_s: 1.0,
-            bounds: ParamBounds::default(),
-            reward_cfg: RewardConfig::default(),
-            max_mis: 3000,
-            seed: 1,
-            history: 8,
+            inner: Session::builder(testbed),
+            max_mis: DEFAULT_MAX_MIS,
             job: None,
             reward_kind: RewardKind::ThroughputEnergy,
             engine: EngineProfile::efficient(),
@@ -261,33 +193,14 @@ impl Controller {
     /// Add a transfer lane; returns its index.
     pub fn add_lane(
         &mut self,
-        mut optimizer: Box<dyn Optimizer>,
+        optimizer: Box<dyn Optimizer>,
         job: TransferJob,
         engine: EngineProfile,
         reward_kind: RewardKind,
     ) -> usize {
-        let (cc0, p0) = optimizer.start(&self.bounds);
-        let (cc0, p0) = self.bounds.clamp(cc0, p0);
-        let io = engine.task_io_gbps(self.testbed.task_io_gbps);
-        let flow = self.sim.add_flow(cc0, p0, Some(io));
-        let window = FeatureWindow::new(self.history, self.bounds.cc_max, self.bounds.p_max);
-        let meter_seed = self.seed.wrapping_mul(0x9E37).wrapping_add(self.lanes.len() as u64);
-        let lane = Lane {
-            flow,
-            optimizer,
-            job,
-            window,
-            reward: RewardTracker::new(reward_kind, self.reward_cfg.clone()),
-            meter: EnergyMeter::new(engine.power.clone(), meter_seed),
-            cc: cc0,
-            p: p0,
-            has_pending_decision: false,
-            records: Vec::new(),
-            done: false,
-            done_at_s: 0.0,
-        };
-        self.lanes.push(lane);
-        self.lanes.len() - 1
+        self.session
+            .admit(LaneSpec::new(optimizer, job).engine(engine).reward(reward_kind))
+            .0
     }
 
     /// Single-lane convenience: add `optimizer` with the builder's default
@@ -300,131 +213,24 @@ impl Controller {
         self.run_all()
     }
 
-    /// Run every lane until completion (or `max_mis`).
+    /// Run every lane until completion (or `max_mis` further MIs). Each
+    /// call gets a fresh MI budget and the report accumulates every lane
+    /// ever admitted, so sequential `run()` calls behave like the
+    /// pre-redesign batch controller.
     pub fn run_all(&mut self) -> RunReport {
-        let has_energy = self.testbed.has_energy_counters;
-        for mi in 0..self.max_mis {
-            if self.lanes.iter().all(|l| l.done) {
-                break;
-            }
-            // Cap demand of nearly-finished lanes so they don't overshoot.
-            for lane in &self.lanes {
-                if lane.done {
-                    self.sim.set_demand_cap(lane.flow, 0.0);
-                } else {
-                    let cap = lane.job.remaining_bytes() * 8.0 / self.mi_s / 1e9;
-                    self.sim.set_demand_cap(lane.flow, cap.max(0.05));
-                }
-            }
-            let metrics = self.sim.run_mi(self.mi_s);
-            let time_s = self.sim.time_s();
-            let mut decisions: Vec<Option<(usize, Decision)>> = Vec::new();
-            for (li, lane) in self.lanes.iter_mut().enumerate() {
-                if lane.done {
-                    decisions.push(None);
-                    continue;
-                }
-                let m = &metrics[lane.flow.0];
-                lane.job.advance(m.bytes_delivered);
-                let energy = if has_energy {
-                    lane.meter.record_mi(m.active_streams, m.throughput_gbps, m.duration_s)
-                } else {
-                    f64::NAN
-                };
-                let obs = Observation {
-                    throughput_gbps: m.throughput_gbps,
-                    plr: m.plr,
-                    rtt_s: m.rtt_s,
-                    energy_j: energy,
-                    cc: lane.cc,
-                    p: lane.p,
-                    duration_s: m.duration_s,
-                };
-                lane.window.push(&obs);
-                let out = lane.reward.update(&obs);
-                let done_now = lane.job.is_complete();
-                if lane.has_pending_decision {
-                    lane.optimizer.learn(out.reward, lane.window.state(), done_now);
-                }
-                let mut action = None;
-                if done_now {
-                    lane.done = true;
-                    lane.done_at_s = time_s;
-                    lane.has_pending_decision = false;
-                } else {
-                    let ctx = MiContext {
-                        state: lane.window.state(),
-                        obs: &obs,
-                        cc: lane.cc,
-                        p: lane.p,
-                        bounds: &self.bounds,
-                        mi_index: mi,
-                    };
-                    let d = lane.optimizer.decide(&ctx);
-                    action = d.action;
-                    decisions.push(Some((li, d)));
-                    lane.has_pending_decision = true;
-                }
-                if done_now {
-                    decisions.push(None);
-                }
-                lane.records.push(MiRecord {
-                    mi,
-                    time_s,
-                    throughput_gbps: m.throughput_gbps,
-                    plr: m.plr,
-                    rtt_s: m.rtt_s,
-                    energy_j: energy,
-                    cc: lane.cc,
-                    p: lane.p,
-                    metric: out.metric,
-                    reward: out.reward,
-                    action,
-                    state: lane.window.state().to_vec(),
-                });
-            }
-            // Apply decisions after all lanes observed this MI.
-            for d in decisions.into_iter().flatten() {
-                let (li, dec) = d;
-                let (cc, p) = self.bounds.clamp(dec.cc, dec.p);
-                let lane = &mut self.lanes[li];
-                if cc != lane.cc || p != lane.p {
-                    self.sim.set_cc_p(lane.flow, cc, p);
-                    lane.cc = cc;
-                    lane.p = p;
-                }
-            }
-        }
-        self.report()
+        let budget = self.session.mi() + self.max_mis;
+        self.session.run_to_completion(budget, &mut self.sink);
+        self.sink.clone().finish(self.session.time_s())
     }
 
-    fn report(&self) -> RunReport {
-        let mut lanes = Vec::new();
-        for lane in &self.lanes {
-            lanes.push(LaneReport {
-                name: lane.optimizer.name().to_string(),
-                records: lane.records.clone(),
-                completed: lane.done,
-                duration_s: if lane.done {
-                    lane.done_at_s
-                } else {
-                    self.sim.time_s()
-                },
-                total_energy_j: lane.meter.total_j(),
-                bytes_delivered: lane.job.delivered_bytes(),
-            });
-        }
-        // JFI per MI over lanes active at that MI.
-        let max_len = lanes.iter().map(|l| l.records.len()).max().unwrap_or(0);
-        let mut jfi_series = Vec::with_capacity(max_len);
-        for i in 0..max_len {
-            let thrs: Vec<f64> = lanes
-                .iter()
-                .filter_map(|l| l.records.get(i).map(|r| r.throughput_gbps))
-                .collect();
-            jfi_series.push(stats::jain_fairness(&thrs));
-        }
-        RunReport { lanes, duration_s: self.sim.time_s(), jfi_series }
+    /// The underlying step-driven session (for callers that start batch
+    /// and then need dynamic admission or external pause/resume). Events
+    /// are streamed, not stored: anything consumed through a direct
+    /// `session().step()` call here will not reappear in a later
+    /// [`Controller::run_all`] report — drive the session yourself with a
+    /// [`crate::telemetry::ReportSink`] if you need the full history.
+    pub fn session(&mut self) -> &mut Session {
+        &mut self.session
     }
 }
 
@@ -526,5 +332,54 @@ mod tests {
             ctl.run(Box::new(StaticTool::efficient_static(4, 4)), 5).lane().duration_s
         };
         assert!(run(16) > run(4));
+    }
+
+    /// Sequential `run()` calls on one controller accumulate every lane's
+    /// full history, like the pre-redesign batch API.
+    #[test]
+    fn sequential_runs_accumulate_full_reports() {
+        let mut ctl = Controller::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .job(quick_job())
+            .seed(13)
+            .build();
+        let r1 = ctl.run(Box::new(StaticTool::rclone()), 13);
+        assert_eq!(r1.lanes.len(), 1);
+        assert!(r1.lane().completed);
+        let r2 = ctl.run(Box::new(StaticTool::efficient_static(4, 4)), 13);
+        assert_eq!(r2.lanes.len(), 2);
+        assert!(r2.lanes.iter().all(|l| l.completed), "first lane ghosted");
+        assert_eq!(r2.lanes[0].name, "rclone");
+        assert_eq!(r2.lanes[0].records, r1.lanes[0].records);
+    }
+
+    /// The compat wrapper exposes the session: a batch-built controller can
+    /// still admit lanes dynamically through it. Events consumed by the
+    /// direct `step()` calls are gone from the later `run_all` report (the
+    /// stream is not replayed), so the first lane's job must be big enough
+    /// (16 GB vs the 1.25 GB/MI capacity bound) that it cannot complete —
+    /// and thus emit its terminal event — inside the discarded steps.
+    #[test]
+    fn session_escape_hatch_admits_mid_run() {
+        let mut ctl = Controller::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .max_mis(4000)
+            .build();
+        ctl.add_lane(
+            Box::new(StaticTool::efficient_static(4, 4)),
+            TransferJob::files(64, 256 << 20),
+            EngineProfile::efficient(),
+            RewardKind::ThroughputEnergy,
+        );
+        for _ in 0..5 {
+            ctl.session().step();
+        }
+        ctl.session().admit(LaneSpec::new(
+            Box::new(StaticTool::efficient_static(4, 4)),
+            quick_job(),
+        ));
+        let report = ctl.run_all();
+        assert_eq!(report.lanes.len(), 2);
+        assert!(report.lanes.iter().all(|l| l.completed));
     }
 }

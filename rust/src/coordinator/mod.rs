@@ -9,15 +9,29 @@
 //!    decision in the five-action space (∆cc, ∆p ∈ {0, ±1, ±2}),
 //! 4. applies it by pausing/resuming transfer threads, and
 //! 5. computes the F&E or T/E reward and feeds it back for learning.
+//!
+//! The public API is the step-driven [`Session`] ([`session`]): lanes are
+//! admitted (possibly mid-run) with [`Session::admit`], each
+//! [`Session::step`] advances one MI and streams [`Event`]s into any
+//! [`crate::telemetry::TelemetrySink`], and external
+//! pause/resume/cancel model transfers that come and go. The batch
+//! [`Controller`] ([`controller`]) is the compat wrapper: fixed lanes, run
+//! to completion, [`RunReport`] rebuilt from the event stream by
+//! [`crate::telemetry::ReportSink`] — bit-identical to the pre-redesign
+//! behavior, so every figure regenerates unchanged.
 
 pub mod actions;
 pub mod controller;
 pub mod reward;
+pub mod session;
 pub mod state;
 
 pub use actions::{ActionId, ParamBounds, ACTIONS, N_ACTIONS};
-pub use controller::{Controller, ControllerBuilder, LaneReport, MiRecord, RunReport};
+pub use controller::{Controller, ControllerBuilder, LaneReport, RunReport};
 pub use reward::{RewardConfig, RewardKind, RewardTracker};
+pub use session::{
+    Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session, SessionBuilder, DEFAULT_MAX_MIS,
+};
 pub use state::{FeatureWindow, Observation, FEATURES};
 
 /// A (cc, p) decision returned by an optimizer.
@@ -40,7 +54,8 @@ pub struct MiContext<'a> {
     pub cc: u32,
     pub p: u32,
     pub bounds: &'a ParamBounds,
-    /// Monitoring-interval index within the run (0-based).
+    /// Monitoring-interval index within the session (0-based; lanes
+    /// admitted mid-run see the session-global index).
     pub mi_index: usize,
 }
 

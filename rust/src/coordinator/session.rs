@@ -1,0 +1,686 @@
+//! The step-driven transfer session — the coordinator's public API.
+//!
+//! The paper's agents pause/resume transfer threads as shared-network
+//! conditions change, which only matters when transfers *come and go*. A
+//! [`Session`] therefore exposes the transfer lifecycle instead of a
+//! run-to-completion batch call:
+//!
+//! * [`Session::admit`] adds a lane (a transfer application: job + engine +
+//!   reward + [`Optimizer`]) at any point — before the first MI or mid-run;
+//! * [`Session::step`] advances exactly one monitoring interval and returns
+//!   the [`Event`]s it produced (`Admitted`, `MiCompleted`, `Completed`, …);
+//! * [`Session::pause`] / [`Session::resume`] / [`Session::cancel`] are the
+//!   external control knobs (an operator or workload generator, as opposed
+//!   to the per-lane optimizer's own (cc, p) pause/resume decisions);
+//! * events stream into any [`TelemetrySink`] instead of accumulating
+//!   inside the coordinator — [`crate::telemetry::ReportSink`] rebuilds the
+//!   classic [`super::RunReport`] from the stream, and
+//!   [`Session::run_to_completion`] plus the [`super::Controller`] compat
+//!   wrapper reproduce the pre-redesign batch behavior bit-for-bit.
+//!
+//! Determinism contract: a session is fully determined by its builder
+//! configuration, its seed and the sequence of `admit`/`pause`/`resume`/
+//! `cancel`/`step` calls — the same sequence replays the same event stream
+//! bit-for-bit (per-lane meter seeding is derived from the admission index,
+//! never from call timing).
+
+use super::actions::ParamBounds;
+use super::reward::{RewardConfig, RewardKind, RewardTracker};
+use super::state::{FeatureWindow, Observation};
+use super::{Decision, MiContext, Optimizer};
+use crate::energy::EnergyMeter;
+use crate::net::background::Background;
+use crate::net::{FlowId, NetworkSim, Substrate, Testbed, Topology};
+use crate::telemetry::TelemetrySink;
+use crate::transfer::{EngineProfile, TransferJob};
+
+/// MI budget used by the compat wrapper and the CLI when no explicit cap is
+/// given (matches the pre-redesign controller default).
+pub const DEFAULT_MAX_MIS: usize = 3000;
+
+/// Opaque handle for one admitted lane (index in admission order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LaneId(pub usize);
+
+/// Everything recorded about one lane during one monitoring interval.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MiRecord {
+    pub mi: usize,
+    pub time_s: f64,
+    pub throughput_gbps: f64,
+    pub plr: f64,
+    pub rtt_s: f64,
+    pub energy_j: f64,
+    pub cc: u32,
+    pub p: u32,
+    /// Windowed objective metric (utility score / T-per-E).
+    pub metric: f64,
+    /// Shaped reward handed to the optimizer.
+    pub reward: f64,
+    /// Discrete action taken *at the end of* this MI (None for baselines
+    /// that set (cc, p) directly).
+    pub action: Option<usize>,
+    /// Flattened state window after ingesting this MI.
+    pub state: Vec<f32>,
+    /// Running total of bytes the lane's job has delivered after this MI —
+    /// lets streaming sinks track progress without holding lane state.
+    pub bytes_total: f64,
+    /// Running total of metered energy after this MI (0.0 on testbeds
+    /// without energy counters, where `energy_j` is NaN).
+    pub energy_total_j: f64,
+}
+
+/// What a lane is doing right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneStatus {
+    /// Transferring: observes, learns and decides every MI.
+    Active,
+    /// Externally paused: demand forced to zero, no observations, resumable.
+    Paused,
+    /// Job delivered every byte.
+    Completed,
+    /// Cancelled before completion (left the session).
+    Departed,
+}
+
+/// One entry of the session's event stream, MI-granular.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A lane joined the session (possibly mid-run).
+    Admitted { lane: LaneId, name: String, mi: usize, time_s: f64 },
+    /// A lane observed one monitoring interval.
+    MiCompleted { lane: LaneId, record: MiRecord },
+    /// A lane was externally paused.
+    Paused { lane: LaneId, mi: usize, time_s: f64 },
+    /// A paused lane was resumed.
+    Resumed { lane: LaneId, mi: usize, time_s: f64 },
+    /// A lane's job delivered every byte.
+    Completed { lane: LaneId, mi: usize, time_s: f64, bytes_delivered: f64, total_energy_j: f64 },
+    /// A lane was cancelled before completing.
+    Departed { lane: LaneId, mi: usize, time_s: f64, bytes_delivered: f64, total_energy_j: f64 },
+}
+
+impl Event {
+    /// The lane this event concerns.
+    pub fn lane(&self) -> LaneId {
+        match self {
+            Event::Admitted { lane, .. }
+            | Event::MiCompleted { lane, .. }
+            | Event::Paused { lane, .. }
+            | Event::Resumed { lane, .. }
+            | Event::Completed { lane, .. }
+            | Event::Departed { lane, .. } => *lane,
+        }
+    }
+}
+
+/// Everything one lane needs at admission: the optimizer plus its job,
+/// engine profile and reward shaping.
+pub struct LaneSpec {
+    pub optimizer: Box<dyn Optimizer>,
+    pub job: TransferJob,
+    pub engine: EngineProfile,
+    pub reward: RewardKind,
+    /// Display name for reports; defaults to the optimizer's name.
+    pub name: Option<String>,
+}
+
+impl LaneSpec {
+    pub fn new(optimizer: Box<dyn Optimizer>, job: TransferJob) -> LaneSpec {
+        LaneSpec {
+            optimizer,
+            job,
+            engine: EngineProfile::efficient(),
+            reward: RewardKind::ThroughputEnergy,
+            name: None,
+        }
+    }
+
+    pub fn engine(mut self, e: EngineProfile) -> Self {
+        self.engine = e;
+        self
+    }
+
+    pub fn reward(mut self, k: RewardKind) -> Self {
+        self.reward = k;
+        self
+    }
+
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+}
+
+struct SessionLane {
+    name: String,
+    flow: FlowId,
+    optimizer: Box<dyn Optimizer>,
+    job: TransferJob,
+    window: FeatureWindow,
+    reward: RewardTracker,
+    meter: EnergyMeter,
+    cc: u32,
+    p: u32,
+    has_pending_decision: bool,
+    status: LaneStatus,
+}
+
+/// Builder for [`Session`] (same knobs the pre-redesign controller took).
+pub struct SessionBuilder {
+    testbed: Testbed,
+    background: Option<Background>,
+    topology: Option<Topology>,
+    mi_s: f64,
+    bounds: ParamBounds,
+    reward_cfg: RewardConfig,
+    seed: u64,
+    history: usize,
+}
+
+impl SessionBuilder {
+    pub fn background(mut self, bg: Background) -> Self {
+        self.background = Some(bg);
+        self
+    }
+
+    /// Run over a multi-segment path instead of the testbed's single
+    /// bottleneck (see [`crate::net::Topology`]; scenario presets use this).
+    pub fn topology(mut self, t: Topology) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
+    pub fn mi(mut self, seconds: f64) -> Self {
+        self.mi_s = seconds;
+        self
+    }
+
+    pub fn bounds(mut self, b: ParamBounds) -> Self {
+        self.bounds = b;
+        self
+    }
+
+    pub fn reward_cfg(mut self, c: RewardConfig) -> Self {
+        self.reward_cfg = c;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// State-window length n (MIs).
+    pub fn history(mut self, n: usize) -> Self {
+        self.history = n;
+        self
+    }
+
+    pub fn build(self) -> Session {
+        let mut sim = match &self.topology {
+            Some(t) => NetworkSim::from_topology(self.testbed.clone(), t, self.seed),
+            None => NetworkSim::new(self.testbed.clone(), self.seed),
+        };
+        if let Some(bg) = self.background.clone() {
+            sim = sim.with_background(bg);
+        }
+        Session {
+            sim: Box::new(sim),
+            testbed: self.testbed,
+            mi_s: self.mi_s,
+            bounds: self.bounds,
+            reward_cfg: self.reward_cfg,
+            seed: self.seed,
+            history: self.history,
+            mi: 0,
+            lanes: Vec::new(),
+            pending: Vec::new(),
+        }
+    }
+}
+
+/// The MI control loop over one network substrate, driven step by step.
+pub struct Session {
+    sim: Box<dyn Substrate>,
+    testbed: Testbed,
+    mi_s: f64,
+    bounds: ParamBounds,
+    reward_cfg: RewardConfig,
+    seed: u64,
+    history: usize,
+    /// Next monitoring-interval index (number of MIs run so far).
+    mi: usize,
+    lanes: Vec<SessionLane>,
+    /// Admission/control events queued since the last `step`.
+    pending: Vec<Event>,
+}
+
+impl Session {
+    pub fn builder(testbed: Testbed) -> SessionBuilder {
+        SessionBuilder {
+            testbed,
+            background: None,
+            topology: None,
+            mi_s: 1.0,
+            bounds: ParamBounds::default(),
+            reward_cfg: RewardConfig::default(),
+            seed: 1,
+            history: 8,
+        }
+    }
+
+    /// Admit a transfer lane (legal before the first MI or mid-run); the
+    /// returned id is its index in admission order.
+    pub fn admit(&mut self, spec: LaneSpec) -> LaneId {
+        let LaneSpec { mut optimizer, job, engine, reward, name } = spec;
+        let (cc0, p0) = optimizer.start(&self.bounds);
+        let (cc0, p0) = self.bounds.clamp(cc0, p0);
+        let io = engine.task_io_gbps(self.testbed.task_io_gbps);
+        let flow = self.sim.add_flow(cc0, p0, Some(io));
+        let window = FeatureWindow::new(self.history, self.bounds.cc_max, self.bounds.p_max);
+        // Meter seeding derives from the admission index, so replaying the
+        // same admission sequence reproduces the same energy noise.
+        let meter_seed = self.seed.wrapping_mul(0x9E37).wrapping_add(self.lanes.len() as u64);
+        let name = name.unwrap_or_else(|| optimizer.name().to_string());
+        let id = LaneId(self.lanes.len());
+        self.pending.push(Event::Admitted {
+            lane: id,
+            name: name.clone(),
+            mi: self.mi,
+            time_s: self.sim.time_s(),
+        });
+        self.lanes.push(SessionLane {
+            name,
+            flow,
+            optimizer,
+            job,
+            window,
+            reward: RewardTracker::new(reward, self.reward_cfg.clone()),
+            meter: EnergyMeter::new(engine.power.clone(), meter_seed),
+            cc: cc0,
+            p: p0,
+            has_pending_decision: false,
+            status: LaneStatus::Active,
+        });
+        id
+    }
+
+    /// Externally pause a lane: its demand drops to zero next MI and it
+    /// stops observing/learning until resumed. Returns false if the lane is
+    /// unknown or not active.
+    pub fn pause(&mut self, id: LaneId) -> bool {
+        let Some(lane) = self.lanes.get_mut(id.0) else {
+            return false;
+        };
+        if lane.status != LaneStatus::Active {
+            return false;
+        }
+        lane.status = LaneStatus::Paused;
+        // Drop any pending decision: the first post-resume observation must
+        // not be credited to an action chosen before the pause gap.
+        lane.has_pending_decision = false;
+        self.sim.set_demand_cap(lane.flow, 0.0);
+        self.pending.push(Event::Paused { lane: id, mi: self.mi, time_s: self.sim.time_s() });
+        true
+    }
+
+    /// Resume an externally paused lane. Returns false if it is not paused.
+    pub fn resume(&mut self, id: LaneId) -> bool {
+        let Some(lane) = self.lanes.get_mut(id.0) else {
+            return false;
+        };
+        if lane.status != LaneStatus::Paused {
+            return false;
+        }
+        lane.status = LaneStatus::Active;
+        self.pending.push(Event::Resumed { lane: id, mi: self.mi, time_s: self.sim.time_s() });
+        true
+    }
+
+    /// Cancel a lane before completion (it departs the session; its flow's
+    /// demand drops to zero). Returns false if it already ended.
+    pub fn cancel(&mut self, id: LaneId) -> bool {
+        let Some(lane) = self.lanes.get_mut(id.0) else {
+            return false;
+        };
+        if !matches!(lane.status, LaneStatus::Active | LaneStatus::Paused) {
+            return false;
+        }
+        lane.status = LaneStatus::Departed;
+        self.sim.set_demand_cap(lane.flow, 0.0);
+        self.pending.push(Event::Departed {
+            lane: id,
+            mi: self.mi,
+            time_s: self.sim.time_s(),
+            bytes_delivered: lane.job.delivered_bytes(),
+            total_energy_j: lane.meter.total_j(),
+        });
+        true
+    }
+
+    /// Advance exactly one monitoring interval and return the events it
+    /// produced (queued admission/control events first, in call order).
+    pub fn step(&mut self) -> Vec<Event> {
+        let mut events = std::mem::take(&mut self.pending);
+        self.step_mi(&mut events);
+        events
+    }
+
+    /// [`Session::step`], streaming the events into `sink`.
+    pub fn step_with(&mut self, sink: &mut dyn TelemetrySink) {
+        for ev in self.step() {
+            sink.on_event(&ev);
+        }
+    }
+
+    /// Compat driver: step until every lane completed/departed or `max_mis`
+    /// MIs have run, streaming all events into `sink`. Reproduces the
+    /// pre-redesign `Controller::run_all` loop bit-for-bit when all lanes
+    /// are admitted up front.
+    pub fn run_to_completion(&mut self, max_mis: usize, sink: &mut dyn TelemetrySink) {
+        while self.mi < max_mis {
+            if self.is_idle() {
+                break;
+            }
+            self.step_with(sink);
+        }
+        // Flush control events queued after the last step (e.g. a trailing
+        // cancel), so the sink sees the complete stream.
+        for ev in std::mem::take(&mut self.pending) {
+            sink.on_event(&ev);
+        }
+    }
+
+    /// One monitoring interval: demand caps → substrate MI → per-lane
+    /// observe/learn/decide → apply decisions. The body mirrors the
+    /// pre-redesign batch loop exactly (same arithmetic, same call order),
+    /// which is what keeps the compat path bit-identical.
+    fn step_mi(&mut self, events: &mut Vec<Event>) {
+        let has_energy = self.testbed.has_energy_counters;
+        // Cap demand of nearly-finished lanes so they don't overshoot;
+        // paused/ended lanes hold zero demand.
+        for lane in &self.lanes {
+            if lane.status != LaneStatus::Active {
+                self.sim.set_demand_cap(lane.flow, 0.0);
+            } else {
+                let cap = lane.job.remaining_bytes() * 8.0 / self.mi_s / 1e9;
+                self.sim.set_demand_cap(lane.flow, cap.max(0.05));
+            }
+        }
+        let metrics = self.sim.run_mi(self.mi_s);
+        let time_s = self.sim.time_s();
+        let mi = self.mi;
+        let mut decisions: Vec<(usize, Decision)> = Vec::new();
+        for (li, lane) in self.lanes.iter_mut().enumerate() {
+            if lane.status != LaneStatus::Active {
+                continue;
+            }
+            let m = &metrics[lane.flow.0];
+            lane.job.advance(m.bytes_delivered);
+            let energy = if has_energy {
+                lane.meter.record_mi(m.active_streams, m.throughput_gbps, m.duration_s)
+            } else {
+                f64::NAN
+            };
+            let obs = Observation {
+                throughput_gbps: m.throughput_gbps,
+                plr: m.plr,
+                rtt_s: m.rtt_s,
+                energy_j: energy,
+                cc: lane.cc,
+                p: lane.p,
+                duration_s: m.duration_s,
+            };
+            lane.window.push(&obs);
+            let out = lane.reward.update(&obs);
+            let done_now = lane.job.is_complete();
+            if lane.has_pending_decision {
+                lane.optimizer.learn(out.reward, lane.window.state(), done_now);
+            }
+            let mut action = None;
+            if done_now {
+                lane.status = LaneStatus::Completed;
+                lane.has_pending_decision = false;
+            } else {
+                let ctx = MiContext {
+                    state: lane.window.state(),
+                    obs: &obs,
+                    cc: lane.cc,
+                    p: lane.p,
+                    bounds: &self.bounds,
+                    mi_index: mi,
+                };
+                let d = lane.optimizer.decide(&ctx);
+                action = d.action;
+                decisions.push((li, d));
+                lane.has_pending_decision = true;
+            }
+            events.push(Event::MiCompleted {
+                lane: LaneId(li),
+                record: MiRecord {
+                    mi,
+                    time_s,
+                    throughput_gbps: m.throughput_gbps,
+                    plr: m.plr,
+                    rtt_s: m.rtt_s,
+                    energy_j: energy,
+                    cc: lane.cc,
+                    p: lane.p,
+                    metric: out.metric,
+                    reward: out.reward,
+                    action,
+                    state: lane.window.state().to_vec(),
+                    bytes_total: lane.job.delivered_bytes(),
+                    energy_total_j: lane.meter.total_j(),
+                },
+            });
+            if done_now {
+                events.push(Event::Completed {
+                    lane: LaneId(li),
+                    mi,
+                    time_s,
+                    bytes_delivered: lane.job.delivered_bytes(),
+                    total_energy_j: lane.meter.total_j(),
+                });
+            }
+        }
+        // Apply decisions after all lanes observed this MI.
+        for (li, dec) in decisions {
+            let (cc, p) = self.bounds.clamp(dec.cc, dec.p);
+            let lane = &mut self.lanes[li];
+            if cc != lane.cc || p != lane.p {
+                self.sim.set_cc_p(lane.flow, cc, p);
+                lane.cc = cc;
+                lane.p = p;
+            }
+        }
+        self.mi += 1;
+    }
+
+    /// True when every admitted lane has completed or departed (vacuously
+    /// true for an empty session).
+    pub fn is_idle(&self) -> bool {
+        self.lanes
+            .iter()
+            .all(|l| matches!(l.status, LaneStatus::Completed | LaneStatus::Departed))
+    }
+
+    /// Monitoring intervals run so far (the next `step` runs MI `mi()`).
+    pub fn mi(&self) -> usize {
+        self.mi
+    }
+
+    /// Simulated time elapsed, seconds.
+    pub fn time_s(&self) -> f64 {
+        self.sim.time_s()
+    }
+
+    /// Number of admitted lanes (any status).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lanes currently active or paused (still in the system).
+    pub fn lanes_in_flight(&self) -> usize {
+        self.lanes
+            .iter()
+            .filter(|l| matches!(l.status, LaneStatus::Active | LaneStatus::Paused))
+            .count()
+    }
+
+    pub fn status(&self, id: LaneId) -> Option<LaneStatus> {
+        self.lanes.get(id.0).map(|l| l.status)
+    }
+
+    pub fn lane_name(&self, id: LaneId) -> Option<&str> {
+        self.lanes.get(id.0).map(|l| l.name.as_str())
+    }
+
+    pub fn bounds(&self) -> &ParamBounds {
+        &self.bounds
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        &self.testbed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::StaticTool;
+    use crate::telemetry::EventLog;
+
+    fn quick_job() -> TransferJob {
+        // 2 GB: cannot complete within one MI on a 10 Gbps testbed (hard
+        // capacity bound 1.25 GB/MI), so pause/cancel timing is safe.
+        TransferJob::files(8, 256 << 20)
+    }
+
+    fn static_spec() -> LaneSpec {
+        LaneSpec::new(Box::new(StaticTool::efficient_static(4, 4)), quick_job())
+    }
+
+    #[test]
+    fn step_streams_admission_then_mi_events() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(3)
+            .build();
+        let id = s.admit(static_spec());
+        let events = s.step();
+        assert!(matches!(events[0], Event::Admitted { lane, .. } if lane == id));
+        let is_mi0 = match &events[1] {
+            Event::MiCompleted { lane, record } => *lane == id && record.mi == 0,
+            _ => false,
+        };
+        assert!(is_mi0);
+        assert_eq!(s.mi(), 1);
+    }
+
+    #[test]
+    fn lane_completes_with_terminal_event() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(3)
+            .build();
+        let id = s.admit(static_spec());
+        let mut log = EventLog::default();
+        s.run_to_completion(DEFAULT_MAX_MIS, &mut log);
+        assert_eq!(s.status(id), Some(LaneStatus::Completed));
+        let completed = log.events.iter().any(|e| {
+            matches!(e, Event::Completed { lane, bytes_delivered, .. }
+                if *lane == id && *bytes_delivered > 0.0)
+        });
+        assert!(completed, "no Completed event in stream");
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn mid_run_admission_is_legal_and_fair() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(5)
+            .build();
+        let first = s.admit(static_spec());
+        for _ in 0..10 {
+            s.step();
+        }
+        let late = s.admit(LaneSpec::new(
+            Box::new(StaticTool::efficient_static(4, 4)),
+            quick_job(),
+        ));
+        let events = s.step();
+        let late_ok = match &events[0] {
+            Event::Admitted { lane, mi, time_s, .. } => {
+                *lane == late && *mi == 10 && *time_s > 0.0
+            }
+            _ => false,
+        };
+        assert!(late_ok);
+        let mut log = EventLog::default();
+        s.run_to_completion(DEFAULT_MAX_MIS, &mut log);
+        assert_eq!(s.status(first), Some(LaneStatus::Completed));
+        assert_eq!(s.status(late), Some(LaneStatus::Completed));
+    }
+
+    #[test]
+    fn pause_resume_gates_progress() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(7)
+            .build();
+        let id = s.admit(static_spec());
+        s.step();
+        assert!(s.pause(id));
+        assert!(!s.pause(id), "double pause must be rejected");
+        assert_eq!(s.status(id), Some(LaneStatus::Paused));
+        // While paused, the lane produces no MI records.
+        let paused_events = s.step();
+        assert!(paused_events
+            .iter()
+            .all(|e| !matches!(e, Event::MiCompleted { .. })));
+        assert!(s.resume(id));
+        let resumed_events = s.step();
+        assert!(resumed_events
+            .iter()
+            .any(|e| matches!(e, Event::MiCompleted { .. })));
+    }
+
+    #[test]
+    fn cancel_departs_with_partial_bytes() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(9)
+            .build();
+        // Big enough that three MIs cannot finish it.
+        let job = TransferJob::files(64, 256 << 20);
+        let total = job.total_bytes();
+        let id = s.admit(LaneSpec::new(Box::new(StaticTool::efficient_static(4, 4)), job));
+        for _ in 0..3 {
+            s.step();
+        }
+        assert!(s.cancel(id));
+        assert!(!s.cancel(id), "double cancel must be rejected");
+        let events = s.step();
+        let departed = events.iter().find_map(|e| match e {
+            Event::Departed { lane, bytes_delivered, .. } if *lane == id => {
+                Some(*bytes_delivered)
+            }
+            _ => None,
+        });
+        let bytes = departed.expect("no Departed event");
+        assert!(bytes > 0.0 && bytes < total);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn empty_session_is_idle_and_steps_advance_time() {
+        let mut s = Session::builder(Testbed::chameleon()).build();
+        assert!(s.is_idle());
+        s.step();
+        assert!(s.time_s() > 0.0);
+        assert_eq!(s.lane_count(), 0);
+    }
+}

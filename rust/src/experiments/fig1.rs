@@ -12,6 +12,7 @@ use crate::net::background::Background;
 use crate::net::{NetworkSim, Substrate, Testbed};
 use crate::scenarios::Scenario;
 use crate::telemetry::Table;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// One sweep point.
@@ -97,6 +98,25 @@ pub fn sweep_scenario(scenario: &Scenario, grid: &[u32], seed: u64, jobs: usize)
             power_w,
         }
     })
+}
+
+/// Machine-readable report (for `--out`; `--scenario all` concatenates the
+/// registry's sweeps into one combined array, keyed by the `regime` field).
+pub fn to_json(points: &[SweepPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|pt| {
+                Json::obj(vec![
+                    ("regime", Json::from(pt.regime.clone())),
+                    ("cc", Json::from(pt.cc as usize)),
+                    ("p", Json::from(pt.p as usize)),
+                    ("throughput_gbps", Json::from(pt.throughput_gbps)),
+                    ("power_w", Json::from(pt.power_w)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 /// Render the sweep as the two Fig.-1 panels (throughput, power).

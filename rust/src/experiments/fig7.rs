@@ -4,10 +4,10 @@
 use super::common::{make_optimizer, Scale, SpartaCtx};
 use super::runner;
 use crate::config::Paths;
-use crate::coordinator::Controller;
+use crate::coordinator::{LaneSpec, Session, DEFAULT_MAX_MIS};
 use crate::net::Testbed;
 use crate::runtime::WeightSnapshot;
-use crate::telemetry::Table;
+use crate::telemetry::{ReportSink, Table};
 use crate::transfer::TransferJob;
 use crate::util::stats;
 use anyhow::{anyhow, Result};
@@ -61,12 +61,16 @@ pub fn run_scenario(
     seed: u64,
 ) -> Result<Scenario> {
     let (files, bytes) = scale.workload();
-    let mut ctl = Controller::builder(Testbed::chameleon()).seed(seed).build();
+    let mut session = Session::builder(Testbed::chameleon()).seed(seed).build();
     for (i, method) in methods.iter().enumerate() {
         let (opt, engine, reward) = make_optimizer(ctx, method, seed ^ (i as u64 + 1))?;
-        ctl.add_lane(opt, TransferJob::files(files, bytes), engine, reward);
+        session.admit(
+            LaneSpec::new(opt, TransferJob::files(files, bytes)).engine(engine).reward(reward),
+        );
     }
-    let report = ctl.run_all();
+    let mut sink = ReportSink::new();
+    session.run_to_completion(DEFAULT_MAX_MIS, &mut sink);
+    let report = sink.finish(session.time_s());
     Ok(Scenario {
         name: name.to_string(),
         methods: methods.iter().map(|s| s.to_string()).collect(),

@@ -1,0 +1,351 @@
+//! `sparta fleet` — N transfer applications joining and leaving a shared
+//! bottleneck under a seeded [`ArrivalSchedule`].
+//!
+//! This is the experiment the step-driven [`crate::coordinator::Session`]
+//! API exists for: lanes
+//! are admitted mid-run as the arrival process fires, force-departed when
+//! their lifetime expires, and the report is computed from the event stream
+//! (per-epoch Jain's fairness over concurrently active lanes, energy per
+//! delivered gigabyte, completion-time distribution). Trials shard over the
+//! parallel runner with identity-derived seeds, so reports are
+//! bit-identical at any `--jobs` count.
+
+use super::common::{make_optimizer, Scale, SpartaCtx};
+use super::runner;
+use crate::config::Paths;
+use crate::coordinator::{Event, LaneId, LaneSpec};
+use crate::runtime::WeightSnapshot;
+use crate::scenarios::ArrivalSchedule;
+use crate::telemetry::Table;
+use crate::transfer::TransferJob;
+use crate::util::json::Json;
+use crate::util::stats;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Fairness is reported per epoch of this many MIs.
+pub const EPOCH_MIS: usize = 20;
+
+/// Final accounting for one admitted lane.
+#[derive(Debug, Clone)]
+pub struct LaneOutcome {
+    pub name: String,
+    pub admitted_mi: usize,
+    pub completed: bool,
+    /// True when the schedule force-departed the lane before completion.
+    pub departed_early: bool,
+    /// Admission-to-end time, seconds (end = completion, departure, or the
+    /// horizon for lanes still running).
+    pub duration_s: f64,
+    pub bytes_gb: f64,
+    pub energy_kj: f64,
+}
+
+/// One trial: a full session over the arrival schedule.
+#[derive(Debug, Clone)]
+pub struct FleetTrial {
+    pub trial: usize,
+    pub lanes: Vec<LaneOutcome>,
+    /// Jain's fairness per epoch over lanes active in that epoch (mean
+    /// per-lane throughput within the epoch).
+    pub epoch_jfi: Vec<f64>,
+    /// Total metered energy / total delivered GB, J/GB.
+    pub energy_per_gb_j: f64,
+    /// Completion times of lanes that finished, seconds, ascending.
+    pub completion_s: Vec<f64>,
+}
+
+/// The full fleet report.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub schedule: String,
+    pub scenario: String,
+    pub methods: Vec<String>,
+    pub horizon_mis: usize,
+    pub trials: Vec<FleetTrial>,
+}
+
+/// Run `scale.trials()` independent fleet trials of `schedule`, cycling
+/// lane optimizers through `methods` in arrival order, sharded over `jobs`
+/// workers. Takes [`Paths`] (not a loaded context): workers each build
+/// their own [`SpartaCtx`] over one shared read-only weight snapshot.
+pub fn run(
+    paths: &Paths,
+    schedule: &ArrivalSchedule,
+    methods: &[String],
+    scale: Scale,
+    seed: u64,
+    jobs: usize,
+) -> Result<FleetReport> {
+    if methods.is_empty() {
+        return Err(anyhow!("fleet needs at least one method"));
+    }
+    let trials: Vec<usize> = (0..scale.trials()).collect();
+    let snapshot = Arc::new(WeightSnapshot::load_dir(paths.weights())?);
+    let worker_paths = paths.clone();
+    let outs: Vec<Result<FleetTrial>> = runner::parallel_map_with(
+        &trials,
+        jobs,
+        move || SpartaCtx::with_snapshot(worker_paths.clone(), snapshot.clone()),
+        |worker_ctx, _i, &trial| -> Result<FleetTrial> {
+            let ctx = worker_ctx
+                .as_ref()
+                .map_err(|e| anyhow!("loading worker context: {e:#}"))?;
+            // Identity-derived: the trial seed depends only on
+            // (base seed, schedule, trial index).
+            let trial_seed =
+                runner::cell_seed(seed, &format!("fleet/{}", schedule.name), trial as u64);
+            run_trial(ctx, schedule, methods, trial, trial_seed)
+        },
+    );
+    let mut out_trials = Vec::new();
+    for out in outs {
+        out_trials.push(out?);
+    }
+    Ok(FleetReport {
+        schedule: schedule.name.to_string(),
+        scenario: schedule.scenario.name.to_string(),
+        methods: methods.to_vec(),
+        horizon_mis: schedule.horizon_mis,
+        trials: out_trials,
+    })
+}
+
+/// One seeded session over the schedule's arrival process.
+fn run_trial(
+    ctx: &SpartaCtx,
+    schedule: &ArrivalSchedule,
+    methods: &[String],
+    trial: usize,
+    trial_seed: u64,
+) -> Result<FleetTrial> {
+    let arrivals = schedule.arrivals(trial_seed);
+    let mut session = schedule.scenario.session().seed(trial_seed).build();
+
+    // Per-lane trackers, indexed by LaneId (admission order).
+    let mut admitted_mi: Vec<usize> = Vec::new();
+    let mut admitted_s: Vec<f64> = Vec::new();
+    let mut deadline: Vec<Option<usize>> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    let mut ended: Vec<Option<(bool, f64, f64, f64)>> = Vec::new(); // (completed, end_s, bytes, energy_j)
+    let mut running_bytes: Vec<f64> = Vec::new();
+    let mut running_energy: Vec<f64> = Vec::new();
+    // epoch_thr[epoch][lane] = (throughput sum, samples).
+    let mut epoch_thr: Vec<Vec<(f64, usize)>> = Vec::new();
+
+    let mut next_arrival = 0usize;
+    for mi in 0..schedule.horizon_mis {
+        while next_arrival < arrivals.len() && arrivals[next_arrival].at_mi <= mi {
+            let a = &arrivals[next_arrival];
+            let k = next_arrival;
+            let method = &methods[k % methods.len()];
+            // Lane seeding depends only on (trial seed, method, arrival index).
+            let lane_seed = runner::cell_seed(trial_seed, method, k as u64);
+            let (opt, engine, reward) = make_optimizer(ctx, method, lane_seed)?;
+            let name = format!("{method}#{k}");
+            session.admit(
+                LaneSpec::new(opt, TransferJob::files(a.files, a.file_bytes))
+                    .engine(engine)
+                    .reward(reward)
+                    .named(name.clone()),
+            );
+            admitted_mi.push(mi);
+            admitted_s.push(session.time_s());
+            deadline.push(a.max_lifetime_mis.map(|l| mi + l));
+            names.push(name);
+            ended.push(None);
+            running_bytes.push(0.0);
+            running_energy.push(0.0);
+            next_arrival += 1;
+        }
+        for (li, d) in deadline.iter_mut().enumerate() {
+            if d.is_some_and(|dl| mi >= dl) {
+                // Cancel returns false (and emits nothing) if the lane
+                // already completed; either way the deadline is spent.
+                session.cancel(LaneId(li));
+                *d = None;
+            }
+        }
+        for ev in session.step() {
+            match &ev {
+                Event::MiCompleted { lane, record } => {
+                    running_bytes[lane.0] = record.bytes_total;
+                    running_energy[lane.0] = record.energy_total_j;
+                    let e = record.mi / EPOCH_MIS;
+                    while epoch_thr.len() <= e {
+                        epoch_thr.push(Vec::new());
+                    }
+                    let row = &mut epoch_thr[e];
+                    while row.len() <= lane.0 {
+                        row.push((0.0, 0));
+                    }
+                    row[lane.0].0 += record.throughput_gbps;
+                    row[lane.0].1 += 1;
+                }
+                Event::Completed { lane, time_s, bytes_delivered, total_energy_j, .. } => {
+                    ended[lane.0] = Some((true, *time_s, *bytes_delivered, *total_energy_j));
+                }
+                Event::Departed { lane, time_s, bytes_delivered, total_energy_j, .. } => {
+                    ended[lane.0] = Some((false, *time_s, *bytes_delivered, *total_energy_j));
+                }
+                _ => {}
+            }
+        }
+        if next_arrival >= arrivals.len() && session.is_idle() {
+            break;
+        }
+    }
+
+    let final_s = session.time_s();
+    let mut lanes = Vec::new();
+    let mut total_bytes = 0.0;
+    let mut total_energy_j = 0.0;
+    let mut completion_s = Vec::new();
+    for li in 0..names.len() {
+        let (completed, end_s, bytes, energy_j) = match ended[li] {
+            Some(e) => e,
+            // Still running at the horizon.
+            None => (false, final_s, running_bytes[li], running_energy[li]),
+        };
+        let duration_s = end_s - admitted_s[li];
+        if completed {
+            completion_s.push(duration_s);
+        }
+        total_bytes += bytes;
+        total_energy_j += energy_j;
+        lanes.push(LaneOutcome {
+            name: names[li].clone(),
+            admitted_mi: admitted_mi[li],
+            completed,
+            departed_early: !completed && ended[li].is_some(),
+            duration_s,
+            bytes_gb: bytes / 1e9,
+            energy_kj: energy_j / 1000.0,
+        });
+    }
+    completion_s.sort_by(f64::total_cmp);
+    // Epochs where no lane was active are skipped rather than scored as
+    // vacuously perfect fairness (same rule as `ReportSink::finish`).
+    let epoch_jfi: Vec<f64> = epoch_thr
+        .iter()
+        .filter_map(|row| {
+            let means: Vec<f64> = row
+                .iter()
+                .filter(|(_, n)| *n > 0)
+                .map(|(s, n)| s / *n as f64)
+                .collect();
+            if means.is_empty() {
+                None
+            } else {
+                Some(stats::jain_fairness(&means))
+            }
+        })
+        .collect();
+    let energy_per_gb_j = if total_bytes > 0.0 {
+        total_energy_j / (total_bytes / 1e9)
+    } else {
+        0.0
+    };
+    crate::log_info!(
+        "fleet {} trial {}: {} lanes, {} completed, jfi {:.3}, {:.0} J/GB",
+        schedule.name,
+        trial,
+        lanes.len(),
+        completion_s.len(),
+        stats::mean(&epoch_jfi),
+        energy_per_gb_j
+    );
+    Ok(FleetTrial { trial, lanes, epoch_jfi, energy_per_gb_j, completion_s })
+}
+
+/// Paper-style summary: one row per trial plus per-lane detail at verbose.
+pub fn print(report: &FleetReport) {
+    println!(
+        "\nFleet — {} arrivals on '{}' ({} MI horizon, methods: {}):",
+        report.schedule,
+        report.scenario,
+        report.horizon_mis,
+        report.methods.join(",")
+    );
+    let mut table = Table::new(&[
+        "trial",
+        "lanes",
+        "completed",
+        "departed",
+        "mean JFI",
+        "J/GB",
+        "p50 done s",
+        "p90 done s",
+    ]);
+    let pct = |xs: &[f64], q: f64| {
+        if xs.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.0}", stats::percentile_sorted(xs, q))
+        }
+    };
+    for t in &report.trials {
+        let departed = t.lanes.iter().filter(|l| l.departed_early).count();
+        table.row(vec![
+            t.trial.to_string(),
+            t.lanes.len().to_string(),
+            t.completion_s.len().to_string(),
+            departed.to_string(),
+            format!("{:.3}", stats::mean(&t.epoch_jfi)),
+            format!("{:.0}", t.energy_per_gb_j),
+            pct(&t.completion_s, 0.50),
+            pct(&t.completion_s, 0.90),
+        ]);
+    }
+    table.print();
+}
+
+/// Machine-readable report (for `--out` and the CI determinism check).
+pub fn to_json(report: &FleetReport) -> Json {
+    Json::obj(vec![
+        ("schedule", Json::from(report.schedule.clone())),
+        ("scenario", Json::from(report.scenario.clone())),
+        (
+            "methods",
+            Json::arr_str(&report.methods.iter().map(|m| m.as_str()).collect::<Vec<_>>()),
+        ),
+        ("horizon_mis", Json::from(report.horizon_mis)),
+        ("epoch_mis", Json::from(EPOCH_MIS)),
+        (
+            "trials",
+            Json::Arr(
+                report
+                    .trials
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("trial", Json::from(t.trial)),
+                            ("epoch_jfi", Json::arr_f64(&t.epoch_jfi)),
+                            ("energy_per_gb_j", Json::from(t.energy_per_gb_j)),
+                            ("completion_s", Json::arr_f64(&t.completion_s)),
+                            (
+                                "lanes",
+                                Json::Arr(
+                                    t.lanes
+                                        .iter()
+                                        .map(|l| {
+                                            Json::obj(vec![
+                                                ("name", Json::from(l.name.clone())),
+                                                ("admitted_mi", Json::from(l.admitted_mi)),
+                                                ("completed", Json::from(l.completed)),
+                                                ("departed_early", Json::from(l.departed_early)),
+                                                ("duration_s", Json::from(l.duration_s)),
+                                                ("bytes_gb", Json::from(l.bytes_gb)),
+                                                ("energy_kj", Json::from(l.energy_kj)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

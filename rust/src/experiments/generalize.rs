@@ -184,6 +184,58 @@ pub fn run(
     })
 }
 
+/// Per-train-row digest of the matrix: how well the policy does at home,
+/// how much it loses in transfer, and where it is worst.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SummaryRow {
+    pub train_scenario: String,
+    /// Mean episode reward when deployed on the training scenario itself
+    /// (NaN when the train scenario is not among the eval columns).
+    pub self_reward: f64,
+    /// Mean reward over every *other* eval scenario.
+    pub transfer_reward: f64,
+    /// `self_reward - transfer_reward` (positive = policy degrades when it
+    /// leaves home).
+    pub gap: f64,
+    /// Worst eval column for this policy.
+    pub worst_eval: String,
+    pub worst_reward: f64,
+}
+
+/// Summarize the matrix per training scenario (self vs transfer gap and
+/// worst-case column — the footer that makes the matrix readable without
+/// post-processing).
+pub fn summarize(report: &GenReport) -> Vec<SummaryRow> {
+    report
+        .train_scenarios
+        .iter()
+        .map(|t| {
+            let row: Vec<&GenCell> =
+                report.cells.iter().filter(|c| &c.train_scenario == t).collect();
+            let self_reward = row
+                .iter()
+                .find(|c| c.eval_scenario == *t)
+                .map(|c| c.mean_reward)
+                .unwrap_or(f64::NAN);
+            let transfer: Vec<f64> = row
+                .iter()
+                .filter(|c| c.eval_scenario != *t)
+                .map(|c| c.mean_reward)
+                .collect();
+            let transfer_reward = crate::util::stats::mean(&transfer);
+            let worst = row.iter().min_by(|a, b| a.mean_reward.total_cmp(&b.mean_reward));
+            SummaryRow {
+                train_scenario: t.clone(),
+                self_reward,
+                transfer_reward,
+                gap: self_reward - transfer_reward,
+                worst_eval: worst.map(|c| c.eval_scenario.clone()).unwrap_or_default(),
+                worst_reward: worst.map(|c| c.mean_reward).unwrap_or(f64::NAN),
+            }
+        })
+        .collect()
+}
+
 /// Print the train-scenario × eval-scenario matrices (mean episode reward,
 /// then mean throughput).
 pub fn print(report: &GenReport) {
@@ -217,6 +269,22 @@ pub fn print(report: &GenReport) {
     );
     matrix("mean episode reward:", &|c| c.mean_reward);
     matrix("mean throughput (Gbps):", &|c| c.mean_throughput_gbps);
+
+    // Footer: per-row self vs transfer digest.
+    println!("\nself-scenario vs transfer (mean episode reward):");
+    let mut table =
+        Table::new(&["train", "self", "transfer", "gap", "worst eval", "worst"]);
+    for s in summarize(report) {
+        table.row(vec![
+            s.train_scenario,
+            format!("{:.2}", s.self_reward),
+            format!("{:.2}", s.transfer_reward),
+            format!("{:+.2}", s.gap),
+            s.worst_eval,
+            format!("{:.2}", s.worst_reward),
+        ]);
+    }
+    table.print();
 }
 
 /// Machine-readable report (for `--out` and the CI determinism check).
@@ -242,6 +310,24 @@ pub fn to_json(report: &GenReport) -> Json {
                             ("mean_reward", Json::from(c.mean_reward)),
                             ("mean_throughput_gbps", Json::from(c.mean_throughput_gbps)),
                             ("mean_energy_j_per_mi", Json::from(c.mean_energy_j_per_mi)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "summary",
+            Json::Arr(
+                summarize(report)
+                    .into_iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("train_scenario", Json::from(s.train_scenario)),
+                            ("self_reward", Json::from(s.self_reward)),
+                            ("transfer_reward", Json::from(s.transfer_reward)),
+                            ("gap", Json::from(s.gap)),
+                            ("worst_eval", Json::from(s.worst_eval)),
+                            ("worst_reward", Json::from(s.worst_reward)),
                         ])
                     })
                     .collect(),

@@ -9,6 +9,10 @@
 //! [`runner`]; trained weights are read from a shared, read-only
 //! [`crate::runtime::WeightSnapshot`] and per-cell seeding is
 //! identity-derived, so reports are bit-identical at any `--jobs` count.
+//!
+//! Beyond the paper's figures, [`fleet`] runs dynamic-admission workloads
+//! (transfers arriving/departing on a shared bottleneck) through the
+//! step-driven [`crate::coordinator::Session`] API.
 
 pub mod common;
 pub mod fig1;
@@ -16,6 +20,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod fleet;
 pub mod generalize;
 pub mod runner;
 pub mod table1;

@@ -71,14 +71,9 @@ where
 }
 
 /// Stable 64-bit mix of a base seed and a cell label — the per-cell seeding
-/// helper (FNV-1a over the label, XORed into the base).
+/// helper (see [`crate::util::rng::mix_seed`] for the shared mix).
 pub fn cell_seed(base: u64, label: &str, index: u64) -> u64 {
-    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
-    for b in label.bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    h = (h ^ index).wrapping_mul(0x0000_0100_0000_01B3);
-    base ^ h
+    crate::util::rng::mix_seed(base, label, index)
 }
 
 #[cfg(test)]

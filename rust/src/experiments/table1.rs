@@ -22,12 +22,19 @@ use crate::trainer::{LiveEnv, ResourceMeter};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
-/// One Table-1 row.
+/// One Table-1 row. Simulation-derived columns (`steps_to_converge`,
+/// `train_calls`, `env_steps`) are identity-seeded and bit-identical at any
+/// thread count; the rest are wall-clock measurements that vary run to run
+/// (see [`to_json_deterministic`]).
 #[derive(Debug, Clone)]
 pub struct Row {
     pub algo: String,
     pub offline_train_min: f64,
     pub steps_to_converge: usize,
+    /// Training-step executions of the full pipeline (deterministic).
+    pub train_calls: u64,
+    /// Environment steps of the full pipeline (deterministic).
+    pub env_steps: usize,
     pub cpu_pct: f64,
     /// XLA-executable share of wall time — the "GPU%" analogue (DESIGN.md §1).
     pub xla_pct: f64,
@@ -137,6 +144,8 @@ pub fn run(
                 algo: algo.clone(),
                 offline_train_min: stats.wall_s / 60.0,
                 steps_to_converge: stats.steps_to_converge,
+                train_calls: stats.train_calls,
+                env_steps: stats.env_steps,
                 cpu_pct: stats.cpu_pct,
                 xla_pct: stats.xla_pct,
                 mem_pct: stats.mem_pct,
@@ -151,12 +160,29 @@ pub fn run(
     outs.into_iter().collect()
 }
 
-pub fn print(rows: &[Row]) {
+/// Print the table, split into the simulation-derived (deterministic)
+/// columns and the measured wall-clock columns; `deterministic` drops the
+/// measured half entirely (the CI byte-identity mode).
+pub fn print(rows: &[Row], deterministic: bool) {
     println!("\nTable 1 — training/inference cost per algorithm:");
-    let mut table = Table::new(&[
+    println!("simulation-derived (deterministic at any --jobs count):");
+    let mut sim = Table::new(&["method", "steps conv", "train calls", "env steps"]);
+    for r in rows {
+        sim.row(vec![
+            r.algo.clone(),
+            format!("{}", r.steps_to_converge),
+            format!("{}", r.train_calls),
+            format!("{}", r.env_steps),
+        ]);
+    }
+    sim.print();
+    if deterministic {
+        return;
+    }
+    println!("\nmeasured wall-clock (varies run to run by nature):");
+    let mut measured = Table::new(&[
         "method",
         "offline min",
-        "steps conv",
         "CPU%",
         "XLA% (GPU)",
         "mem%",
@@ -166,10 +192,9 @@ pub fn print(rows: &[Row]) {
         "tuning kJ",
     ]);
     for r in rows {
-        table.row(vec![
+        measured.row(vec![
             r.algo.clone(),
             format!("{:.1}", r.offline_train_min),
-            format!("{}", r.steps_to_converge),
             format!("{:.1}", r.cpu_pct),
             format!("{:.1}", r.xla_pct),
             format!("{:.1}", r.mem_pct),
@@ -179,11 +204,12 @@ pub fn print(rows: &[Row]) {
             format!("{:.2}", r.online_tuning_kj),
         ]);
     }
-    table.print();
+    measured.print();
 }
 
 /// Machine-readable report (wall-clock columns included; note they are
-/// measurements, not simulation outputs, and vary run to run).
+/// measurements, not simulation outputs, and vary run to run — use
+/// [`to_json_deterministic`] for byte-identity checks).
 pub fn to_json(rows: &[Row]) -> Json {
     Json::Arr(
         rows.iter()
@@ -192,6 +218,8 @@ pub fn to_json(rows: &[Row]) -> Json {
                     ("algo", Json::from(r.algo.clone())),
                     ("offline_train_min", Json::from(r.offline_train_min)),
                     ("steps_to_converge", Json::from(r.steps_to_converge)),
+                    ("train_calls", Json::from(r.train_calls as usize)),
+                    ("env_steps", Json::from(r.env_steps)),
                     ("cpu_pct", Json::from(r.cpu_pct)),
                     ("xla_pct", Json::from(r.xla_pct)),
                     ("mem_pct", Json::from(r.mem_pct)),
@@ -199,6 +227,23 @@ pub fn to_json(rows: &[Row]) -> Json {
                     ("inference_ms", Json::from(r.inference_ms)),
                     ("inference_energy_j", Json::from(r.inference_energy_j)),
                     ("online_tuning_kj", Json::from(r.online_tuning_kj)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Only the simulation-derived columns — byte-identical for a fixed
+/// seed at any `--jobs` count, so table1 joins the CI determinism job.
+pub fn to_json_deterministic(rows: &[Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("algo", Json::from(r.algo.clone())),
+                    ("steps_to_converge", Json::from(r.steps_to_converge)),
+                    ("train_calls", Json::from(r.train_calls as usize)),
+                    ("env_steps", Json::from(r.env_steps)),
                 ])
             })
             .collect(),

@@ -21,9 +21,20 @@
 //! Python never runs on the transfer path: `make artifacts` lowers everything
 //! once, and the `sparta` binary is self-contained afterwards.
 //!
-//! ## Architecture: substrates, scenarios, experiments
+//! ## Architecture: sessions, substrates, scenarios, experiments
 //!
-//! The control plane never touches a concrete simulator: [`Controller`],
+//! The coordinator's public API is the step-driven
+//! [`coordinator::Session`]: transfer lanes are *admitted* (before the
+//! first MI or mid-run), each [`coordinator::Session::step`] advances one
+//! monitoring interval and streams MI-granular [`coordinator::Event`]s
+//! (`Admitted`, `MiCompleted`, `Paused`, `Resumed`, `Completed`,
+//! `Departed`) into any [`telemetry::TelemetrySink`], and external
+//! `pause`/`resume`/`cancel` model transfers that come and go. The batch
+//! [`Controller`] survives as a thin compat wrapper whose
+//! [`telemetry::ReportSink`]-rebuilt reports are bit-identical to the
+//! pre-redesign numbers, so every figure regenerates unchanged.
+//!
+//! The control plane never touches a concrete simulator: [`Session`],
 //! the live training environment and the experiments all drive a
 //! [`net::Substrate`] trait object. [`net::NetworkSim`] implements it over a
 //! multi-segment [`net::Topology`] (sender NIC → shared WAN → receiver I/O,
@@ -31,7 +42,12 @@
 //! The [`scenarios`] registry names ≥6 seeded presets over these topologies
 //! (`calm`, `diurnal-bg`, `bursty-incast`, `lossy-wan`, `receiver-limited`,
 //! `nic-limited`, `contended-peers`, plus the paper's testbeds) — select
-//! one with `--scenario <name>` on the CLI.
+//! one with `--scenario <name>` on the CLI. On top of the session API,
+//! [`scenarios::ArrivalSchedule`] presets (`churn-light`, `churn-heavy`,
+//! `flash-crowd`) describe seeded Poisson/trace arrival processes, and
+//! `sparta fleet` ([`experiments::fleet`]) runs N agents joining/leaving a
+//! shared bottleneck, reporting per-epoch Jain's fairness, energy per
+//! delivered GB and completion-time distributions.
 //!
 //! Scenarios are the *training* substrate too, not just an evaluation toy:
 //! [`experiments::train_pipeline`] takes a [`experiments::TrainSource`]
@@ -54,26 +70,58 @@
 //! pipeline runnable.
 //!
 //! [`Controller`]: coordinator::Controller
+//! [`Session`]: coordinator::Session
 //!
 //! ## Quick tour
+//!
+//! Step-driven session: admit a transfer under the "receiver-limited"
+//! scenario (cloudlab WAN behind an 8 Gbps receiver I/O stage), step it MI
+//! by MI, and rebuild the summary report from the event stream.
+//! `Scenario::by_name` resolves any registered preset, including the plain
+//! testbeds ("chameleon", "cloudlab", "fabric").
 //!
 //! ```no_run
 //! use sparta::scenarios::Scenario;
 //! use sparta::transfer::TransferJob;
-//! use sparta::coordinator::RewardKind;
+//! use sparta::coordinator::{LaneSpec, RewardKind, DEFAULT_MAX_MIS};
+//! use sparta::telemetry::ReportSink;
 //! use sparta::baselines::StaticTool;
 //!
-//! // Simulate an rclone-style static transfer of 50 x 1 GiB under the
-//! // "receiver-limited" scenario (cloudlab WAN behind an 8 Gbps receiver
-//! // I/O stage). `Scenario::by_name` resolves any registered preset,
-//! // including the plain testbeds ("chameleon", "cloudlab", "fabric").
 //! let sc = Scenario::by_name("receiver-limited").unwrap();
-//! let mut ctl = sc.controller()
-//!     .job(TransferJob::files(50, 1 << 30))
-//!     .reward(RewardKind::ThroughputEnergy)
-//!     .build();
-//! let report = ctl.run(Box::new(StaticTool::rclone()), 0xC0FFEE);
+//! let mut session = sc.session().seed(0xC0FFEE).build();
+//! session.admit(
+//!     LaneSpec::new(Box::new(StaticTool::rclone()), TransferJob::files(50, 1 << 30))
+//!         .reward(RewardKind::ThroughputEnergy),
+//! );
+//! let mut sink = ReportSink::new();
+//! session.run_to_completion(DEFAULT_MAX_MIS, &mut sink);
+//! let report = sink.finish(session.time_s());
 //! println!("avg throughput {:.2} Gbps", report.avg_throughput_gbps());
+//! ```
+//!
+//! Mid-run admission and external control — the dynamic workloads the
+//! batch API structurally excluded (see `sparta fleet`):
+//!
+//! ```no_run
+//! use sparta::coordinator::{LaneSpec, Session};
+//! use sparta::net::Testbed;
+//! use sparta::transfer::TransferJob;
+//! use sparta::baselines::StaticTool;
+//!
+//! let mut session = Session::builder(Testbed::chameleon()).seed(7).build();
+//! let first = session.admit(LaneSpec::new(
+//!     Box::new(StaticTool::efficient_static(4, 4)),
+//!     TransferJob::files(64, 1 << 30),
+//! ));
+//! for _ in 0..10 { session.step(); }          // events stream out per MI
+//! let late = session.admit(LaneSpec::new(     // joins the shared bottleneck
+//!     Box::new(StaticTool::rclone()),
+//!     TransferJob::files(16, 1 << 30),
+//! ));
+//! session.pause(first);                        // external control plane
+//! session.step();
+//! session.resume(first);
+//! session.cancel(late);                        // departs before finishing
 //! ```
 //!
 //! Scenario-aware training and the cross-scenario generalization matrix

@@ -9,6 +9,7 @@
 //! sparta train-all --scale quick      # all 5 algos x both rewards
 //! sparta generalize --scale quick     # train x eval scenario matrix
 //! sparta transfer --method sparta-fe --scenario lossy-wan
+//! sparta fleet    --scenario churn-heavy           # arrivals/departures
 //! sparta sweep    --testbed chameleon             # Fig 1
 //! sparta algos    --reward te                     # Fig 4
 //! sparta tune                                      # Fig 5
@@ -19,15 +20,16 @@
 
 use anyhow::{anyhow, Result};
 use sparta::config::Paths;
-use sparta::coordinator::{Controller, ControllerBuilder, RewardKind};
+use sparta::coordinator::{LaneSpec, RewardKind, Session, SessionBuilder, DEFAULT_MAX_MIS};
 use sparta::experiments::{self, make_optimizer, Scale, SpartaCtx, TrainSource};
 use sparta::net::Testbed;
-use sparta::scenarios::Scenario;
+use sparta::scenarios::{ArrivalSchedule, Scenario};
 use sparta::telemetry::report::lane_json;
-use sparta::telemetry::{save_report, Table};
+use sparta::telemetry::{save_report, FanoutSink, JsonlSink, ReportSink, Table};
 use sparta::transfer::TransferJob;
 use sparta::util::cli::Args;
 use sparta::util::json::Json;
+use std::io::Write;
 use std::path::Path;
 
 fn main() {
@@ -87,10 +89,12 @@ fn parse_scenarios(list: &str) -> Result<Vec<Scenario>> {
         .collect()
 }
 
-/// `--scenario a,b,c` as a list, defaulting to the three testbed presets.
+/// `--scenario a,b,c` as a list, defaulting to the three testbed presets;
+/// `--scenario all` iterates the full registry.
 fn scenario_list_arg(args: &Args) -> Result<Vec<Scenario>> {
     match args.get("scenario") {
         None => Ok(Scenario::defaults()),
+        Some("all") => Ok(Scenario::all()),
         Some(list) => parse_scenarios(list),
     }
 }
@@ -144,6 +148,17 @@ fn dispatch(args: &Args) -> Result<()> {
                     sc.testbed.name.into(),
                     path,
                     sc.summary.into(),
+                ]);
+            }
+            t.print();
+            println!("\narrival schedules (use with `sparta fleet --scenario <name>`):");
+            let mut t = Table::new(&["name", "scenario", "horizon", "description"]);
+            for sched in ArrivalSchedule::all() {
+                t.row(vec![
+                    sched.name.into(),
+                    sched.scenario.name.into(),
+                    format!("{} MIs", sched.horizon_mis),
+                    sched.summary.into(),
                 ]);
             }
             t.print();
@@ -251,17 +266,33 @@ fn dispatch(args: &Args) -> Result<()> {
             let (files, bytes) = scale.workload();
             let files = args.get_usize("files", files).map_err(|e| anyhow!(e))?;
             let (opt, engine, reward) = make_optimizer(&c, method, seed)?;
-            let builder: ControllerBuilder = match &scenario {
-                Some(sc) => sc.controller(),
-                None => Controller::builder(testbed_arg(args)?),
+            let builder: SessionBuilder = match &scenario {
+                Some(sc) => sc.session(),
+                None => Session::builder(testbed_arg(args)?),
             };
-            let mut ctl = builder
-                .job(TransferJob::files(files, bytes))
-                .engine(engine)
-                .reward(reward)
-                .seed(seed)
-                .build();
-            let report = ctl.run(opt, seed);
+            let mut session = builder.seed(seed).build();
+            session.admit(
+                LaneSpec::new(opt, TransferJob::files(files, bytes))
+                    .engine(engine)
+                    .reward(reward),
+            );
+            // Stream MI-granular events to --events FILE while the report
+            // sink rebuilds the summary from the same stream.
+            let mut report_sink = ReportSink::new();
+            match args.get("events") {
+                Some(path) => {
+                    let f = std::fs::File::create(path)
+                        .map_err(|e| anyhow!("creating {path}: {e}"))?;
+                    let mut jsonl = JsonlSink::new(std::io::BufWriter::new(f));
+                    let mut fan = FanoutSink { sinks: vec![&mut report_sink, &mut jsonl] };
+                    session.run_to_completion(DEFAULT_MAX_MIS, &mut fan);
+                    let mut w = jsonl.into_inner();
+                    w.flush().map_err(|e| anyhow!("flushing event stream: {e}"))?;
+                    println!("event stream written to {path}");
+                }
+                None => session.run_to_completion(DEFAULT_MAX_MIS, &mut report_sink),
+            }
+            let report = report_sink.finish(session.time_s());
             let lane = report.lane();
             let mut t = Table::new(&["metric", "value"]);
             t.row(vec!["method".into(), method.into()]);
@@ -282,6 +313,18 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("sweep") => {
             let grid = [1u32, 2, 4, 8, 16];
+            // `--scenario all`: iterate the full registry and emit one
+            // combined report.
+            if args.get("scenario") == Some("all") {
+                let mut combined = Vec::new();
+                for sc in Scenario::all() {
+                    let pts = experiments::fig1::sweep_scenario(&sc, &grid, seed, jobs);
+                    experiments::fig1::print(&pts, &grid);
+                    combined.extend(pts);
+                }
+                maybe_save(args, &experiments::fig1::to_json(&combined))?;
+                return Ok(());
+            }
             let pts = match scenario_arg(args)? {
                 Some(sc) => experiments::fig1::sweep_scenario(&sc, &grid, seed, jobs),
                 None => {
@@ -290,6 +333,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 }
             };
             experiments::fig1::print(&pts, &grid);
+            maybe_save(args, &experiments::fig1::to_json(&pts))?;
             Ok(())
         }
         Some("algos") => {
@@ -346,15 +390,56 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("table1") => {
-            let rows = experiments::table1::run(
+            // `--algos a,b` restricts the rows (e.g. `--algos linq` for the
+            // artifact-free core); `--deterministic` keeps/emits only the
+            // simulation-derived columns so table1 joins the CI
+            // byte-identity job.
+            let algo_list: Vec<String> = match args.get("algos") {
+                None => sparta::agents::ALGOS.iter().map(|a| a.to_string()).collect(),
+                Some(list) => list.split(',').map(|a| a.trim().to_string()).collect(),
+            };
+            let algos: Vec<&str> = algo_list.iter().map(|a| a.as_str()).collect();
+            let deterministic = args.flag("deterministic");
+            let rows = experiments::table1::run(&Paths::resolve(), &algos, scale, seed, jobs)?;
+            experiments::table1::print(&rows, deterministic);
+            let json = if deterministic {
+                experiments::table1::to_json_deterministic(&rows)
+            } else {
+                experiments::table1::to_json(&rows)
+            };
+            maybe_save(args, &json)?;
+            Ok(())
+        }
+        Some("fleet") => {
+            let name = args.get("scenario").ok_or_else(|| {
+                anyhow!(
+                    "fleet needs --scenario <schedule> (one of: {})",
+                    ArrivalSchedule::names().join(", ")
+                )
+            })?;
+            let schedule = ArrivalSchedule::by_name(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown arrival schedule '{name}' (one of: {})",
+                    ArrivalSchedule::names().join(", ")
+                )
+            })?;
+            // Default lanes cycle through the artifact-free baselines so a
+            // fresh checkout can run a fleet; mix in trained agents with
+            // e.g. --methods sparta-fe,falcon_mp or --methods linq:te.
+            let methods: Vec<String> = match args.get("methods") {
+                None => ["falcon_mp", "2-phase", "rclone"].iter().map(|m| m.to_string()).collect(),
+                Some(list) => list.split(',').map(|m| m.trim().to_string()).collect(),
+            };
+            let report = experiments::fleet::run(
                 &Paths::resolve(),
-                &sparta::agents::ALGOS,
+                &schedule,
+                &methods,
                 scale,
                 seed,
                 jobs,
             )?;
-            experiments::table1::print(&rows);
-            maybe_save(args, &experiments::table1::to_json(&rows))?;
+            experiments::fleet::print(&report);
+            maybe_save(args, &experiments::fleet::to_json(&report))?;
             Ok(())
         }
         Some(other) => Err(anyhow!("unknown subcommand '{other}' — try `sparta help`")),
@@ -418,21 +503,34 @@ subcommands:
                                            runs without artifacts
   transfer  --method M [--scenario S]      run one transfer (M: rclone, escp,
                                            falcon_mp, 2-phase, sparta-t, sparta-fe)
-  sweep     --testbed T|--scenario S       Fig 1   (cc,p) x background sweep
+            [--events FILE]                (stream MI-granular session events
+                                           as JSON lines while it runs)
+  fleet     --scenario churn-light|churn-heavy|flash-crowd
+            [--methods M1,M2,...]          N transfers joining/leaving a shared
+                                           bottleneck (seeded arrival process;
+                                           per-epoch JFI, J/GB, completion-time
+                                           distribution). Default methods are
+                                           artifact-free baselines
+  sweep     --testbed T|--scenario S|--scenario all   Fig 1 (cc,p) sweep
   algos     --reward fe|te                 Fig 4   DRL algorithm comparison
   tune                                     Fig 5   online tuning on CloudLab
-  compare   [--scenario S1,S2,...]         Fig 6   methods x scenarios
+  compare   [--scenario S1,S2,...|all]     Fig 6   methods x scenarios
             [--methods M1,M2,...]          (subset/extend the method lanes,
                                            e.g. linq:te for the fallback core)
   fairness                                 Fig 7   concurrent-transfer JFI
-  table1                                   Table 1 training/inference cost
+  table1    [--algos A1,A2,...]            Table 1 training/inference cost
+            [--deterministic]              (keep only simulation-derived
+                                           columns; joins the CI byte-identity
+                                           check)
 
 common flags: --scale quick|paper  --seed N  --jobs N  --quiet --verbose
   --scenario takes names from `sparta scenarios` (e.g. calm, diurnal-bg,
-  bursty-incast, lossy-wan, receiver-limited, nic-limited, contended-peers)
+  bursty-incast, lossy-wan, receiver-limited, nic-limited, contended-peers);
+  `all` on compare/sweep iterates the full registry into one combined report
   --jobs N shards experiment cells over N worker threads (default: all
   cores); every experiment evaluates over one shared read-only weight
   snapshot and seeds each cell from its own identity, so reports are
   bit-identical at any jobs count for a fixed seed
-  --out FILE (algos/tune/compare/table1/generalize) writes a JSON report
+  --out FILE (sweep/algos/tune/compare/table1/generalize/fleet) writes a
+  JSON report
 ";

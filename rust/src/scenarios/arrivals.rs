@@ -1,0 +1,253 @@
+//! Seeded arrival-process workloads: transfers that come and go.
+//!
+//! A [`Scenario`] fixes the *network* conditions; an [`ArrivalSchedule`]
+//! fixes the *workload* on top of it — when transfer applications join the
+//! shared bottleneck, how much they move, and whether they are forced to
+//! depart before finishing. Presets are either Poisson processes (seeded
+//! exponential inter-arrivals) or explicit traces; every schedule is fully
+//! determined by `(name, seed)`, so fleet reports stay bit-identical at any
+//! `--jobs` count.
+//!
+//! Select one with `sparta fleet --scenario <name>` (`churn-light`,
+//! `churn-heavy`, `flash-crowd`), or programmatically:
+//!
+//! ```
+//! use sparta::scenarios::ArrivalSchedule;
+//!
+//! let sched = ArrivalSchedule::by_name("churn-heavy").unwrap();
+//! let a = sched.arrivals(42);
+//! let b = sched.arrivals(42);
+//! assert_eq!(a, b); // same (schedule, seed) => same workload
+//! assert!(!a.is_empty());
+//! ```
+
+use super::Scenario;
+use crate::util::rng::mix_seed;
+use crate::util::Rng;
+
+/// One transfer application joining the session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrivalSpec {
+    /// Monitoring interval at which the lane is admitted.
+    pub at_mi: usize,
+    /// Workload: `files` × `file_bytes`.
+    pub files: usize,
+    pub file_bytes: u64,
+    /// Forced departure (cancel) this many MIs after admission, if the
+    /// transfer has not completed by then — models users walking away.
+    pub max_lifetime_mis: Option<usize>,
+}
+
+/// How arrivals are generated.
+#[derive(Debug, Clone)]
+enum Process {
+    /// Seeded Poisson process: exponential inter-arrival gaps.
+    Poisson {
+        mean_gap_mis: f64,
+        max_agents: usize,
+        /// Inclusive range of per-arrival file counts.
+        files: (usize, usize),
+        file_bytes: u64,
+        max_lifetime_mis: Option<usize>,
+    },
+    /// Explicit trace (already sorted by `at_mi`).
+    Trace(Vec<ArrivalSpec>),
+}
+
+/// A named, reproducible dynamic workload over a registered [`Scenario`].
+#[derive(Debug, Clone)]
+pub struct ArrivalSchedule {
+    /// Registry name (`sparta fleet --scenario <name>`).
+    pub name: &'static str,
+    /// One-line description for `sparta scenarios`.
+    pub summary: &'static str,
+    /// The shared-bottleneck network conditions the fleet runs under.
+    pub scenario: Scenario,
+    /// Fleet run length, MIs.
+    pub horizon_mis: usize,
+    process: Process,
+}
+
+impl ArrivalSchedule {
+    /// The registered churn presets.
+    pub fn all() -> Vec<ArrivalSchedule> {
+        vec![
+            ArrivalSchedule::churn_light(),
+            ArrivalSchedule::churn_heavy(),
+            ArrivalSchedule::flash_crowd(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ArrivalSchedule> {
+        ArrivalSchedule::all().into_iter().find(|s| s.name == name)
+    }
+
+    /// Registry names, in registry order.
+    pub fn names() -> Vec<&'static str> {
+        ArrivalSchedule::all().iter().map(|s| s.name).collect()
+    }
+
+    /// Materialize the arrival list for one trial. Deterministic: the same
+    /// `(schedule, seed)` yields the same workload; traces ignore the seed.
+    pub fn arrivals(&self, seed: u64) -> Vec<ArrivalSpec> {
+        match &self.process {
+            Process::Trace(t) => t.clone(),
+            Process::Poisson { mean_gap_mis, max_agents, files, file_bytes, max_lifetime_mis } => {
+                // The schedule name joins the mix so two schedules under
+                // the same trial seed draw different processes.
+                let mut rng = Rng::new(mix_seed(seed, self.name, 0));
+                let mut out = Vec::new();
+                // One lane from the start so the bottleneck is never empty.
+                out.push(ArrivalSpec {
+                    at_mi: 0,
+                    files: files.0 + rng.below(files.1 - files.0 + 1),
+                    file_bytes: *file_bytes,
+                    max_lifetime_mis: *max_lifetime_mis,
+                });
+                let mut at = 0.0f64;
+                while out.len() < *max_agents {
+                    // Exponential inter-arrival gap.
+                    at += -mean_gap_mis * (1.0 - rng.f64()).ln();
+                    let at_mi = at.floor() as usize;
+                    if at_mi >= self.horizon_mis {
+                        break;
+                    }
+                    out.push(ArrivalSpec {
+                        at_mi,
+                        files: files.0 + rng.below(files.1 - files.0 + 1),
+                        file_bytes: *file_bytes,
+                        max_lifetime_mis: *max_lifetime_mis,
+                    });
+                }
+                out
+            }
+        }
+    }
+
+    /// Light churn: a handful of medium transfers trickling onto the shared
+    /// Chameleon WAN, all running to completion.
+    pub fn churn_light() -> ArrivalSchedule {
+        ArrivalSchedule {
+            name: "churn-light",
+            summary: "poisson arrivals (~1 per 30 MIs, max 8), no forced departures",
+            scenario: Scenario::by_name("chameleon").expect("chameleon preset registered"),
+            horizon_mis: 360,
+            process: Process::Poisson {
+                mean_gap_mis: 30.0,
+                max_agents: 8,
+                files: (8, 16),
+                file_bytes: 128 << 20,
+                max_lifetime_mis: None,
+            },
+        }
+    }
+
+    /// Heavy churn: arrivals offer more load than the bottleneck can carry
+    /// (mean ~6 GB per ~6 MIs against a ~0.8 GB/s share), so lanes queue up
+    /// and the 40-MI lifetime yanks many before finishing — the regime the
+    /// batch API could not express.
+    pub fn churn_heavy() -> ArrivalSchedule {
+        ArrivalSchedule {
+            name: "churn-heavy",
+            summary: "overloaded poisson arrivals (~1 per 6 MIs, max 30), forced departure after 40 MIs",
+            scenario: Scenario::by_name("chameleon").expect("chameleon preset registered"),
+            horizon_mis: 360,
+            process: Process::Poisson {
+                mean_gap_mis: 6.0,
+                max_agents: 30,
+                files: (8, 40),
+                file_bytes: 256 << 20,
+                max_lifetime_mis: Some(40),
+            },
+        }
+    }
+
+    /// Flash crowd: one long-running marathon transfer (~75 GB, spanning
+    /// the burst), then eight short-lived peers slamming the same
+    /// bottleneck at MI 40, and a straggler near the end — trace-driven,
+    /// identical for every seed.
+    pub fn flash_crowd() -> ArrivalSchedule {
+        let mut trace = vec![ArrivalSpec {
+            at_mi: 0,
+            files: 600,
+            file_bytes: 128 << 20,
+            max_lifetime_mis: None,
+        }];
+        for k in 0..8 {
+            trace.push(ArrivalSpec {
+                at_mi: 40 + 2 * k,
+                files: 6,
+                file_bytes: 128 << 20,
+                max_lifetime_mis: Some(80),
+            });
+        }
+        trace.push(ArrivalSpec {
+            at_mi: 200,
+            files: 8,
+            file_bytes: 128 << 20,
+            max_lifetime_mis: None,
+        });
+        ArrivalSchedule {
+            name: "flash-crowd",
+            summary: "trace: 1 marathon + 8-peer burst at MI 40 + straggler at MI 200 (calm WAN)",
+            scenario: Scenario::by_name("calm").expect("calm preset registered"),
+            horizon_mis: 360,
+            process: Process::Trace(trace),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_and_names_are_unique() {
+        let names = ArrivalSchedule::names();
+        for want in ["churn-light", "churn-heavy", "flash-crowd"] {
+            assert!(names.contains(&want), "missing schedule '{want}'");
+        }
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate schedule names");
+        assert!(ArrivalSchedule::by_name("no-such-schedule").is_none());
+    }
+
+    #[test]
+    fn poisson_schedules_are_seed_deterministic_and_sorted() {
+        for sched in ArrivalSchedule::all() {
+            let a = sched.arrivals(7);
+            let b = sched.arrivals(7);
+            assert_eq!(a, b, "{}: same seed must reproduce", sched.name);
+            assert!(!a.is_empty(), "{}: empty workload", sched.name);
+            assert!(
+                a.windows(2).all(|w| w[0].at_mi <= w[1].at_mi),
+                "{}: arrivals out of order",
+                sched.name
+            );
+            assert!(
+                a.iter().all(|x| x.at_mi < sched.horizon_mis),
+                "{}: arrival past horizon",
+                sched.name
+            );
+            assert_eq!(a[0].at_mi, 0, "{}: no lane at MI 0", sched.name);
+        }
+    }
+
+    #[test]
+    fn poisson_seeds_diverge_traces_do_not() {
+        let heavy = ArrivalSchedule::by_name("churn-heavy").unwrap();
+        assert_ne!(heavy.arrivals(1), heavy.arrivals(2));
+        let crowd = ArrivalSchedule::by_name("flash-crowd").unwrap();
+        assert_eq!(crowd.arrivals(1), crowd.arrivals(2));
+    }
+
+    #[test]
+    fn churn_heavy_actually_churns() {
+        let heavy = ArrivalSchedule::by_name("churn-heavy").unwrap();
+        let arrivals = heavy.arrivals(42);
+        assert!(arrivals.len() >= 6, "only {} arrivals", arrivals.len());
+        assert!(arrivals.iter().all(|a| a.max_lifetime_mis == Some(40)));
+    }
+}

@@ -21,7 +21,11 @@
 //! assert!(metrics[id.0].rtt_s > 0.0);
 //! ```
 
-use crate::coordinator::{Controller, ControllerBuilder};
+pub mod arrivals;
+
+pub use arrivals::{ArrivalSchedule, ArrivalSpec};
+
+use crate::coordinator::{Controller, ControllerBuilder, Session, SessionBuilder};
 use crate::net::background::Background;
 use crate::net::{NetworkSim, Substrate, Testbed, Topology};
 
@@ -54,6 +58,12 @@ impl Scenario {
     /// `.seed()` etc. and `.build()` as usual).
     pub fn controller(&self) -> ControllerBuilder {
         Controller::builder(self.testbed.clone()).topology(self.topology.clone())
+    }
+
+    /// A step-driven session builder preconfigured for this scenario —
+    /// the entry point for dynamic-admission workloads (`sparta fleet`).
+    pub fn session(&self) -> SessionBuilder {
+        Session::builder(self.testbed.clone()).topology(self.topology.clone())
     }
 
     /// Look up a registered scenario by name.

@@ -1,7 +1,15 @@
-//! Experiment telemetry: tables, timelines and machine-readable reports.
+//! Experiment telemetry: streaming event sinks, tables and
+//! machine-readable reports.
+//!
+//! The session API streams [`crate::coordinator::Event`]s into a
+//! [`TelemetrySink`] instead of accumulating results inside the
+//! coordinator; [`ReportSink`] rebuilds the classic batch
+//! [`crate::coordinator::RunReport`] from that stream.
 
 pub mod report;
+pub mod sink;
 pub mod table;
 
 pub use report::save_report;
+pub use sink::{event_json, EventLog, FanoutSink, JsonlSink, NullSink, ReportSink, TelemetrySink};
 pub use table::Table;

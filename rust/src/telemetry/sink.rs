@@ -1,0 +1,356 @@
+//! Streaming event sinks for the step-driven session API.
+//!
+//! A [`crate::coordinator::Session`] emits [`Event`]s instead of
+//! accumulating results internally; a [`TelemetrySink`] is anywhere those
+//! events can go. [`ReportSink`] rebuilds the classic batch
+//! [`RunReport`] from the stream (the compat path every pre-redesign
+//! experiment runs through), [`EventLog`] buffers raw events for tests and
+//! workload drivers, and [`JsonlSink`] streams one JSON object per event to
+//! any writer (live dashboards, `--events` files).
+
+use crate::coordinator::{Event, LaneReport, MiRecord, RunReport};
+use crate::util::json::Json;
+use crate::util::stats;
+use std::io::Write;
+
+/// Consumes the session event stream, one event at a time, in emission
+/// order. Implementations must not assume they see a complete run — a
+/// sink can be attached to any suffix of a session's life.
+pub trait TelemetrySink {
+    fn on_event(&mut self, event: &Event);
+}
+
+/// Drops every event (placeholder when only side effects matter).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TelemetrySink for NullSink {
+    fn on_event(&mut self, _event: &Event) {}
+}
+
+/// Buffers the raw event stream (tests, workload drivers).
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    pub events: Vec<Event>,
+}
+
+impl TelemetrySink for EventLog {
+    fn on_event(&mut self, event: &Event) {
+        self.events.push(event.clone());
+    }
+}
+
+/// Per-lane accumulator behind [`ReportSink`].
+#[derive(Debug, Clone, Default)]
+struct LaneAcc {
+    name: String,
+    records: Vec<MiRecord>,
+    completed: bool,
+    /// Time of the lane's terminal event (None while still in flight).
+    ended_at_s: Option<f64>,
+    bytes_delivered: f64,
+    total_energy_j: f64,
+}
+
+/// Rebuilds the batch-era [`RunReport`] from the event stream — the proof
+/// that the old run-to-completion API is one sink over the new one.
+/// Accumulation matches the pre-redesign controller bit-for-bit: records in
+/// MI order per lane, lane totals from the meter/job running totals, and
+/// the per-record-index Jain's-fairness series.
+#[derive(Debug, Clone, Default)]
+pub struct ReportSink {
+    lanes: Vec<LaneAcc>,
+}
+
+impl ReportSink {
+    pub fn new() -> ReportSink {
+        ReportSink::default()
+    }
+
+    fn acc(&mut self, lane: usize) -> &mut LaneAcc {
+        while self.lanes.len() <= lane {
+            self.lanes.push(LaneAcc::default());
+        }
+        &mut self.lanes[lane]
+    }
+
+    /// Finalize into a [`RunReport`]. `duration_s` is the session's final
+    /// simulated time; lanes without a terminal event report it as their
+    /// duration (exactly as the batch controller reported unfinished lanes).
+    pub fn finish(self, duration_s: f64) -> RunReport {
+        let lanes: Vec<LaneReport> = self
+            .lanes
+            .into_iter()
+            .map(|a| LaneReport {
+                name: a.name,
+                completed: a.completed,
+                duration_s: a.ended_at_s.unwrap_or(duration_s),
+                total_energy_j: a.total_energy_j,
+                bytes_delivered: a.bytes_delivered,
+                records: a.records,
+            })
+            .collect();
+        // JFI per monitoring interval over lanes active in that MI, keyed
+        // by `MiRecord.mi` so mid-run-admitted and paused lanes align on
+        // concurrent samples; MIs where no lane was active are skipped
+        // rather than reported as (vacuously) perfect fairness. On the
+        // batch path (all lanes admitted at MI 0, never paused) every
+        // lane's records are contiguous from MI 0 and no MI is empty, so
+        // this reproduces the pre-redesign per-index series exactly.
+        let lo = lanes.iter().filter_map(|l| l.records.first().map(|r| r.mi)).min();
+        let hi = lanes.iter().filter_map(|l| l.records.last().map(|r| r.mi)).max();
+        let mut jfi_series = Vec::new();
+        if let (Some(lo), Some(hi)) = (lo, hi) {
+            // Records are in increasing-MI order per lane: walk a cursor.
+            let mut cursors = vec![0usize; lanes.len()];
+            for mi in lo..=hi {
+                let mut thrs = Vec::new();
+                for (li, lane) in lanes.iter().enumerate() {
+                    while cursors[li] < lane.records.len() && lane.records[cursors[li]].mi < mi {
+                        cursors[li] += 1;
+                    }
+                    match lane.records.get(cursors[li]) {
+                        Some(r) if r.mi == mi => thrs.push(r.throughput_gbps),
+                        _ => {}
+                    }
+                }
+                if !thrs.is_empty() {
+                    jfi_series.push(stats::jain_fairness(&thrs));
+                }
+            }
+        }
+        RunReport { lanes, duration_s, jfi_series }
+    }
+}
+
+impl TelemetrySink for ReportSink {
+    fn on_event(&mut self, event: &Event) {
+        match event {
+            Event::Admitted { lane, name, .. } => {
+                self.acc(lane.0).name = name.clone();
+            }
+            Event::MiCompleted { lane, record } => {
+                let acc = self.acc(lane.0);
+                acc.bytes_delivered = record.bytes_total;
+                acc.total_energy_j = record.energy_total_j;
+                acc.records.push(record.clone());
+            }
+            Event::Completed { lane, time_s, bytes_delivered, total_energy_j, .. } => {
+                let acc = self.acc(lane.0);
+                acc.completed = true;
+                acc.ended_at_s = Some(*time_s);
+                acc.bytes_delivered = *bytes_delivered;
+                acc.total_energy_j = *total_energy_j;
+            }
+            Event::Departed { lane, time_s, bytes_delivered, total_energy_j, .. } => {
+                let acc = self.acc(lane.0);
+                acc.completed = false;
+                acc.ended_at_s = Some(*time_s);
+                acc.bytes_delivered = *bytes_delivered;
+                acc.total_energy_j = *total_energy_j;
+            }
+            Event::Paused { .. } | Event::Resumed { .. } => {}
+        }
+    }
+}
+
+/// One JSON object per event (the per-MI `state` vector is omitted —
+/// streams are for live monitoring, not for replaying learning).
+pub fn event_json(event: &Event) -> Json {
+    let head = |kind: &str, lane: usize, mi: usize, time_s: f64| {
+        vec![
+            ("event", Json::from(kind)),
+            ("lane", Json::from(lane)),
+            ("mi", Json::from(mi)),
+            ("time_s", Json::from(time_s)),
+        ]
+    };
+    match event {
+        Event::Admitted { lane, name, mi, time_s } => {
+            let mut o = head("admitted", lane.0, *mi, *time_s);
+            o.push(("name", Json::from(name.clone())));
+            Json::obj(o)
+        }
+        Event::MiCompleted { lane, record } => {
+            let mut o = head("mi", lane.0, record.mi, record.time_s);
+            o.push(("throughput_gbps", Json::from(record.throughput_gbps)));
+            o.push(("plr", Json::from(record.plr)));
+            o.push(("rtt_s", Json::from(record.rtt_s)));
+            o.push(("cc", Json::from(record.cc as usize)));
+            o.push(("p", Json::from(record.p as usize)));
+            o.push(("reward", Json::from(record.reward)));
+            o.push(("bytes_total", Json::from(record.bytes_total)));
+            Json::obj(o)
+        }
+        Event::Paused { lane, mi, time_s } => Json::obj(head("paused", lane.0, *mi, *time_s)),
+        Event::Resumed { lane, mi, time_s } => Json::obj(head("resumed", lane.0, *mi, *time_s)),
+        Event::Completed { lane, mi, time_s, bytes_delivered, total_energy_j } => {
+            let mut o = head("completed", lane.0, *mi, *time_s);
+            o.push(("bytes_delivered", Json::from(*bytes_delivered)));
+            o.push(("total_energy_j", Json::from(*total_energy_j)));
+            Json::obj(o)
+        }
+        Event::Departed { lane, mi, time_s, bytes_delivered, total_energy_j } => {
+            let mut o = head("departed", lane.0, *mi, *time_s);
+            o.push(("bytes_delivered", Json::from(*bytes_delivered)));
+            o.push(("total_energy_j", Json::from(*total_energy_j)));
+            Json::obj(o)
+        }
+    }
+}
+
+/// Fans one event stream out to several sinks, in order (e.g. a
+/// [`ReportSink`] plus a [`JsonlSink`] on the same session).
+pub struct FanoutSink<'a> {
+    pub sinks: Vec<&'a mut dyn TelemetrySink>,
+}
+
+impl TelemetrySink for FanoutSink<'_> {
+    fn on_event(&mut self, event: &Event) {
+        for sink in self.sinks.iter_mut() {
+            sink.on_event(event);
+        }
+    }
+}
+
+/// Streams events as JSON lines to any writer (files, pipes, sockets).
+/// Write errors are swallowed: telemetry must never abort a transfer.
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(out: W) -> JsonlSink<W> {
+        JsonlSink { out }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> TelemetrySink for JsonlSink<W> {
+    fn on_event(&mut self, event: &Event) {
+        let _ = writeln!(self.out, "{}", event_json(event));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LaneId;
+
+    fn record(mi: usize, thr: f64, bytes: f64) -> MiRecord {
+        MiRecord {
+            mi,
+            time_s: (mi + 1) as f64,
+            throughput_gbps: thr,
+            plr: 0.0,
+            rtt_s: 0.03,
+            energy_j: 40.0,
+            cc: 4,
+            p: 4,
+            metric: thr,
+            reward: 0.5,
+            action: None,
+            state: vec![0.0; 4],
+            bytes_total: bytes,
+            energy_total_j: 40.0 * (mi + 1) as f64,
+        }
+    }
+
+    #[test]
+    fn report_sink_rebuilds_lane_totals() {
+        let mut sink = ReportSink::new();
+        sink.on_event(&Event::Admitted {
+            lane: LaneId(0),
+            name: "tool".into(),
+            mi: 0,
+            time_s: 0.0,
+        });
+        sink.on_event(&Event::MiCompleted { lane: LaneId(0), record: record(0, 4.0, 1e9) });
+        sink.on_event(&Event::MiCompleted { lane: LaneId(0), record: record(1, 6.0, 2e9) });
+        sink.on_event(&Event::Completed {
+            lane: LaneId(0),
+            mi: 1,
+            time_s: 2.0,
+            bytes_delivered: 2e9,
+            total_energy_j: 80.0,
+        });
+        let report = sink.finish(2.0);
+        let lane = report.lane();
+        assert_eq!(lane.name, "tool");
+        assert!(lane.completed);
+        assert_eq!(lane.records.len(), 2);
+        assert_eq!(lane.duration_s, 2.0);
+        assert_eq!(lane.bytes_delivered, 2e9);
+        assert_eq!(lane.total_energy_j, 80.0);
+        assert_eq!(report.jfi_series.len(), 2);
+    }
+
+    #[test]
+    fn unfinished_lane_uses_session_duration() {
+        let mut sink = ReportSink::new();
+        sink.on_event(&Event::Admitted {
+            lane: LaneId(0),
+            name: "slow".into(),
+            mi: 0,
+            time_s: 0.0,
+        });
+        sink.on_event(&Event::MiCompleted { lane: LaneId(0), record: record(0, 1.0, 1e8) });
+        let report = sink.finish(9.5);
+        assert!(!report.lane().completed);
+        assert_eq!(report.lane().duration_s, 9.5);
+        assert_eq!(report.lane().bytes_delivered, 1e8);
+    }
+
+    /// The fairness series aligns lanes by `MiRecord.mi`, not by record
+    /// index: a lane admitted mid-run only joins the JFI at the MIs it was
+    /// actually concurrent for.
+    #[test]
+    fn jfi_series_aligns_by_monitoring_interval() {
+        let mut sink = ReportSink::new();
+        for (lane, mis) in [(0usize, vec![0, 1, 2]), (1usize, vec![2, 3])] {
+            sink.on_event(&Event::Admitted {
+                lane: LaneId(lane),
+                name: format!("l{lane}"),
+                mi: mis[0],
+                time_s: mis[0] as f64,
+            });
+            for mi in mis {
+                sink.on_event(&Event::MiCompleted {
+                    lane: LaneId(lane),
+                    // Lane 1 runs at half lane 0's throughput where they
+                    // overlap (MI 2), so JFI dips exactly there.
+                    record: record(mi, if lane == 0 { 4.0 } else { 2.0 }, 1e9),
+                });
+            }
+        }
+        let report = sink.finish(4.0);
+        assert_eq!(report.jfi_series.len(), 4); // MIs 0..=3
+        assert_eq!(report.jfi_series[0], 1.0); // lane 0 alone
+        assert_eq!(report.jfi_series[1], 1.0);
+        assert!(report.jfi_series[2] < 1.0); // both lanes, unequal shares
+        assert_eq!(report.jfi_series[3], 1.0); // lane 1 alone
+    }
+
+    #[test]
+    fn jsonl_sink_streams_one_line_per_event() {
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_event(&Event::Admitted {
+            lane: LaneId(0),
+            name: "x".into(),
+            mi: 0,
+            time_s: 0.0,
+        });
+        sink.on_event(&Event::MiCompleted { lane: LaneId(0), record: record(0, 4.0, 1e9) });
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").unwrap().as_str(), Some("admitted"));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("event").unwrap().as_str(), Some("mi"));
+        assert_eq!(second.get("throughput_gbps").unwrap().as_f64(), Some(4.0));
+    }
+}

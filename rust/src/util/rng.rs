@@ -5,6 +5,22 @@
 //! exploration, emulator sampling, property tests) takes an explicit seed so
 //! that runs, tests and benches are exactly reproducible.
 
+/// Stable 64-bit mix of a base seed, a label and an index: FNV-1a over the
+/// label bytes and the index, XORed into the base. The single shared
+/// implementation behind identity-derived seeding — experiment cells
+/// ([`crate::experiments::runner::cell_seed`]) and arrival-schedule
+/// workloads derive their seeds purely from what they are, never from
+/// execution order, which is what keeps reports bit-identical at any
+/// `--jobs` count.
+pub fn mix_seed(base: u64, label: &str, index: u64) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in label.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h = (h ^ index).wrapping_mul(0x0000_0100_0000_01B3);
+    base ^ h
+}
+
 /// xoshiro256** PRNG.
 #[derive(Debug, Clone)]
 pub struct Rng {
