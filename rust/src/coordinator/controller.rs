@@ -13,6 +13,7 @@
 use super::reward::{RewardConfig, RewardKind};
 use super::session::{LaneSpec, Session, SessionBuilder, DEFAULT_MAX_MIS};
 use super::{actions::ParamBounds, MiRecord, Optimizer};
+use crate::energy::RailEnergy;
 use crate::net::background::Background;
 use crate::net::{Testbed, Topology};
 use crate::telemetry::ReportSink;
@@ -50,6 +51,24 @@ impl LaneReport {
             return 0.0;
         }
         self.total_energy_j / (self.bytes_delivered / 1e9)
+    }
+
+    /// Per-rail energy attributed to this lane, summed over its records
+    /// (None on the lumped compat rail, where records carry no breakdown).
+    pub fn rail_totals(&self) -> Option<RailEnergy> {
+        let mut total = RailEnergy::default();
+        let mut any = false;
+        for r in &self.records {
+            if let Some(rails) = &r.rails {
+                total.add(rails);
+                any = true;
+            }
+        }
+        if any {
+            Some(total)
+        } else {
+            None
+        }
     }
 
     pub fn throughput_series(&self) -> Vec<f64> {

@@ -9,6 +9,13 @@
 //!
 //! f(cur, prev) returns +x on improvement beyond ε, −y on regression beyond
 //! ε, else 0 (§3.3.3 "Difference-Based Reward Update").
+//!
+//! The energy `E` the T/E metric consumes is the lane's **attributed**
+//! energy from the shared host ledger (its share of the host truth —
+//! equal-share fixed power, stream-proportional CPU, byte-proportional
+//! NIC; see [`crate::energy::HostLedger`]), not a privately-metered lumped
+//! curve — so colocated lanes optimize against what they actually cost the
+//! host, and a paused lane's observed idle bill depresses the metric.
 
 use super::state::Observation;
 use std::collections::VecDeque;

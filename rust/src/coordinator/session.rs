@@ -21,14 +21,23 @@
 //! Determinism contract: a session is fully determined by its builder
 //! configuration, its seed and the sequence of `admit`/`pause`/`resume`/
 //! `cancel`/`step` calls — the same sequence replays the same event stream
-//! bit-for-bit (per-lane meter seeding is derived from the admission index,
+//! bit-for-bit (ledger-account seeding is derived from the admission index,
 //! never from call timing).
+//!
+//! Energy accounting goes through one shared [`crate::energy::EnergyPlane`]:
+//! the default lumped compat rail reproduces the seed-era per-lane billing
+//! bit-for-bit, while [`SessionBuilder::energy`] switches to host-resolved
+//! ledgers (sender + receiver [`crate::energy::HostLedger`]s from the
+//! testbed's host definitions) where colocated lanes share fixed power and
+//! paused lanes are billed the idle rail. [`SessionBuilder::observe_paused`]
+//! additionally surfaces those idle bills as zero-throughput [`MiRecord`]s
+//! so optimizers can learn preemption costs.
 
 use super::actions::ParamBounds;
 use super::reward::{RewardConfig, RewardKind, RewardTracker};
 use super::state::{FeatureWindow, Observation};
 use super::{Decision, MiContext, Optimizer};
-use crate::energy::EnergyMeter;
+use crate::energy::{EnergyConfig, EnergyPlane, LaneActivity, LaneBill, RailEnergy};
 use crate::net::background::Background;
 use crate::net::{FlowId, NetworkSim, Substrate, Testbed, Topology};
 use crate::telemetry::TelemetrySink;
@@ -65,9 +74,14 @@ pub struct MiRecord {
     /// Running total of bytes the lane's job has delivered after this MI —
     /// lets streaming sinks track progress without holding lane state.
     pub bytes_total: f64,
-    /// Running total of metered energy after this MI (0.0 on testbeds
-    /// without energy counters, where `energy_j` is NaN).
+    /// Running total of energy attributed to this lane after this MI (0.0
+    /// on testbeds without energy counters, where `energy_j` is NaN).
     pub energy_total_j: f64,
+    /// True for the zero-throughput records an externally-paused lane
+    /// emits when the session observes paused MIs (idle energy, no bytes).
+    pub paused: bool,
+    /// Per-rail breakdown of `energy_j` (None on the lumped compat rail).
+    pub rails: Option<RailEnergy>,
 }
 
 /// What a lane is doing right now.
@@ -159,14 +173,14 @@ struct SessionLane {
     job: TransferJob,
     window: FeatureWindow,
     reward: RewardTracker,
-    meter: EnergyMeter,
     cc: u32,
     p: u32,
     has_pending_decision: bool,
     status: LaneStatus,
 }
 
-/// Builder for [`Session`] (same knobs the pre-redesign controller took).
+/// Builder for [`Session`] (same knobs the pre-redesign controller took,
+/// plus the energy-accounting mode and the paused-MI observation knob).
 pub struct SessionBuilder {
     testbed: Testbed,
     background: Option<Background>,
@@ -176,6 +190,8 @@ pub struct SessionBuilder {
     reward_cfg: RewardConfig,
     seed: u64,
     history: usize,
+    energy: EnergyConfig,
+    observe_paused: bool,
 }
 
 impl SessionBuilder {
@@ -217,6 +233,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Energy-accounting mode. Default is the lumped compat rail (per-lane
+    /// seed-era billing, bit-identical reports); pass
+    /// [`EnergyConfig::Hosts`] — e.g. from
+    /// [`crate::net::Testbed::energy_hosts`] — for host-truth rails shared
+    /// by all colocated lanes.
+    pub fn energy(mut self, cfg: EnergyConfig) -> Self {
+        self.energy = cfg;
+        self
+    }
+
+    /// When set, externally-paused lanes emit zero-throughput
+    /// [`MiRecord`]s carrying their idle-rail energy, and the decision
+    /// pending at pause time is credited with the first paused MI's reward
+    /// — so optimizers see the cost of preemption instead of a silent gap.
+    pub fn observe_paused(mut self, on: bool) -> Self {
+        self.observe_paused = on;
+        self
+    }
+
     pub fn build(self) -> Session {
         let mut sim = match &self.topology {
             Some(t) => NetworkSim::from_topology(self.testbed.clone(), t, self.seed),
@@ -236,6 +271,8 @@ impl SessionBuilder {
             mi: 0,
             lanes: Vec::new(),
             pending: Vec::new(),
+            energy: EnergyPlane::new(self.energy, self.seed),
+            observe_paused: self.observe_paused,
         }
     }
 }
@@ -254,6 +291,10 @@ pub struct Session {
     lanes: Vec<SessionLane>,
     /// Admission/control events queued since the last `step`.
     pending: Vec<Event>,
+    /// Shared energy accounting for every lane (lumped compat rail, or a
+    /// sender + receiver host-ledger pair).
+    energy: EnergyPlane,
+    observe_paused: bool,
 }
 
 impl Session {
@@ -267,6 +308,8 @@ impl Session {
             reward_cfg: RewardConfig::default(),
             seed: 1,
             history: 8,
+            energy: EnergyConfig::Lumped,
+            observe_paused: false,
         }
     }
 
@@ -279,9 +322,11 @@ impl Session {
         let io = engine.task_io_gbps(self.testbed.task_io_gbps);
         let flow = self.sim.add_flow(cc0, p0, Some(io));
         let window = FeatureWindow::new(self.history, self.bounds.cc_max, self.bounds.p_max);
-        // Meter seeding derives from the admission index, so replaying the
-        // same admission sequence reproduces the same energy noise.
+        // Ledger-account seeding derives from the admission index (the
+        // seed-era meter formula, unchanged), so replaying the same
+        // admission sequence reproduces the same energy noise.
         let meter_seed = self.seed.wrapping_mul(0x9E37).wrapping_add(self.lanes.len() as u64);
+        self.energy.open_lane(&engine.power, meter_seed);
         let name = name.unwrap_or_else(|| optimizer.name().to_string());
         let id = LaneId(self.lanes.len());
         self.pending.push(Event::Admitted {
@@ -297,7 +342,6 @@ impl Session {
             job,
             window,
             reward: RewardTracker::new(reward, self.reward_cfg.clone()),
-            meter: EnergyMeter::new(engine.power.clone(), meter_seed),
             cc: cc0,
             p: p0,
             has_pending_decision: false,
@@ -317,9 +361,14 @@ impl Session {
             return false;
         }
         lane.status = LaneStatus::Paused;
-        // Drop any pending decision: the first post-resume observation must
-        // not be credited to an action chosen before the pause gap.
-        lane.has_pending_decision = false;
+        if !self.observe_paused {
+            // Drop any pending decision: the first post-resume observation
+            // must not be credited to an action chosen before the pause
+            // gap. (With `observe_paused`, the pending decision is instead
+            // credited with the first paused MI's collapsed reward — the
+            // preemption-cost signal.)
+            lane.has_pending_decision = false;
+        }
         self.sim.set_demand_cap(lane.flow, 0.0);
         self.pending.push(Event::Paused { lane: id, mi: self.mi, time_s: self.sim.time_s() });
         true
@@ -354,7 +403,7 @@ impl Session {
             mi: self.mi,
             time_s: self.sim.time_s(),
             bytes_delivered: lane.job.delivered_bytes(),
-            total_energy_j: lane.meter.total_j(),
+            total_energy_j: self.energy.lane_total_j(id.0),
         });
         true
     }
@@ -392,10 +441,12 @@ impl Session {
         }
     }
 
-    /// One monitoring interval: demand caps → substrate MI → per-lane
-    /// observe/learn/decide → apply decisions. The body mirrors the
-    /// pre-redesign batch loop exactly (same arithmetic, same call order),
-    /// which is what keeps the compat path bit-identical.
+    /// One monitoring interval: demand caps → substrate MI → one energy
+    /// settlement across all in-flight lanes → per-lane
+    /// observe/learn/decide → apply decisions. The active-lane body mirrors
+    /// the pre-redesign batch loop exactly (same arithmetic, same call
+    /// order, per-lane noise RNGs), which is what keeps the lumped compat
+    /// path bit-identical.
     fn step_mi(&mut self, events: &mut Vec<Event>) {
         let has_energy = self.testbed.has_energy_counters;
         // Cap demand of nearly-finished lanes so they don't overshoot;
@@ -411,17 +462,96 @@ impl Session {
         let metrics = self.sim.run_mi(self.mi_s);
         let time_s = self.sim.time_s();
         let mi = self.mi;
+        // Settle the energy plane once for this MI over every in-flight
+        // lane: active lanes bill their curve/rails, paused lanes the idle
+        // rail (always in host-resolved mode — host truth — and, on the
+        // lumped rail, only when paused MIs are observed).
+        let mut bills: Vec<Option<LaneBill>> = vec![None; self.lanes.len()];
+        if has_energy {
+            let activity: Vec<LaneActivity> = self
+                .lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| matches!(l.status, LaneStatus::Active | LaneStatus::Paused))
+                .map(|(li, l)| {
+                    let m = &metrics[l.flow.0];
+                    let paused = l.status == LaneStatus::Paused;
+                    LaneActivity {
+                        lane: li,
+                        // Paused lanes park their transfer threads: no
+                        // streams, no bytes.
+                        streams: if paused { 0 } else { m.active_streams },
+                        throughput_gbps: if paused { 0.0 } else { m.throughput_gbps },
+                        bytes: if paused { 0.0 } else { m.bytes_delivered },
+                        duration_s: m.duration_s,
+                        paused,
+                    }
+                })
+                .collect();
+            for b in self.energy.settle_mi(&activity, self.mi_s, self.observe_paused) {
+                bills[b.lane] = Some(b);
+            }
+        }
+        let observe_paused = self.observe_paused;
         let mut decisions: Vec<(usize, Decision)> = Vec::new();
         for (li, lane) in self.lanes.iter_mut().enumerate() {
+            // Paused lanes only observe (and only behind the knob); the
+            // whole decision machinery stays active-only.
+            if lane.status == LaneStatus::Paused && observe_paused {
+                let m = &metrics[lane.flow.0];
+                let energy = match &bills[li] {
+                    Some(b) => b.energy_j,
+                    None => f64::NAN,
+                };
+                let obs = Observation {
+                    throughput_gbps: 0.0,
+                    plr: m.plr,
+                    rtt_s: m.rtt_s,
+                    energy_j: energy,
+                    cc: lane.cc,
+                    p: lane.p,
+                    duration_s: m.duration_s,
+                };
+                lane.window.push(&obs);
+                let out = lane.reward.update(&obs);
+                if lane.has_pending_decision {
+                    // The action pending at pause time is credited with
+                    // the collapsed reward of the first paused MI — this
+                    // is how optimizers see the cost of preemption.
+                    lane.optimizer.learn(out.reward, lane.window.state(), false);
+                    lane.has_pending_decision = false;
+                }
+                events.push(Event::MiCompleted {
+                    lane: LaneId(li),
+                    record: MiRecord {
+                        mi,
+                        time_s,
+                        throughput_gbps: 0.0,
+                        plr: m.plr,
+                        rtt_s: m.rtt_s,
+                        energy_j: energy,
+                        cc: lane.cc,
+                        p: lane.p,
+                        metric: out.metric,
+                        reward: out.reward,
+                        action: None,
+                        state: lane.window.state().to_vec(),
+                        bytes_total: lane.job.delivered_bytes(),
+                        energy_total_j: self.energy.lane_total_j(li),
+                        paused: true,
+                        rails: bills[li].as_ref().and_then(|b| b.rails),
+                    },
+                });
+                continue;
+            }
             if lane.status != LaneStatus::Active {
                 continue;
             }
             let m = &metrics[lane.flow.0];
             lane.job.advance(m.bytes_delivered);
-            let energy = if has_energy {
-                lane.meter.record_mi(m.active_streams, m.throughput_gbps, m.duration_s)
-            } else {
-                f64::NAN
+            let energy = match &bills[li] {
+                Some(b) => b.energy_j,
+                None => f64::NAN,
             };
             let obs = Observation {
                 throughput_gbps: m.throughput_gbps,
@@ -472,7 +602,9 @@ impl Session {
                     action,
                     state: lane.window.state().to_vec(),
                     bytes_total: lane.job.delivered_bytes(),
-                    energy_total_j: lane.meter.total_j(),
+                    energy_total_j: self.energy.lane_total_j(li),
+                    paused: false,
+                    rails: bills[li].as_ref().and_then(|b| b.rails),
                 },
             });
             if done_now {
@@ -481,7 +613,7 @@ impl Session {
                     mi,
                     time_s,
                     bytes_delivered: lane.job.delivered_bytes(),
-                    total_energy_j: lane.meter.total_j(),
+                    total_energy_j: self.energy.lane_total_j(li),
                 });
             }
         }
@@ -527,6 +659,51 @@ impl Session {
             .iter()
             .filter(|l| matches!(l.status, LaneStatus::Active | LaneStatus::Paused))
             .count()
+    }
+
+    /// Host-truth energy integrated so far across both end hosts, joules
+    /// (0.0 on testbeds without energy counters). On the lumped compat
+    /// rail this equals the sum of per-lane meters, as before; in
+    /// host-resolved mode it is the once-per-host integration the per-lane
+    /// attributions sum to.
+    pub fn host_energy_j(&self) -> f64 {
+        self.energy.host_total_j()
+    }
+
+    /// Energy attributed to one lane so far, joules. Includes idle-rail
+    /// billing accrued while paused even when paused MIs are not observed.
+    pub fn lane_energy_j(&self, id: LaneId) -> Option<f64> {
+        if id.0 < self.lanes.len() {
+            Some(self.energy.lane_total_j(id.0))
+        } else {
+            None
+        }
+    }
+
+    /// Combined per-rail energy breakdown across both hosts (None on the
+    /// lumped compat rail).
+    pub fn energy_rails(&self) -> Option<RailEnergy> {
+        self.energy.rails_total()
+    }
+
+    /// One lane's per-rail attribution (None on the lumped compat rail).
+    pub fn lane_energy_rails(&self, id: LaneId) -> Option<RailEnergy> {
+        if id.0 < self.lanes.len() {
+            self.energy.lane_rails(id.0)
+        } else {
+            None
+        }
+    }
+
+    /// Whether energy accounting is host-resolved (rails) rather than the
+    /// lumped compat curve.
+    pub fn energy_host_resolved(&self) -> bool {
+        self.energy.host_resolved()
+    }
+
+    /// Whether paused lanes emit zero-throughput observation records.
+    pub fn observes_paused(&self) -> bool {
+        self.observe_paused
     }
 
     pub fn status(&self, id: LaneId) -> Option<LaneStatus> {
@@ -682,5 +859,79 @@ mod tests {
         s.step();
         assert!(s.time_s() > 0.0);
         assert_eq!(s.lane_count(), 0);
+    }
+
+    /// With `observe_paused`, a paused lane emits zero-throughput records
+    /// carrying idle-rail energy — the preemption-cost signal.
+    #[test]
+    fn observed_pause_emits_idle_records_with_rails() {
+        let tb = Testbed::chameleon();
+        let mut s = Session::builder(tb.clone())
+            .background(Background::Idle)
+            .energy(tb.energy_hosts())
+            .observe_paused(true)
+            .seed(3)
+            .build();
+        let id = s.admit(static_spec());
+        s.step();
+        assert!(s.pause(id));
+        let events = s.step();
+        let rec = events
+            .iter()
+            .find_map(|e| match e {
+                Event::MiCompleted { lane, record } if *lane == id => Some(record.clone()),
+                _ => None,
+            })
+            .expect("observed paused lane must emit a record");
+        assert!(rec.paused);
+        assert_eq!(rec.throughput_gbps, 0.0);
+        assert!(rec.energy_j > 0.0 && rec.energy_j < 80.0, "idle bill {}", rec.energy_j);
+        let rails = rec.rails.expect("host-resolved record carries rails");
+        assert!(rails.idle_j > 0.0 && rails.fixed_j > 0.0);
+        assert_eq!(rails.cpu_j, 0.0);
+    }
+
+    /// Without the knob, a paused lane stays silent (compat) but — in
+    /// host-resolved mode — its account still accrues idle energy, so
+    /// pausing is never modeled as free.
+    #[test]
+    fn unobserved_pause_still_bills_idle_on_host_rails() {
+        let tb = Testbed::chameleon();
+        let mut s = Session::builder(tb.clone())
+            .background(Background::Idle)
+            .energy(tb.energy_hosts())
+            .seed(5)
+            .build();
+        let id = s.admit(static_spec());
+        s.step();
+        assert!(s.pause(id));
+        let before = s.lane_energy_j(id).unwrap();
+        let events = s.step();
+        assert!(events.iter().all(|e| !matches!(e, Event::MiCompleted { .. })));
+        let after = s.lane_energy_j(id).unwrap();
+        assert!(after > before, "paused lane accrued no idle energy");
+        // Conservation: the lane's attribution is the whole host total.
+        assert!((s.host_energy_j() - after).abs() <= 1e-9 * after);
+    }
+
+    /// The lumped compat rail (the default) reports no rail breakdown and
+    /// bills paused lanes nothing unless observed — the seed behavior.
+    #[test]
+    fn lumped_default_has_no_rails_and_free_silent_pauses() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(7)
+            .build();
+        assert!(!s.energy_host_resolved());
+        let id = s.admit(static_spec());
+        let events = s.step();
+        let has_rails = events
+            .iter()
+            .any(|e| matches!(e, Event::MiCompleted { record, .. } if record.rails.is_some()));
+        assert!(!has_rails);
+        assert!(s.pause(id));
+        let before = s.lane_energy_j(id).unwrap();
+        s.step();
+        assert_eq!(s.lane_energy_j(id).unwrap(), before);
     }
 }

@@ -243,6 +243,8 @@ mod tests {
             state: vec![mi as f32; 2 * FEATURES],
             bytes_total: (mi + 1) as f64 * 1e9,
             energy_total_j: (mi + 1) as f64 * 50.0,
+            paused: false,
+            rails: None,
         };
         let records = vec![rec(0, Some(1), 2.0), rec(1, Some(2), 3.0), rec(2, None, 4.0)];
         let ts = transitions_from_records(&records);

@@ -14,12 +14,13 @@ pub struct EnergyMeter {
     /// Number of end systems accounted (2 = sender + receiver).
     pub ends: f64,
     total_j: f64,
+    seed: u64,
     rng: Rng,
 }
 
 impl EnergyMeter {
     pub fn new(model: PowerModel, seed: u64) -> EnergyMeter {
-        EnergyMeter { model, ends: 2.0, total_j: 0.0, rng: Rng::new(seed) }
+        EnergyMeter { model, ends: 2.0, total_j: 0.0, seed, rng: Rng::new(seed) }
     }
 
     pub fn model(&self) -> &PowerModel {
@@ -39,8 +40,12 @@ impl EnergyMeter {
         self.total_j
     }
 
+    /// Clear the total *and* re-seed the noise RNG, so reset + rerun
+    /// reproduces the same noise draws (previously only `total_j` was
+    /// cleared, leaving the RNG advanced and resets non-reproducible).
     pub fn reset(&mut self) {
         self.total_j = 0.0;
+        self.rng = Rng::new(self.seed);
     }
 }
 
@@ -74,6 +79,17 @@ mod tests {
         m.record_mi(4, 2.0, 1.0);
         m.reset();
         assert_eq!(m.total_j(), 0.0);
+    }
+
+    /// Reset re-seeds the noise RNG: the same record sequence after reset
+    /// reproduces the same draws bit-for-bit.
+    #[test]
+    fn reset_reseeds_noise_rng() {
+        let mut m = EnergyMeter::new(PowerModel::efficient(), 5);
+        let first: Vec<u64> = (0..5).map(|i| m.record_mi(4 + i, 2.0, 1.0).to_bits()).collect();
+        m.reset();
+        let second: Vec<u64> = (0..5).map(|i| m.record_mi(4 + i, 2.0, 1.0).to_bits()).collect();
+        assert_eq!(first, second, "reset left the RNG advanced");
     }
 
     #[test]

@@ -1,28 +1,48 @@
-//! End-system energy model — the RAPL analogue.
+//! End-system energy model — the RAPL analogue, host-scoped and
+//! component-resolved.
 //!
 //! The paper measures sender/receiver energy with Intel RAPL and subtracts
-//! each system's baseline power to isolate transfer energy. Physical counters
-//! are unavailable here, so this module models the *dynamic* (above-baseline)
-//! power of an end host during a transfer:
+//! each system's baseline power to isolate transfer energy. Physical
+//! counters are unavailable here, so this module models the *dynamic*
+//! (above-baseline) power of the end hosts during transfers, at two levels
+//! of resolution:
+//!
+//! **Component rails + host ledger** ([`rail`], [`host`]) — the accounting
+//! substrate for multi-lane hosts. Each end host carries three rails:
 //!
 //! ```text
-//! P_dyn = P_fixed + c_stream · N^0.9 + c_gbps · T + noise
+//! P_host = fixed.active_w                      (engine resident, once per host)
+//!        + c_stream · (Σ_l N_l)^0.9            (CPU: shared stream bookkeeping)
+//!        + (c_gbps_cpu + overhead_l) · T_l     (CPU: data-touching, per lane)
+//!        + c_gbps_nic · Σ_l T_l  |  LPI idle   (NIC: per-bit, or low-power idle)
+//!        + lane_idle_w · #paused               (idle rail: paused-lane keepalive)
 //! ```
 //!
-//! * `P_fixed` — cost of having the transfer engine running at all (event
-//!   loops, timers, page cache churn).
-//! * `c_stream · N^0.9` — per-active-stream CPU cost (interrupts, context
-//!   switches, TCP bookkeeping); mildly sub-linear because cores batch work.
-//! * `c_gbps · T` — per-bit cost of moving data (copies, checksums, DMA,
-//!   NIC + memory power).
+//! A [`HostLedger`] shared by all colocated lanes integrates that host
+//! truth once per monitoring interval and *attributes* it back to lanes —
+//! CPU proportional to streams, NIC proportional to bytes, fixed rail as
+//! an equal share, paused lanes billed the idle rail instead of vanishing.
+//! Attributed lane energy always sums to the host total (the conservation
+//! invariant), and an N-lane fleet pays fixed power once, not N times.
 //!
-//! The model keeps the two gradients the paper's T/E reward learns from:
-//! excess streams burn power without adding goodput, and slow transfers burn
-//! fixed power for longer. `EnergyMeter` integrates power per monitoring
-//! interval exactly as a RAPL poller would.
+//! **Lumped compat curve** ([`power`], [`meter`]) — the seed model
+//! `P_dyn = P_fixed + c_stream·N^0.9 + c_gbps·T + noise`, billed per lane.
+//! [`HostLedger`] in lumped mode (the session default) reproduces the
+//! per-lane [`EnergyMeter`] arithmetic bit-for-bit, which keeps every
+//! pre-refactor single-transfer report byte-identical. The rail
+//! calibration re-sums to this curve for a single active lane, so the two
+//! resolutions agree where they overlap.
+//!
+//! Both keep the gradients the paper's T/E reward learns from: excess
+//! streams burn power without adding goodput, slow transfers burn fixed
+//! power for longer — and, new with the ledger, pausing is *not* free.
 
+pub mod host;
 pub mod meter;
 pub mod power;
+pub mod rail;
 
+pub use host::{EnergyConfig, EnergyPlane, HostLedger, HostSpec, LaneActivity, LaneBill};
 pub use meter::EnergyMeter;
 pub use power::PowerModel;
+pub use rail::{CpuRail, FixedRail, NicRail, RailEnergy};

@@ -1,0 +1,147 @@
+//! Component power rails of an end host.
+//!
+//! The lumped [`crate::energy::PowerModel`] curve folds every power
+//! consumer of an end system into one polynomial. The rail model splits it
+//! into the components the related DVFS/core-scaling literature tunes
+//! independently:
+//!
+//! * [`CpuRail`] — per-stream bookkeeping cost (interrupts, context
+//!   switches, TCP state), sublinear in the *host's total* stream count
+//!   because cores batch work across transfer applications, plus the
+//!   data-touching CPU cost (copies, checksums) per Gbps;
+//! * [`NicRail`] — per-bit cost of moving data through the NIC + memory
+//!   subsystem, with a low-power-idle (LPI) state when no lane is moving
+//!   bytes;
+//! * [`FixedRail`] — cost of having the transfer engine resident at all
+//!   (event loops, timers, page-cache churn), paid **once per host** no
+//!   matter how many lanes are colocated, plus the per-lane idle cost of
+//!   holding a *paused* lane's session open (sockets, timers, pinned
+//!   buffers) — the energy price of preemption.
+//!
+//! The default calibration ([`CpuRail::efficient`] etc.) is chosen so that
+//! a single-lane host resolves to exactly the same deterministic power as
+//! the lumped curve: `fixed.active_w + cpu.c_stream_w·N^0.9 +
+//! (cpu.c_gbps_w + nic.c_gbps_w)·T` with `cpu.c_gbps_w + nic.c_gbps_w =
+//! PowerModel::efficient().c_gbps_w`.
+
+/// Energy split by component rail, joules (one MI or accumulated).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RailEnergy {
+    /// CPU rail: stream bookkeeping + data-touching cycles + engine overhead.
+    pub cpu_j: f64,
+    /// NIC rail: per-bit transport cost (or LPI idle when nothing moves).
+    pub nic_j: f64,
+    /// Fixed rail: engine-resident cost, shared equally by colocated lanes.
+    pub fixed_j: f64,
+    /// Idle rail: per-paused-lane session-keepalive cost.
+    pub idle_j: f64,
+}
+
+impl RailEnergy {
+    pub fn total_j(&self) -> f64 {
+        self.cpu_j + self.nic_j + self.fixed_j + self.idle_j
+    }
+
+    pub fn add(&mut self, other: &RailEnergy) {
+        self.cpu_j += other.cpu_j;
+        self.nic_j += other.nic_j;
+        self.fixed_j += other.fixed_j;
+        self.idle_j += other.idle_j;
+    }
+}
+
+/// CPU rail: transfer-thread bookkeeping plus data-touching cycles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CpuRail {
+    /// W per (total host streams)^`stream_exp`.
+    pub c_stream_w: f64,
+    /// Sublinearity of stream cost in the host's total stream count.
+    pub stream_exp: f64,
+    /// Data-touching CPU cost (copies, checksums), W per Gbps.
+    pub c_gbps_w: f64,
+}
+
+impl CpuRail {
+    pub fn efficient() -> CpuRail {
+        CpuRail { c_stream_w: 0.85, stream_exp: 0.9, c_gbps_w: 2.5 }
+    }
+
+    /// Shared stream-bookkeeping power for `total_streams` active streams
+    /// across *all* lanes on the host, W.
+    pub fn stream_power_w(&self, total_streams: usize) -> f64 {
+        if total_streams == 0 {
+            return 0.0;
+        }
+        self.c_stream_w * (total_streams as f64).powf(self.stream_exp)
+    }
+}
+
+/// NIC + memory-subsystem rail.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NicRail {
+    /// Per-bit transport cost, W per Gbps of goodput.
+    pub c_gbps_w: f64,
+    /// Low-power-idle (LPI) draw when lanes are present but nothing moves, W.
+    pub lpi_idle_w: f64,
+}
+
+impl NicRail {
+    pub fn efficient() -> NicRail {
+        NicRail { c_gbps_w: 3.5, lpi_idle_w: 1.0 }
+    }
+}
+
+/// Fixed/idle rail: engine residency (per host) and paused-lane keepalive
+/// (per paused lane).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FixedRail {
+    /// Engine-resident power while any lane is hosted, W — paid once per
+    /// host, never once per lane.
+    pub active_w: f64,
+    /// Keepalive power of one externally-paused lane (sockets, timers,
+    /// pinned buffers), W.
+    pub lane_idle_w: f64,
+}
+
+impl FixedRail {
+    pub fn efficient() -> FixedRail {
+        FixedRail { active_w: 18.0, lane_idle_w: 2.5 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rail_energy_totals_and_adds() {
+        let mut a = RailEnergy { cpu_j: 1.0, nic_j: 2.0, fixed_j: 3.0, idle_j: 4.0 };
+        assert_eq!(a.total_j(), 10.0);
+        a.add(&RailEnergy { cpu_j: 0.5, ..RailEnergy::default() });
+        assert_eq!(a.cpu_j, 1.5);
+        assert_eq!(a.total_j(), 10.5);
+    }
+
+    #[test]
+    fn cpu_stream_power_sublinear_and_zero_safe() {
+        let cpu = CpuRail::efficient();
+        assert_eq!(cpu.stream_power_w(0), 0.0);
+        let p10 = cpu.stream_power_w(10);
+        let p20 = cpu.stream_power_w(20);
+        assert!(p20 > p10 && p20 < 2.0 * p10, "p10={p10} p20={p20}");
+    }
+
+    /// The rail calibration re-sums to the lumped efficient curve's
+    /// coefficients (what keeps single-lane host truth aligned with the
+    /// compat rail).
+    #[test]
+    fn efficient_rails_resum_to_lumped_curve() {
+        let lumped = crate::energy::PowerModel::efficient();
+        let cpu = CpuRail::efficient();
+        let nic = NicRail::efficient();
+        let fixed = FixedRail::efficient();
+        assert_eq!(cpu.c_gbps_w + nic.c_gbps_w, lumped.c_gbps_w);
+        assert_eq!(cpu.c_stream_w, lumped.c_stream_w);
+        assert_eq!(fixed.active_w, lumped.p_fixed_w);
+    }
+}

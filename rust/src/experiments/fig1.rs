@@ -22,13 +22,31 @@ pub struct SweepPoint {
     pub cc: u32,
     pub p: u32,
     pub throughput_gbps: f64,
-    /// Mean dynamic power per MI, W (the paper's "energy per MI").
+    /// Mean dynamic power per MI, W (the paper's "energy per MI") — the
+    /// lumped compat column, bit-identical to the pre-refactor sweep.
     pub power_w: f64,
+    /// Host-truth rail decomposition of the same operating points (mean W
+    /// per MI): CPU (stream bookkeeping + data touching), NIC per-bit,
+    /// fixed engine residency. The rails re-sum to `power_w` (the Fig.-1b
+    /// columns now come from the host model, not the lumped curve alone).
+    pub cpu_w: f64,
+    pub nic_w: f64,
+    pub fixed_w: f64,
+}
+
+/// Per-MI means measured at one (cc, p) grid point.
+struct Measured {
+    throughput_gbps: f64,
+    power_w: f64,
+    cpu_w: f64,
+    nic_w: f64,
+    fixed_w: f64,
 }
 
 /// Measure one substrate at one (cc, p): warm-up, then average 15 MIs.
-fn measure(mut sub: Box<dyn Substrate>, cc: u32, p: u32) -> (f64, f64) {
+fn measure(mut sub: Box<dyn Substrate>, cc: u32, p: u32) -> Measured {
     let model = PowerModel::efficient();
+    let host = sub.testbed().sender_host();
     let id = sub.add_flow(cc, p, None);
     // Warm-up past slow start, then measure.
     for _ in 0..12 {
@@ -36,13 +54,25 @@ fn measure(mut sub: Box<dyn Substrate>, cc: u32, p: u32) -> (f64, f64) {
     }
     let mut thr = 0.0;
     let mut pw = 0.0;
+    let (mut cpu, mut nic, mut fixed) = (0.0, 0.0, 0.0);
     let mis = 15;
     for _ in 0..mis {
         let m = sub.run_mi(1.0)[id.0];
         thr += m.throughput_gbps;
         pw += model.power_w(m.active_streams, m.throughput_gbps);
+        let (c, n, f) = host.rails_w(m.active_streams, m.throughput_gbps);
+        cpu += c;
+        nic += n;
+        fixed += f;
     }
-    (thr / mis as f64, pw / mis as f64)
+    let k = mis as f64;
+    Measured {
+        throughput_gbps: thr / k,
+        power_w: pw / k,
+        cpu_w: cpu / k,
+        nic_w: nic / k,
+        fixed_w: fixed / k,
+    }
 }
 
 /// Sweep the (cc, p) grid under each background regime, sharded over `jobs`
@@ -67,13 +97,16 @@ pub fn sweep(
     runner::parallel_map(&specs, jobs, |_, (regime, cc, p, point_seed)| {
         let bg = Background::regime(regime, testbed.capacity_gbps);
         let sim = NetworkSim::new(testbed.clone(), *point_seed).with_background(bg);
-        let (throughput_gbps, power_w) = measure(Box::new(sim), *cc, *p);
+        let m = measure(Box::new(sim), *cc, *p);
         SweepPoint {
             regime: regime.clone(),
             cc: *cc,
             p: *p,
-            throughput_gbps,
-            power_w,
+            throughput_gbps: m.throughput_gbps,
+            power_w: m.power_w,
+            cpu_w: m.cpu_w,
+            nic_w: m.nic_w,
+            fixed_w: m.fixed_w,
         }
     })
 }
@@ -89,13 +122,16 @@ pub fn sweep_scenario(scenario: &Scenario, grid: &[u32], seed: u64, jobs: usize)
         }
     }
     runner::parallel_map(&specs, jobs, |_, (cc, p, point_seed)| {
-        let (throughput_gbps, power_w) = measure(scenario.substrate(*point_seed), *cc, *p);
+        let m = measure(scenario.substrate(*point_seed), *cc, *p);
         SweepPoint {
             regime: scenario.name.to_string(),
             cc: *cc,
             p: *p,
-            throughput_gbps,
-            power_w,
+            throughput_gbps: m.throughput_gbps,
+            power_w: m.power_w,
+            cpu_w: m.cpu_w,
+            nic_w: m.nic_w,
+            fixed_w: m.fixed_w,
         }
     })
 }
@@ -113,6 +149,9 @@ pub fn to_json(points: &[SweepPoint]) -> Json {
                     ("p", Json::from(pt.p as usize)),
                     ("throughput_gbps", Json::from(pt.throughput_gbps)),
                     ("power_w", Json::from(pt.power_w)),
+                    ("cpu_w", Json::from(pt.cpu_w)),
+                    ("nic_w", Json::from(pt.nic_w)),
+                    ("fixed_w", Json::from(pt.fixed_w)),
                 ])
             })
             .collect(),
@@ -195,6 +234,25 @@ mod tests {
         for p in &pts {
             assert!(p.throughput_gbps <= 4.0 + 1e-6, "{:?}", p);
             assert_eq!(p.regime, "nic-limited");
+        }
+    }
+
+    /// The host-truth rail columns re-sum to the lumped power column: the
+    /// Fig.-1b decomposition conserves the compat number.
+    #[test]
+    fn rail_columns_resum_to_lumped_power() {
+        let tb = Testbed::chameleon();
+        let pts = sweep(&tb, &[1, 8], &["low"], 13, 2);
+        for p in &pts {
+            let resum = p.cpu_w + p.nic_w + p.fixed_w;
+            assert!(
+                (resum - p.power_w).abs() <= 1e-9 * p.power_w,
+                "rails {resum} vs lumped {} at ({}, {})",
+                p.power_w,
+                p.cc,
+                p.p
+            );
+            assert!(p.fixed_w > 0.0 && p.cpu_w > 0.0);
         }
     }
 }

@@ -2,21 +2,37 @@
 //! bottleneck under a seeded [`ArrivalSchedule`].
 //!
 //! This is the experiment the step-driven [`crate::coordinator::Session`]
-//! API exists for: lanes
-//! are admitted mid-run as the arrival process fires, force-departed when
-//! their lifetime expires, and the report is computed from the event stream
-//! (per-epoch Jain's fairness over concurrently active lanes, energy per
-//! delivered gigabyte, completion-time distribution). Trials shard over the
-//! parallel runner with identity-derived seeds, so reports are
-//! bit-identical at any `--jobs` count.
+//! API exists for: lanes are admitted mid-run as the arrival process fires,
+//! force-departed when their lifetime expires, and the report is computed
+//! from the event stream (per-epoch Jain's fairness via
+//! [`crate::telemetry::FairnessSink`], energy per delivered gigabyte,
+//! completion-time distributions). Trials shard over the parallel runner
+//! with identity-derived seeds, so reports are bit-identical at any
+//! `--jobs` count.
+//!
+//! Energy is **host-resolved**: all lanes colocated on the scenario's
+//! sender/receiver hosts share one [`crate::energy::HostLedger`] per host,
+//! so fixed power is paid once per host (the seed-era per-lane meters
+//! counted it once per lane) and J/GB comes from host truth. Per-trial
+//! conservation — attributed lane energy sums to the host total — is
+//! asserted on every run.
+//!
+//! The optional contention-**yield controller** pauses the youngest lanes
+//! when too many compete for the bottleneck. Each lane consents to yield
+//! only while it believes pausing is energetically free: lanes running
+//! blind (no `observe_paused`) never see their idle bills and always
+//! consent — the seed-era assumption that pausing costs nothing — while
+//! lanes observing paused MIs learn the idle-rail price and refuse, i.e.
+//! pause less eagerly. `sparta fleet --compare-observe` runs both sides.
 
 use super::common::{make_optimizer, Scale, SpartaCtx};
 use super::runner;
 use crate::config::Paths;
-use crate::coordinator::{Event, LaneId, LaneSpec};
+use crate::coordinator::{Event, LaneId, LaneSpec, LaneStatus};
+use crate::energy::RailEnergy;
 use crate::runtime::WeightSnapshot;
 use crate::scenarios::ArrivalSchedule;
-use crate::telemetry::Table;
+use crate::telemetry::{FairnessSink, Table, TelemetrySink};
 use crate::transfer::TransferJob;
 use crate::util::json::Json;
 use crate::util::stats;
@@ -25,6 +41,28 @@ use std::sync::Arc;
 
 /// Fairness is reported per epoch of this many MIs.
 pub const EPOCH_MIS: usize = 20;
+
+/// Yield controller: pause the youngest active lanes while more than this
+/// many compete for the bottleneck.
+pub const YIELD_ACTIVE_TARGET: usize = 4;
+
+/// Yield controller: a policy-paused lane is resumed after this many MIs.
+pub const YIELD_GAP_MIS: usize = 10;
+
+/// Yield controller: a lane consents to pause only while its observed
+/// pause cost estimate is at most this many joules per MI ("basically
+/// free"). Lanes that never observe paused MIs estimate zero.
+pub const YIELD_COST_BUDGET_J: f64 = 1.0;
+
+/// Fleet run knobs (see the module docs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetOpts {
+    /// Paused lanes emit zero-throughput records carrying idle energy, so
+    /// their optimizers (and the yield controller) see preemption costs.
+    pub observe_paused: bool,
+    /// Enable the contention-yield controller.
+    pub yield_policy: bool,
+}
 
 /// Final accounting for one admitted lane.
 #[derive(Debug, Clone)]
@@ -38,6 +76,8 @@ pub struct LaneOutcome {
     /// horizon for lanes still running).
     pub duration_s: f64,
     pub bytes_gb: f64,
+    /// Host-ledger energy attributed to this lane (incl. idle bills while
+    /// paused), kJ.
     pub energy_kj: f64,
 }
 
@@ -49,10 +89,16 @@ pub struct FleetTrial {
     /// Jain's fairness per epoch over lanes active in that epoch (mean
     /// per-lane throughput within the epoch).
     pub epoch_jfi: Vec<f64>,
-    /// Total metered energy / total delivered GB, J/GB.
+    /// Host-truth energy / total delivered GB, J/GB (fixed power counted
+    /// once per host, not once per lane).
     pub energy_per_gb_j: f64,
     /// Completion times of lanes that finished, seconds, ascending.
     pub completion_s: Vec<f64>,
+    /// Yield-controller pauses taken / refusals issued this trial.
+    pub pauses: usize,
+    pub yields_refused: usize,
+    /// Host-truth per-rail energy breakdown (both hosts combined).
+    pub rails: Option<RailEnergy>,
 }
 
 /// The full fleet report.
@@ -62,7 +108,19 @@ pub struct FleetReport {
     pub scenario: String,
     pub methods: Vec<String>,
     pub horizon_mis: usize,
+    pub observe_paused: bool,
+    pub yield_policy: bool,
     pub trials: Vec<FleetTrial>,
+}
+
+impl FleetReport {
+    pub fn total_pauses(&self) -> usize {
+        self.trials.iter().map(|t| t.pauses).sum()
+    }
+
+    pub fn mean_energy_per_gb_j(&self) -> f64 {
+        stats::mean(&self.trials.iter().map(|t| t.energy_per_gb_j).collect::<Vec<_>>())
+    }
 }
 
 /// Run `scale.trials()` independent fleet trials of `schedule`, cycling
@@ -76,6 +134,7 @@ pub fn run(
     scale: Scale,
     seed: u64,
     jobs: usize,
+    opts: FleetOpts,
 ) -> Result<FleetReport> {
     if methods.is_empty() {
         return Err(anyhow!("fleet needs at least one method"));
@@ -95,7 +154,7 @@ pub fn run(
             // (base seed, schedule, trial index).
             let trial_seed =
                 runner::cell_seed(seed, &format!("fleet/{}", schedule.name), trial as u64);
-            run_trial(ctx, schedule, methods, trial, trial_seed)
+            run_trial(ctx, schedule, methods, trial, trial_seed, opts)
         },
     );
     let mut out_trials = Vec::new();
@@ -107,8 +166,42 @@ pub fn run(
         scenario: schedule.scenario.name.to_string(),
         methods: methods.to_vec(),
         horizon_mis: schedule.horizon_mis,
+        observe_paused: opts.observe_paused,
+        yield_policy: opts.yield_policy,
         trials: out_trials,
     })
+}
+
+/// The churn comparison behind `sparta fleet --compare-observe`: the same
+/// schedule with the yield controller on, run blind vs with pause-cost
+/// observation. Returns `(blind, observing)`.
+pub fn run_observe_comparison(
+    paths: &Paths,
+    schedule: &ArrivalSchedule,
+    methods: &[String],
+    scale: Scale,
+    seed: u64,
+    jobs: usize,
+) -> Result<(FleetReport, FleetReport)> {
+    let blind = run(
+        paths,
+        schedule,
+        methods,
+        scale,
+        seed,
+        jobs,
+        FleetOpts { observe_paused: false, yield_policy: true },
+    )?;
+    let observing = run(
+        paths,
+        schedule,
+        methods,
+        scale,
+        seed,
+        jobs,
+        FleetOpts { observe_paused: true, yield_policy: true },
+    )?;
+    Ok((blind, observing))
 }
 
 /// One seeded session over the schedule's arrival process.
@@ -118,20 +211,40 @@ fn run_trial(
     methods: &[String],
     trial: usize,
     trial_seed: u64,
+    opts: FleetOpts,
 ) -> Result<FleetTrial> {
     let arrivals = schedule.arrivals(trial_seed);
-    let mut session = schedule.scenario.session().seed(trial_seed).build();
+    // Host-resolved accounting: every lane bills the scenario's shared
+    // sender/receiver ledgers instead of a private lumped meter.
+    let mut session = schedule
+        .scenario
+        .session_host_resolved()
+        .observe_paused(opts.observe_paused)
+        .seed(trial_seed)
+        .build();
 
     // Per-lane trackers, indexed by LaneId (admission order).
     let mut admitted_mi: Vec<usize> = Vec::new();
     let mut admitted_s: Vec<f64> = Vec::new();
     let mut deadline: Vec<Option<usize>> = Vec::new();
     let mut names: Vec<String> = Vec::new();
-    let mut ended: Vec<Option<(bool, f64, f64, f64)>> = Vec::new(); // (completed, end_s, bytes, energy_j)
+    let mut ended: Vec<Option<(bool, f64, f64)>> = Vec::new(); // (completed, end_s, bytes)
     let mut running_bytes: Vec<f64> = Vec::new();
-    let mut running_energy: Vec<f64> = Vec::new();
-    // epoch_thr[epoch][lane] = (throughput sum, samples).
-    let mut epoch_thr: Vec<Vec<(f64, usize)>> = Vec::new();
+    // Per-epoch fairness comes from the shared telemetry sink now — the
+    // fleet driver no longer duplicates the JFI bucketing.
+    let mut fairness = FairnessSink::new(EPOCH_MIS);
+
+    // Yield-controller state.
+    let mut policy_paused_at: Vec<Option<usize>> = Vec::new();
+    let mut yield_exempt: Vec<bool> = Vec::new();
+    // A resumed lane may not be re-paused before this MI (guarantees a
+    // YIELD_GAP_MIS running window between yields — without it a
+    // just-resumed lane would be re-paused in the same tick and starve).
+    let mut yield_cooldown_until: Vec<usize> = Vec::new();
+    // Observed pause cost: (sum of paused-record energy, samples).
+    let mut pause_cost: Vec<(f64, usize)> = Vec::new();
+    let mut pauses = 0usize;
+    let mut yields_refused = 0usize;
 
     let mut next_arrival = 0usize;
     for mi in 0..schedule.horizon_mis {
@@ -155,7 +268,10 @@ fn run_trial(
             names.push(name);
             ended.push(None);
             running_bytes.push(0.0);
-            running_energy.push(0.0);
+            policy_paused_at.push(None);
+            yield_exempt.push(false);
+            yield_cooldown_until.push(0);
+            pause_cost.push((0.0, 0));
             next_arrival += 1;
         }
         for (li, d) in deadline.iter_mut().enumerate() {
@@ -166,27 +282,37 @@ fn run_trial(
                 *d = None;
             }
         }
+        if opts.yield_policy {
+            run_yield_policy(
+                &mut session,
+                mi,
+                &mut policy_paused_at,
+                &mut yield_exempt,
+                &mut yield_cooldown_until,
+                &pause_cost,
+                &mut pauses,
+                &mut yields_refused,
+            );
+        }
         for ev in session.step() {
+            fairness.on_event(&ev);
             match &ev {
                 Event::MiCompleted { lane, record } => {
-                    running_bytes[lane.0] = record.bytes_total;
-                    running_energy[lane.0] = record.energy_total_j;
-                    let e = record.mi / EPOCH_MIS;
-                    while epoch_thr.len() <= e {
-                        epoch_thr.push(Vec::new());
+                    if record.paused {
+                        // The lane's only window into what pausing costs.
+                        if record.energy_j.is_finite() {
+                            pause_cost[lane.0].0 += record.energy_j;
+                            pause_cost[lane.0].1 += 1;
+                        }
+                    } else {
+                        running_bytes[lane.0] = record.bytes_total;
                     }
-                    let row = &mut epoch_thr[e];
-                    while row.len() <= lane.0 {
-                        row.push((0.0, 0));
-                    }
-                    row[lane.0].0 += record.throughput_gbps;
-                    row[lane.0].1 += 1;
                 }
-                Event::Completed { lane, time_s, bytes_delivered, total_energy_j, .. } => {
-                    ended[lane.0] = Some((true, *time_s, *bytes_delivered, *total_energy_j));
+                Event::Completed { lane, time_s, bytes_delivered, .. } => {
+                    ended[lane.0] = Some((true, *time_s, *bytes_delivered));
                 }
-                Event::Departed { lane, time_s, bytes_delivered, total_energy_j, .. } => {
-                    ended[lane.0] = Some((false, *time_s, *bytes_delivered, *total_energy_j));
+                Event::Departed { lane, time_s, bytes_delivered, .. } => {
+                    ended[lane.0] = Some((false, *time_s, *bytes_delivered));
                 }
                 _ => {}
             }
@@ -199,20 +325,23 @@ fn run_trial(
     let final_s = session.time_s();
     let mut lanes = Vec::new();
     let mut total_bytes = 0.0;
-    let mut total_energy_j = 0.0;
+    let mut attributed_j = 0.0;
     let mut completion_s = Vec::new();
     for li in 0..names.len() {
-        let (completed, end_s, bytes, energy_j) = match ended[li] {
+        let (completed, end_s, bytes) = match ended[li] {
             Some(e) => e,
             // Still running at the horizon.
-            None => (false, final_s, running_bytes[li], running_energy[li]),
+            None => (false, final_s, running_bytes[li]),
         };
+        // Attribution from the ledger directly: unlike the event totals it
+        // also covers idle bills accrued after a lane's last observed MI.
+        let energy_j = session.lane_energy_j(LaneId(li)).unwrap_or(0.0);
         let duration_s = end_s - admitted_s[li];
         if completed {
             completion_s.push(duration_s);
         }
         total_bytes += bytes;
-        total_energy_j += energy_j;
+        attributed_j += energy_j;
         lanes.push(LaneOutcome {
             name: names[li].clone(),
             admitted_mi: admitted_mi[li],
@@ -224,48 +353,107 @@ fn run_trial(
         });
     }
     completion_s.sort_by(f64::total_cmp);
-    // Epochs where no lane was active are skipped rather than scored as
-    // vacuously perfect fairness (same rule as `ReportSink::finish`).
-    let epoch_jfi: Vec<f64> = epoch_thr
-        .iter()
-        .filter_map(|row| {
-            let means: Vec<f64> = row
-                .iter()
-                .filter(|(_, n)| *n > 0)
-                .map(|(s, n)| s / *n as f64)
-                .collect();
-            if means.is_empty() {
-                None
-            } else {
-                Some(stats::jain_fairness(&means))
-            }
-        })
-        .collect();
-    let energy_per_gb_j = if total_bytes > 0.0 {
-        total_energy_j / (total_bytes / 1e9)
-    } else {
-        0.0
-    };
+    let epoch_jfi = fairness.epoch_jfi();
+    // J/GB from host truth, and the conservation invariant: per-lane
+    // attributed energy sums to the host-ledger total.
+    let host_j = session.host_energy_j();
+    assert!(
+        (attributed_j - host_j).abs() <= 1e-9 * host_j.max(1.0),
+        "energy attribution leaked: lanes {attributed_j} J vs host {host_j} J"
+    );
+    let energy_per_gb_j = if total_bytes > 0.0 { host_j / (total_bytes / 1e9) } else { 0.0 };
     crate::log_info!(
-        "fleet {} trial {}: {} lanes, {} completed, jfi {:.3}, {:.0} J/GB",
+        "fleet {} trial {}: {} lanes, {} completed, jfi {:.3}, {:.0} J/GB, {} pauses",
         schedule.name,
         trial,
         lanes.len(),
         completion_s.len(),
         stats::mean(&epoch_jfi),
-        energy_per_gb_j
+        energy_per_gb_j,
+        pauses
     );
-    Ok(FleetTrial { trial, lanes, epoch_jfi, energy_per_gb_j, completion_s })
+    Ok(FleetTrial {
+        trial,
+        lanes,
+        epoch_jfi,
+        energy_per_gb_j,
+        completion_s,
+        pauses,
+        yields_refused,
+        rails: session.energy_rails(),
+    })
+}
+
+/// One tick of the contention-yield controller: resume lanes whose yield
+/// gap expired, then — while more than [`YIELD_ACTIVE_TARGET`] lanes are
+/// active — ask the youngest active lanes to pause. A resumed lane is
+/// guaranteed a [`YIELD_GAP_MIS`] running window before it can be asked
+/// again (pause/run alternation, not starvation). A lane consents only
+/// while its observed pause-cost estimate is within
+/// [`YIELD_COST_BUDGET_J`]; a refusal is permanent (the lane is exempt
+/// from further asks).
+#[allow(clippy::too_many_arguments)]
+fn run_yield_policy(
+    session: &mut crate::coordinator::Session,
+    mi: usize,
+    policy_paused_at: &mut [Option<usize>],
+    yield_exempt: &mut [bool],
+    yield_cooldown_until: &mut [usize],
+    pause_cost: &[(f64, usize)],
+    pauses: &mut usize,
+    yields_refused: &mut usize,
+) {
+    for (li, slot) in policy_paused_at.iter_mut().enumerate() {
+        if slot.is_some_and(|t| mi >= t + YIELD_GAP_MIS) {
+            // May fail if the lane was cancelled while paused; the slot is
+            // spent either way.
+            session.resume(LaneId(li));
+            *slot = None;
+            yield_cooldown_until[li] = mi + YIELD_GAP_MIS;
+        }
+    }
+    let active: Vec<usize> = (0..policy_paused_at.len())
+        .filter(|&li| session.status(LaneId(li)) == Some(LaneStatus::Active))
+        .collect();
+    if active.len() <= YIELD_ACTIVE_TARGET {
+        return;
+    }
+    let mut excess = active.len() - YIELD_ACTIVE_TARGET;
+    // Youngest first: the most recently admitted lanes yield.
+    for &li in active.iter().rev() {
+        if excess == 0 {
+            break;
+        }
+        if yield_exempt[li] || policy_paused_at[li].is_some() || mi < yield_cooldown_until[li] {
+            continue;
+        }
+        let (cost_sum, n) = pause_cost[li];
+        let est_cost_j_per_mi = if n > 0 { cost_sum / n as f64 } else { 0.0 };
+        if est_cost_j_per_mi <= YIELD_COST_BUDGET_J {
+            if session.pause(LaneId(li)) {
+                policy_paused_at[li] = Some(mi);
+                *pauses += 1;
+                excess -= 1;
+            }
+        } else {
+            // The lane has seen its idle bills and refuses to be preempted
+            // again — pause-cost observation makes it yield less eagerly.
+            yield_exempt[li] = true;
+            *yields_refused += 1;
+        }
+    }
 }
 
 /// Paper-style summary: one row per trial plus per-lane detail at verbose.
 pub fn print(report: &FleetReport) {
     println!(
-        "\nFleet — {} arrivals on '{}' ({} MI horizon, methods: {}):",
+        "\nFleet — {} arrivals on '{}' ({} MI horizon, methods: {}{}{}):",
         report.schedule,
         report.scenario,
         report.horizon_mis,
-        report.methods.join(",")
+        report.methods.join(","),
+        if report.observe_paused { ", observe-paused" } else { "" },
+        if report.yield_policy { ", yield policy" } else { "" },
     );
     let mut table = Table::new(&[
         "trial",
@@ -274,6 +462,7 @@ pub fn print(report: &FleetReport) {
         "departed",
         "mean JFI",
         "J/GB",
+        "pauses",
         "p50 done s",
         "p90 done s",
     ]);
@@ -293,11 +482,47 @@ pub fn print(report: &FleetReport) {
             departed.to_string(),
             format!("{:.3}", stats::mean(&t.epoch_jfi)),
             format!("{:.0}", t.energy_per_gb_j),
+            t.pauses.to_string(),
             pct(&t.completion_s, 0.50),
             pct(&t.completion_s, 0.90),
         ]);
     }
     table.print();
+    // Host-truth rail breakdown, averaged over trials.
+    let rails: Vec<&RailEnergy> = report.trials.iter().filter_map(|t| t.rails.as_ref()).collect();
+    if !rails.is_empty() {
+        let n = rails.len() as f64;
+        let avg = |f: fn(&RailEnergy) -> f64| rails.iter().map(|r| f(r)).sum::<f64>() / n / 1000.0;
+        println!(
+            "host rails (mean kJ/trial): cpu {:.1}, nic {:.1}, fixed {:.1}, idle {:.1}",
+            avg(|r| r.cpu_j),
+            avg(|r| r.nic_j),
+            avg(|r| r.fixed_j),
+            avg(|r| r.idle_j),
+        );
+    }
+}
+
+/// Side-by-side summary for `--compare-observe`.
+pub fn print_comparison(blind: &FleetReport, observing: &FleetReport) {
+    println!("\nPause-cost observation comparison ({} schedule):", blind.schedule);
+    let mut table = Table::new(&["fleet", "pauses", "yields refused", "J/GB (mean)", "mean JFI"]);
+    for (label, r) in [("blind", blind), ("observe-paused", observing)] {
+        let jfi: Vec<f64> = r.trials.iter().flat_map(|t| t.epoch_jfi.clone()).collect();
+        table.row(vec![
+            label.to_string(),
+            r.total_pauses().to_string(),
+            r.trials.iter().map(|t| t.yields_refused).sum::<usize>().to_string(),
+            format!("{:.0}", r.mean_energy_per_gb_j()),
+            format!("{:.3}", stats::mean(&jfi)),
+        ]);
+    }
+    table.print();
+    println!(
+        "lanes that observe their idle bills consent to {} pauses vs {} when blind",
+        observing.total_pauses(),
+        blind.total_pauses()
+    );
 }
 
 /// Machine-readable report (for `--out` and the CI determinism check).
@@ -311,6 +536,8 @@ pub fn to_json(report: &FleetReport) -> Json {
         ),
         ("horizon_mis", Json::from(report.horizon_mis)),
         ("epoch_mis", Json::from(EPOCH_MIS)),
+        ("observe_paused", Json::from(report.observe_paused)),
+        ("yield_policy", Json::from(report.yield_policy)),
         (
             "trials",
             Json::Arr(
@@ -318,31 +545,45 @@ pub fn to_json(report: &FleetReport) -> Json {
                     .trials
                     .iter()
                     .map(|t| {
-                        Json::obj(vec![
+                        let mut o = vec![
                             ("trial", Json::from(t.trial)),
                             ("epoch_jfi", Json::arr_f64(&t.epoch_jfi)),
                             ("energy_per_gb_j", Json::from(t.energy_per_gb_j)),
                             ("completion_s", Json::arr_f64(&t.completion_s)),
-                            (
-                                "lanes",
-                                Json::Arr(
-                                    t.lanes
-                                        .iter()
-                                        .map(|l| {
-                                            Json::obj(vec![
-                                                ("name", Json::from(l.name.clone())),
-                                                ("admitted_mi", Json::from(l.admitted_mi)),
-                                                ("completed", Json::from(l.completed)),
-                                                ("departed_early", Json::from(l.departed_early)),
-                                                ("duration_s", Json::from(l.duration_s)),
-                                                ("bytes_gb", Json::from(l.bytes_gb)),
-                                                ("energy_kj", Json::from(l.energy_kj)),
-                                            ])
-                                        })
-                                        .collect(),
-                                ),
+                            ("pauses", Json::from(t.pauses)),
+                            ("yields_refused", Json::from(t.yields_refused)),
+                        ];
+                        if let Some(r) = &t.rails {
+                            o.push((
+                                "energy_rails_j",
+                                Json::obj(vec![
+                                    ("cpu", Json::from(r.cpu_j)),
+                                    ("nic", Json::from(r.nic_j)),
+                                    ("fixed", Json::from(r.fixed_j)),
+                                    ("idle", Json::from(r.idle_j)),
+                                ]),
+                            ));
+                        }
+                        o.push((
+                            "lanes",
+                            Json::Arr(
+                                t.lanes
+                                    .iter()
+                                    .map(|l| {
+                                        Json::obj(vec![
+                                            ("name", Json::from(l.name.clone())),
+                                            ("admitted_mi", Json::from(l.admitted_mi)),
+                                            ("completed", Json::from(l.completed)),
+                                            ("departed_early", Json::from(l.departed_early)),
+                                            ("duration_s", Json::from(l.duration_s)),
+                                            ("bytes_gb", Json::from(l.bytes_gb)),
+                                            ("energy_kj", Json::from(l.energy_kj)),
+                                        ])
+                                    })
+                                    .collect(),
                             ),
-                        ])
+                        ));
+                        Json::obj(o)
                     })
                     .collect(),
             ),

@@ -15,7 +15,6 @@ use crate::agents::make_agent;
 use crate::config::Paths;
 use crate::coordinator::{FeatureWindow, ParamBounds, RewardKind};
 use crate::emulator::Env;
-use crate::energy::PowerModel;
 use crate::net::Testbed;
 use crate::telemetry::Table;
 use crate::trainer::{LiveEnv, ResourceMeter};
@@ -136,9 +135,12 @@ pub fn run(
             }
             let tune = meter.stop();
             // Add the end-system transfer energy the tuning phase burned
-            // (suboptimal exploration transfers): approximate with the
-            // efficient-engine power at the tuning workload.
-            let transfer_kj = tune.wall_s * PowerModel::efficient().power_w(36, 5.0) / 1000.0;
+            // (suboptimal exploration transfers): host-truth power of the
+            // CloudLab sender host at the tuning workload — identical to
+            // the lumped curve for a single lane, but sourced from the
+            // per-preset host definition like the other energy columns.
+            let transfer_kj =
+                Testbed::cloudlab().sender_host().power_w(36, 5.0) * tune.wall_s / 1000.0;
 
             Ok(Row {
                 algo: algo.clone(),

@@ -10,7 +10,9 @@
 //!   cluster-lookup emulated training environment, the state-of-the-art baselines
 //!   (rclone/escp-style static tools, Falcon_MP, 2-phase), and the simulated
 //!   substrates the paper's testbeds provided: a fluid-model TCP/CUBIC wide-area
-//!   network ([`net`]) and a RAPL-like end-system energy meter ([`energy`]).
+//!   network ([`net`]) and a RAPL-like, host-scoped, component-resolved
+//!   energy accounting layer ([`energy`]: CPU/NIC/fixed-idle rails on a
+//!   shared per-host ledger, with a bit-identical lumped compat rail).
 //! * **Layer 2 (python/compile, build-time only)** — the agents' policy/value
 //!   networks and Adam update steps as pure JAX functions, AOT-lowered to HLO
 //!   text artifacts that this crate loads through the PJRT CPU client.
@@ -46,8 +48,12 @@
 //! [`scenarios::ArrivalSchedule`] presets (`churn-light`, `churn-heavy`,
 //! `flash-crowd`) describe seeded Poisson/trace arrival processes, and
 //! `sparta fleet` ([`experiments::fleet`]) runs N agents joining/leaving a
-//! shared bottleneck, reporting per-epoch Jain's fairness, energy per
-//! delivered GB and completion-time distributions.
+//! shared bottleneck, reporting per-epoch Jain's fairness
+//! ([`telemetry::FairnessSink`]), host-truth energy per delivered GB with
+//! per-rail breakdowns (fixed power paid once per host — see
+//! [`energy::HostLedger`]), and completion-time distributions; paused
+//! lanes are billed the idle rail, observable to optimizers behind
+//! `--observe-paused`.
 //!
 //! Scenarios are the *training* substrate too, not just an evaluation toy:
 //! [`experiments::train_pipeline`] takes a [`experiments::TrainSource`]

@@ -270,7 +270,13 @@ fn dispatch(args: &Args) -> Result<()> {
                 Some(sc) => sc.session(),
                 None => Session::builder(testbed_arg(args)?),
             };
-            let mut session = builder.seed(seed).build();
+            // --observe-paused: externally-paused lanes emit zero-throughput
+            // records carrying idle energy (a single batch transfer is never
+            // paused, but the knob is plumbed for session-driving callers).
+            let mut session = builder
+                .observe_paused(args.flag("observe-paused"))
+                .seed(seed)
+                .build();
             session.admit(
                 LaneSpec::new(opt, TransferJob::files(files, bytes))
                     .engine(engine)
@@ -430,6 +436,35 @@ fn dispatch(args: &Args) -> Result<()> {
                 None => ["falcon_mp", "2-phase", "rclone"].iter().map(|m| m.to_string()).collect(),
                 Some(list) => list.split(',').map(|m| m.trim().to_string()).collect(),
             };
+            // --compare-observe: run the yield-policy fleet blind and with
+            // pause-cost observation, side by side (lanes that see their
+            // idle bills pause less eagerly).
+            if args.flag("compare-observe") {
+                let (blind, observing) = experiments::fleet::run_observe_comparison(
+                    &Paths::resolve(),
+                    &schedule,
+                    &methods,
+                    scale,
+                    seed,
+                    jobs,
+                )?;
+                experiments::fleet::print(&blind);
+                experiments::fleet::print(&observing);
+                experiments::fleet::print_comparison(&blind, &observing);
+                if let Some(out) = args.get("out") {
+                    let json = Json::obj(vec![
+                        ("blind", experiments::fleet::to_json(&blind)),
+                        ("observing", experiments::fleet::to_json(&observing)),
+                    ]);
+                    save_report(Path::new(out), &json)?;
+                    println!("report written to {out}");
+                }
+                return Ok(());
+            }
+            let opts = experiments::fleet::FleetOpts {
+                observe_paused: args.flag("observe-paused"),
+                yield_policy: false,
+            };
             let report = experiments::fleet::run(
                 &Paths::resolve(),
                 &schedule,
@@ -437,6 +472,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 scale,
                 seed,
                 jobs,
+                opts,
             )?;
             experiments::fleet::print(&report);
             maybe_save(args, &experiments::fleet::to_json(&report))?;
@@ -505,12 +541,23 @@ subcommands:
                                            falcon_mp, 2-phase, sparta-t, sparta-fe)
             [--events FILE]                (stream MI-granular session events
                                            as JSON lines while it runs)
+            [--observe-paused]             (paused lanes emit zero-throughput
+                                           records carrying idle energy)
   fleet     --scenario churn-light|churn-heavy|flash-crowd
             [--methods M1,M2,...]          N transfers joining/leaving a shared
                                            bottleneck (seeded arrival process;
-                                           per-epoch JFI, J/GB, completion-time
+                                           per-epoch JFI, host-truth J/GB +
+                                           per-rail breakdown, completion-time
                                            distribution). Default methods are
-                                           artifact-free baselines
+                                           artifact-free baselines. Energy is
+                                           host-resolved: colocated lanes share
+                                           one ledger per end host, so fixed
+                                           power is paid once per host
+            [--observe-paused]             (optimizers see paused MIs: idle
+                                           energy bills, preemption cost)
+            [--compare-observe]            (yield-policy churn comparison:
+                                           blind vs pause-cost-observing lanes;
+                                           observing lanes pause less eagerly)
   sweep     --testbed T|--scenario S|--scenario all   Fig 1 (cc,p) sweep
   algos     --reward fe|te                 Fig 4   DRL algorithm comparison
   tune                                     Fig 5   online tuning on CloudLab

@@ -2,6 +2,7 @@
 
 use super::background::Background;
 use super::link::Link;
+use crate::energy::{EnergyConfig, HostSpec};
 
 /// A named testbed configuration (link + node characteristics).
 #[derive(Debug, Clone)]
@@ -89,6 +90,26 @@ impl Testbed {
     pub fn link(&self) -> Link {
         Link::new(self.capacity_gbps, self.base_rtt_s, self.buffer_bdp)
     }
+
+    /// The sender end host's component-rail definition (the efficient
+    /// calibration, named per preset — e.g. `chameleon-tx`). On FABRIC the
+    /// spec exists but is never billed (`has_energy_counters` is false).
+    pub fn sender_host(&self) -> HostSpec {
+        HostSpec::efficient(format!("{}-tx", self.name))
+    }
+
+    /// The receiver end host's component-rail definition (`<name>-rx`).
+    pub fn receiver_host(&self) -> HostSpec {
+        HostSpec::efficient(format!("{}-rx", self.name))
+    }
+
+    /// Host-resolved energy accounting over this testbed's sender and
+    /// receiver hosts — what `sparta fleet` passes to
+    /// [`crate::coordinator::SessionBuilder::energy`] so colocated lanes
+    /// share one ledger per host instead of multiply-counting fixed power.
+    pub fn energy_hosts(&self) -> EnergyConfig {
+        EnergyConfig::Hosts { sender: self.sender_host(), receiver: self.receiver_host() }
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +136,29 @@ mod tests {
     fn single_stream_cannot_fill_any_link() {
         for tb in Testbed::all() {
             assert!(tb.per_stream_cap_gbps < tb.capacity_gbps / 5.0);
+        }
+    }
+
+    /// Every preset defines sender/receiver hosts whose single-lane rail
+    /// power re-sums to the lumped efficient curve (the compat guarantee).
+    #[test]
+    fn hosts_defined_per_preset_and_match_lumped_curve() {
+        let lumped = crate::energy::PowerModel::efficient();
+        for tb in Testbed::all() {
+            let tx = tb.sender_host();
+            let rx = tb.receiver_host();
+            assert_eq!(tx.name, format!("{}-tx", tb.name));
+            assert_eq!(rx.name, format!("{}-rx", tb.name));
+            for (streams, gbps) in [(1usize, 1.0), (16, 5.0), (256, 8.0)] {
+                let want = lumped.power_w(streams, gbps);
+                let got = tx.power_w(streams, gbps);
+                assert!(
+                    (got - want).abs() <= 1e-9 * want,
+                    "{}: rails {got} vs lumped {want}",
+                    tb.name
+                );
+            }
+            assert!(matches!(tb.energy_hosts(), EnergyConfig::Hosts { .. }));
         }
     }
 }

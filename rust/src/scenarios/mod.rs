@@ -62,8 +62,26 @@ impl Scenario {
 
     /// A step-driven session builder preconfigured for this scenario —
     /// the entry point for dynamic-admission workloads (`sparta fleet`).
+    /// Energy accounting defaults to the lumped compat rail; see
+    /// [`Scenario::session_host_resolved`] for shared host ledgers.
     pub fn session(&self) -> SessionBuilder {
         Session::builder(self.testbed.clone()).topology(self.topology.clone())
+    }
+
+    /// Like [`Scenario::session`], but with host-resolved energy
+    /// accounting: every lane colocated on the scenario's sender/receiver
+    /// hosts (from the testbed preset) bills one shared [`HostLedger`]
+    /// per host, so fixed power is paid once per host, not once per lane.
+    ///
+    /// [`HostLedger`]: crate::energy::HostLedger
+    pub fn session_host_resolved(&self) -> SessionBuilder {
+        self.session().energy(self.testbed.energy_hosts())
+    }
+
+    /// The scenario's end-host definitions (sender, receiver), from its
+    /// testbed preset.
+    pub fn hosts(&self) -> (crate::energy::HostSpec, crate::energy::HostSpec) {
+        (self.testbed.sender_host(), self.testbed.receiver_host())
     }
 
     /// Look up a registered scenario by name.
@@ -301,5 +319,19 @@ mod tests {
     fn receiver_limited_caps_below_wan() {
         let sc = Scenario::by_name("receiver-limited").unwrap();
         assert!(sc.topology.min_capacity_gbps() < sc.testbed.capacity_gbps);
+    }
+
+    /// Scenario host definitions come from the testbed preset, and the
+    /// host-resolved session builder actually switches accounting modes.
+    #[test]
+    fn scenario_hosts_resolve_from_testbed() {
+        let sc = Scenario::by_name("calm").unwrap();
+        let (tx, rx) = sc.hosts();
+        assert_eq!(tx.name, "chameleon-tx");
+        assert_eq!(rx.name, "chameleon-rx");
+        let s = sc.session_host_resolved().seed(1).build();
+        assert!(s.energy_host_resolved());
+        let s = sc.session().seed(1).build();
+        assert!(!s.energy_host_resolved());
     }
 }

@@ -11,5 +11,8 @@ pub mod sink;
 pub mod table;
 
 pub use report::save_report;
-pub use sink::{event_json, EventLog, FanoutSink, JsonlSink, NullSink, ReportSink, TelemetrySink};
+pub use sink::{
+    event_json, EventLog, FairnessSink, FanoutSink, JsonlSink, NullSink, ReportSink,
+    TelemetrySink,
+};
 pub use table::Table;

@@ -13,9 +13,12 @@ pub fn save_report(path: &Path, value: &Json) -> Result<()> {
     std::fs::write(path, value.to_string()).with_context(|| format!("writing {}", path.display()))
 }
 
-/// Build a JSON summary of a [`crate::coordinator::LaneReport`].
+/// Build a JSON summary of a [`crate::coordinator::LaneReport`]. On the
+/// lumped compat rail the fields (and bytes) are unchanged from the
+/// pre-refactor format; host-resolved lanes additionally carry their
+/// per-rail energy rollup.
 pub fn lane_json(lane: &crate::coordinator::LaneReport) -> Json {
-    Json::obj(vec![
+    let mut o = vec![
         ("name", Json::from(lane.name.clone())),
         ("completed", Json::from(lane.completed)),
         ("duration_s", Json::from(lane.duration_s)),
@@ -25,7 +28,14 @@ pub fn lane_json(lane: &crate::coordinator::LaneReport) -> Json {
         ("avg_plr", Json::from(lane.avg_plr())),
         ("bytes_delivered", Json::from(lane.bytes_delivered)),
         ("mis", Json::from(lane.records.len())),
-    ])
+    ];
+    if let Some(r) = lane.rail_totals() {
+        o.push(("energy_cpu_j", Json::from(r.cpu_j)));
+        o.push(("energy_nic_j", Json::from(r.nic_j)));
+        o.push(("energy_fixed_j", Json::from(r.fixed_j)));
+        o.push(("energy_idle_j", Json::from(r.idle_j)));
+    }
+    Json::obj(o)
 }
 
 #[cfg(test)]

@@ -4,9 +4,12 @@
 //! accumulating results internally; a [`TelemetrySink`] is anywhere those
 //! events can go. [`ReportSink`] rebuilds the classic batch
 //! [`RunReport`] from the stream (the compat path every pre-redesign
-//! experiment runs through), [`EventLog`] buffers raw events for tests and
-//! workload drivers, and [`JsonlSink`] streams one JSON object per event to
-//! any writer (live dashboards, `--events` files).
+//! experiment runs through), [`FairnessSink`] accumulates epoch-bucketed
+//! Jain's fairness incrementally (the fleet driver and `ReportSink` both
+//! consume it), [`EventLog`] buffers raw events for tests and workload
+//! drivers, and [`JsonlSink`] streams one JSON object per event — now
+//! including attributed energy, per-rail breakdowns and paused markers —
+//! to any writer (live dashboards, `--events` files).
 
 use crate::coordinator::{Event, LaneReport, MiRecord, RunReport};
 use crate::util::json::Json;
@@ -40,6 +43,79 @@ impl TelemetrySink for EventLog {
     }
 }
 
+/// Streaming Jain's-fairness accumulator: epoch-bucketed per-lane
+/// throughput means over the event stream, JFI per epoch over lanes active
+/// in it.
+///
+/// This is the one shared implementation of the "skip epochs where no lane
+/// was active, mean each lane's samples within the epoch" rule:
+/// [`ReportSink`] uses it with `epoch_mis = 1` (the classic per-MI
+/// `jfi_series`), and the fleet driver with its reporting epoch — the two
+/// previously duplicated the logic. Paused lanes' zero-throughput
+/// observation records are excluded: fairness is over lanes actually
+/// competing for the bottleneck, with or without `observe_paused`.
+#[derive(Debug, Clone)]
+pub struct FairnessSink {
+    epoch_mis: usize,
+    /// `rows[epoch][lane] = (throughput sum, samples)`.
+    rows: Vec<Vec<(f64, usize)>>,
+}
+
+impl Default for FairnessSink {
+    fn default() -> Self {
+        FairnessSink::new(1)
+    }
+}
+
+impl FairnessSink {
+    /// `epoch_mis` MIs per fairness bucket (1 = per-MI series).
+    pub fn new(epoch_mis: usize) -> FairnessSink {
+        assert!(epoch_mis >= 1, "FairnessSink epoch must be >= 1 MI");
+        FairnessSink { epoch_mis, rows: Vec::new() }
+    }
+
+    /// JFI per epoch over lanes with samples in that epoch; epochs where no
+    /// lane was active are skipped rather than scored as vacuously perfect.
+    pub fn epoch_jfi(&self) -> Vec<f64> {
+        self.rows
+            .iter()
+            .filter_map(|row| {
+                let means: Vec<f64> = row
+                    .iter()
+                    .filter(|(_, n)| *n > 0)
+                    .map(|(s, n)| s / *n as f64)
+                    .collect();
+                if means.is_empty() {
+                    None
+                } else {
+                    Some(stats::jain_fairness(&means))
+                }
+            })
+            .collect()
+    }
+}
+
+impl TelemetrySink for FairnessSink {
+    fn on_event(&mut self, event: &Event) {
+        let Event::MiCompleted { lane, record } = event else {
+            return;
+        };
+        if record.paused {
+            return;
+        }
+        let e = record.mi / self.epoch_mis;
+        while self.rows.len() <= e {
+            self.rows.push(Vec::new());
+        }
+        let row = &mut self.rows[e];
+        while row.len() <= lane.0 {
+            row.push((0.0, 0));
+        }
+        row[lane.0].0 += record.throughput_gbps;
+        row[lane.0].1 += 1;
+    }
+}
+
 /// Per-lane accumulator behind [`ReportSink`].
 #[derive(Debug, Clone, Default)]
 struct LaneAcc {
@@ -60,6 +136,8 @@ struct LaneAcc {
 #[derive(Debug, Clone, Default)]
 pub struct ReportSink {
     lanes: Vec<LaneAcc>,
+    /// Per-MI fairness series, accumulated incrementally (epoch = 1 MI).
+    fairness: FairnessSink,
 }
 
 impl ReportSink {
@@ -93,38 +171,19 @@ impl ReportSink {
         // JFI per monitoring interval over lanes active in that MI, keyed
         // by `MiRecord.mi` so mid-run-admitted and paused lanes align on
         // concurrent samples; MIs where no lane was active are skipped
-        // rather than reported as (vacuously) perfect fairness. On the
-        // batch path (all lanes admitted at MI 0, never paused) every
-        // lane's records are contiguous from MI 0 and no MI is empty, so
-        // this reproduces the pre-redesign per-index series exactly.
-        let lo = lanes.iter().filter_map(|l| l.records.first().map(|r| r.mi)).min();
-        let hi = lanes.iter().filter_map(|l| l.records.last().map(|r| r.mi)).max();
-        let mut jfi_series = Vec::new();
-        if let (Some(lo), Some(hi)) = (lo, hi) {
-            // Records are in increasing-MI order per lane: walk a cursor.
-            let mut cursors = vec![0usize; lanes.len()];
-            for mi in lo..=hi {
-                let mut thrs = Vec::new();
-                for (li, lane) in lanes.iter().enumerate() {
-                    while cursors[li] < lane.records.len() && lane.records[cursors[li]].mi < mi {
-                        cursors[li] += 1;
-                    }
-                    match lane.records.get(cursors[li]) {
-                        Some(r) if r.mi == mi => thrs.push(r.throughput_gbps),
-                        _ => {}
-                    }
-                }
-                if !thrs.is_empty() {
-                    jfi_series.push(stats::jain_fairness(&thrs));
-                }
-            }
-        }
+        // rather than reported as (vacuously) perfect fairness. The series
+        // is accumulated incrementally by the shared [`FairnessSink`] with
+        // a 1-MI epoch — each lane's single sample per MI divides by 1, so
+        // on the batch path (all lanes admitted at MI 0, never paused) this
+        // reproduces the pre-redesign per-index series bit-for-bit.
+        let jfi_series = self.fairness.epoch_jfi();
         RunReport { lanes, duration_s, jfi_series }
     }
 }
 
 impl TelemetrySink for ReportSink {
     fn on_event(&mut self, event: &Event) {
+        self.fairness.on_event(event);
         match event {
             Event::Admitted { lane, name, .. } => {
                 self.acc(lane.0).name = name.clone();
@@ -180,6 +239,22 @@ pub fn event_json(event: &Event) -> Json {
             o.push(("p", Json::from(record.p as usize)));
             o.push(("reward", Json::from(record.reward)));
             o.push(("bytes_total", Json::from(record.bytes_total)));
+            // Attributed energy (omitted on testbeds without counters,
+            // where the record carries NaN).
+            if record.energy_j.is_finite() {
+                o.push(("energy_j", Json::from(record.energy_j)));
+                o.push(("energy_total_j", Json::from(record.energy_total_j)));
+            }
+            if record.paused {
+                o.push(("paused", Json::from(true)));
+            }
+            // Per-rail breakdown (host-resolved accounting only).
+            if let Some(r) = &record.rails {
+                o.push(("energy_cpu_j", Json::from(r.cpu_j)));
+                o.push(("energy_nic_j", Json::from(r.nic_j)));
+                o.push(("energy_fixed_j", Json::from(r.fixed_j)));
+                o.push(("energy_idle_j", Json::from(r.idle_j)));
+            }
             Json::obj(o)
         }
         Event::Paused { lane, mi, time_s } => Json::obj(head("paused", lane.0, *mi, *time_s)),
@@ -256,7 +331,13 @@ mod tests {
             state: vec![0.0; 4],
             bytes_total: bytes,
             energy_total_j: 40.0 * (mi + 1) as f64,
+            paused: false,
+            rails: None,
         }
+    }
+
+    fn mi_event(lane: usize, rec: MiRecord) -> Event {
+        Event::MiCompleted { lane: LaneId(lane), record: rec }
     }
 
     #[test]
@@ -332,6 +413,39 @@ mod tests {
         assert_eq!(report.jfi_series[1], 1.0);
         assert!(report.jfi_series[2] < 1.0); // both lanes, unequal shares
         assert_eq!(report.jfi_series[3], 1.0); // lane 1 alone
+    }
+
+    /// The fairness sink buckets per-lane throughput means by epoch and
+    /// skips epochs with no active lane.
+    #[test]
+    fn fairness_sink_buckets_by_epoch() {
+        let mut sink = FairnessSink::new(2);
+        // Epoch 0 (MIs 0-1): lane 0 alone. Epoch 2 (MIs 4-5): both lanes,
+        // unequal. Epoch 1 empty -> skipped.
+        sink.on_event(&mi_event(0, record(0, 4.0, 1e9)));
+        sink.on_event(&mi_event(0, record(1, 4.0, 2e9)));
+        sink.on_event(&mi_event(0, record(4, 6.0, 3e9)));
+        sink.on_event(&mi_event(1, record(4, 2.0, 1e9)));
+        sink.on_event(&mi_event(1, record(5, 2.0, 2e9)));
+        let jfi = sink.epoch_jfi();
+        assert_eq!(jfi.len(), 2, "empty epoch must be skipped: {jfi:?}");
+        assert_eq!(jfi[0], 1.0);
+        assert!(jfi[1] < 1.0);
+    }
+
+    /// Paused lanes' zero-throughput observation records do not count as
+    /// starved lanes in the fairness series.
+    #[test]
+    fn fairness_sink_excludes_paused_records() {
+        let mut with_paused = FairnessSink::new(1);
+        let mut without = FairnessSink::new(1);
+        let active = record(0, 4.0, 1e9);
+        let paused = MiRecord { throughput_gbps: 0.0, paused: true, ..record(0, 0.0, 0.0) };
+        with_paused.on_event(&mi_event(0, active.clone()));
+        with_paused.on_event(&mi_event(1, paused));
+        without.on_event(&mi_event(0, active));
+        assert_eq!(with_paused.epoch_jfi(), without.epoch_jfi());
+        assert_eq!(with_paused.epoch_jfi(), vec![1.0]);
     }
 
     #[test]

@@ -118,6 +118,8 @@ fn reference_run(
             state: window.state().to_vec(),
             bytes_total: job.delivered_bytes(),
             energy_total_j: meter.total_j(),
+            paused: false,
+            rails: None,
         });
         if let Some(d) = decision {
             let (ncc, np) = bounds.clamp(d.cc, d.p);
@@ -277,8 +279,9 @@ fn fleet_report_identical_across_jobs() {
     let paths = Paths::with_root(&root);
     let schedule = ArrivalSchedule::by_name("churn-heavy").unwrap();
     let methods: Vec<String> = vec!["2-phase".into(), "rclone".into()];
-    let r1 = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 1).unwrap();
-    let r4 = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 4).unwrap();
+    let opts = fleet::FleetOpts { observe_paused: true, yield_policy: true };
+    let r1 = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 1, opts).unwrap();
+    let r4 = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 4, opts).unwrap();
     let j1 = fleet::to_json(&r1).to_string();
     let j4 = fleet::to_json(&r4).to_string();
     assert_eq!(j1, j4, "fleet report differs between --jobs 1 and --jobs 4");
@@ -298,7 +301,8 @@ fn churn_heavy_fleet_forces_departures() {
     let paths = Paths::with_root(&root);
     let schedule = ArrivalSchedule::by_name("churn-heavy").unwrap();
     let methods: Vec<String> = vec!["rclone".into()];
-    let report = fleet::run(&paths, &schedule, &methods, Scale::Quick, 21, 2).unwrap();
+    let opts = fleet::FleetOpts::default();
+    let report = fleet::run(&paths, &schedule, &methods, Scale::Quick, 21, 2, opts).unwrap();
     let departed: usize = report
         .trials
         .iter()
