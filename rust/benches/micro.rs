@@ -1,22 +1,19 @@
-//! Microbenchmarks of the hot paths: simulator tick rate, HLO inference
-//! latency per algorithm, k-means assignment (Rust scalar vs AOT Pallas
-//! kernel), and the full MI control-loop step.
+//! Microbenchmarks of the hot paths: simulator MI rate (arena loop vs the
+//! frozen pre-arena baseline), zero-alloc `Session::step`, HLO inference
+//! latency per algorithm, and k-means assignment (Rust scalar vs AOT
+//! Pallas kernel).
+//!
+//! The simulator and session rows are the same measurements `sparta bench`
+//! folds into `BENCH_5.json` (shared helpers in
+//! [`sparta::experiments::bench`]); this standalone binary adds the
+//! artifact-dependent HLO rows.
 use sparta::agents;
 use sparta::config::Paths;
 use sparta::emulator::KMeans;
+use sparta::experiments::bench::{bench_loop, session_step_micro, sim_mi_micro};
 use sparta::experiments::SpartaCtx;
-use sparta::net::{background::Background, NetworkSim, Testbed};
 use sparta::telemetry::Table;
 use sparta::util::Rng;
-use std::time::Instant;
-
-fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
-    let t0 = Instant::now();
-    for _ in 0..reps {
-        f();
-    }
-    t0.elapsed().as_secs_f64() / reps as f64
-}
 
 fn main() {
     let mut table = Table::new(&["benchmark", "per-op", "ops/s"]);
@@ -30,17 +27,27 @@ fn main() {
         }
     };
 
-    // Simulator: one MI (20 ticks) with a 16x16-stream flow.
-    let mut sim = NetworkSim::new(Testbed::chameleon(), 1)
-        .with_background(Background::regime("medium", 10.0));
-    sim.add_flow(16, 16, None);
-    for _ in 0..10 {
-        sim.run_mi(1.0);
-    }
-    let s = bench(200, || {
-        sim.run_mi(1.0);
-    });
+    // Simulator: one MI (20 ticks) with a 16x16-stream flow — arena loop
+    // and the frozen pre-arena baseline, same workload.
+    let s = sim_mi_micro(200, false);
     table.row(vec!["net sim MI (256 streams)".into(), fmt(s), format!("{:.0}", 1.0 / s)]);
+    let s = sim_mi_micro(200, true);
+    table.row(vec![
+        "net sim MI (256 streams, pre-arena baseline)".into(),
+        fmt(s),
+        format!("{:.0}", 1.0 / s),
+    ]);
+
+    // Zero-alloc session stepping (static lanes, jobs sized to never
+    // complete mid-measurement).
+    for lanes in [1usize, 8] {
+        let s = session_step_micro(lanes, 200);
+        table.row(vec![
+            format!("session step ({lanes} lane{})", if lanes == 1 { "" } else { "s" }),
+            fmt(s),
+            format!("{:.0}", 1.0 / s),
+        ]);
+    }
 
     // k-means assignment: Rust scalar.
     let mut rng = Rng::new(3);
@@ -48,7 +55,7 @@ fn main() {
     let points: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
     let centroids: Vec<f32> = (0..k * d).map(|_| rng.f32()).collect();
     let km = KMeans { centroids: centroids.clone(), k, dim: d, assignments: vec![] };
-    let s = bench(200, || {
+    let s = bench_loop(200, || {
         for i in 0..n {
             std::hint::black_box(km.assign(&points[i * d..(i + 1) * d]));
         }
@@ -60,10 +67,14 @@ fn main() {
         Err(e) => eprintln!("skipping HLO benches: {e}"),
         Ok(ctx) => {
             let exe = ctx.runtime.compile("kmeans_assign").unwrap();
-            let s = bench(100, || {
+            let s = bench_loop(100, || {
                 std::hint::black_box(exe.call(&[&points, &centroids]).unwrap());
             });
-            table.row(vec![format!("kmeans assign {n} pts (pallas HLO)"), fmt(s), format!("{:.0}", 1.0 / s)]);
+            table.row(vec![
+                format!("kmeans assign {n} pts (pallas HLO)"),
+                fmt(s),
+                format!("{:.0}", 1.0 / s),
+            ]);
 
             for algo in agents::ALGOS {
                 let mut agent = agents::make_agent(&ctx.runtime, algo, 7, None).unwrap();
@@ -77,7 +88,7 @@ fn main() {
                 for _ in 0..10 {
                     agent.act(&state, false);
                 }
-                let s = bench(200, || {
+                let s = bench_loop(200, || {
                     std::hint::black_box(agent.act(&state, false));
                 });
                 table.row(vec![format!("{algo} inference"), fmt(s), format!("{:.0}", 1.0 / s)]);

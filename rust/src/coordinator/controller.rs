@@ -143,6 +143,14 @@ impl ControllerBuilder {
         self
     }
 
+    /// See [`SessionBuilder::substrate`] — run over an explicitly built
+    /// substrate (alternate backends; the golden-replay suite and `sparta
+    /// bench` inject the frozen pre-arena loop here).
+    pub fn substrate(mut self, sub: Box<dyn crate::net::Substrate>) -> Self {
+        self.inner = self.inner.substrate(sub);
+        self
+    }
+
     pub fn max_mis(mut self, n: usize) -> Self {
         self.max_mis = n;
         self

@@ -46,8 +46,10 @@ impl RewardKind {
     }
 }
 
-/// Constants of the reward machinery.
-#[derive(Debug, Clone)]
+/// Constants of the reward machinery (plain scalars — `Copy`, so
+/// per-lane trackers take a copy instead of cloning through an allocation
+/// path on every admit).
+#[derive(Debug, Clone, Copy)]
 pub struct RewardConfig {
     /// K in U = T/K^(cc·p): per-stream utility discount (> 1).
     pub k: f64,

@@ -32,6 +32,15 @@
 //! paused lanes are billed the idle rail. [`SessionBuilder::observe_paused`]
 //! additionally surfaces those idle bills as zero-throughput [`MiRecord`]s
 //! so optimizers can learn preemption costs.
+//!
+//! §Perf: stepping is allocation-free at steady state. The per-MI metric,
+//! activity, bill and decision buffers are pooled on the session and the
+//! substrate is driven through [`crate::net::Substrate::run_mi_into`];
+//! [`Session::step_into`] writes events into a caller-reused buffer (the
+//! fleet driver's path), [`Session::step_with`] recycles an internal one,
+//! and [`Session::step`] is the allocating compat wrapper. Lane names are
+//! interned as `Arc<str>` once at admission, so events and reports share
+//! the same backing string.
 
 use super::actions::ParamBounds;
 use super::reward::{RewardConfig, RewardKind, RewardTracker};
@@ -39,9 +48,10 @@ use super::state::{FeatureWindow, Observation};
 use super::{Decision, MiContext, Optimizer};
 use crate::energy::{EnergyConfig, EnergyPlane, LaneActivity, LaneBill, RailEnergy};
 use crate::net::background::Background;
-use crate::net::{FlowId, NetworkSim, Substrate, Testbed, Topology};
+use crate::net::{FlowId, MiMetrics, NetworkSim, Substrate, Testbed, Topology};
 use crate::telemetry::TelemetrySink;
 use crate::transfer::{EngineProfile, TransferJob};
+use std::sync::Arc;
 
 /// MI budget used by the compat wrapper and the CLI when no explicit cap is
 /// given (matches the pre-redesign controller default).
@@ -100,8 +110,9 @@ pub enum LaneStatus {
 /// One entry of the session's event stream, MI-granular.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
-    /// A lane joined the session (possibly mid-run).
-    Admitted { lane: LaneId, name: String, mi: usize, time_s: f64 },
+    /// A lane joined the session (possibly mid-run). The name is interned
+    /// at admission — cloning the event shares the backing string.
+    Admitted { lane: LaneId, name: Arc<str>, mi: usize, time_s: f64 },
     /// A lane observed one monitoring interval.
     MiCompleted { lane: LaneId, record: MiRecord },
     /// A lane was externally paused.
@@ -167,7 +178,7 @@ impl LaneSpec {
 }
 
 struct SessionLane {
-    name: String,
+    name: Arc<str>,
     flow: FlowId,
     optimizer: Box<dyn Optimizer>,
     job: TransferJob,
@@ -185,6 +196,7 @@ pub struct SessionBuilder {
     testbed: Testbed,
     background: Option<Background>,
     topology: Option<Topology>,
+    substrate: Option<Box<dyn Substrate>>,
     mi_s: f64,
     bounds: ParamBounds,
     reward_cfg: RewardConfig,
@@ -197,6 +209,18 @@ pub struct SessionBuilder {
 impl SessionBuilder {
     pub fn background(mut self, bg: Background) -> Self {
         self.background = Some(bg);
+        self
+    }
+
+    /// Run over an explicitly constructed substrate instead of building a
+    /// [`NetworkSim`] from the testbed/topology — the injection point for
+    /// alternate backends (an emulator- or kernel-backed substrate, or the
+    /// frozen [`crate::net::baseline::BaselineSim`] the golden-replay
+    /// suite and `sparta bench` drive). `topology`/`background` are
+    /// ignored when a substrate is injected; the session reads its testbed
+    /// from the substrate.
+    pub fn substrate(mut self, sub: Box<dyn Substrate>) -> Self {
+        self.substrate = Some(sub);
         self
     }
 
@@ -253,16 +277,25 @@ impl SessionBuilder {
     }
 
     pub fn build(self) -> Session {
-        let mut sim = match &self.topology {
-            Some(t) => NetworkSim::from_topology(self.testbed.clone(), t, self.seed),
-            None => NetworkSim::new(self.testbed.clone(), self.seed),
+        // An injected substrate wins; otherwise the builder owns the one
+        // Testbed and moves it into the simulator (no per-session clones).
+        let sim: Box<dyn Substrate> = match self.substrate {
+            Some(sub) => sub,
+            None => {
+                let mut sim = match &self.topology {
+                    Some(t) => NetworkSim::from_topology(self.testbed, t, self.seed),
+                    None => NetworkSim::new(self.testbed, self.seed),
+                };
+                if let Some(bg) = self.background {
+                    sim = sim.with_background(bg);
+                }
+                Box::new(sim)
+            }
         };
-        if let Some(bg) = self.background.clone() {
-            sim = sim.with_background(bg);
-        }
+        let has_energy = sim.testbed().has_energy_counters;
         Session {
-            sim: Box::new(sim),
-            testbed: self.testbed,
+            sim,
+            has_energy,
             mi_s: self.mi_s,
             bounds: self.bounds,
             reward_cfg: self.reward_cfg,
@@ -273,6 +306,11 @@ impl SessionBuilder {
             pending: Vec::new(),
             energy: EnergyPlane::new(self.energy, self.seed),
             observe_paused: self.observe_paused,
+            metrics_buf: Vec::new(),
+            events_buf: Vec::new(),
+            activity_buf: Vec::new(),
+            bills_buf: Vec::new(),
+            decisions_buf: Vec::new(),
         }
     }
 }
@@ -280,7 +318,8 @@ impl SessionBuilder {
 /// The MI control loop over one network substrate, driven step by step.
 pub struct Session {
     sim: Box<dyn Substrate>,
-    testbed: Testbed,
+    /// Cached `sim.testbed().has_energy_counters` (read every MI).
+    has_energy: bool,
     mi_s: f64,
     bounds: ParamBounds,
     reward_cfg: RewardConfig,
@@ -295,6 +334,13 @@ pub struct Session {
     /// sender + receiver host-ledger pair).
     energy: EnergyPlane,
     observe_paused: bool,
+    // §Perf: pooled per-step buffers — stepping allocates nothing at
+    // steady state (see the module docs).
+    metrics_buf: Vec<MiMetrics>,
+    events_buf: Vec<Event>,
+    activity_buf: Vec<LaneActivity>,
+    bills_buf: Vec<Option<LaneBill>>,
+    decisions_buf: Vec<(usize, Decision)>,
 }
 
 impl Session {
@@ -303,6 +349,7 @@ impl Session {
             testbed,
             background: None,
             topology: None,
+            substrate: None,
             mi_s: 1.0,
             bounds: ParamBounds::default(),
             reward_cfg: RewardConfig::default(),
@@ -319,7 +366,7 @@ impl Session {
         let LaneSpec { mut optimizer, job, engine, reward, name } = spec;
         let (cc0, p0) = optimizer.start(&self.bounds);
         let (cc0, p0) = self.bounds.clamp(cc0, p0);
-        let io = engine.task_io_gbps(self.testbed.task_io_gbps);
+        let io = engine.task_io_gbps(self.sim.testbed().task_io_gbps);
         let flow = self.sim.add_flow(cc0, p0, Some(io));
         let window = FeatureWindow::new(self.history, self.bounds.cc_max, self.bounds.p_max);
         // Ledger-account seeding derives from the admission index (the
@@ -327,11 +374,15 @@ impl Session {
         // admission sequence reproduces the same energy noise.
         let meter_seed = self.seed.wrapping_mul(0x9E37).wrapping_add(self.lanes.len() as u64);
         self.energy.open_lane(&engine.power, meter_seed);
-        let name = name.unwrap_or_else(|| optimizer.name().to_string());
+        // Intern once; the event and the lane share the backing string.
+        let name: Arc<str> = match name {
+            Some(n) => Arc::from(n),
+            None => Arc::from(optimizer.name()),
+        };
         let id = LaneId(self.lanes.len());
         self.pending.push(Event::Admitted {
             lane: id,
-            name: name.clone(),
+            name: Arc::clone(&name),
             mi: self.mi,
             time_s: self.sim.time_s(),
         });
@@ -341,7 +392,7 @@ impl Session {
             optimizer,
             job,
             window,
-            reward: RewardTracker::new(reward, self.reward_cfg.clone()),
+            reward: RewardTracker::new(reward, self.reward_cfg),
             cc: cc0,
             p: p0,
             has_pending_decision: false,
@@ -408,19 +459,35 @@ impl Session {
         true
     }
 
+    /// Advance exactly one monitoring interval, writing the events it
+    /// produced (queued admission/control events first, in call order)
+    /// into the caller-reused `events` buffer — the allocation-free
+    /// primitive behind [`Session::step`] (§Perf; the fleet driver holds
+    /// one buffer across all MIs).
+    pub fn step_into(&mut self, events: &mut Vec<Event>) {
+        events.clear();
+        events.append(&mut self.pending);
+        self.step_mi(events);
+    }
+
     /// Advance exactly one monitoring interval and return the events it
-    /// produced (queued admission/control events first, in call order).
+    /// produced (allocating compat wrapper over [`Session::step_into`]).
     pub fn step(&mut self) -> Vec<Event> {
         let mut events = std::mem::take(&mut self.pending);
         self.step_mi(&mut events);
         events
     }
 
-    /// [`Session::step`], streaming the events into `sink`.
+    /// [`Session::step`], streaming the events into `sink` through an
+    /// internal pooled buffer (no per-step allocation).
     pub fn step_with(&mut self, sink: &mut dyn TelemetrySink) {
-        for ev in self.step() {
-            sink.on_event(&ev);
+        let mut events = std::mem::take(&mut self.events_buf);
+        self.step_into(&mut events);
+        for ev in &events {
+            sink.on_event(ev);
         }
+        events.clear();
+        self.events_buf = events;
     }
 
     /// Compat driver: step until every lane completed/departed or `max_mis`
@@ -448,7 +515,7 @@ impl Session {
     /// order, per-lane noise RNGs), which is what keeps the lumped compat
     /// path bit-identical.
     fn step_mi(&mut self, events: &mut Vec<Event>) {
-        let has_energy = self.testbed.has_energy_counters;
+        let has_energy = self.has_energy;
         // Cap demand of nearly-finished lanes so they don't overshoot;
         // paused/ended lanes hold zero demand.
         for lane in &self.lanes {
@@ -459,41 +526,51 @@ impl Session {
                 self.sim.set_demand_cap(lane.flow, cap.max(0.05));
             }
         }
-        let metrics = self.sim.run_mi(self.mi_s);
+        // Pooled buffers (taken/restored around the lane loop so the
+        // borrow checker sees them as locals): §Perf, no per-MI allocs.
+        let mut metrics = std::mem::take(&mut self.metrics_buf);
+        self.sim.run_mi_into(self.mi_s, &mut metrics);
         let time_s = self.sim.time_s();
         let mi = self.mi;
         // Settle the energy plane once for this MI over every in-flight
         // lane: active lanes bill their curve/rails, paused lanes the idle
         // rail (always in host-resolved mode — host truth — and, on the
         // lumped rail, only when paused MIs are observed).
-        let mut bills: Vec<Option<LaneBill>> = vec![None; self.lanes.len()];
+        let mut bills = std::mem::take(&mut self.bills_buf);
+        bills.clear();
+        bills.resize(self.lanes.len(), None);
         if has_energy {
-            let activity: Vec<LaneActivity> = self
-                .lanes
-                .iter()
-                .enumerate()
-                .filter(|(_, l)| matches!(l.status, LaneStatus::Active | LaneStatus::Paused))
-                .map(|(li, l)| {
-                    let m = &metrics[l.flow.0];
-                    let paused = l.status == LaneStatus::Paused;
-                    LaneActivity {
-                        lane: li,
-                        // Paused lanes park their transfer threads: no
-                        // streams, no bytes.
-                        streams: if paused { 0 } else { m.active_streams },
-                        throughput_gbps: if paused { 0.0 } else { m.throughput_gbps },
-                        bytes: if paused { 0.0 } else { m.bytes_delivered },
-                        duration_s: m.duration_s,
-                        paused,
-                    }
-                })
-                .collect();
+            let mut activity = std::mem::take(&mut self.activity_buf);
+            activity.clear();
+            activity.extend(
+                self.lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| matches!(l.status, LaneStatus::Active | LaneStatus::Paused))
+                    .map(|(li, l)| {
+                        let m = &metrics[l.flow.0];
+                        let paused = l.status == LaneStatus::Paused;
+                        LaneActivity {
+                            lane: li,
+                            // Paused lanes park their transfer threads: no
+                            // streams, no bytes.
+                            streams: if paused { 0 } else { m.active_streams },
+                            throughput_gbps: if paused { 0.0 } else { m.throughput_gbps },
+                            bytes: if paused { 0.0 } else { m.bytes_delivered },
+                            duration_s: m.duration_s,
+                            paused,
+                        }
+                    }),
+            );
             for b in self.energy.settle_mi(&activity, self.mi_s, self.observe_paused) {
                 bills[b.lane] = Some(b);
             }
+            activity.clear();
+            self.activity_buf = activity;
         }
         let observe_paused = self.observe_paused;
-        let mut decisions: Vec<(usize, Decision)> = Vec::new();
+        let mut decisions = std::mem::take(&mut self.decisions_buf);
+        decisions.clear();
         for (li, lane) in self.lanes.iter_mut().enumerate() {
             // Paused lanes only observe (and only behind the knob); the
             // whole decision machinery stays active-only.
@@ -618,7 +695,7 @@ impl Session {
             }
         }
         // Apply decisions after all lanes observed this MI.
-        for (li, dec) in decisions {
+        for (li, dec) in decisions.drain(..) {
             let (cc, p) = self.bounds.clamp(dec.cc, dec.p);
             let lane = &mut self.lanes[li];
             if cc != lane.cc || p != lane.p {
@@ -627,6 +704,9 @@ impl Session {
                 lane.p = p;
             }
         }
+        self.decisions_buf = decisions;
+        self.bills_buf = bills;
+        self.metrics_buf = metrics;
         self.mi += 1;
     }
 
@@ -711,7 +791,7 @@ impl Session {
     }
 
     pub fn lane_name(&self, id: LaneId) -> Option<&str> {
-        self.lanes.get(id.0).map(|l| l.name.as_str())
+        self.lanes.get(id.0).map(|l| l.name.as_ref())
     }
 
     pub fn bounds(&self) -> &ParamBounds {
@@ -719,7 +799,7 @@ impl Session {
     }
 
     pub fn testbed(&self) -> &Testbed {
-        &self.testbed
+        self.sim.testbed()
     }
 }
 
@@ -876,10 +956,12 @@ mod tests {
         s.step();
         assert!(s.pause(id));
         let events = s.step();
+        // Borrow the record out of the event — sinks get `&Event`, so
+        // nothing on this path needs to clone an `MiRecord`.
         let rec = events
             .iter()
             .find_map(|e| match e {
-                Event::MiCompleted { lane, record } if *lane == id => Some(record.clone()),
+                Event::MiCompleted { lane, record } if *lane == id => Some(record),
                 _ => None,
             })
             .expect("observed paused lane must emit a record");

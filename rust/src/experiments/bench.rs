@@ -1,0 +1,334 @@
+//! `sparta bench` — the repo's recorded performance trajectory.
+//!
+//! Runs a **scale curve** (fleet `churn-heavy` at 16/64/256 lanes via
+//! [`ArrivalSchedule::churn_heavy_scaled`]) on both simulator hot loops —
+//! the struct-of-arrays arena ([`crate::net::NetworkSim`]) and the frozen
+//! pre-arena loop ([`crate::net::baseline::BaselineSim`]) — plus the
+//! hot-path microbenches, and emits a machine-readable `BENCH_5.json`.
+//! Because the baseline is timed **in the same process on the same
+//! machine**, the reported speedups are honest ratios, not stale
+//! constants; and because both loops must produce byte-identical fleet
+//! reports, every bench run doubles as a results-drift gate (the full gate
+//! lives in `tests/golden_replay.rs`). CI runs `sparta bench --quick` and
+//! uploads `BENCH_5.json` as an artifact.
+//!
+//! ## `BENCH_*.json` schema (version 1)
+//!
+//! ```json
+//! {
+//!   "bench": "sparta-bench",          // harness identifier
+//!   "schema_version": 1,
+//!   "pr": 5,                          // PR that introduced the file
+//!   "mode": "quick" | "full",         // --quick: 120-MI horizon; full: 360
+//!   "baseline": "net::baseline::BaselineSim (pre-arena loop, d6d9964),
+//!                timed in-process",
+//!   "measured": true,                 // false only in the committed
+//!                                     // repo-root schema anchor, which
+//!                                     // also carries a free-text "note"
+//!                                     // and empty curve/micro arrays
+//!   "scale_curve": [                  // one point per fleet size
+//!     { "lanes": 256,                 // requested fleet size
+//!       "trials": 2,                  // seeded trials timed (jobs = 1)
+//!       "horizon_mis": 120,           // MI cap per trial
+//!       "mis_run": 240,               // MIs actually stepped, all trials
+//!       "wall_s_per_trial": 0.6,      // arena loop, wall s per trial
+//!       "mis_per_s": 400.0,           // simulated MIs per wall second
+//!       "ticks_per_s": 8000.0,        // fluid-model ticks per wall second
+//!       "baseline_wall_s_per_trial": 2.1,  // pre-arena loop, same workload
+//!       "speedup_x": 3.5 }            // baseline / arena wall per trial
+//!   ],
+//!   "micro": [                        // hot-path microbenches
+//!     { "name": "net sim MI (256 streams)", "per_op_s": ..., "ops_per_s": ... }
+//!   ]
+//! }
+//! ```
+
+use super::common::Scale;
+use super::fleet::{self, FleetOpts};
+use crate::config::Paths;
+use crate::coordinator::{LaneSpec, Session};
+use crate::net::baseline::BaselineSim;
+use crate::net::{background::Background, NetworkSim, SimConfig, Substrate, Testbed};
+use crate::scenarios::ArrivalSchedule;
+use crate::telemetry::Table;
+use crate::transfer::TransferJob;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// The fleet sizes of the scale curve.
+pub const BENCH_LANES: [usize; 3] = [16, 64, 256];
+
+/// Run knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchOpts {
+    /// 120-MI horizon instead of the full 360 (the CI lane).
+    pub quick: bool,
+}
+
+/// One point of the scale curve: the same seeded workload timed on both
+/// loops.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub lanes: usize,
+    pub trials: usize,
+    pub horizon_mis: usize,
+    /// MIs actually stepped, summed over trials (identical across loops —
+    /// the reports are byte-identical).
+    pub mis_run: usize,
+    /// Arena loop, wall seconds per trial.
+    pub wall_s_per_trial: f64,
+    pub mis_per_s: f64,
+    pub ticks_per_s: f64,
+    /// Frozen pre-arena loop, wall seconds per trial, same workload.
+    pub baseline_wall_s_per_trial: f64,
+    /// `baseline / arena` wall per trial.
+    pub speedup_x: f64,
+}
+
+/// One hot-path microbench row.
+#[derive(Debug, Clone)]
+pub struct MicroBench {
+    pub name: &'static str,
+    pub per_op_s: f64,
+    pub ops_per_s: f64,
+}
+
+/// The full bench report.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub quick: bool,
+    pub points: Vec<ScalePoint>,
+    pub micro: Vec<MicroBench>,
+}
+
+/// Time `reps` iterations of `f`; returns mean seconds per call. Shared
+/// with `benches/micro.rs` so the standalone bench binary and `sparta
+/// bench` report the same quantities.
+pub fn bench_loop<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Seconds per simulator MI for one 16×16-stream flow under medium cross
+/// traffic — the `net sim MI (256 streams)` microbench. `baseline`
+/// selects the frozen pre-arena loop.
+pub fn sim_mi_micro(reps: usize, baseline: bool) -> f64 {
+    let tb = Testbed::chameleon();
+    let bg = Background::regime("medium", 10.0);
+    let mut sim: Box<dyn Substrate> = if baseline {
+        Box::new(BaselineSim::new(tb, 1).with_background(bg))
+    } else {
+        Box::new(NetworkSim::new(tb, 1).with_background(bg))
+    };
+    sim.add_flow(16, 16, None);
+    let mut out = Vec::new();
+    for _ in 0..10 {
+        sim.run_mi_into(1.0, &mut out);
+    }
+    bench_loop(reps, || {
+        sim.run_mi_into(1.0, &mut out);
+    })
+}
+
+/// Seconds per `Session::step` with `lanes` static transfer lanes in
+/// flight (jobs sized so no lane completes during the measurement).
+pub fn session_step_micro(lanes: usize, reps: usize) -> f64 {
+    let mut session = Session::builder(Testbed::chameleon())
+        .background(Background::Idle)
+        .seed(7)
+        .build();
+    for _ in 0..lanes {
+        session.admit(LaneSpec::new(
+            Box::new(crate::baselines::StaticTool::efficient_static(4, 4)),
+            TransferJob::files(100_000, 1 << 30),
+        ));
+    }
+    let mut events = Vec::new();
+    for _ in 0..5 {
+        session.step_into(&mut events);
+    }
+    bench_loop(reps, || {
+        session.step_into(&mut events);
+    })
+}
+
+/// Time one side of a scale point: `trials × churn-heavy(lanes)` at
+/// `--jobs 1` (so wall per trial is not muddied by worker scheduling).
+fn timed_fleet(
+    paths: &Paths,
+    sched: &ArrivalSchedule,
+    methods: &[String],
+    baseline_loop: bool,
+) -> Result<(fleet::FleetReport, f64)> {
+    let opts = FleetOpts { baseline_loop, ..FleetOpts::default() };
+    let t0 = Instant::now();
+    let report = fleet::run(paths, sched, methods, Scale::Quick, 42, 1, opts)?;
+    Ok((report, t0.elapsed().as_secs_f64()))
+}
+
+/// Run the scale curve (both loops) plus microbenches.
+pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
+    let horizon = if opts.quick { 120 } else { 360 };
+    let methods: Vec<String> =
+        ["falcon_mp", "2-phase", "rclone"].iter().map(|m| m.to_string()).collect();
+    // Discarded warmup on both loops, so one-time process costs (lazy
+    // statics, allocator growth, page-cache warmup) are not billed to
+    // whichever side happens to be timed first.
+    let warmup = ArrivalSchedule::churn_heavy_scaled(8, 30);
+    timed_fleet(paths, &warmup, &methods, false)?;
+    timed_fleet(paths, &warmup, &methods, true)?;
+    let mut points = Vec::new();
+    for &lanes in &BENCH_LANES {
+        let sched = ArrivalSchedule::churn_heavy_scaled(lanes, horizon);
+        let (report, wall) = timed_fleet(paths, &sched, &methods, false)?;
+        let (base_report, base_wall) = timed_fleet(paths, &sched, &methods, true)?;
+        // The bench doubles as a drift gate: both loops must produce the
+        // same report bytes (the full suite is tests/golden_replay.rs).
+        if fleet::to_json(&report).to_string() != fleet::to_json(&base_report).to_string() {
+            return Err(anyhow!(
+                "bench: arena and baseline loops diverged at {lanes} lanes — \
+                 results drift, not a perf difference"
+            ));
+        }
+        let trials = report.trials.len().max(1);
+        let mis_run: usize = report.trials.iter().map(|t| t.mis_run).sum();
+        // Fluid ticks per MI at the bench scenario's defaults (1.0-s MI,
+        // 0.05-s tick).
+        let ticks_per_mi = (1.0 / SimConfig::default().tick_s).round();
+        let point = ScalePoint {
+            lanes,
+            trials,
+            horizon_mis: horizon,
+            mis_run,
+            wall_s_per_trial: wall / trials as f64,
+            mis_per_s: mis_run as f64 / wall,
+            ticks_per_s: mis_run as f64 * ticks_per_mi / wall,
+            baseline_wall_s_per_trial: base_wall / trials as f64,
+            speedup_x: base_wall / wall,
+        };
+        crate::log_info!(
+            "bench: {} lanes, {} trials, arena {:.2} s/trial vs baseline {:.2} s/trial ({:.2}x)",
+            lanes,
+            trials,
+            point.wall_s_per_trial,
+            point.baseline_wall_s_per_trial,
+            point.speedup_x
+        );
+        points.push(point);
+    }
+    let micro_reps = if opts.quick { 60 } else { 200 };
+    let sim_s = sim_mi_micro(micro_reps, false);
+    let sim_base_s = sim_mi_micro(micro_reps, true);
+    let step1_s = session_step_micro(1, micro_reps);
+    let step8_s = session_step_micro(8, micro_reps);
+    let micro = vec![
+        MicroBench { name: "net sim MI (256 streams)", per_op_s: sim_s, ops_per_s: 1.0 / sim_s },
+        MicroBench {
+            name: "net sim MI (256 streams, pre-arena baseline)",
+            per_op_s: sim_base_s,
+            ops_per_s: 1.0 / sim_base_s,
+        },
+        MicroBench { name: "session step (1 lane)", per_op_s: step1_s, ops_per_s: 1.0 / step1_s },
+        MicroBench { name: "session step (8 lanes)", per_op_s: step8_s, ops_per_s: 1.0 / step8_s },
+    ];
+    Ok(BenchReport { quick: opts.quick, points, micro })
+}
+
+/// Human summary: the scale curve and microbenches.
+pub fn print(report: &BenchReport) {
+    println!(
+        "\nBench — fleet churn-heavy scale curve, arena vs pre-arena baseline ({} mode, jobs 1):",
+        if report.quick { "quick" } else { "full" }
+    );
+    let mut t = Table::new(&[
+        "lanes",
+        "trials",
+        "MIs run",
+        "s/trial",
+        "baseline s/trial",
+        "MIs/s",
+        "speedup",
+    ]);
+    for p in &report.points {
+        t.row(vec![
+            p.lanes.to_string(),
+            p.trials.to_string(),
+            p.mis_run.to_string(),
+            format!("{:.3}", p.wall_s_per_trial),
+            format!("{:.3}", p.baseline_wall_s_per_trial),
+            format!("{:.0}", p.mis_per_s),
+            format!("{:.2}x", p.speedup_x),
+        ]);
+    }
+    t.print();
+    let mut t = Table::new(&["microbench", "per-op", "ops/s"]);
+    for m in &report.micro {
+        let fmt = if m.per_op_s < 1e-3 {
+            format!("{:.1} us", m.per_op_s * 1e6)
+        } else {
+            format!("{:.2} ms", m.per_op_s * 1e3)
+        };
+        t.row(vec![m.name.into(), fmt, format!("{:.0}", m.ops_per_s)]);
+    }
+    t.print();
+}
+
+/// The `BENCH_*.json` payload (schema documented in the module docs).
+pub fn to_json(report: &BenchReport) -> Json {
+    Json::obj(vec![
+        ("bench", Json::from("sparta-bench")),
+        ("schema_version", Json::from(1usize)),
+        ("pr", Json::from(5usize)),
+        ("mode", Json::from(if report.quick { "quick" } else { "full" })),
+        (
+            "baseline",
+            Json::from("net::baseline::BaselineSim (pre-arena loop, d6d9964), timed in-process"),
+        ),
+        ("measured", Json::from(true)),
+        (
+            "scale_curve",
+            Json::Arr(
+                report
+                    .points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("lanes", Json::from(p.lanes)),
+                            ("trials", Json::from(p.trials)),
+                            ("horizon_mis", Json::from(p.horizon_mis)),
+                            ("mis_run", Json::from(p.mis_run)),
+                            ("wall_s_per_trial", Json::from(p.wall_s_per_trial)),
+                            ("mis_per_s", Json::from(p.mis_per_s)),
+                            ("ticks_per_s", Json::from(p.ticks_per_s)),
+                            (
+                                "baseline_wall_s_per_trial",
+                                Json::from(p.baseline_wall_s_per_trial),
+                            ),
+                            ("speedup_x", Json::from(p.speedup_x)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "micro",
+            Json::Arr(
+                report
+                    .micro
+                    .iter()
+                    .map(|m| {
+                        Json::obj(vec![
+                            ("name", Json::from(m.name)),
+                            ("per_op_s", Json::from(m.per_op_s)),
+                            ("ops_per_s", Json::from(m.ops_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

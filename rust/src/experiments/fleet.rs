@@ -62,6 +62,11 @@ pub struct FleetOpts {
     pub observe_paused: bool,
     /// Enable the contention-yield controller.
     pub yield_policy: bool,
+    /// Run every trial over the frozen pre-arena
+    /// [`crate::net::baseline::BaselineSim`] instead of the arena loop —
+    /// the measured "before" side of `sparta bench` and the golden-replay
+    /// byte-identity suite. Reports must be byte-identical either way.
+    pub baseline_loop: bool,
 }
 
 /// Final accounting for one admitted lane.
@@ -97,6 +102,11 @@ pub struct FleetTrial {
     /// Yield-controller pauses taken / refusals issued this trial.
     pub pauses: usize,
     pub yields_refused: usize,
+    /// Monitoring intervals actually stepped (≤ horizon; the trial ends
+    /// early once every lane finished). Deliberately **not** serialized in
+    /// [`to_json`] — `sparta bench` reads it to convert wall time into
+    /// MIs/s without perturbing the byte-compared report format.
+    pub mis_run: usize,
     /// Host-truth per-rail energy breakdown (both hosts combined).
     pub rails: Option<RailEnergy>,
 }
@@ -190,7 +200,7 @@ pub fn run_observe_comparison(
         scale,
         seed,
         jobs,
-        FleetOpts { observe_paused: false, yield_policy: true },
+        FleetOpts { observe_paused: false, yield_policy: true, ..FleetOpts::default() },
     )?;
     let observing = run(
         paths,
@@ -199,7 +209,7 @@ pub fn run_observe_comparison(
         scale,
         seed,
         jobs,
-        FleetOpts { observe_paused: true, yield_policy: true },
+        FleetOpts { observe_paused: true, yield_policy: true, ..FleetOpts::default() },
     )?;
     Ok((blind, observing))
 }
@@ -216,12 +226,21 @@ fn run_trial(
     let arrivals = schedule.arrivals(trial_seed);
     // Host-resolved accounting: every lane bills the scenario's shared
     // sender/receiver ledgers instead of a private lumped meter.
-    let mut session = schedule
+    let mut builder = schedule
         .scenario
         .session_host_resolved()
         .observe_paused(opts.observe_paused)
-        .seed(trial_seed)
-        .build();
+        .seed(trial_seed);
+    if opts.baseline_loop {
+        // Same topology, same seed, pre-arena loop: the bench "before"
+        // side (and the golden suite's byte-identity oracle).
+        builder = builder.substrate(Box::new(crate::net::baseline::BaselineSim::from_topology(
+            schedule.scenario.testbed.clone(),
+            &schedule.scenario.topology,
+            trial_seed,
+        )));
+    }
+    let mut session = builder.build();
 
     // Per-lane trackers, indexed by LaneId (admission order).
     let mut admitted_mi: Vec<usize> = Vec::new();
@@ -247,6 +266,9 @@ fn run_trial(
     let mut yields_refused = 0usize;
 
     let mut next_arrival = 0usize;
+    // One event buffer for the whole trial (§Perf: `step_into` keeps the
+    // session's MI loop allocation-free at steady state).
+    let mut events: Vec<Event> = Vec::new();
     for mi in 0..schedule.horizon_mis {
         while next_arrival < arrivals.len() && arrivals[next_arrival].at_mi <= mi {
             let a = &arrivals[next_arrival];
@@ -294,9 +316,10 @@ fn run_trial(
                 &mut yields_refused,
             );
         }
-        for ev in session.step() {
-            fairness.on_event(&ev);
-            match &ev {
+        session.step_into(&mut events);
+        for ev in &events {
+            fairness.on_event(ev);
+            match ev {
                 Event::MiCompleted { lane, record } => {
                     if record.paused {
                         // The lane's only window into what pausing costs.
@@ -380,6 +403,7 @@ fn run_trial(
         completion_s,
         pauses,
         yields_refused,
+        mis_run: session.mi(),
         rails: session.energy_rails(),
     })
 }

@@ -14,6 +14,7 @@
 //! (transfers arriving/departing on a shared bottleneck) through the
 //! step-driven [`crate::coordinator::Session`] API.
 
+pub mod bench;
 pub mod common;
 pub mod fig1;
 pub mod fig4;

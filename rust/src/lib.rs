@@ -63,6 +63,17 @@
 //! every registered scenario, printing the cross-scenario generalization
 //! matrix ([`experiments::generalize`]).
 //!
+//! The hot path is arena-backed (§Perf): [`net::NetworkSim`] keeps all
+//! stream state in a flat struct-of-arrays [`net::stream::StreamArena`]
+//! and ticks only active streams, [`coordinator::Session`] steps without
+//! allocating (pooled buffers, [`net::Substrate::run_mi_into`],
+//! [`coordinator::Session::step_into`]), and `sparta bench` records the
+//! perf trajectory as `BENCH_*.json` — the fleet churn-heavy scale curve
+//! at 16/64/256 lanes timed against the frozen pre-arena loop
+//! ([`net::baseline::BaselineSim`]), which `tests/golden_replay.rs` also
+//! holds byte-identical to the arena loop, so speedups can never smuggle
+//! in result changes.
+//!
 //! Trained weights split into a write path ([`runtime::WeightStore`]) and a
 //! read path ([`runtime::WeightSnapshot`]): evaluation loads every weight
 //! file once into an `Arc`-shared immutable snapshot, so every grid
@@ -151,6 +162,18 @@
 //!     4,                  // worker threads; reports are bit-identical at any count
 //! ).unwrap();
 //! generalize::print(&report);
+//! ```
+//!
+//! Perf trajectory — time the fleet churn-heavy scale curve on the arena
+//! loop and the frozen pre-arena baseline, and write `BENCH_5.json`
+//! (`sparta bench --quick` on the CLI):
+//!
+//! ```no_run
+//! use sparta::config::Paths;
+//! use sparta::experiments::bench;
+//!
+//! let report = bench::run(&Paths::resolve(), bench::BenchOpts { quick: true }).unwrap();
+//! bench::print(&report); // s/trial, MIs/s and speedup per lane count
 //! ```
 
 pub mod agents;

@@ -416,6 +416,18 @@ fn dispatch(args: &Args) -> Result<()> {
             maybe_save(args, &json)?;
             Ok(())
         }
+        Some("bench") => {
+            // Perf trajectory: fleet churn-heavy scale curve + hot-path
+            // microbenches, emitted as BENCH_5.json (schema in
+            // `experiments::bench`). `--quick` is the CI lane.
+            let opts = experiments::bench::BenchOpts { quick: args.flag("quick") };
+            let report = experiments::bench::run(&Paths::resolve(), opts)?;
+            experiments::bench::print(&report);
+            let out = args.get_or("out", "BENCH_5.json");
+            save_report(Path::new(out), &experiments::bench::to_json(&report))?;
+            println!("bench report written to {out}");
+            Ok(())
+        }
         Some("fleet") => {
             let name = args.get("scenario").ok_or_else(|| {
                 anyhow!(
@@ -463,7 +475,7 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             let opts = experiments::fleet::FleetOpts {
                 observe_paused: args.flag("observe-paused"),
-                yield_policy: false,
+                ..experiments::fleet::FleetOpts::default()
             };
             let report = experiments::fleet::run(
                 &Paths::resolve(),
@@ -558,6 +570,13 @@ subcommands:
             [--compare-observe]            (yield-policy churn comparison:
                                            blind vs pause-cost-observing lanes;
                                            observing lanes pause less eagerly)
+  bench     [--quick] [--out FILE]        perf trajectory: fleet churn-heavy
+                                           at 16/64/256 lanes + simulator-MI
+                                           and Session-step microbenches,
+                                           written as BENCH_5.json (the CI
+                                           bench lane uploads it; speedups
+                                           are vs the recorded pre-arena
+                                           baseline)
   sweep     --testbed T|--scenario S|--scenario all   Fig 1 (cc,p) sweep
   algos     --reward fe|te                 Fig 4   DRL algorithm comparison
   tune                                     Fig 5   online tuning on CloudLab

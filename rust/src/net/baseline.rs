@@ -1,0 +1,354 @@
+//! The **pre-arena** simulator hot loop, frozen as a baseline.
+//!
+//! This is the `Flow → Task → Vec<CubicStream>` pointer-chasing loop the
+//! struct-of-arrays arena in [`super::sim`] replaced, kept verbatim for two
+//! jobs:
+//!
+//! * **bit-identity oracle** — `tests/golden_replay.rs` drives
+//!   [`BaselineSim`] and the arena [`super::NetworkSim`] through identical
+//!   command scripts (and whole churn sessions, via
+//!   `SessionBuilder::substrate`) and asserts every metric and event is
+//!   byte-for-byte equal: the arena is a layout/performance change, never a
+//!   results change;
+//! * **recorded perf trajectory** — `sparta bench` times the same fleet
+//!   `churn-heavy` scale curve on both loops in the same process, so the
+//!   speedups in `BENCH_5.json` are honest same-machine ratios rather than
+//!   stale constants.
+//!
+//! **Do not optimize this module.** Its slowness is the measurement. Any
+//! behavioral fix must land in both loops (the golden suite will catch a
+//! one-sided change).
+
+use super::background::{Background, BackgroundState};
+use super::link::Link;
+use super::sim::{FlowId, MiMetrics, SimConfig};
+use super::stream::CubicStream;
+use super::substrate::Substrate;
+use super::testbed::Testbed;
+use super::topology::Topology;
+use super::MSS_BITS;
+use crate::util::Rng;
+
+/// One file-task: a group of `p` parallel streams.
+#[derive(Debug, Clone)]
+struct Task {
+    streams: Vec<CubicStream>,
+    /// Number of currently-active streams (prefix of `streams`).
+    p_active: usize,
+    /// Whether the task itself is admitted (prefix `cc` of tasks are).
+    active: bool,
+}
+
+/// One transfer application's traffic.
+#[derive(Debug, Clone)]
+struct Flow {
+    tasks: Vec<Task>,
+    cc_active: usize,
+    /// Per-task application I/O rate cap (engine property), Gbps.
+    task_io_gbps: f64,
+    /// Per-stream receiver-window rate cap, Gbps.
+    stream_cap_gbps: f64,
+    /// Optional cap on total demand (e.g. job nearly complete), Gbps.
+    demand_cap_gbps: f64,
+    // Per-MI accumulators.
+    acc_delivered_bits: f64,
+    acc_sent_bits: f64,
+    acc_lost_bits: f64,
+    acc_rtt_sum: f64,
+    acc_rtt_n: u64,
+}
+
+impl Flow {
+    fn new(cc: u32, p: u32, task_io_gbps: f64, stream_cap_gbps: f64, cfg: &SimConfig) -> Flow {
+        let mut f = Flow {
+            tasks: Vec::new(),
+            cc_active: 0,
+            task_io_gbps,
+            stream_cap_gbps,
+            demand_cap_gbps: f64::MAX,
+            acc_delivered_bits: 0.0,
+            acc_sent_bits: 0.0,
+            acc_lost_bits: 0.0,
+            acc_rtt_sum: 0.0,
+            acc_rtt_n: 0,
+        };
+        f.set_cc_p(cc, p, cfg);
+        f
+    }
+
+    /// Apply a (cc, p) setting: tasks/streams beyond the new limits are
+    /// *paused* (keeping TCP state), previously paused ones are *resumed*.
+    fn set_cc_p(&mut self, cc: u32, p: u32, cfg: &SimConfig) {
+        let cc = cc.clamp(1, cfg.max_cc) as usize;
+        let p = p.clamp(1, cfg.max_p) as usize;
+        while self.tasks.len() < cc {
+            self.tasks.push(Task { streams: Vec::new(), p_active: 0, active: false });
+        }
+        for (i, task) in self.tasks.iter_mut().enumerate() {
+            let task_active = i < cc;
+            while task.streams.len() < p {
+                task.streams.push(CubicStream::new());
+            }
+            for (j, s) in task.streams.iter_mut().enumerate() {
+                if task_active && j < p {
+                    s.resume();
+                } else {
+                    s.pause();
+                }
+            }
+            task.active = task_active;
+            task.p_active = if task_active { p } else { 0 };
+        }
+        self.cc_active = cc;
+    }
+
+    fn active_stream_count(&self) -> usize {
+        self.tasks.iter().map(|t| t.p_active).sum()
+    }
+}
+
+/// One path stage at runtime: its droptail link plus optional cross traffic.
+struct Segment {
+    link: Link,
+    background: Option<BackgroundState>,
+}
+
+/// The pre-arena shared-path simulator (see the module docs).
+pub struct BaselineSim {
+    pub cfg: SimConfig,
+    segments: Vec<Segment>,
+    wan_idx: usize,
+    flows: Vec<Flow>,
+    time_s: f64,
+    rng: Rng,
+    testbed: Testbed,
+    /// Reusable per-tick scratch of per-stream desired rates.
+    scratch: Vec<f64>,
+}
+
+impl BaselineSim {
+    /// Build a single-bottleneck simulator for a testbed preset with its
+    /// default background.
+    pub fn new(testbed: Testbed, seed: u64) -> BaselineSim {
+        let topology = Topology::single(&testbed);
+        BaselineSim::from_topology(testbed, &topology, seed)
+    }
+
+    /// Build a simulator over an explicit multi-segment topology.
+    pub fn from_topology(testbed: Testbed, topology: &Topology, seed: u64) -> BaselineSim {
+        let wan_idx = topology.wan_index();
+        let segments: Vec<Segment> = topology
+            .segments
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let bg = spec
+                    .background
+                    .clone()
+                    .or_else(|| (i == wan_idx).then(|| testbed.default_background.clone()));
+                Segment { link: spec.link(), background: bg.map(Background::into_state) }
+            })
+            .collect();
+        BaselineSim {
+            cfg: SimConfig::default(),
+            segments,
+            wan_idx,
+            flows: Vec::new(),
+            time_s: 0.0,
+            rng: Rng::new(seed),
+            testbed,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Replace the WAN stage's cross-traffic process.
+    pub fn with_background(mut self, bg: Background) -> BaselineSim {
+        self.segments[self.wan_idx].background = Some(bg.into_state());
+        self
+    }
+
+    /// Advance one tick of the fluid model (the pre-arena loop, verbatim:
+    /// recounts `total_streams`, walks every created stream, clones
+    /// nothing per tick but touches inactive state).
+    fn tick(&mut self) {
+        let dt = self.cfg.tick_s;
+        let rtt = self.segments.iter().map(|s| s.link.rtt_s()).sum::<f64>();
+
+        let mut offered_total = 0.0;
+        let total_streams: usize =
+            self.flows.iter().map(|f| f.tasks.iter().map(|t| t.streams.len()).sum::<usize>()).sum();
+        self.scratch.clear();
+        self.scratch.resize(total_streams, 0.0);
+        let mut idx = 0usize;
+        for flow in &self.flows {
+            let flow_start = idx;
+            let mut per_flow = 0.0;
+            for task in &flow.tasks {
+                if !task.active || task.p_active == 0 {
+                    idx += task.streams.len();
+                    continue;
+                }
+                let io_share = flow.task_io_gbps / task.p_active as f64;
+                for s in &task.streams {
+                    let r = if s.active {
+                        s.cwnd_rate_gbps(rtt).min(flow.stream_cap_gbps).min(io_share)
+                    } else {
+                        0.0
+                    };
+                    self.scratch[idx] = r;
+                    idx += 1;
+                    per_flow += r;
+                }
+            }
+            if per_flow > flow.demand_cap_gbps {
+                let scale = flow.demand_cap_gbps / per_flow;
+                for r in &mut self.scratch[flow_start..idx] {
+                    *r *= scale;
+                }
+                per_flow = flow.demand_cap_gbps;
+            }
+            offered_total += per_flow;
+        }
+
+        let time_s = self.time_s;
+        let mut fg_in = offered_total;
+        let mut fg_drop = 0.0;
+        for seg in &mut self.segments {
+            let bg_rate = match seg.background.as_mut() {
+                Some(bg) => bg.rate_gbps(time_s, dt, &mut self.rng),
+                None => 0.0,
+            };
+            let outcome = seg.link.tick(fg_in + bg_rate, dt);
+            if let Some(bg) = seg.background.as_mut() {
+                bg.observe_loss(outcome.drop_frac, dt);
+            }
+            fg_in *= outcome.accept_frac;
+            fg_drop += (1.0 - fg_drop) * outcome.drop_frac;
+        }
+        let drop_frac = fg_drop.clamp(0.0, 1.0);
+        let rtt_after = self.segments.iter().map(|s| s.link.rtt_s()).sum::<f64>();
+
+        let mut idx = 0usize;
+        for flow in self.flows.iter_mut() {
+            let mut delivered = 0.0;
+            let mut sent = 0.0;
+            let mut lost = 0.0;
+            for task in flow.tasks.iter_mut() {
+                if !task.active {
+                    idx += task.streams.len();
+                    continue;
+                }
+                let io_share = flow.task_io_gbps / task.p_active.max(1) as f64;
+                for s in task.streams.iter_mut() {
+                    let rate = self.scratch[idx];
+                    idx += 1;
+                    if !s.active {
+                        continue;
+                    }
+                    let sent_bits = rate * 1e9 * dt;
+                    let lost_bits = sent_bits * drop_frac;
+                    delivered += sent_bits - lost_bits;
+                    sent += sent_bits;
+                    lost += lost_bits;
+
+                    if drop_frac > 0.0 {
+                        let pkts = sent_bits / MSS_BITS;
+                        let p_event = 1.0 - (1.0 - drop_frac).powf(pkts.max(0.0));
+                        if self.rng.chance(p_event) {
+                            s.on_loss(rtt_after);
+                        }
+                    }
+                    let cwnd_rate = s.cwnd_rate_gbps(rtt_after);
+                    let app_limited = rate + 1e-12 < cwnd_rate
+                        || cwnd_rate >= flow.stream_cap_gbps.min(io_share);
+                    s.grow(dt, rtt_after, app_limited);
+                }
+            }
+            flow.acc_delivered_bits += delivered;
+            flow.acc_sent_bits += sent;
+            flow.acc_lost_bits += lost;
+            flow.acc_rtt_sum += rtt_after;
+            flow.acc_rtt_n += 1;
+        }
+        self.time_s += dt;
+    }
+}
+
+impl Substrate for BaselineSim {
+    fn add_flow(&mut self, cc: u32, p: u32, task_io_gbps: Option<f64>) -> FlowId {
+        let io = task_io_gbps.unwrap_or(self.testbed.task_io_gbps);
+        let f = Flow::new(cc, p, io, self.testbed.per_stream_cap_gbps, &self.cfg);
+        self.flows.push(f);
+        FlowId(self.flows.len() - 1)
+    }
+
+    fn set_cc_p(&mut self, id: FlowId, cc: u32, p: u32) {
+        // The pre-arena loop cloned the whole SimConfig per call — kept,
+        // like everything here, as the recorded baseline.
+        let cfg = self.cfg.clone();
+        self.flows[id.0].set_cc_p(cc, p, &cfg);
+    }
+
+    fn set_demand_cap(&mut self, id: FlowId, gbps: f64) {
+        self.flows[id.0].demand_cap_gbps = gbps;
+    }
+
+    fn active_streams(&self, id: FlowId) -> usize {
+        self.flows[id.0].active_stream_count()
+    }
+
+    fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
+        for f in &mut self.flows {
+            f.acc_delivered_bits = 0.0;
+            f.acc_sent_bits = 0.0;
+            f.acc_lost_bits = 0.0;
+            f.acc_rtt_sum = 0.0;
+            f.acc_rtt_n = 0;
+        }
+        let ticks = (dur_s / self.cfg.tick_s).round().max(1.0) as usize;
+        for _ in 0..ticks {
+            self.tick();
+        }
+        let actual_dur = ticks as f64 * self.cfg.tick_s;
+        let noise = self.cfg.rtt_noise_s;
+        let fallback_rtt = self.link_rtt_s();
+        let mut out = Vec::with_capacity(self.flows.len());
+        // Borrow dance: collect metrics first, then add noise with rng.
+        let metrics: Vec<(f64, f64, f64, f64, usize)> = self
+            .flows
+            .iter()
+            .map(|f| {
+                let thr = f.acc_delivered_bits / actual_dur / 1e9;
+                let plr =
+                    if f.acc_sent_bits > 0.0 { f.acc_lost_bits / f.acc_sent_bits } else { 0.0 };
+                let rtt =
+                    if f.acc_rtt_n > 0 { f.acc_rtt_sum / f.acc_rtt_n as f64 } else { fallback_rtt };
+                (thr, plr, rtt, f.acc_delivered_bits / 8.0, f.active_stream_count())
+            })
+            .collect();
+        for (thr, plr, rtt, bytes, streams) in metrics {
+            let rtt_noisy = (rtt + self.rng.normal_mean_sd(0.0, noise)).max(1e-4);
+            out.push(MiMetrics {
+                throughput_gbps: thr,
+                plr,
+                rtt_s: rtt_noisy,
+                bytes_delivered: bytes,
+                active_streams: streams,
+                duration_s: actual_dur,
+            });
+        }
+        out
+    }
+
+    fn time_s(&self) -> f64 {
+        self.time_s
+    }
+
+    fn link_rtt_s(&self) -> f64 {
+        self.segments.iter().map(|s| s.link.rtt_s()).sum()
+    }
+
+    fn testbed(&self) -> &Testbed {
+        &self.testbed
+    }
+}

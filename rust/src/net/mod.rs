@@ -15,6 +15,7 @@
 //! monitoring-interval goodput, packet-loss rate, and (noisy) RTT samples.
 
 pub mod background;
+pub mod baseline;
 pub mod link;
 pub mod sim;
 pub mod stream;

@@ -12,10 +12,47 @@
 //!
 //! The control plane consumes this simulator through the
 //! [`super::Substrate`] trait rather than the concrete type.
+//!
+//! ## Arena layout
+//!
+//! Stream state lives in one flat struct-of-arrays [`StreamArena`]
+//! (parallel `cwnd`/`w_max`/`ssthresh`/`epoch_t`/`since_cut` `f64` slices
+//! plus `in_slow_start`/`active` flags) instead of the former
+//! `Flow → Task → Vec<CubicStream>` nest. Each task owns a contiguous
+//! **row** of `cfg.max_p` reserved slots ([`TaskRange`]); rows are
+//! allocated once, when `set_cc_p` first grows a flow to that task, and
+//! never move. Within a row, slots `0..created` have been materialized by
+//! some past `(cc, p)` setting (matching the old loop's lazy
+//! `Vec::push(CubicStream::new())` semantics exactly — a slot reserved but
+//! never inside a `p` range is untouched fresh state), and the currently
+//! *active* streams of a flow are exactly slots `0..p_active` of its first
+//! `cc_active` task rows.
+//!
+//! ## §Perf invariants
+//!
+//! * `tick()` touches **only active slots**: the phase-1 rate pass and the
+//!   phase-3 deliver/grow pass iterate `cc_active × p_active` per flow and
+//!   never walk created-but-paused streams (the old loop walked every
+//!   created stream and branched per slot).
+//! * Per-flow active-stream counts and the arena-wide total are maintained
+//!   **incrementally** by `add_flow`/`set_cc_p`; nothing on the tick path
+//!   recounts streams or task rows.
+//! * The tick path is **allocation-free** at steady state: the per-stream
+//!   rate scratch is reused across ticks (capacity = total active
+//!   streams), and [`NetworkSim::run_mi_into`] writes metrics into a
+//!   caller-owned buffer ([`NetworkSim::run_mi`] is the allocating compat
+//!   wrapper).
+//! * Results are **bit-identical** to the pre-arena loop, which is kept
+//!   in-tree as [`super::baseline::BaselineSim`]: same float-op order (the
+//!   skipped inactive slots only ever contributed exact `+ 0.0` terms),
+//!   same RNG draw sequence (backgrounds, per-active-stream loss events,
+//!   per-flow RTT noise). `tests/golden_replay.rs` enforces this
+//!   byte-for-byte on whole sessions; do not reorder arithmetic here
+//!   without updating the baseline contract.
 
 use super::background::{Background, BackgroundState};
 use super::link::Link;
-use super::stream::CubicStream;
+use super::stream::StreamArena;
 use super::testbed::Testbed;
 use super::topology::Topology;
 use super::MSS_BITS;
@@ -35,7 +72,9 @@ pub struct SimConfig {
     /// `rtt_noise_magnitude_is_sub_millisecond` regression test pins the
     /// unit).
     pub rtt_noise_s: f64,
-    /// Maximum concurrent tasks / streams-per-task a flow may use.
+    /// Maximum concurrent tasks / streams-per-task a flow may use. Also
+    /// the arena row capacity reserved per task at creation, so raising
+    /// `max_p` after flows were added does not widen their existing rows.
     pub max_cc: u32,
     pub max_p: u32,
 }
@@ -46,21 +85,29 @@ impl Default for SimConfig {
     }
 }
 
-/// One file-task: a group of `p` parallel streams.
-#[derive(Debug, Clone)]
-struct Task {
-    streams: Vec<CubicStream>,
-    /// Number of currently-active streams (prefix of `streams`).
-    p_active: usize,
-    /// Whether the task itself is admitted (prefix `cc` of tasks are).
-    active: bool,
+/// One file-task's contiguous slot row in the stream arena.
+#[derive(Debug, Clone, Copy)]
+struct TaskRange {
+    /// Arena index of the row's first slot.
+    base: usize,
+    /// Slots materialized so far (prefix; grows monotonically with the
+    /// largest `p` this task has seen).
+    created: usize,
+    /// Reserved row width (`cfg.max_p` at creation time).
+    cap: usize,
 }
 
-/// One transfer application's traffic.
+/// One transfer application's traffic (stream state lives in the arena).
 #[derive(Debug, Clone)]
 struct Flow {
-    tasks: Vec<Task>,
+    tasks: Vec<TaskRange>,
+    /// Admitted tasks (prefix of `tasks`).
     cc_active: usize,
+    /// Active streams per admitted task (uniform across admitted tasks).
+    p_active: usize,
+    /// Cached `cc_active * p_active` — the tick path and per-MI metrics
+    /// never recount.
+    active_streams: usize,
     /// Per-task application I/O rate cap (engine property), Gbps.
     task_io_gbps: f64,
     /// Per-stream receiver-window rate cap, Gbps.
@@ -75,54 +122,47 @@ struct Flow {
     acc_rtt_n: u64,
 }
 
-impl Flow {
-    fn new(cc: u32, p: u32, task_io_gbps: f64, stream_cap_gbps: f64, cfg: &SimConfig) -> Flow {
-        let mut f = Flow {
-            tasks: Vec::new(),
-            cc_active: 0,
-            task_io_gbps,
-            stream_cap_gbps,
-            demand_cap_gbps: f64::MAX,
-            acc_delivered_bits: 0.0,
-            acc_sent_bits: 0.0,
-            acc_lost_bits: 0.0,
-            acc_rtt_sum: 0.0,
-            acc_rtt_n: 0,
-        };
-        f.set_cc_p(cc, p, cfg);
-        f
+/// Apply a (cc, p) setting to `flow`: tasks/streams beyond the new limits
+/// are *paused* (keeping TCP state in the arena), previously paused ones
+/// are *resumed* — the paper's pause/resume thread semantics. New task
+/// rows are reserved on first use; slots first covered by a `p` range are
+/// materialized fresh, exactly as the old loop lazily pushed
+/// `CubicStream::new()`.
+fn apply_cc_p(arena: &mut StreamArena, flow: &mut Flow, cc: u32, p: u32, max_cc: u32, max_p: u32) {
+    let cc = cc.clamp(1, max_cc) as usize;
+    let p = p.clamp(1, max_p) as usize;
+    while flow.tasks.len() < cc {
+        // Reserve the full row up front; reserved-but-unmaterialized slots
+        // hold untouched fresh state, so later materialization is a count
+        // bump, not an initialization pass.
+        let cap = max_p as usize;
+        let base = arena.push_fresh(cap);
+        flow.tasks.push(TaskRange { base, created: 0, cap });
     }
-
-    /// Apply a (cc, p) setting: tasks/streams beyond the new limits are
-    /// *paused* (keeping TCP state), previously paused ones are *resumed* —
-    /// the paper's pause/resume thread semantics.
-    fn set_cc_p(&mut self, cc: u32, p: u32, cfg: &SimConfig) {
-        let cc = cc.clamp(1, cfg.max_cc) as usize;
-        let p = p.clamp(1, cfg.max_p) as usize;
-        while self.tasks.len() < cc {
-            self.tasks.push(Task { streams: Vec::new(), p_active: 0, active: false });
+    // Rows are `cfg.max_p` wide at creation and `p` is clamped to that
+    // same config, so normally every active row can hold `p` slots. If
+    // `cfg.max_p` was raised after rows were reserved (unsupported for
+    // determinism), the active width is clamped to the narrowest active
+    // row so the tick can never walk past a row into its neighbor.
+    let p = flow.tasks[..cc].iter().map(|t| t.cap).fold(p, usize::min);
+    for (i, task) in flow.tasks.iter_mut().enumerate() {
+        let task_active = i < cc;
+        let p_row = p.min(task.cap);
+        if task.created < p_row {
+            task.created = p_row;
         }
-        for (i, task) in self.tasks.iter_mut().enumerate() {
-            let task_active = i < cc;
-            while task.streams.len() < p {
-                task.streams.push(CubicStream::new());
+        for j in 0..task.created {
+            let slot = task.base + j;
+            if task_active && j < p {
+                arena.resume(slot);
+            } else {
+                arena.pause(slot);
             }
-            for (j, s) in task.streams.iter_mut().enumerate() {
-                if task_active && j < p {
-                    s.resume();
-                } else {
-                    s.pause();
-                }
-            }
-            task.active = task_active;
-            task.p_active = if task_active { p } else { 0 };
         }
-        self.cc_active = cc;
     }
-
-    fn active_stream_count(&self) -> usize {
-        self.tasks.iter().map(|t| t.p_active).sum()
-    }
+    flow.cc_active = cc;
+    flow.p_active = p;
+    flow.active_streams = cc * p;
 }
 
 /// End-host-observable metrics for one flow over one monitoring interval.
@@ -149,18 +189,23 @@ struct Segment {
     background: Option<BackgroundState>,
 }
 
-/// The shared-path simulator.
+/// The shared-path simulator (arena-backed; see the module docs).
 pub struct NetworkSim {
     pub cfg: SimConfig,
     segments: Vec<Segment>,
     /// Index of the shared WAN stage ([`NetworkSim::with_background`] target).
     wan_idx: usize,
     flows: Vec<Flow>,
+    /// Flat SoA stream state; task rows index into it (§Perf).
+    arena: StreamArena,
+    /// Σ over flows of `active_streams`, maintained incrementally — sizes
+    /// the rate scratch without recounting.
+    active_total: usize,
     time_s: f64,
     rng: Rng,
     testbed: Testbed,
-    /// Reusable per-tick scratch of per-stream desired rates (flat, in
-    /// flow-major/task-major/stream-major order) — §Perf: the tick loop is
+    /// Reusable per-tick scratch of per-**active**-stream desired rates
+    /// (flow-major, task-major, stream-major) — §Perf: the tick loop is
     /// allocation-free at steady state.
     scratch: Vec<f64>,
 }
@@ -199,6 +244,8 @@ impl NetworkSim {
             segments,
             wan_idx,
             flows: Vec::new(),
+            arena: StreamArena::new(),
+            active_total: 0,
             time_s: 0.0,
             rng: Rng::new(seed),
             testbed,
@@ -224,15 +271,35 @@ impl NetworkSim {
     /// `task_io_gbps = None` uses the testbed's efficient-engine default.
     pub fn add_flow(&mut self, cc: u32, p: u32, task_io_gbps: Option<f64>) -> FlowId {
         let io = task_io_gbps.unwrap_or(self.testbed.task_io_gbps);
-        let f = Flow::new(cc, p, io, self.testbed.per_stream_cap_gbps, &self.cfg);
+        let mut f = Flow {
+            tasks: Vec::new(),
+            cc_active: 0,
+            p_active: 0,
+            active_streams: 0,
+            task_io_gbps: io,
+            stream_cap_gbps: self.testbed.per_stream_cap_gbps,
+            demand_cap_gbps: f64::MAX,
+            acc_delivered_bits: 0.0,
+            acc_sent_bits: 0.0,
+            acc_lost_bits: 0.0,
+            acc_rtt_sum: 0.0,
+            acc_rtt_n: 0,
+        };
+        apply_cc_p(&mut self.arena, &mut f, cc, p, self.cfg.max_cc, self.cfg.max_p);
+        self.active_total += f.active_streams;
         self.flows.push(f);
         FlowId(self.flows.len() - 1)
     }
 
-    /// Apply a (cc, p) update to a flow (pause/resume semantics).
+    /// Apply a (cc, p) update to a flow (pause/resume semantics). Borrows
+    /// the clamp bounds out of `cfg` up front instead of cloning the whole
+    /// config per call, and keeps the incremental active-stream totals.
     pub fn set_cc_p(&mut self, id: FlowId, cc: u32, p: u32) {
-        let cfg = self.cfg.clone();
-        self.flows[id.0].set_cc_p(cc, p, &cfg);
+        let (max_cc, max_p) = (self.cfg.max_cc, self.cfg.max_p);
+        let flow = &mut self.flows[id.0];
+        self.active_total -= flow.active_streams;
+        apply_cc_p(&mut self.arena, flow, cc, p, max_cc, max_p);
+        self.active_total += flow.active_streams;
     }
 
     /// Cap a flow's total demand (Gbps) — used when a job is nearly done.
@@ -240,9 +307,10 @@ impl NetworkSim {
         self.flows[id.0].demand_cap_gbps = gbps;
     }
 
-    /// Number of currently active streams of a flow.
+    /// Number of currently active streams of a flow (cached; never
+    /// recounted).
     pub fn active_streams(&self, id: FlowId) -> usize {
-        self.flows[id.0].active_stream_count()
+        self.flows[id.0].active_streams
     }
 
     /// Current ground-truth path RTT: the sum of every segment's propagation
@@ -251,70 +319,66 @@ impl NetworkSim {
         self.segments.iter().map(|s| s.link.rtt_s()).sum()
     }
 
-    /// Per-segment (name, queue-fill) snapshot, in path order.
-    pub fn segment_queue_fills(&self) -> Vec<(&'static str, f64)> {
-        self.segments.iter().map(|s| (s.name, s.link.queue_fill())).collect()
+    /// Per-segment (name, queue-fill) snapshots in path order, borrowed —
+    /// no allocation per call (collect if a snapshot is needed).
+    pub fn segment_queue_fills(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.segments.iter().map(|s| (s.name, s.link.queue_fill()))
     }
 
-    /// Advance one tick of the fluid model.
+    /// Advance one tick of the fluid model. §Perf: walks active slots
+    /// only; bit-identical to [`super::baseline::BaselineSim`]'s tick.
     fn tick(&mut self) {
-        let dt = self.cfg.tick_s;
-        let rtt = self.link_rtt_s();
+        let NetworkSim {
+            cfg, segments, flows, arena, active_total, time_s, rng, scratch, ..
+        } = self;
+        let dt = cfg.tick_s;
+        let rtt: f64 = segments.iter().map(|s| s.link.rtt_s()).sum();
 
         // Phase 1: compute each active stream's desired rate into the
-        // reusable flat scratch (flow-major, task-major, stream-major) —
-        // no allocation at steady state (§Perf).
+        // reusable flat scratch (flow-major, task-major, stream-major).
+        // Inactive slots contributed exact `+ 0.0` terms in the old loop,
+        // so skipping them entirely preserves every sum bit-for-bit.
+        scratch.clear();
+        scratch.reserve(*active_total);
         let mut offered_total = 0.0;
-        let total_streams: usize =
-            self.flows.iter().map(|f| f.tasks.iter().map(|t| t.streams.len()).sum::<usize>()).sum();
-        self.scratch.clear();
-        self.scratch.resize(total_streams, 0.0);
-        let mut idx = 0usize;
-        for flow in &self.flows {
-            let flow_start = idx;
+        for flow in flows.iter() {
+            let flow_start = scratch.len();
             let mut per_flow = 0.0;
-            for task in &flow.tasks {
-                if !task.active || task.p_active == 0 {
-                    idx += task.streams.len();
-                    continue;
-                }
-                let io_share = flow.task_io_gbps / task.p_active as f64;
-                for s in &task.streams {
-                    let r = if s.active {
-                        s.cwnd_rate_gbps(rtt)
-                            .min(flow.stream_cap_gbps)
-                            .min(io_share)
-                    } else {
-                        0.0
-                    };
-                    self.scratch[idx] = r;
-                    idx += 1;
+            let io_share = flow.task_io_gbps / flow.p_active as f64;
+            for task in &flow.tasks[..flow.cc_active] {
+                for j in 0..flow.p_active {
+                    let r = arena
+                        .cwnd_rate_gbps(task.base + j, rtt)
+                        .min(flow.stream_cap_gbps)
+                        .min(io_share);
+                    scratch.push(r);
                     per_flow += r;
                 }
             }
             // Demand cap: scale all stream rates down proportionally.
             if per_flow > flow.demand_cap_gbps {
                 let scale = flow.demand_cap_gbps / per_flow;
-                for r in &mut self.scratch[flow_start..idx] {
+                for r in &mut scratch[flow_start..] {
                     *r *= scale;
                 }
                 per_flow = flow.demand_cap_gbps;
             }
             offered_total += per_flow;
         }
+        debug_assert_eq!(scratch.len(), *active_total);
 
         // Phase 2: carry the aggregate through every path stage in order.
         // Each stage's drops thin the foreground before the next stage sees
         // it; a stage's cross traffic joins (and exits) at that stage only.
-        let time_s = self.time_s;
+        let now = *time_s;
         let mut fg_in = offered_total;
         // Cumulative foreground drop fraction across the path, accumulated as
         // d ← d + (1 − d)·dᵢ so a single-segment path yields the segment's
         // own drop_frac bit-for-bit (the seed simulator's value).
         let mut fg_drop = 0.0;
-        for seg in &mut self.segments {
+        for seg in segments.iter_mut() {
             let bg_rate = match seg.background.as_mut() {
-                Some(bg) => bg.rate_gbps(time_s, dt, &mut self.rng),
+                Some(bg) => bg.rate_gbps(now, dt, rng),
                 None => 0.0,
             };
             let outcome = seg.link.tick(fg_in + bg_rate, dt);
@@ -325,27 +389,23 @@ impl NetworkSim {
             fg_drop += (1.0 - fg_drop) * outcome.drop_frac;
         }
         let drop_frac = fg_drop.clamp(0.0, 1.0);
-        let rtt_after = self.link_rtt_s();
+        let rtt_after: f64 = segments.iter().map(|s| s.link.rtt_s()).sum();
 
         // Phase 3: deliver, account, and evolve windows (same scratch walk
-        // order as phase 1).
+        // order as phase 1, same per-active-stream RNG draw order as the
+        // baseline loop).
         let mut idx = 0usize;
-        for flow in self.flows.iter_mut() {
+        for flow in flows.iter_mut() {
             let mut delivered = 0.0;
             let mut sent = 0.0;
             let mut lost = 0.0;
-            for task in flow.tasks.iter_mut() {
-                if !task.active {
-                    idx += task.streams.len();
-                    continue;
-                }
-                let io_share = flow.task_io_gbps / task.p_active.max(1) as f64;
-                for s in task.streams.iter_mut() {
-                    let rate = self.scratch[idx];
+            let io_share = flow.task_io_gbps / flow.p_active as f64;
+            let caps = flow.stream_cap_gbps.min(io_share);
+            for task in &flow.tasks[..flow.cc_active] {
+                for j in 0..flow.p_active {
+                    let slot = task.base + j;
+                    let rate = scratch[idx];
                     idx += 1;
-                    if !s.active {
-                        continue;
-                    }
                     let sent_bits = rate * 1e9 * dt;
                     let lost_bits = sent_bits * drop_frac;
                     delivered += sent_bits - lost_bits;
@@ -357,15 +417,14 @@ impl NetworkSim {
                     if drop_frac > 0.0 {
                         let pkts = sent_bits / MSS_BITS;
                         let p_event = 1.0 - (1.0 - drop_frac).powf(pkts.max(0.0));
-                        if self.rng.chance(p_event) {
-                            s.on_loss(rtt_after);
+                        if rng.chance(p_event) {
+                            arena.on_loss(slot, rtt_after);
                         }
                     }
                     // Growth: app-limited if a cap (not cwnd) was binding.
-                    let cwnd_rate = s.cwnd_rate_gbps(rtt_after);
-                    let app_limited = rate + 1e-12 < cwnd_rate
-                        || cwnd_rate >= flow.stream_cap_gbps.min(io_share);
-                    s.grow(dt, rtt_after, app_limited);
+                    let cwnd_rate = arena.cwnd_rate_gbps(slot, rtt_after);
+                    let app_limited = rate + 1e-12 < cwnd_rate || cwnd_rate >= caps;
+                    arena.grow(slot, dt, rtt_after, app_limited);
                 }
             }
             flow.acc_delivered_bits += delivered;
@@ -374,12 +433,14 @@ impl NetworkSim {
             flow.acc_rtt_sum += rtt_after;
             flow.acc_rtt_n += 1;
         }
-        self.time_s += dt;
+        *time_s += dt;
     }
 
-    /// Run one monitoring interval of `dur_s` seconds; returns per-flow
-    /// metrics in flow-id order.
-    pub fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
+    /// Run one monitoring interval of `dur_s` seconds, writing per-flow
+    /// metrics (flow-id order) into the caller-reused `out` buffer — the
+    /// allocation-free primitive behind [`NetworkSim::run_mi`].
+    pub fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>) {
+        out.clear();
         for f in &mut self.flows {
             f.acc_delivered_bits = 0.0;
             f.acc_sent_bits = 0.0;
@@ -394,29 +455,31 @@ impl NetworkSim {
         let actual_dur = ticks as f64 * self.cfg.tick_s;
         let noise = self.cfg.rtt_noise_s;
         let fallback_rtt = self.link_rtt_s();
-        let mut out = Vec::with_capacity(self.flows.len());
-        // Borrow dance: collect metrics first, then add noise with rng.
-        let metrics: Vec<(f64, f64, f64, f64, usize)> = self
-            .flows
-            .iter()
-            .map(|f| {
-                let thr = f.acc_delivered_bits / actual_dur / 1e9;
-                let plr = if f.acc_sent_bits > 0.0 { f.acc_lost_bits / f.acc_sent_bits } else { 0.0 };
-                let rtt = if f.acc_rtt_n > 0 { f.acc_rtt_sum / f.acc_rtt_n as f64 } else { fallback_rtt };
-                (thr, plr, rtt, f.acc_delivered_bits / 8.0, f.active_stream_count())
-            })
-            .collect();
-        for (thr, plr, rtt, bytes, streams) in metrics {
-            let rtt_noisy = (rtt + self.rng.normal_mean_sd(0.0, noise)).max(1e-4);
+        out.reserve(self.flows.len());
+        let NetworkSim { flows, rng, .. } = self;
+        for f in flows.iter() {
+            let thr = f.acc_delivered_bits / actual_dur / 1e9;
+            let plr = if f.acc_sent_bits > 0.0 { f.acc_lost_bits / f.acc_sent_bits } else { 0.0 };
+            let rtt =
+                if f.acc_rtt_n > 0 { f.acc_rtt_sum / f.acc_rtt_n as f64 } else { fallback_rtt };
+            let rtt_noisy = (rtt + rng.normal_mean_sd(0.0, noise)).max(1e-4);
             out.push(MiMetrics {
                 throughput_gbps: thr,
                 plr,
                 rtt_s: rtt_noisy,
-                bytes_delivered: bytes,
-                active_streams: streams,
+                bytes_delivered: f.acc_delivered_bits / 8.0,
+                active_streams: f.active_streams,
                 duration_s: actual_dur,
             });
         }
+    }
+
+    /// Run one monitoring interval of `dur_s` seconds; returns per-flow
+    /// metrics in flow-id order (allocating compat wrapper over
+    /// [`NetworkSim::run_mi_into`]).
+    pub fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
+        let mut out = Vec::with_capacity(self.flows.len());
+        self.run_mi_into(dur_s, &mut out);
         out
     }
 }
@@ -425,6 +488,8 @@ impl NetworkSim {
 mod tests {
     use super::*;
     use crate::net::background::Background;
+    use crate::net::baseline::BaselineSim;
+    use crate::net::Substrate;
 
     fn sim(bg: Background) -> NetworkSim {
         NetworkSim::new(Testbed::chameleon(), 42).with_background(bg)
@@ -582,6 +647,103 @@ mod tests {
         assert_eq!(run(), run());
     }
 
+    /// `run_mi_into` over a reused (dirty, over-capacity) buffer returns
+    /// exactly what fresh allocation returns — the zero-alloc path is pure
+    /// plumbing.
+    #[test]
+    fn run_mi_into_reuse_matches_fresh_allocation() {
+        let build = || {
+            let mut s = NetworkSim::new(Testbed::chameleon(), 11)
+                .with_background(Background::Constant { gbps: 1.5 });
+            s.add_flow(4, 4, None);
+            s.add_flow(2, 8, None);
+            s
+        };
+        let mut fresh = build();
+        let mut reused = build();
+        let mut buf: Vec<MiMetrics> = Vec::new();
+        // Pre-dirty the buffer so clear/overwrite bugs would surface.
+        buf.resize(
+            7,
+            MiMetrics {
+                throughput_gbps: -1.0,
+                plr: -1.0,
+                rtt_s: -1.0,
+                bytes_delivered: -1.0,
+                active_streams: 999,
+                duration_s: -1.0,
+            },
+        );
+        for _ in 0..12 {
+            let a = fresh.run_mi(1.0);
+            reused.run_mi_into(1.0, &mut buf);
+            assert_eq!(a.len(), buf.len());
+            for (x, y) in a.iter().zip(buf.iter()) {
+                assert_eq!(x.throughput_gbps.to_bits(), y.throughput_gbps.to_bits());
+                assert_eq!(x.plr.to_bits(), y.plr.to_bits());
+                assert_eq!(x.rtt_s.to_bits(), y.rtt_s.to_bits());
+                assert_eq!(x.bytes_delivered.to_bits(), y.bytes_delivered.to_bits());
+                assert_eq!(x.active_streams, y.active_streams);
+                assert_eq!(x.duration_s.to_bits(), y.duration_s.to_bits());
+            }
+        }
+    }
+
+    /// The arena loop reproduces the frozen pre-arena baseline loop
+    /// bit-for-bit through a churning (cc, p)/demand-cap script (the
+    /// whole-session equivalent lives in `tests/golden_replay.rs`).
+    #[test]
+    fn arena_matches_baseline_sim_bit_for_bit() {
+        let tb = Testbed::chameleon();
+        let topo = crate::net::Topology::three_stage(&tb, 8.0, 6.0);
+        let bursty =
+            || Background::Bursty { low_gbps: 0.5, high_gbps: 5.0, switch_prob: 0.2 };
+        let mut arena =
+            NetworkSim::from_topology(tb.clone(), &topo, 23).with_background(bursty());
+        let mut base: BaselineSim =
+            BaselineSim::from_topology(tb, &topo, 23).with_background(bursty());
+        let a0 = arena.add_flow(4, 4, None);
+        let b0 = Substrate::add_flow(&mut base, 4, 4, None);
+        assert_eq!(a0, b0);
+        let a1 = arena.add_flow(2, 8, Some(2.0));
+        Substrate::add_flow(&mut base, 2, 8, Some(2.0));
+        // A churn script that exercises grow/shrink, re-resume of kept
+        // state, demand caps (incl. zero) and lazy row creation.
+        let script: &[(u32, u32)] = &[(8, 8), (2, 2), (16, 4), (1, 16), (6, 6), (16, 16), (3, 3)];
+        for (step, &(cc, p)) in script.iter().enumerate() {
+            let ma = arena.run_mi(1.0);
+            let mb = Substrate::run_mi(&mut base, 1.0);
+            assert_eq!(ma.len(), mb.len());
+            for (x, y) in ma.iter().zip(mb.iter()) {
+                assert_eq!(
+                    x.throughput_gbps.to_bits(),
+                    y.throughput_gbps.to_bits(),
+                    "step {step}: throughput diverged ({} vs {})",
+                    x.throughput_gbps,
+                    y.throughput_gbps
+                );
+                assert_eq!(x.plr.to_bits(), y.plr.to_bits(), "step {step}: plr diverged");
+                assert_eq!(x.rtt_s.to_bits(), y.rtt_s.to_bits(), "step {step}: rtt diverged");
+                assert_eq!(
+                    x.bytes_delivered.to_bits(),
+                    y.bytes_delivered.to_bits(),
+                    "step {step}: bytes diverged"
+                );
+                assert_eq!(x.active_streams, y.active_streams, "step {step}: streams diverged");
+            }
+            arena.set_cc_p(a0, cc, p);
+            Substrate::set_cc_p(&mut base, b0, cc, p);
+            let cap = if step % 3 == 0 { 0.0 } else { 1.5 + step as f64 };
+            arena.set_demand_cap(a1, cap);
+            Substrate::set_demand_cap(&mut base, a1, cap);
+            assert_eq!(
+                arena.active_streams(a0),
+                Substrate::active_streams(&base, b0),
+                "step {step}: cached active count diverged"
+            );
+        }
+    }
+
     /// Regression (units audit): `rtt_noise_s` is *seconds*. The default
     /// 0.0004 s must show up as ~0.4 ms of measurement jitter — three orders
     /// of magnitude below a seconds-vs-milliseconds mixup.
@@ -630,9 +792,8 @@ mod tests {
         assert!(thr > 2.0, "thr={thr}");
         // And the WAN itself stays uncongested: the receiver stage, not the
         // WAN, carries whatever standing queue exists.
-        let fills = s.segment_queue_fills();
-        let wan = fills.iter().find(|(n, _)| *n == "wan").unwrap().1;
-        let rx = fills.iter().find(|(n, _)| *n == "rx").unwrap().1;
+        let wan = s.segment_queue_fills().find(|(n, _)| *n == "wan").unwrap().1;
+        let rx = s.segment_queue_fills().find(|(n, _)| *n == "rx").unwrap().1;
         assert!(rx >= wan, "rx={rx} wan={wan}");
         assert!(wan < 0.1, "wan queue should be empty: {wan}");
     }
@@ -669,12 +830,9 @@ mod tests {
     fn multi_segment_determinism() {
         let run = || {
             let tb = Testbed::chameleon();
-            let topo = Topology::three_stage(&tb, 6.0, 8.0)
-                .with_wan_background(Background::Bursty {
-                    low_gbps: 0.5,
-                    high_gbps: 5.0,
-                    switch_prob: 0.2,
-                });
+            let topo = Topology::three_stage(&tb, 6.0, 8.0).with_wan_background(
+                Background::Bursty { low_gbps: 0.5, high_gbps: 5.0, switch_prob: 0.2 },
+            );
             let mut s = NetworkSim::from_topology(tb, &topo, 23);
             let id = s.add_flow(4, 4, None);
             let mut total = 0.0;

@@ -133,6 +133,138 @@ impl CubicStream {
     }
 }
 
+/// Struct-of-arrays CUBIC state for the arena simulator.
+///
+/// Same fluid model as [`CubicStream`], laid out as parallel `f64`/flag
+/// slices indexed by arena slot so the simulator tick streams through
+/// contiguous memory instead of chasing `Vec<CubicStream>` pointers. Every
+/// formula is copied verbatim from [`CubicStream`] — the
+/// `arena_matches_cubic_stream_bit_for_bit` test locks the two
+/// implementations together, and `tests/golden_replay.rs` locks the whole
+/// simulator against the pre-arena loop.
+///
+/// Callers (the simulator tick) only invoke [`StreamArena::cwnd_rate_gbps`],
+/// [`StreamArena::grow`] and [`StreamArena::on_loss`] on **active** slots;
+/// unlike [`CubicStream`], the per-op `active` short-circuits are hoisted
+/// into the caller's loop bounds (§Perf).
+#[derive(Debug, Clone, Default)]
+pub struct StreamArena {
+    cwnd: Vec<f64>,
+    w_max: Vec<f64>,
+    ssthresh: Vec<f64>,
+    epoch_t: Vec<f64>,
+    since_cut: Vec<f64>,
+    in_slow_start: Vec<bool>,
+    active: Vec<bool>,
+}
+
+impl StreamArena {
+    pub fn new() -> StreamArena {
+        StreamArena::default()
+    }
+
+    /// Total slots (created or reserved).
+    pub fn len(&self) -> usize {
+        self.cwnd.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cwnd.is_empty()
+    }
+
+    /// Append `n` fresh slots (RFC 6928 initial window, slow start,
+    /// active) and return the index of the first. Fresh-slot state is
+    /// exactly [`CubicStream::new`].
+    pub fn push_fresh(&mut self, n: usize) -> usize {
+        let base = self.cwnd.len();
+        self.cwnd.resize(base + n, 10.0);
+        self.w_max.resize(base + n, 0.0);
+        self.ssthresh.resize(base + n, f64::MAX);
+        self.epoch_t.resize(base + n, 0.0);
+        self.since_cut.resize(base + n, f64::MAX / 2.0);
+        self.in_slow_start.resize(base + n, true);
+        self.active.resize(base + n, true);
+        base
+    }
+
+    pub fn is_active(&self, i: usize) -> bool {
+        self.active[i]
+    }
+
+    /// Current window of slot `i`, MSS (telemetry/tests).
+    pub fn cwnd(&self, i: usize) -> f64 {
+        self.cwnd[i]
+    }
+
+    /// Pause slot `i` (keeps window state; sends nothing while paused).
+    pub fn pause(&mut self, i: usize) {
+        self.active[i] = false;
+    }
+
+    /// Resume a paused slot: conservative slow-start restart with a
+    /// reduced threshold, exactly [`CubicStream::resume`]. No-op on an
+    /// active slot.
+    pub fn resume(&mut self, i: usize) {
+        if !self.active[i] {
+            self.active[i] = true;
+            self.ssthresh[i] = self.cwnd[i].max(10.0);
+            self.cwnd[i] = 10.0;
+            self.in_slow_start[i] = true;
+            self.epoch_t[i] = 0.0;
+        }
+    }
+
+    /// Offered rate of an **active** slot in Gbps, before caps.
+    #[inline]
+    pub fn cwnd_rate_gbps(&self, i: usize, rtt_s: f64) -> f64 {
+        self.cwnd[i] * MSS_BITS / rtt_s / 1e9
+    }
+
+    /// Advance an **active** slot's window by `dt` seconds
+    /// ([`CubicStream::grow`], verbatim).
+    #[inline]
+    pub fn grow(&mut self, i: usize, dt: f64, rtt_s: f64, app_limited: bool) {
+        self.since_cut[i] += dt;
+        if app_limited {
+            return;
+        }
+        self.epoch_t[i] += dt;
+        if self.in_slow_start[i] {
+            self.cwnd[i] += self.cwnd[i] * dt / rtt_s;
+            if self.cwnd[i] >= self.ssthresh[i] {
+                self.in_slow_start[i] = false;
+                self.w_max[i] = self.cwnd[i];
+                self.epoch_t[i] = 0.0;
+            }
+            return;
+        }
+        let k = (self.w_max[i] * (1.0 - CUBIC_BETA) / CUBIC_C).cbrt();
+        let target = CUBIC_C * (self.epoch_t[i] - k).powi(3) + self.w_max[i];
+        let aimd_floor = self.cwnd[i] + dt / rtt_s;
+        if target > self.cwnd[i] {
+            self.cwnd[i] += ((target - self.cwnd[i]) * dt / rtt_s).max(0.0);
+        }
+        self.cwnd[i] = self.cwnd[i].max(aimd_floor.min(target.max(aimd_floor)));
+    }
+
+    /// Register a loss event on an **active** slot
+    /// ([`CubicStream::on_loss`], verbatim). Returns true if a
+    /// multiplicative decrease was applied.
+    #[inline]
+    pub fn on_loss(&mut self, i: usize, rtt_s: f64) -> bool {
+        if self.since_cut[i] < rtt_s {
+            return false;
+        }
+        self.w_max[i] = self.cwnd[i];
+        self.cwnd[i] = (self.cwnd[i] * CUBIC_BETA).max(2.0);
+        self.ssthresh[i] = self.cwnd[i];
+        self.in_slow_start[i] = false;
+        self.epoch_t[i] = 0.0;
+        self.since_cut[i] = 0.0;
+        true
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +358,61 @@ mod tests {
         let s = CubicStream::new();
         let expect = 10.0 * MSS_BITS / RTT / 1e9;
         assert!((s.cwnd_rate_gbps(RTT) - expect).abs() < 1e-12);
+    }
+
+    /// The SoA arena and the AoS stream evolve bit-for-bit identically
+    /// through a long randomized op sequence (grow with mixed app-limited
+    /// flags, rate-limited loss events, pause/resume cycles).
+    #[test]
+    fn arena_matches_cubic_stream_bit_for_bit() {
+        let mut aos = CubicStream::new();
+        let mut soa = StreamArena::new();
+        let i = soa.push_fresh(3) + 1; // middle slot: neighbors must not alias
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for step in 0..5_000 {
+            match next() % 10 {
+                0 => {
+                    aos.pause();
+                    soa.pause(i);
+                }
+                1 => {
+                    aos.resume();
+                    soa.resume(i);
+                }
+                2 if aos.active => {
+                    let a = aos.on_loss(RTT);
+                    let b = soa.on_loss(i, RTT);
+                    assert_eq!(a, b, "loss outcome diverged at step {step}");
+                }
+                _ if aos.active => {
+                    let app_limited = next() % 3 == 0;
+                    aos.grow(DT, RTT, app_limited);
+                    soa.grow(i, DT, RTT, app_limited);
+                }
+                _ => {}
+            }
+            assert_eq!(aos.active, soa.is_active(i), "active flag diverged at step {step}");
+            assert_eq!(
+                aos.cwnd.to_bits(),
+                soa.cwnd(i).to_bits(),
+                "cwnd diverged at step {step}: {} vs {}",
+                aos.cwnd,
+                soa.cwnd(i)
+            );
+            if aos.active {
+                assert_eq!(
+                    aos.cwnd_rate_gbps(RTT).to_bits(),
+                    soa.cwnd_rate_gbps(i, RTT).to_bits(),
+                    "rate diverged at step {step}"
+                );
+            }
+        }
     }
 
     #[test]

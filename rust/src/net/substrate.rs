@@ -31,6 +31,14 @@ pub trait Substrate: Send {
     /// metrics in flow-id order.
     fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics>;
 
+    /// Like [`Substrate::run_mi`], writing into a caller-reused buffer —
+    /// the allocation-free path the session's step loop drives (§Perf).
+    /// The default delegates to `run_mi`; substrates with a native
+    /// zero-alloc path (the arena [`NetworkSim`]) override it.
+    fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>) {
+        *out = self.run_mi(dur_s);
+    }
+
     /// Simulated time elapsed, seconds.
     fn time_s(&self) -> f64;
 
@@ -60,6 +68,10 @@ impl Substrate for NetworkSim {
 
     fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
         NetworkSim::run_mi(self, dur_s)
+    }
+
+    fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>) {
+        NetworkSim::run_mi_into(self, dur_s, out)
     }
 
     fn time_s(&self) -> f64 {

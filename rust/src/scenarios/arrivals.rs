@@ -162,6 +162,24 @@ impl ArrivalSchedule {
         }
     }
 
+    /// The churn-heavy process at an arbitrary fleet size: same per-lane
+    /// workload and 40-MI forced departure as [`ArrivalSchedule::churn_heavy`],
+    /// with `max_agents = lanes` and the Poisson gap shrunk (never widened
+    /// past the preset's 6 MIs) so the whole fleet lands inside ~70 % of
+    /// `horizon_mis`. This is the `sparta bench` scale curve
+    /// (16/64/256 lanes) and the golden-replay workload (128 lanes);
+    /// arrivals stay fully determined by `(lanes, horizon, seed)`.
+    pub fn churn_heavy_scaled(lanes: usize, horizon_mis: usize) -> ArrivalSchedule {
+        let mut s = ArrivalSchedule::churn_heavy();
+        s.horizon_mis = horizon_mis;
+        let gap = (horizon_mis as f64 * 0.7 / lanes.max(1) as f64).min(6.0);
+        if let Process::Poisson { mean_gap_mis, max_agents, .. } = &mut s.process {
+            *max_agents = lanes;
+            *mean_gap_mis = gap;
+        }
+        s
+    }
+
     /// Flash crowd: one long-running marathon transfer (~75 GB, spanning
     /// the burst), then eight short-lived peers slamming the same
     /// bottleneck at MI 40, and a straggler near the end — trace-driven,
@@ -241,6 +259,17 @@ mod tests {
         assert_ne!(heavy.arrivals(1), heavy.arrivals(2));
         let crowd = ArrivalSchedule::by_name("flash-crowd").unwrap();
         assert_eq!(crowd.arrivals(1), crowd.arrivals(2));
+    }
+
+    #[test]
+    fn scaled_churn_heavy_reaches_the_requested_fleet_size() {
+        for lanes in [16usize, 64, 256] {
+            let s = ArrivalSchedule::churn_heavy_scaled(lanes, 120);
+            let a = s.arrivals(42);
+            assert!(a.len() * 10 >= lanes * 8, "{lanes} lanes: only {} arrivals", a.len());
+            assert!(a.len() <= lanes, "{lanes} lanes: {} arrivals", a.len());
+            assert_eq!(s.arrivals(42), a, "{lanes} lanes: not seed-deterministic");
+        }
     }
 
     #[test]

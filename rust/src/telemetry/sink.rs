@@ -186,7 +186,7 @@ impl TelemetrySink for ReportSink {
         self.fairness.on_event(event);
         match event {
             Event::Admitted { lane, name, .. } => {
-                self.acc(lane.0).name = name.clone();
+                self.acc(lane.0).name = name.to_string();
             }
             Event::MiCompleted { lane, record } => {
                 let acc = self.acc(lane.0);
@@ -227,7 +227,7 @@ pub fn event_json(event: &Event) -> Json {
     match event {
         Event::Admitted { lane, name, mi, time_s } => {
             let mut o = head("admitted", lane.0, *mi, *time_s);
-            o.push(("name", Json::from(name.clone())));
+            o.push(("name", Json::from(&**name)));
             Json::obj(o)
         }
         Event::MiCompleted { lane, record } => {
@@ -290,13 +290,20 @@ impl TelemetrySink for FanoutSink<'_> {
 
 /// Streams events as JSON lines to any writer (files, pipes, sockets).
 /// Write errors are swallowed: telemetry must never abort a transfer.
+///
+/// §Perf: each event is formatted into a reusable `String` and handed to
+/// the writer as one `write_all` — no per-event buffer allocation, and no
+/// `Display`-adapter round trips through the writer's fine-grained
+/// `write_fmt` machinery.
 pub struct JsonlSink<W: Write> {
     out: W,
+    /// Reusable line buffer.
+    buf: String,
 }
 
 impl<W: Write> JsonlSink<W> {
     pub fn new(out: W) -> JsonlSink<W> {
-        JsonlSink { out }
+        JsonlSink { out, buf: String::new() }
     }
 
     pub fn into_inner(self) -> W {
@@ -306,7 +313,11 @@ impl<W: Write> JsonlSink<W> {
 
 impl<W: Write> TelemetrySink for JsonlSink<W> {
     fn on_event(&mut self, event: &Event) {
-        let _ = writeln!(self.out, "{}", event_json(event));
+        use std::fmt::Write as _;
+        self.buf.clear();
+        let _ = write!(self.buf, "{}", event_json(event));
+        self.buf.push('\n');
+        let _ = self.out.write_all(self.buf.as_bytes());
     }
 }
 
@@ -394,7 +405,7 @@ mod tests {
         for (lane, mis) in [(0usize, vec![0, 1, 2]), (1usize, vec![2, 3])] {
             sink.on_event(&Event::Admitted {
                 lane: LaneId(lane),
-                name: format!("l{lane}"),
+                name: format!("l{lane}").into(),
                 mi: mis[0],
                 time_s: mis[0] as f64,
             });

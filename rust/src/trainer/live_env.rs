@@ -9,7 +9,7 @@ use crate::coordinator::{
 };
 use crate::emulator::{Env, StepOut};
 use crate::energy::{EnergyMeter, PowerModel};
-use crate::net::{FlowId, NetworkSim, Substrate, Testbed, Topology};
+use crate::net::{FlowId, MiMetrics, NetworkSim, Substrate, Testbed, Topology};
 use crate::scenarios::Scenario;
 use crate::util::Rng;
 
@@ -25,6 +25,9 @@ pub struct LiveEnv {
     rng: Rng,
     // Episode state.
     sim: Option<Box<dyn Substrate>>,
+    /// Reusable per-MI metrics buffer (§Perf: the training loop never
+    /// allocates per observation).
+    metrics: Vec<MiMetrics>,
     flow: FlowId,
     meter: EnergyMeter,
     window: FeatureWindow,
@@ -54,6 +57,7 @@ impl LiveEnv {
             mi_s: 1.0,
             rng: Rng::new(seed),
             sim: None,
+            metrics: Vec::new(),
             flow: FlowId(0),
             meter: EnergyMeter::new(PowerModel::efficient(), seed),
             window,
@@ -88,8 +92,9 @@ impl LiveEnv {
 
     fn observe_mi(&mut self) -> Observation {
         let sim = self.sim.as_mut().unwrap();
-        let m = sim.run_mi(self.mi_s);
-        let m = &m[self.flow.0];
+        // §Perf: reuse one metrics buffer across the whole training run.
+        sim.run_mi_into(self.mi_s, &mut self.metrics);
+        let m = &self.metrics[self.flow.0];
         let energy = if self.testbed.has_energy_counters {
             self.meter.record_mi(m.active_streams, m.throughput_gbps, m.duration_s)
         } else {

@@ -208,10 +208,11 @@ fn observed_pause_delivers_negative_reward() {
     }
     assert!(s.pause(id));
     let events = s.step();
+    // Sinks receive `&Event`; borrow the record instead of cloning it.
     let rec = events
         .iter()
         .find_map(|e| match e {
-            Event::MiCompleted { lane, record } if *lane == id => Some(record.clone()),
+            Event::MiCompleted { lane, record } if *lane == id => Some(record),
             _ => None,
         })
         .expect("paused lane must emit an observed record");

@@ -1,0 +1,187 @@
+//! Golden replay: the arena hot-loop rewrite changes **speed, not bytes**.
+//!
+//! The pre-arena `Flow → Task → Vec<CubicStream>` loop is kept in-tree,
+//! frozen, as `net::baseline::BaselineSim`. These tests drive the real
+//! report pipelines on both loops over identical seeded workloads and
+//! assert the serialized reports are **byte-for-byte** equal:
+//!
+//! * fleet `churn-heavy` at 128 lanes, trials sharded over `--jobs 4`
+//!   (mid-run admission, forced departures, shared host-ledger energy with
+//!   the per-trial conservation assert live);
+//! * `compare --scenario all` over the artifact-free methods (every
+//!   registered scenario topology through the batch/Controller path);
+//! * a raw session churn script with external pause/resume and observed
+//!   paused MIs, compared event-by-event.
+//!
+//! Any float produced in a different order, any skipped or extra RNG draw,
+//! any reordered event breaks these comparisons. CI's bench lane runs this
+//! suite as its report-drift gate.
+
+use sparta::baselines::{FalconMp, StaticTool, TwoPhase};
+use sparta::config::Paths;
+use sparta::coordinator::{Event, LaneId, LaneSpec, Session, SessionBuilder};
+use sparta::experiments::runner::cell_seed;
+use sparta::experiments::{fig6, fleet, make_optimizer, Scale, SpartaCtx};
+use sparta::net::baseline::BaselineSim;
+use sparta::scenarios::{ArrivalSchedule, Scenario};
+use sparta::transfer::TransferJob;
+
+/// Methods that need no trained weights or AOT artifacts.
+const METHODS: [&str; 4] = ["rclone", "escp", "falcon_mp", "2-phase"];
+
+fn methods() -> Vec<String> {
+    METHODS.iter().map(|m| m.to_string()).collect()
+}
+
+/// Fleet churn-heavy at 128 lanes, 160-MI horizon, trials over 4 workers —
+/// the arena loop and the frozen baseline loop must serialize identically.
+#[test]
+fn fleet_churn_heavy_128_lanes_jobs4_is_byte_identical_to_pre_arena_loop() {
+    let sched = ArrivalSchedule::churn_heavy_scaled(128, 160);
+    let run = |baseline_loop: bool| {
+        let opts = fleet::FleetOpts { baseline_loop, ..fleet::FleetOpts::default() };
+        let report =
+            fleet::run(&Paths::resolve(), &sched, &methods(), Scale::Quick, 42, 4, opts)
+                .expect("fleet run");
+        let lanes = report.trials.iter().map(|t| t.lanes.len()).max().unwrap_or(0);
+        assert!(lanes >= 100, "scaled schedule admitted only {lanes} lanes");
+        fleet::to_json(&report).to_string()
+    };
+    let arena = run(false);
+    let baseline = run(true);
+    assert!(
+        arena == baseline,
+        "fleet report bytes drifted from the pre-arena loop (len {} vs {})",
+        arena.len(),
+        baseline.len()
+    );
+}
+
+/// `compare --scenario all` (the fig6 matrix) on the arena loop vs the
+/// same cells replayed one by one on the baseline loop through the same
+/// Controller path with identity-derived seeds.
+#[test]
+fn compare_all_scenarios_is_byte_identical_to_pre_arena_loop() {
+    let paths = Paths::resolve();
+    let scenarios = Scenario::all();
+    let methods = methods();
+    let arena = fig6::run(&paths, &scenarios, &methods, Scale::Quick, 42, 4).expect("fig6 run");
+    let arena_bytes = fig6::to_json(&arena).to_string();
+
+    // Replay every (scenario, method, trial) cell on the baseline loop —
+    // the same workload, seeding and report assembly as fig6::run.
+    let ctx = SpartaCtx::load(paths).expect("ctx");
+    let (files, bytes) = Scale::Quick.workload();
+    let mut cells: Vec<fig6::Cell> = Vec::new();
+    for sc in &scenarios {
+        for method in &methods {
+            let mut cell = fig6::Cell {
+                method: method.clone(),
+                scenario: sc.name.to_string(),
+                throughput_gbps: Vec::new(),
+                energy_kj: Vec::new(),
+                duration_s: Vec::new(),
+            };
+            for trial in 0..Scale::Quick.trials() {
+                let seed = cell_seed(42, &format!("{}/{}", sc.name, method), trial as u64);
+                let (opt, engine, reward) = make_optimizer(&ctx, method, seed).expect("optimizer");
+                let mut ctl = sc
+                    .controller()
+                    .job(TransferJob::files(files, bytes))
+                    .engine(engine)
+                    .reward(reward)
+                    .seed(seed)
+                    .substrate(Box::new(BaselineSim::from_topology(
+                        sc.testbed.clone(),
+                        &sc.topology,
+                        seed,
+                    )))
+                    .build();
+                let report = ctl.run(opt, seed);
+                let lane = report.lane();
+                cell.throughput_gbps.push(lane.avg_throughput_gbps());
+                cell.duration_s.push(lane.duration_s);
+                if sc.testbed.has_energy_counters {
+                    cell.energy_kj.push(lane.total_energy_j / 1000.0);
+                }
+            }
+            cells.push(cell);
+        }
+    }
+    let baseline_bytes = fig6::to_json(&cells).to_string();
+    assert!(
+        arena_bytes == baseline_bytes,
+        "compare report bytes drifted from the pre-arena loop (len {} vs {})",
+        arena_bytes.len(),
+        baseline_bytes.len()
+    );
+}
+
+/// A session churn script — staggered admits, external pause/resume,
+/// cancel, observed paused MIs on host-resolved rails — replays the exact
+/// event stream on both loops.
+#[test]
+fn session_churn_script_event_streams_are_identical() {
+    let sc = Scenario::by_name("chameleon").expect("chameleon scenario");
+    let build = |baseline_loop: bool| -> Session {
+        let mut b: SessionBuilder =
+            sc.session_host_resolved().observe_paused(true).seed(1234);
+        if baseline_loop {
+            b = b.substrate(Box::new(BaselineSim::from_topology(
+                sc.testbed.clone(),
+                &sc.topology,
+                1234,
+            )));
+        }
+        b.build()
+    };
+    let script = |mut s: Session| -> Vec<Event> {
+        let mut all = Vec::new();
+        let mut events = Vec::new();
+        // Jobs sized so no lane can complete before its scripted pause/
+        // cancel point even at full line rate (10 Gbps = 1.25 GB/MI).
+        let a = s.admit(
+            LaneSpec::new(Box::new(StaticTool::rclone()), TransferJob::files(48, 256 << 20))
+                .named("a"),
+        );
+        let b = s.admit(
+            LaneSpec::new(Box::new(FalconMp::new()), TransferJob::files(160, 256 << 20))
+                .named("b"),
+        );
+        for mi in 0..60 {
+            if mi == 5 {
+                s.admit(
+                    LaneSpec::new(Box::new(TwoPhase::new()), TransferJob::files(24, 256 << 20))
+                        .named("late"),
+                );
+            }
+            if mi == 8 {
+                assert!(s.pause(a));
+            }
+            if mi == 14 {
+                assert!(s.resume(a));
+            }
+            if mi == 20 {
+                assert!(s.cancel(b));
+            }
+            s.step_into(&mut events);
+            all.extend(events.drain(..));
+            if s.is_idle() {
+                break;
+            }
+        }
+        all
+    };
+    let arena = script(build(false));
+    let baseline = script(build(true));
+    assert_eq!(arena.len(), baseline.len(), "event counts diverged");
+    for (i, (x, y)) in arena.iter().zip(baseline.iter()).enumerate() {
+        assert_eq!(x, y, "event {i} diverged between arena and baseline loops");
+    }
+    // The script must actually have exercised the interesting paths.
+    assert!(arena.iter().any(|e| matches!(e, Event::Paused { .. })));
+    assert!(arena
+        .iter()
+        .any(|e| matches!(e, Event::MiCompleted { record, .. } if record.paused)));
+    assert!(arena.iter().any(|e| matches!(e, Event::Departed { lane, .. } if *lane == LaneId(1))));
+}

@@ -279,7 +279,11 @@ fn fleet_report_identical_across_jobs() {
     let paths = Paths::with_root(&root);
     let schedule = ArrivalSchedule::by_name("churn-heavy").unwrap();
     let methods: Vec<String> = vec!["2-phase".into(), "rclone".into()];
-    let opts = fleet::FleetOpts { observe_paused: true, yield_policy: true };
+    let opts = fleet::FleetOpts {
+        observe_paused: true,
+        yield_policy: true,
+        ..fleet::FleetOpts::default()
+    };
     let r1 = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 1, opts).unwrap();
     let r4 = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 4, opts).unwrap();
     let j1 = fleet::to_json(&r1).to_string();
