@@ -1,0 +1,24 @@
+//! Build-time metadata for `sparta bench` reports.
+//!
+//! BENCH schema v2 records the compiler that produced the binary so that
+//! anchor-vs-current comparisons can tell a code regression from a
+//! toolchain change. The version string is baked in at compile time via
+//! `SPARTA_RUSTC_VERSION` (read with `option_env!`, so the crate still
+//! builds if this script is ever bypassed).
+
+use std::process::Command;
+
+fn main() {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let version = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string());
+    println!("cargo:rustc-env=SPARTA_RUSTC_VERSION={version}");
+    // Re-run only when the compiler changes, not on every source edit.
+    println!("cargo:rerun-if-env-changed=RUSTC");
+}

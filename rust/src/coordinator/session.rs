@@ -33,14 +33,20 @@
 //! additionally surfaces those idle bills as zero-throughput [`MiRecord`]s
 //! so optimizers can learn preemption costs.
 //!
-//! §Perf: stepping is allocation-free at steady state. The per-MI metric,
-//! activity, bill and decision buffers are pooled on the session and the
-//! substrate is driven through [`crate::net::Substrate::run_mi_into`];
-//! [`Session::step_into`] writes events into a caller-reused buffer (the
-//! fleet driver's path), [`Session::step_with`] recycles an internal one,
-//! and [`Session::step`] is the allocating compat wrapper. Lane names are
-//! interned as `Arc<str>` once at admission, so events and reports share
-//! the same backing string.
+//! §Perf: stepping is allocation-free at steady state, **including record
+//! emission**. The per-MI metric, activity, bill and decision buffers are
+//! pooled on the session and the substrate is driven through
+//! [`crate::net::Substrate::run_mi_into`]; [`Session::step_into`] writes
+//! events into a caller-reused buffer (the fleet driver's path),
+//! [`Session::step_with`] recycles an internal one, and [`Session::step`]
+//! is the allocating compat wrapper. [`MiRecord::state`] vectors are
+//! copy-on-sink from a session-owned pool: each record's state buffer is
+//! popped from the pool at emission, and when a previously emitted batch
+//! is cleared on the session's step paths the buffers are reclaimed into
+//! the pool — a sink that wants to keep a record past the step clones it
+//! (as the report/event sinks already do), so recycling never aliases
+//! live data. Lane names are interned as `Arc<str>` once at admission, so
+//! events and reports share the same backing string.
 
 use super::actions::ParamBounds;
 use super::reward::{RewardConfig, RewardKind, RewardTracker};
@@ -177,6 +183,16 @@ impl LaneSpec {
     }
 }
 
+/// Pop a pooled state buffer (or allocate while the pool warms up) and
+/// copy `state` into it — the emission half of the copy-on-sink contract
+/// on [`MiRecord::state`] (§Perf in the module docs).
+fn pooled_state_copy(pool: &mut Vec<Vec<f32>>, state: &[f32]) -> Vec<f32> {
+    let mut buf = pool.pop().unwrap_or_default();
+    buf.clear();
+    buf.extend_from_slice(state);
+    buf
+}
+
 struct SessionLane {
     name: Arc<str>,
     flow: FlowId,
@@ -311,6 +327,7 @@ impl SessionBuilder {
             activity_buf: Vec::new(),
             bills_buf: Vec::new(),
             decisions_buf: Vec::new(),
+            state_pool: Vec::new(),
         }
     }
 }
@@ -341,6 +358,10 @@ pub struct Session {
     activity_buf: Vec<LaneActivity>,
     bills_buf: Vec<Option<LaneBill>>,
     decisions_buf: Vec<(usize, Decision)>,
+    /// Free-list of `MiRecord::state` buffers: emission pops (falling
+    /// back to a fresh alloc only while the pool warms up), and clearing
+    /// an emitted batch on the step paths reclaims (see the module docs).
+    state_pool: Vec<Vec<f32>>,
 }
 
 impl Session {
@@ -465,9 +486,24 @@ impl Session {
     /// primitive behind [`Session::step`] (§Perf; the fleet driver holds
     /// one buffer across all MIs).
     pub fn step_into(&mut self, events: &mut Vec<Event>) {
-        events.clear();
+        self.reclaim_events(events);
         events.append(&mut self.pending);
         self.step_mi(events);
+    }
+
+    /// Drain `events`, reclaiming every contained record's state buffer
+    /// into the session pool — the clearing half of the copy-on-sink
+    /// contract (§Perf in the module docs). Safe because the drained
+    /// events are dropped here: any consumer that kept a record cloned
+    /// it, so the reclaimed buffers have no other owner.
+    fn reclaim_events(&mut self, events: &mut Vec<Event>) {
+        for ev in events.drain(..) {
+            if let Event::MiCompleted { record, .. } = ev {
+                let mut buf = record.state;
+                buf.clear();
+                self.state_pool.push(buf);
+            }
+        }
     }
 
     /// Advance exactly one monitoring interval and return the events it
@@ -486,7 +522,9 @@ impl Session {
         for ev in &events {
             sink.on_event(ev);
         }
-        events.clear();
+        // Keep the sunk events in the buffer: the next step's
+        // `reclaim_events` recycles their record-state buffers into the
+        // pool (a plain clear here would leak them back to the allocator).
         self.events_buf = events;
     }
 
@@ -612,7 +650,7 @@ impl Session {
                         metric: out.metric,
                         reward: out.reward,
                         action: None,
-                        state: lane.window.state().to_vec(),
+                        state: pooled_state_copy(&mut self.state_pool, lane.window.state()),
                         bytes_total: lane.job.delivered_bytes(),
                         energy_total_j: self.energy.lane_total_j(li),
                         paused: true,
@@ -677,7 +715,7 @@ impl Session {
                     metric: out.metric,
                     reward: out.reward,
                     action,
-                    state: lane.window.state().to_vec(),
+                    state: pooled_state_copy(&mut self.state_pool, lane.window.state()),
                     bytes_total: lane.job.delivered_bytes(),
                     energy_total_j: self.energy.lane_total_j(li),
                     paused: false,
@@ -834,6 +872,47 @@ mod tests {
         };
         assert!(is_mi0);
         assert_eq!(s.mi(), 1);
+    }
+
+    /// The record-state pool actually recycles: after the first reclaim,
+    /// repeated `step_into` over a reused buffer emits records whose
+    /// state buffers come from the pool (pool size stays bounded by the
+    /// per-step record count instead of growing), and the emitted values
+    /// are identical to the allocating `step()` path on a twin session.
+    #[test]
+    fn state_pool_recycles_record_buffers() {
+        let build = |seed: u64| {
+            let mut s = Session::builder(Testbed::chameleon())
+                .background(Background::Idle)
+                .seed(seed)
+                .build();
+            s.admit(static_spec());
+            s.admit(static_spec());
+            s
+        };
+        let mut pooled = build(9);
+        let mut alloc = build(9);
+        let mut events = Vec::new();
+        for step in 0..12 {
+            pooled.step_into(&mut events);
+            let fresh = alloc.step();
+            assert_eq!(events.len(), fresh.len(), "step {step}: event counts diverged");
+            for (a, b) in events.iter().zip(fresh.iter()) {
+                assert_eq!(a, b, "step {step}: pooled path diverged from allocating path");
+            }
+            // Two lanes → at most two records reclaimed per step; the pool
+            // never holds more than one step's worth of buffers.
+            assert!(pooled.state_pool.len() <= 2, "pool grew: {}", pooled.state_pool.len());
+        }
+        // Reclaiming the final step's events by hand closes the loop:
+        // every record buffer comes back to the pool, cleared.
+        let n_records =
+            events.iter().filter(|e| matches!(e, Event::MiCompleted { .. })).count();
+        let before = pooled.state_pool.len();
+        pooled.reclaim_events(&mut events);
+        assert!(events.is_empty());
+        assert_eq!(pooled.state_pool.len(), before + n_records);
+        assert!(pooled.state_pool.iter().all(|b| b.is_empty()));
     }
 
     #[test]

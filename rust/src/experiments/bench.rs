@@ -4,35 +4,57 @@
 //! [`ArrivalSchedule::churn_heavy_scaled`]) on both simulator hot loops —
 //! the struct-of-arrays arena ([`crate::net::NetworkSim`]) and the frozen
 //! pre-arena loop ([`crate::net::baseline::BaselineSim`]) — plus the
-//! hot-path microbenches, and emits a machine-readable `BENCH_5.json`.
+//! hot-path microbenches, and emits a machine-readable `BENCH_*.json`.
 //! Because the baseline is timed **in the same process on the same
 //! machine**, the reported speedups are honest ratios, not stale
 //! constants; and because both loops must produce byte-identical fleet
 //! reports, every bench run doubles as a results-drift gate (the full gate
 //! lives in `tests/golden_replay.rs`). CI runs `sparta bench --quick` and
-//! uploads `BENCH_5.json` as an artifact.
+//! uploads the `BENCH_*.json` artifact; the perf-trend job additionally
+//! passes `--against <last committed BENCH_*.json>` so every PR pays its
+//! perf bill visibly (see [`trend_gate`]).
 //!
-//! ## `BENCH_*.json` schema (version 1)
+//! ## `BENCH_*.json` schema (version 2)
+//!
+//! Version 2 (PR 6) extends version 1 (PR 5) with stable-comparison
+//! metadata (`meta`, `iters`), per-trial MI counts (`trial_mis`), and the
+//! MIs/s headline the trend gate reports. Version-1 anchors remain
+//! readable — the gate only needs `scale_curve[*].{lanes,
+//! wall_s_per_trial, baseline_wall_s_per_trial}` and `measured`.
 //!
 //! ```json
 //! {
 //!   "bench": "sparta-bench",          // harness identifier
-//!   "schema_version": 1,
-//!   "pr": 5,                          // PR that introduced the file
+//!   "schema_version": 2,
+//!   "pr": 6,                          // PR that introduced the schema
 //!   "mode": "quick" | "full",         // --quick: 120-MI horizon; full: 360
 //!   "baseline": "net::baseline::BaselineSim (pre-arena loop, d6d9964),
 //!                timed in-process",
-//!   "measured": true,                 // false only in the committed
-//!                                     // repo-root schema anchor, which
-//!                                     // also carries a free-text "note"
-//!                                     // and empty curve/micro arrays
+//!   "measured": true,                 // false only in committed repo-root
+//!                                     // schema/seed anchors, which also
+//!                                     // carry a free-text "note"; the
+//!                                     // trend gate treats those as
+//!                                     // seed-only (record, don't compare)
+//!   "iters": 3,                       // timing repetitions; walls below
+//!                                     // are the per-iteration minimum
+//!   "meta": {                         // where the numbers were taken
+//!     "host": "runner-abc",           // /proc hostname (or $HOSTNAME)
+//!     "os": "linux", "arch": "x86_64",
+//!     "cpus": 8,                      // available parallelism
+//!     "rustc": "rustc 1.79.0"         // compiler that built the binary
+//!   },
 //!   "scale_curve": [                  // one point per fleet size
 //!     { "lanes": 256,                 // requested fleet size
 //!       "trials": 2,                  // seeded trials timed (jobs = 1)
 //!       "horizon_mis": 120,           // MI cap per trial
 //!       "mis_run": 240,               // MIs actually stepped, all trials
+//!       "trial_mis": [120, 120],      // per-trial MI counts (from the
+//!                                     // fleet report's serialized
+//!                                     // `mis_run`), so MIs/s per trial
+//!                                     // needs no re-derivation
 //!       "wall_s_per_trial": 0.6,      // arena loop, wall s per trial
-//!       "mis_per_s": 400.0,           // simulated MIs per wall second
+//!       "mis_per_s": 400.0,           // simulated MIs per wall second —
+//!                                     // the headline number
 //!       "ticks_per_s": 8000.0,        // fluid-model ticks per wall second
 //!       "baseline_wall_s_per_trial": 2.1,  // pre-arena loop, same workload
 //!       "speedup_x": 3.5 }            // baseline / arena wall per trial
@@ -42,6 +64,21 @@
 //!   ]
 //! }
 //! ```
+//!
+//! ## The perf-trend gate
+//!
+//! Wall seconds are machine-dependent, so the gate never compares them
+//! across runs. Instead it compares the **arena/baseline wall ratio**
+//! (`1 / speedup_x`): both loops run the identical seeded workload in the
+//! same process, so machine speed cancels and the ratio isolates how much
+//! of the baseline's cost the arena loop still pays. A point regresses
+//! when its ratio worsens by more than [`TREND_MAX_REGRESS_FRAC`] relative
+//! to the anchor's. Anchors with `"measured": false` (or an empty curve)
+//! are **seed-only**: the gate records the fresh numbers and passes, so
+//! the first measured run after a schema anchor establishes the ratchet
+//! instead of tripping it. `--inject-slowdown <frac>` sleeps that fraction
+//! of each arena timing (test flag) — CI uses it to prove the gate fails a
+//! synthetic 15%+ slowdown.
 
 use super::common::Scale;
 use super::fleet::{self, FleetOpts};
@@ -59,11 +96,32 @@ use std::time::Instant;
 /// The fleet sizes of the scale curve.
 pub const BENCH_LANES: [usize; 3] = [16, 64, 256];
 
+/// Maximum tolerated worsening of the arena/baseline wall ratio vs the
+/// anchor before the trend gate fails (15%).
+pub const TREND_MAX_REGRESS_FRAC: f64 = 0.15;
+
 /// Run knobs.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone)]
 pub struct BenchOpts {
     /// 120-MI horizon instead of the full 360 (the CI lane).
     pub quick: bool,
+    /// Timing repetitions per scale point; the reported wall is the
+    /// per-iteration **minimum** (the least-noise estimator — external
+    /// interference only ever adds time).
+    pub iters: usize,
+    /// Test flag: sleep this fraction of every arena timing, so CI can
+    /// demonstrate the trend gate failing a synthetic slowdown. 0 in
+    /// normal runs; the sleep is real and billed to the arena wall.
+    pub inject_slowdown: f64,
+    /// Restrict the curve to these fleet sizes (None = full
+    /// [`BENCH_LANES`] curve).
+    pub lanes: Option<Vec<usize>>,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { quick: false, iters: 1, inject_slowdown: 0.0, lanes: None }
+    }
 }
 
 /// One point of the scale curve: the same seeded workload timed on both
@@ -76,6 +134,9 @@ pub struct ScalePoint {
     /// MIs actually stepped, summed over trials (identical across loops —
     /// the reports are byte-identical).
     pub mis_run: usize,
+    /// Per-trial MI counts, in trial order (the fleet report's serialized
+    /// `mis_run` values).
+    pub trial_mis: Vec<usize>,
     /// Arena loop, wall seconds per trial.
     pub wall_s_per_trial: f64,
     pub mis_per_s: f64,
@@ -94,10 +155,41 @@ pub struct MicroBench {
     pub ops_per_s: f64,
 }
 
+/// Where the numbers were taken: enough context to tell a code regression
+/// from a machine or toolchain change when reading an anchor later.
+#[derive(Debug, Clone)]
+pub struct BenchMeta {
+    pub host: String,
+    pub os: &'static str,
+    pub arch: &'static str,
+    pub cpus: usize,
+    pub rustc: &'static str,
+}
+
+impl BenchMeta {
+    pub fn collect() -> Self {
+        let host = std::fs::read_to_string("/proc/sys/kernel/hostname")
+            .map(|s| s.trim().to_string())
+            .ok()
+            .filter(|s| !s.is_empty())
+            .or_else(|| std::env::var("HOSTNAME").ok())
+            .unwrap_or_else(|| "unknown".to_string());
+        BenchMeta {
+            host,
+            os: std::env::consts::OS,
+            arch: std::env::consts::ARCH,
+            cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            rustc: option_env!("SPARTA_RUSTC_VERSION").unwrap_or("unknown"),
+        }
+    }
+}
+
 /// The full bench report.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
     pub quick: bool,
+    pub iters: usize,
+    pub meta: BenchMeta,
     pub points: Vec<ScalePoint>,
     pub micro: Vec<MicroBench>,
 }
@@ -173,6 +265,7 @@ fn timed_fleet(
 /// Run the scale curve (both loops) plus microbenches.
 pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
     let horizon = if opts.quick { 120 } else { 360 };
+    let iters = opts.iters.max(1);
     let methods: Vec<String> =
         ["falcon_mp", "2-phase", "rclone"].iter().map(|m| m.to_string()).collect();
     // Discarded warmup on both loops, so one-time process costs (lazy
@@ -181,21 +274,45 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
     let warmup = ArrivalSchedule::churn_heavy_scaled(8, 30);
     timed_fleet(paths, &warmup, &methods, false)?;
     timed_fleet(paths, &warmup, &methods, true)?;
+    let lanes_curve: Vec<usize> = match &opts.lanes {
+        Some(subset) => subset.clone(),
+        None => BENCH_LANES.to_vec(),
+    };
     let mut points = Vec::new();
-    for &lanes in &BENCH_LANES {
+    for &lanes in &lanes_curve {
         let sched = ArrivalSchedule::churn_heavy_scaled(lanes, horizon);
-        let (report, wall) = timed_fleet(paths, &sched, &methods, false)?;
-        let (base_report, base_wall) = timed_fleet(paths, &sched, &methods, true)?;
-        // The bench doubles as a drift gate: both loops must produce the
-        // same report bytes (the full suite is tests/golden_replay.rs).
-        if fleet::to_json(&report).to_string() != fleet::to_json(&base_report).to_string() {
-            return Err(anyhow!(
-                "bench: arena and baseline loops diverged at {lanes} lanes — \
-                 results drift, not a perf difference"
-            ));
+        // Stable-comparison mode: repeat the timing and keep the minimum
+        // wall per side — interference only ever adds time, so the min is
+        // the low-noise estimator the trend gate compares.
+        let mut wall = f64::INFINITY;
+        let mut base_wall = f64::INFINITY;
+        let mut report = None;
+        for _ in 0..iters {
+            let (rep, mut w) = timed_fleet(paths, &sched, &methods, false)?;
+            if opts.inject_slowdown > 0.0 {
+                // Real sleep, billed to the arena wall: the synthetic
+                // regression the CI perf-trend job proves it can catch.
+                let pause = w * opts.inject_slowdown;
+                std::thread::sleep(std::time::Duration::from_secs_f64(pause));
+                w += pause;
+            }
+            let (base_rep, base_w) = timed_fleet(paths, &sched, &methods, true)?;
+            // The bench doubles as a drift gate: both loops must produce
+            // the same report bytes (full suite: tests/golden_replay.rs).
+            if fleet::to_json(&rep).to_string() != fleet::to_json(&base_rep).to_string() {
+                return Err(anyhow!(
+                    "bench: arena and baseline loops diverged at {lanes} lanes — \
+                     results drift, not a perf difference"
+                ));
+            }
+            wall = wall.min(w);
+            base_wall = base_wall.min(base_w);
+            report = Some(rep);
         }
+        let report = report.expect("iters >= 1");
         let trials = report.trials.len().max(1);
-        let mis_run: usize = report.trials.iter().map(|t| t.mis_run).sum();
+        let trial_mis: Vec<usize> = report.trials.iter().map(|t| t.mis_run).collect();
+        let mis_run: usize = trial_mis.iter().sum();
         // Fluid ticks per MI at the bench scenario's defaults (1.0-s MI,
         // 0.05-s tick).
         let ticks_per_mi = (1.0 / SimConfig::default().tick_s).round();
@@ -204,6 +321,7 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
             trials,
             horizon_mis: horizon,
             mis_run,
+            trial_mis,
             wall_s_per_trial: wall / trials as f64,
             mis_per_s: mis_run as f64 / wall,
             ticks_per_s: mis_run as f64 * ticks_per_mi / wall,
@@ -235,15 +353,27 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
         MicroBench { name: "session step (1 lane)", per_op_s: step1_s, ops_per_s: 1.0 / step1_s },
         MicroBench { name: "session step (8 lanes)", per_op_s: step8_s, ops_per_s: 1.0 / step8_s },
     ];
-    Ok(BenchReport { quick: opts.quick, points, micro })
+    Ok(BenchReport { quick: opts.quick, iters, meta: BenchMeta::collect(), points, micro })
 }
 
 /// Human summary: the scale curve and microbenches.
 pub fn print(report: &BenchReport) {
     println!(
-        "\nBench — fleet churn-heavy scale curve, arena vs pre-arena baseline ({} mode, jobs 1):",
-        if report.quick { "quick" } else { "full" }
+        "\nBench — fleet churn-heavy scale curve, arena vs pre-arena baseline \
+         ({} mode, jobs 1, min of {} iter{}):",
+        if report.quick { "quick" } else { "full" },
+        report.iters,
+        if report.iters == 1 { "" } else { "s" }
     );
+    println!(
+        "  on {} ({}/{}, {} cpus, {})",
+        report.meta.host, report.meta.os, report.meta.arch, report.meta.cpus, report.meta.rustc
+    );
+    if let Some(peak) = report.points.iter().map(|p| p.mis_per_s).fold(None, |m: Option<f64>, x| {
+        Some(m.map_or(x, |m| m.max(x)))
+    }) {
+        println!("  headline: {peak:.0} MIs/s peak across the curve");
+    }
     let mut t = Table::new(&[
         "lanes",
         "trials",
@@ -281,14 +411,25 @@ pub fn print(report: &BenchReport) {
 pub fn to_json(report: &BenchReport) -> Json {
     Json::obj(vec![
         ("bench", Json::from("sparta-bench")),
-        ("schema_version", Json::from(1usize)),
-        ("pr", Json::from(5usize)),
+        ("schema_version", Json::from(2usize)),
+        ("pr", Json::from(6usize)),
         ("mode", Json::from(if report.quick { "quick" } else { "full" })),
         (
             "baseline",
             Json::from("net::baseline::BaselineSim (pre-arena loop, d6d9964), timed in-process"),
         ),
         ("measured", Json::from(true)),
+        ("iters", Json::from(report.iters)),
+        (
+            "meta",
+            Json::obj(vec![
+                ("host", Json::from(report.meta.host.clone())),
+                ("os", Json::from(report.meta.os)),
+                ("arch", Json::from(report.meta.arch)),
+                ("cpus", Json::from(report.meta.cpus)),
+                ("rustc", Json::from(report.meta.rustc)),
+            ]),
+        ),
         (
             "scale_curve",
             Json::Arr(
@@ -301,6 +442,10 @@ pub fn to_json(report: &BenchReport) -> Json {
                             ("trials", Json::from(p.trials)),
                             ("horizon_mis", Json::from(p.horizon_mis)),
                             ("mis_run", Json::from(p.mis_run)),
+                            (
+                                "trial_mis",
+                                Json::Arr(p.trial_mis.iter().map(|&m| Json::from(m)).collect()),
+                            ),
                             ("wall_s_per_trial", Json::from(p.wall_s_per_trial)),
                             ("mis_per_s", Json::from(p.mis_per_s)),
                             ("ticks_per_s", Json::from(p.ticks_per_s)),
@@ -331,4 +476,275 @@ pub fn to_json(report: &BenchReport) -> Json {
             ),
         ),
     ])
+}
+
+// ---------------------------------------------------------------------------
+// Perf-trend gate (`sparta bench --against <anchor>`)
+// ---------------------------------------------------------------------------
+
+/// One lane point compared against the anchor.
+#[derive(Debug, Clone)]
+pub struct TrendRow {
+    pub lanes: usize,
+    /// Anchor's arena/baseline wall ratio (`1 / speedup_x`) — the
+    /// machine-normalized quantity the ratchet tracks.
+    pub anchor_ratio: f64,
+    /// This run's arena/baseline wall ratio.
+    pub current_ratio: f64,
+    /// `current_ratio / anchor_ratio - 1`: positive means the arena loop
+    /// got slower relative to the in-process baseline.
+    pub delta_frac: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of [`trend_gate`].
+#[derive(Debug, Clone)]
+pub struct TrendReport {
+    /// The anchor was unmeasured (`"measured": false` or empty curve):
+    /// this run records the first real numbers instead of comparing.
+    pub seed_only: bool,
+    pub rows: Vec<TrendRow>,
+    /// Fleet sizes in this run with no counterpart in the anchor curve.
+    pub skipped: Vec<usize>,
+    pub max_regress_frac: f64,
+}
+
+impl TrendReport {
+    pub fn failed(&self) -> bool {
+        self.rows.iter().any(|r| r.regressed)
+    }
+}
+
+/// Compare a fresh run against a committed `BENCH_*.json` anchor.
+///
+/// Never compares raw wall seconds (machine-dependent); see the module
+/// docs for the ratio normalization. Unmeasured anchors — the committed
+/// schema/seed files with `"measured": false` — are seed-only: the gate
+/// passes and the fresh artifact becomes the next anchor. Reads only
+/// fields present since schema v1, so old anchors stay comparable.
+pub fn trend_gate(
+    current: &BenchReport,
+    anchor: &Json,
+    max_regress_frac: f64,
+) -> Result<TrendReport> {
+    if anchor.as_obj().is_none() {
+        return Err(anyhow!("trend gate: anchor is not a JSON object"));
+    }
+    let measured = anchor.get("measured").and_then(Json::as_bool).unwrap_or(false);
+    let empty: [Json; 0] = [];
+    let curve = anchor.get("scale_curve").and_then(Json::as_arr).unwrap_or(&empty);
+    // Anchor points with usable timings, keyed by fleet size.
+    let mut anchor_ratios: Vec<(usize, f64)> = Vec::new();
+    for p in curve {
+        let lanes = p.get("lanes").and_then(Json::as_usize);
+        let wall = p.get("wall_s_per_trial").and_then(Json::as_f64);
+        let base = p.get("baseline_wall_s_per_trial").and_then(Json::as_f64);
+        if let (Some(l), Some(w), Some(b)) = (lanes, wall, base) {
+            if w > 0.0 && b > 0.0 {
+                anchor_ratios.push((l, w / b));
+            }
+        }
+    }
+    if !measured || anchor_ratios.is_empty() {
+        return Ok(TrendReport {
+            seed_only: true,
+            rows: Vec::new(),
+            skipped: current.points.iter().map(|p| p.lanes).collect(),
+            max_regress_frac,
+        });
+    }
+    let mut rows = Vec::new();
+    let mut skipped = Vec::new();
+    for p in &current.points {
+        let anchor_ratio = anchor_ratios.iter().find(|(l, _)| *l == p.lanes).map(|(_, r)| *r);
+        let current_ratio = if p.baseline_wall_s_per_trial > 0.0 {
+            Some(p.wall_s_per_trial / p.baseline_wall_s_per_trial)
+        } else {
+            None
+        };
+        match (anchor_ratio, current_ratio) {
+            (Some(a), Some(c)) => {
+                let delta_frac = c / a - 1.0;
+                rows.push(TrendRow {
+                    lanes: p.lanes,
+                    anchor_ratio: a,
+                    current_ratio: c,
+                    delta_frac,
+                    regressed: delta_frac > max_regress_frac,
+                });
+            }
+            _ => skipped.push(p.lanes),
+        }
+    }
+    Ok(TrendReport { seed_only: false, rows, skipped, max_regress_frac })
+}
+
+/// Human summary of the trend comparison (stdout).
+pub fn trend_print(trend: &TrendReport) {
+    if trend.seed_only {
+        println!(
+            "\nPerf trend: anchor is seed-only (unmeasured) — recording this run, not comparing."
+        );
+        return;
+    }
+    println!(
+        "\nPerf trend vs anchor (arena/baseline wall ratio; fail above +{:.0}%):",
+        trend.max_regress_frac * 100.0
+    );
+    let mut t = Table::new(&["lanes", "anchor ratio", "current ratio", "delta", "verdict"]);
+    for r in &trend.rows {
+        t.row(vec![
+            r.lanes.to_string(),
+            format!("{:.4}", r.anchor_ratio),
+            format!("{:.4}", r.current_ratio),
+            format!("{:+.1}%", r.delta_frac * 100.0),
+            if r.regressed { "REGRESSED".into() } else { "ok".into() },
+        ]);
+    }
+    t.print();
+    if !trend.skipped.is_empty() {
+        let s: Vec<String> = trend.skipped.iter().map(|l| l.to_string()).collect();
+        println!("  (no anchor counterpart for {} lanes — skipped)", s.join(", "));
+    }
+}
+
+/// Markdown rendering of the per-lane delta table, for the CI job summary
+/// (`$GITHUB_STEP_SUMMARY`).
+pub fn trend_markdown(trend: &TrendReport) -> String {
+    let mut md = String::from("### Perf trend vs committed anchor\n\n");
+    if trend.seed_only {
+        md.push_str("Anchor is seed-only (unmeasured): recorded this run, nothing to compare.\n");
+        return md;
+    }
+    md.push_str(&format!(
+        "Arena/baseline wall ratio per fleet size; gate fails above +{:.0}%.\n\n",
+        trend.max_regress_frac * 100.0
+    ));
+    md.push_str("| lanes | anchor ratio | current ratio | delta | verdict |\n");
+    md.push_str("|---:|---:|---:|---:|---|\n");
+    for r in &trend.rows {
+        md.push_str(&format!(
+            "| {} | {:.4} | {:.4} | {:+.1}% | {} |\n",
+            r.lanes,
+            r.anchor_ratio,
+            r.current_ratio,
+            r.delta_frac * 100.0,
+            if r.regressed { "**REGRESSED**" } else { "ok" },
+        ));
+    }
+    if !trend.skipped.is_empty() {
+        let s: Vec<String> = trend.skipped.iter().map(|l| l.to_string()).collect();
+        md.push_str(&format!("\nNo anchor counterpart for {} lanes (skipped).\n", s.join(", ")));
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(lanes: usize, wall: f64, base: f64) -> ScalePoint {
+        ScalePoint {
+            lanes,
+            trials: 2,
+            horizon_mis: 120,
+            mis_run: 240,
+            trial_mis: vec![120, 120],
+            wall_s_per_trial: wall,
+            mis_per_s: 240.0 / wall,
+            ticks_per_s: 4800.0 / wall,
+            baseline_wall_s_per_trial: base,
+            speedup_x: base / wall,
+        }
+    }
+
+    fn rep(points: Vec<ScalePoint>) -> BenchReport {
+        BenchReport {
+            quick: true,
+            iters: 1,
+            meta: BenchMeta::collect(),
+            points,
+            micro: Vec::new(),
+        }
+    }
+
+    /// Round-trips the anchor through the real serializer + parser, so the
+    /// gate is tested against the bytes CI actually reads back.
+    fn anchor_of(points: Vec<ScalePoint>) -> Json {
+        Json::parse(&to_json(&rep(points)).to_string()).unwrap()
+    }
+
+    #[test]
+    fn trend_gate_passes_at_parity_and_below_threshold() {
+        let anchor = anchor_of(vec![point(16, 1.0, 3.0), point(64, 2.0, 7.0)]);
+        // Identical ratios, then a 10% worsening at 64 lanes: both within
+        // the 15% ratchet.
+        let current = rep(vec![point(16, 1.0, 3.0), point(64, 2.2, 7.0)]);
+        let t = trend_gate(&current, &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
+        assert!(!t.seed_only);
+        assert_eq!(t.rows.len(), 2);
+        assert!(!t.failed(), "rows: {:?}", t.rows);
+        assert!(t.rows[0].delta_frac.abs() < 1e-12);
+        assert!((t.rows[1].delta_frac - 0.10).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trend_gate_fails_past_threshold() {
+        let anchor = anchor_of(vec![point(16, 1.0, 3.0)]);
+        // 25% worse arena/baseline ratio: the synthetic slowdown CI injects.
+        let current = rep(vec![point(16, 1.25, 3.0)]);
+        let t = trend_gate(&current, &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
+        assert!(t.failed());
+        assert!(t.rows[0].regressed);
+        assert!((t.rows[0].delta_frac - 0.25).abs() < 1e-9);
+        assert!(trend_markdown(&t).contains("**REGRESSED**"));
+    }
+
+    #[test]
+    fn trend_gate_normalizes_out_machine_speed() {
+        let anchor = anchor_of(vec![point(16, 1.0, 3.0)]);
+        // A machine 4x slower across the board: ratios unchanged, no fail.
+        let current = rep(vec![point(16, 4.0, 12.0)]);
+        let t = trend_gate(&current, &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
+        assert!(!t.failed());
+        assert!(t.rows[0].delta_frac.abs() < 1e-12);
+    }
+
+    #[test]
+    fn trend_gate_treats_unmeasured_anchor_as_seed_only() {
+        // The shape of the committed schema/seed anchors: measured false,
+        // empty arrays, free-text note.
+        let anchor = Json::parse(
+            r#"{"bench":"sparta-bench","schema_version":2,"measured":false,
+                "note":"seed anchor","scale_curve":[],"micro":[]}"#,
+        )
+        .unwrap();
+        let current = rep(vec![point(16, 1.0, 3.0)]);
+        let t = trend_gate(&current, &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
+        assert!(t.seed_only);
+        assert!(!t.failed());
+        assert!(t.rows.is_empty());
+        assert!(trend_markdown(&t).contains("seed-only"));
+        // A measured flag with an empty curve is equally seed-only: there
+        // is nothing to compare against.
+        let hollow =
+            Json::parse(r#"{"measured":true,"scale_curve":[]}"#).unwrap();
+        assert!(trend_gate(&current, &hollow, TREND_MAX_REGRESS_FRAC).unwrap().seed_only);
+    }
+
+    #[test]
+    fn trend_gate_skips_lanes_missing_from_anchor() {
+        let anchor = anchor_of(vec![point(16, 1.0, 3.0)]);
+        let current = rep(vec![point(16, 1.0, 3.0), point(64, 2.0, 7.0)]);
+        let t = trend_gate(&current, &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.skipped, vec![64]);
+        assert!(!t.failed());
+    }
+
+    #[test]
+    fn trend_gate_rejects_non_object_anchor() {
+        let current = rep(vec![point(16, 1.0, 3.0)]);
+        assert!(trend_gate(&current, &Json::Arr(vec![]), TREND_MAX_REGRESS_FRAC).is_err());
+    }
 }

@@ -103,9 +103,11 @@ pub struct FleetTrial {
     pub pauses: usize,
     pub yields_refused: usize,
     /// Monitoring intervals actually stepped (≤ horizon; the trial ends
-    /// early once every lane finished). Deliberately **not** serialized in
-    /// [`to_json`] — `sparta bench` reads it to convert wall time into
-    /// MIs/s without perturbing the byte-compared report format.
+    /// early once every lane finished). Serialized in [`to_json`] since
+    /// BENCH schema v2 so `sparta bench` and the CI perf-trend gate can
+    /// report MIs/s per trial without re-deriving it. Deterministic
+    /// (identical across loops and `--jobs` counts), so the byte-compare
+    /// gates are unaffected.
     pub mis_run: usize,
     /// Host-truth per-rail energy breakdown (both hosts combined).
     pub rails: Option<RailEnergy>,
@@ -576,6 +578,7 @@ pub fn to_json(report: &FleetReport) -> Json {
                             ("completion_s", Json::arr_f64(&t.completion_s)),
                             ("pauses", Json::from(t.pauses)),
                             ("yields_refused", Json::from(t.yields_refused)),
+                            ("mis_run", Json::from(t.mis_run)),
                         ];
                         if let Some(r) = &t.rails {
                             o.push((

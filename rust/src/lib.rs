@@ -165,14 +165,16 @@
 //! ```
 //!
 //! Perf trajectory — time the fleet churn-heavy scale curve on the arena
-//! loop and the frozen pre-arena baseline, and write `BENCH_5.json`
-//! (`sparta bench --quick` on the CLI):
+//! loop and the frozen pre-arena baseline, and write `BENCH_6.json`
+//! (`sparta bench --quick` on the CLI; add `--against BENCH_6.json` for
+//! the CI perf-trend ratchet):
 //!
 //! ```no_run
 //! use sparta::config::Paths;
 //! use sparta::experiments::bench;
 //!
-//! let report = bench::run(&Paths::resolve(), bench::BenchOpts { quick: true }).unwrap();
+//! let opts = bench::BenchOpts { quick: true, ..Default::default() };
+//! let report = bench::run(&Paths::resolve(), opts).unwrap();
 //! bench::print(&report); // s/trial, MIs/s and speedup per lane count
 //! ```
 

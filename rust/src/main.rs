@@ -418,14 +418,53 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("bench") => {
             // Perf trajectory: fleet churn-heavy scale curve + hot-path
-            // microbenches, emitted as BENCH_5.json (schema in
-            // `experiments::bench`). `--quick` is the CI lane.
-            let opts = experiments::bench::BenchOpts { quick: args.flag("quick") };
+            // microbenches, emitted as BENCH_6.json (schema v2 in
+            // `experiments::bench`). `--quick` is the CI lane; `--against`
+            // turns the run into the perf-trend ratchet.
+            let lanes = match args.get("lanes") {
+                None => None,
+                Some(s) => {
+                    let parsed: Result<Vec<usize>, _> =
+                        s.split(',').map(|x| x.trim().parse::<usize>()).collect();
+                    Some(parsed.map_err(|_| {
+                        anyhow!("--lanes: expected comma-separated fleet sizes, got '{s}'")
+                    })?)
+                }
+            };
+            let opts = experiments::bench::BenchOpts {
+                quick: args.flag("quick"),
+                iters: args.get_usize("iters", 1).map_err(|e| anyhow!(e))?,
+                inject_slowdown: args.get_f64("inject-slowdown", 0.0).map_err(|e| anyhow!(e))?,
+                lanes,
+            };
             let report = experiments::bench::run(&Paths::resolve(), opts)?;
             experiments::bench::print(&report);
-            let out = args.get_or("out", "BENCH_5.json");
+            let out = args.get_or("out", "BENCH_6.json");
             save_report(Path::new(out), &experiments::bench::to_json(&report))?;
             println!("bench report written to {out}");
+            if let Some(anchor_path) = args.get("against") {
+                let text = std::fs::read_to_string(anchor_path)
+                    .map_err(|e| anyhow!("--against {anchor_path}: {e}"))?;
+                let anchor = Json::parse(&text)
+                    .map_err(|e| anyhow!("--against {anchor_path}: {e}"))?;
+                let trend = experiments::bench::trend_gate(
+                    &report,
+                    &anchor,
+                    experiments::bench::TREND_MAX_REGRESS_FRAC,
+                )?;
+                experiments::bench::trend_print(&trend);
+                if let Some(md_path) = args.get("summary") {
+                    std::fs::write(md_path, experiments::bench::trend_markdown(&trend))
+                        .map_err(|e| anyhow!("--summary {md_path}: {e}"))?;
+                }
+                if trend.failed() {
+                    return Err(anyhow!(
+                        "perf-trend gate: arena/baseline ratio regressed more than {:.0}% \
+                         vs {anchor_path}",
+                        experiments::bench::TREND_MAX_REGRESS_FRAC * 100.0
+                    ));
+                }
+            }
             Ok(())
         }
         Some("fleet") => {
@@ -573,10 +612,24 @@ subcommands:
   bench     [--quick] [--out FILE]        perf trajectory: fleet churn-heavy
                                            at 16/64/256 lanes + simulator-MI
                                            and Session-step microbenches,
-                                           written as BENCH_5.json (the CI
-                                           bench lane uploads it; speedups
-                                           are vs the recorded pre-arena
-                                           baseline)
+                                           written as BENCH_6.json, schema v2
+                                           (the CI bench lane uploads it;
+                                           speedups are vs the recorded
+                                           pre-arena baseline)
+            [--iters N]                    (stable mode: keep the min wall of
+                                           N timing repetitions per point)
+            [--lanes L1,L2,...]            (restrict the curve to these
+                                           fleet sizes)
+            [--against FILE]               (perf-trend ratchet: compare the
+                                           arena/baseline ratio per lane vs
+                                           the committed anchor, fail >15%
+                                           regression; unmeasured anchors
+                                           are seed-only)
+            [--summary FILE]               (write the trend delta table as
+                                           markdown, for CI job summaries)
+            [--inject-slowdown F]          (test flag: sleep F x each arena
+                                           timing so CI can prove the gate
+                                           trips on a synthetic slowdown)
   sweep     --testbed T|--scenario S|--scenario all   Fig 1 (cc,p) sweep
   algos     --reward fe|te                 Fig 4   DRL algorithm comparison
   tune                                     Fig 5   online tuning on CloudLab

@@ -49,6 +49,32 @@
 //!   per-flow RTT noise). `tests/golden_replay.rs` enforces this
 //!   byte-for-byte on whole sessions; do not reorder arithmetic here
 //!   without updating the baseline contract.
+//! * The tick is **batched**: per-active-slot work runs as contiguous
+//!   slice passes over the arena's parallel state vectors rather than
+//!   per-slot method calls. Phase 1 is a per-row vectorizable rate pass
+//!   ([`StreamArena::rates_into`]); phase 3 splits the old interleaved
+//!   per-slot loop into (a) one batched RNG draw
+//!   ([`crate::util::Rng::fill_f64`]) plus a loss-probability pass that
+//!   pre-gathers the slots to cut, (b) a loss-cut pass over that mask
+//!   only, and (c) a per-row growth pass ([`StreamArena::grow_row`]).
+//!   This reordering is bit-exact because slots are independent, growth
+//!   consumes no randomness, per-slot cut-before-grow order is kept, and
+//!   the tick-constant `drop_frac > 0` branch hoists without changing
+//!   which streams draw: the batched fill consumes the generator exactly
+//!   as the per-stream `chance()` calls did.
+//! * **Adding a new tick phase**: keep reductions in flow-major scratch
+//!   order with left-to-right accumulation, draw any randomness as one
+//!   `fill_f64` over the active total (stream order), and mutate arena
+//!   state only through row passes that preserve the scalar op order —
+//!   then extend `arena_matches_baseline_sim_bit_for_bit` (and the
+//!   baseline, if the physics changed) before trusting golden replay.
+//! * The only sanctioned departure from bit-identity is
+//!   [`SimConfig::reassociate_sums`] (default **off**): the per-flow
+//!   offered/delivered reductions switch to a chunked four-accumulator
+//!   sum and the sent/lost totals are factored through the flow rate sum,
+//!   letting LLVM vectorize the reductions at the cost of float
+//!   re-association. That path is excluded from golden replay and is
+//!   instead tolerance-bounded by `reassociated_sums_stay_within_tolerance`.
 
 use super::background::{Background, BackgroundState};
 use super::link::Link;
@@ -77,12 +103,57 @@ pub struct SimConfig {
     /// `max_p` after flows were added does not widen their existing rows.
     pub max_cc: u32,
     pub max_p: u32,
+    /// Opt out of the §Perf bit-identity contract for the tick's
+    /// reduction sums (default **off**). When set, per-flow rate
+    /// reductions use a chunked four-accumulator sum and the per-tick
+    /// sent/lost/delivered totals are factored through the flow rate sum
+    /// — re-associated float arithmetic LLVM can vectorize. Results then
+    /// differ from [`super::baseline::BaselineSim`] only by reduction
+    /// rounding (bounded by `reassociated_sums_stay_within_tolerance`);
+    /// everything outside these sums keeps the exact scalar op order.
+    pub reassociate_sums: bool,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { tick_s: 0.05, rtt_noise_s: 0.0004, max_cc: 32, max_p: 32 }
+        SimConfig {
+            tick_s: 0.05,
+            rtt_noise_s: 0.0004,
+            max_cc: 32,
+            max_p: 32,
+            reassociate_sums: false,
+        }
     }
+}
+
+/// Left-to-right reduction — the §Perf default, matching the baseline
+/// loop's accumulation order bit-for-bit.
+#[inline]
+fn sum_ordered(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Chunked four-accumulator reduction: re-associates the adds so the
+/// loop vectorizes. Reachable only behind [`SimConfig::reassociate_sums`].
+#[inline]
+fn sum_reassociated(xs: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut chunks = xs.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] += c[0];
+        acc[1] += c[1];
+        acc[2] += c[2];
+        acc[3] += c[3];
+    }
+    let mut tail = 0.0;
+    for &x in chunks.remainder() {
+        tail += x;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
 }
 
 /// One file-task's contiguous slot row in the stream arena.
@@ -208,6 +279,12 @@ pub struct NetworkSim {
     /// (flow-major, task-major, stream-major) — §Perf: the tick loop is
     /// allocation-free at steady state.
     scratch: Vec<f64>,
+    /// Reusable per-tick batched loss draws, aligned with `scratch`
+    /// (one uniform per active stream whenever the path dropped).
+    loss_u: Vec<f64>,
+    /// Reusable pre-gathered loss mask: arena slots whose loss-event draw
+    /// fired this tick, cut in a separate batched phase.
+    cut_slots: Vec<usize>,
 }
 
 impl NetworkSim {
@@ -250,6 +327,8 @@ impl NetworkSim {
             rng: Rng::new(seed),
             testbed,
             scratch: Vec::new(),
+            loss_u: Vec::new(),
+            cut_slots: Vec::new(),
         }
     }
 
@@ -326,46 +405,54 @@ impl NetworkSim {
     }
 
     /// Advance one tick of the fluid model. §Perf: walks active slots
-    /// only; bit-identical to [`super::baseline::BaselineSim`]'s tick.
+    /// only, as batched slice passes (see the module docs); bit-identical
+    /// to [`super::baseline::BaselineSim`]'s tick unless
+    /// [`SimConfig::reassociate_sums`] is set.
     fn tick(&mut self) {
         let NetworkSim {
-            cfg, segments, flows, arena, active_total, time_s, rng, scratch, ..
+            cfg, segments, flows, arena, active_total, time_s, rng, scratch, loss_u, cut_slots, ..
         } = self;
         let dt = cfg.tick_s;
+        let reassoc = cfg.reassociate_sums;
         let rtt: f64 = segments.iter().map(|s| s.link.rtt_s()).sum();
 
-        // Phase 1: compute each active stream's desired rate into the
-        // reusable flat scratch (flow-major, task-major, stream-major).
-        // Inactive slots contributed exact `+ 0.0` terms in the old loop,
-        // so skipping them entirely preserves every sum bit-for-bit.
+        // Phase 1: batched per-row rate passes into the reusable flat
+        // scratch (flow-major, task-major, stream-major), then one
+        // reduction per flow. Inactive slots contributed exact `+ 0.0`
+        // terms in the old loop, so skipping them entirely preserves
+        // every sum bit-for-bit; the ordered reduction repeats the old
+        // interleaved accumulation order exactly.
         scratch.clear();
-        scratch.reserve(*active_total);
+        scratch.resize(*active_total, 0.0);
         let mut offered_total = 0.0;
+        let mut idx = 0usize;
         for flow in flows.iter() {
-            let flow_start = scratch.len();
-            let mut per_flow = 0.0;
+            let flow_start = idx;
             let io_share = flow.task_io_gbps / flow.p_active as f64;
             for task in &flow.tasks[..flow.cc_active] {
-                for j in 0..flow.p_active {
-                    let r = arena
-                        .cwnd_rate_gbps(task.base + j, rtt)
-                        .min(flow.stream_cap_gbps)
-                        .min(io_share);
-                    scratch.push(r);
-                    per_flow += r;
-                }
+                arena.rates_into(
+                    task.base,
+                    rtt,
+                    flow.stream_cap_gbps,
+                    io_share,
+                    &mut scratch[idx..idx + flow.p_active],
+                );
+                idx += flow.p_active;
             }
+            let flow_rates = &mut scratch[flow_start..idx];
+            let mut per_flow =
+                if reassoc { sum_reassociated(flow_rates) } else { sum_ordered(flow_rates) };
             // Demand cap: scale all stream rates down proportionally.
             if per_flow > flow.demand_cap_gbps {
                 let scale = flow.demand_cap_gbps / per_flow;
-                for r in &mut scratch[flow_start..] {
+                for r in flow_rates.iter_mut() {
                     *r *= scale;
                 }
                 per_flow = flow.demand_cap_gbps;
             }
             offered_total += per_flow;
         }
-        debug_assert_eq!(scratch.len(), *active_total);
+        debug_assert_eq!(idx, *active_total);
 
         // Phase 2: carry the aggregate through every path stage in order.
         // Each stage's drops thin the foreground before the next stage sees
@@ -391,45 +478,83 @@ impl NetworkSim {
         let drop_frac = fg_drop.clamp(0.0, 1.0);
         let rtt_after: f64 = segments.iter().map(|s| s.link.rtt_s()).sum();
 
-        // Phase 3: deliver, account, and evolve windows (same scratch walk
-        // order as phase 1, same per-active-stream RNG draw order as the
-        // baseline loop).
+        // Phase 3a: loss events, batched. `drop_frac` is tick-constant,
+        // so the old per-stream `if drop_frac > 0.0` branch hoists; one
+        // `fill_f64` call pre-draws the per-active-stream uniforms in
+        // the exact sequence the old per-stream `chance()` calls
+        // consumed (the loss-event probability is that at least one of
+        // the stream's packets this tick was dropped). The slots whose
+        // draw fired become the pre-gathered loss mask.
+        cut_slots.clear();
+        if drop_frac > 0.0 && *active_total > 0 {
+            loss_u.clear();
+            loss_u.resize(*active_total, 0.0);
+            rng.fill_f64(loss_u);
+            let mut idx = 0usize;
+            for flow in flows.iter() {
+                for task in &flow.tasks[..flow.cc_active] {
+                    for j in 0..flow.p_active {
+                        let sent_bits = scratch[idx] * 1e9 * dt;
+                        let pkts = sent_bits / MSS_BITS;
+                        let p_event = 1.0 - (1.0 - drop_frac).powf(pkts.max(0.0));
+                        if loss_u[idx] < p_event {
+                            cut_slots.push(task.base + j);
+                        }
+                        idx += 1;
+                    }
+                }
+            }
+        }
+        // Phase 3b: cut exactly the masked slots (rare at steady state;
+        // everything else never touches the cut fields this tick).
+        for &slot in cut_slots.iter() {
+            arena.on_loss(slot, rtt_after);
+        }
+        // Phase 3c: batched per-row growth over post-cut state, then one
+        // accounting reduction per flow (same scratch walk order as
+        // phase 1). Slots are independent and growth draws no
+        // randomness, so running all cuts before all growth preserves
+        // the old per-slot cut-then-grow order bit-for-bit.
         let mut idx = 0usize;
         for flow in flows.iter_mut() {
-            let mut delivered = 0.0;
-            let mut sent = 0.0;
-            let mut lost = 0.0;
             let io_share = flow.task_io_gbps / flow.p_active as f64;
             let caps = flow.stream_cap_gbps.min(io_share);
+            let flow_start = idx;
             for task in &flow.tasks[..flow.cc_active] {
-                for j in 0..flow.p_active {
-                    let slot = task.base + j;
-                    let rate = scratch[idx];
-                    idx += 1;
+                arena.grow_row(
+                    task.base,
+                    &scratch[idx..idx + flow.p_active],
+                    dt,
+                    rtt_after,
+                    caps,
+                );
+                idx += flow.p_active;
+            }
+            let flow_rates = &scratch[flow_start..idx];
+            if reassoc {
+                // Factored through the flow rate sum (re-associated and
+                // distributed): Σ rate·1e9·dt ≡ (Σ rate)·1e9·dt up to
+                // rounding.
+                let sent = sum_reassociated(flow_rates) * 1e9 * dt;
+                let lost = sent * drop_frac;
+                flow.acc_delivered_bits += sent - lost;
+                flow.acc_sent_bits += sent;
+                flow.acc_lost_bits += lost;
+            } else {
+                let mut delivered = 0.0;
+                let mut sent = 0.0;
+                let mut lost = 0.0;
+                for &rate in flow_rates {
                     let sent_bits = rate * 1e9 * dt;
                     let lost_bits = sent_bits * drop_frac;
                     delivered += sent_bits - lost_bits;
                     sent += sent_bits;
                     lost += lost_bits;
-
-                    // Loss events: probability that at least one of this
-                    // stream's packets this tick was dropped.
-                    if drop_frac > 0.0 {
-                        let pkts = sent_bits / MSS_BITS;
-                        let p_event = 1.0 - (1.0 - drop_frac).powf(pkts.max(0.0));
-                        if rng.chance(p_event) {
-                            arena.on_loss(slot, rtt_after);
-                        }
-                    }
-                    // Growth: app-limited if a cap (not cwnd) was binding.
-                    let cwnd_rate = arena.cwnd_rate_gbps(slot, rtt_after);
-                    let app_limited = rate + 1e-12 < cwnd_rate || cwnd_rate >= caps;
-                    arena.grow(slot, dt, rtt_after, app_limited);
                 }
+                flow.acc_delivered_bits += delivered;
+                flow.acc_sent_bits += sent;
+                flow.acc_lost_bits += lost;
             }
-            flow.acc_delivered_bits += delivered;
-            flow.acc_sent_bits += sent;
-            flow.acc_lost_bits += lost;
             flow.acc_rtt_sum += rtt_after;
             flow.acc_rtt_n += 1;
         }
@@ -741,6 +866,60 @@ mod tests {
                 Substrate::active_streams(&base, b0),
                 "step {step}: cached active count diverged"
             );
+        }
+    }
+
+    /// The sanctioned bit-identity opt-out: with
+    /// `cfg.reassociate_sums = true` the tick's reductions re-associate
+    /// (chunked sums, factored sent/lost totals), so metrics may differ
+    /// from the default path — but only by reduction rounding. Documented
+    /// tolerance bound: ≤ 1e-9 relative on every per-MI metric across a
+    /// churning multi-flow script (observed ~1e-12; the bound leaves
+    /// headroom for feedback through the cwnd evolution). Exact-integer
+    /// fields stay exact. RNG draw counts are unchanged, so the two paths
+    /// stay in generator lockstep.
+    #[test]
+    fn reassociated_sums_stay_within_tolerance() {
+        let tb = Testbed::chameleon();
+        let topo = crate::net::Topology::three_stage(&tb, 8.0, 6.0);
+        let bursty = || Background::Bursty { low_gbps: 0.5, high_gbps: 5.0, switch_prob: 0.2 };
+        let build = |reassoc: bool| {
+            let mut s =
+                NetworkSim::from_topology(tb.clone(), &topo, 23).with_background(bursty());
+            s.cfg.reassociate_sums = reassoc;
+            s.add_flow(4, 4, None);
+            s.add_flow(2, 8, Some(2.0));
+            s
+        };
+        let mut exact = build(false);
+        let mut reassoc = build(true);
+        let a0 = FlowId(0);
+        let a1 = FlowId(1);
+        let script: &[(u32, u32)] = &[(8, 8), (2, 2), (16, 4), (1, 16), (6, 6), (16, 16), (3, 3)];
+        let close = |a: f64, b: f64, what: &str, step: usize| {
+            let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+            assert!(
+                (a - b).abs() <= tol,
+                "step {step}: {what} diverged beyond tolerance: {a} vs {b}"
+            );
+        };
+        for (step, &(cc, p)) in script.iter().enumerate() {
+            let ma = exact.run_mi(1.0);
+            let mb = reassoc.run_mi(1.0);
+            assert_eq!(ma.len(), mb.len());
+            for (x, y) in ma.iter().zip(mb.iter()) {
+                close(x.throughput_gbps, y.throughput_gbps, "throughput", step);
+                close(x.plr, y.plr, "plr", step);
+                close(x.rtt_s, y.rtt_s, "rtt", step);
+                close(x.bytes_delivered, y.bytes_delivered, "bytes", step);
+                assert_eq!(x.active_streams, y.active_streams, "step {step}: streams diverged");
+                assert_eq!(x.duration_s.to_bits(), y.duration_s.to_bits());
+            }
+            exact.set_cc_p(a0, cc, p);
+            reassoc.set_cc_p(a0, cc, p);
+            let cap = if step % 3 == 0 { 0.0 } else { 1.5 + step as f64 };
+            exact.set_demand_cap(a1, cap);
+            reassoc.set_demand_cap(a1, cap);
         }
     }
 

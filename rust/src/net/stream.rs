@@ -147,6 +147,15 @@ impl CubicStream {
 /// [`StreamArena::grow`] and [`StreamArena::on_loss`] on **active** slots;
 /// unlike [`CubicStream`], the per-op `active` short-circuits are hoisted
 /// into the caller's loop bounds (§Perf).
+///
+/// The batched row methods ([`StreamArena::rates_into`],
+/// [`StreamArena::grow_row`]) process one task row's contiguous active
+/// prefix as slice passes instead of per-slot calls: bounds checks are
+/// paid once per row, the unconditional `since_cut` bump becomes a
+/// straight-line vectorizable loop, and per-slot arithmetic keeps the
+/// exact op order of the scalar methods — the
+/// `batched_row_ops_match_per_slot_ops_bit_for_bit` test locks the two
+/// forms together.
 #[derive(Debug, Clone, Default)]
 pub struct StreamArena {
     cwnd: Vec<f64>,
@@ -262,6 +271,82 @@ impl StreamArena {
         self.epoch_t[i] = 0.0;
         self.since_cut[i] = 0.0;
         true
+    }
+
+    /// Batched rate pass over one task row's active prefix: writes the
+    /// capped offered rate of slots `base..base + out.len()` into `out`.
+    /// Per slot this is exactly
+    /// `cwnd_rate_gbps(slot, rtt_s).min(stream_cap_gbps).min(io_share_gbps)`
+    /// — same op order, bit-identical — but as one contiguous slice pass
+    /// (mul + two divs + two mins per element, no per-call bounds checks)
+    /// that LLVM can auto-vectorize.
+    #[inline]
+    pub fn rates_into(
+        &self,
+        base: usize,
+        rtt_s: f64,
+        stream_cap_gbps: f64,
+        io_share_gbps: f64,
+        out: &mut [f64],
+    ) {
+        let cwnd = &self.cwnd[base..base + out.len()];
+        for (r, &w) in out.iter_mut().zip(cwnd) {
+            *r = (w * MSS_BITS / rtt_s / 1e9).min(stream_cap_gbps).min(io_share_gbps);
+        }
+    }
+
+    /// Batched growth pass over one task row's active prefix (slots
+    /// `base..base + rates.len()`, where `rates` are the post-rescale
+    /// offered rates from the tick's phase-1 scratch).
+    ///
+    /// Two sub-passes, preserving [`StreamArena::grow`]'s per-slot
+    /// arithmetic bit-for-bit:
+    ///
+    /// 1. the unconditional `since_cut += dt` cut-timer bump, hoisted out
+    ///    of the app-limited branch into a straight-line vectorizable
+    ///    loop over the row;
+    /// 2. window growth where the window (not a cap) was binding — the
+    ///    app-limited test `rate + 1e-12 < cwnd_rate || cwnd_rate >= caps`
+    ///    is computed here from the row's cwnd slice, exactly as the
+    ///    scalar tick derived it per slot after the loss cut.
+    ///
+    /// Must be called **after** this tick's loss cuts for the row (growth
+    /// reads post-cut state, matching the scalar per-slot order).
+    #[inline]
+    pub fn grow_row(&mut self, base: usize, rates: &[f64], dt: f64, rtt_s: f64, caps_gbps: f64) {
+        let end = base + rates.len();
+        for t in &mut self.since_cut[base..end] {
+            *t += dt;
+        }
+        let cwnd = &mut self.cwnd[base..end];
+        let w_max = &mut self.w_max[base..end];
+        let ssthresh = &mut self.ssthresh[base..end];
+        let epoch_t = &mut self.epoch_t[base..end];
+        let slow = &mut self.in_slow_start[base..end];
+        for (j, &rate) in rates.iter().enumerate() {
+            let cwnd_rate = cwnd[j] * MSS_BITS / rtt_s / 1e9;
+            let app_limited = rate + 1e-12 < cwnd_rate || cwnd_rate >= caps_gbps;
+            if app_limited {
+                continue;
+            }
+            epoch_t[j] += dt;
+            if slow[j] {
+                cwnd[j] += cwnd[j] * dt / rtt_s;
+                if cwnd[j] >= ssthresh[j] {
+                    slow[j] = false;
+                    w_max[j] = cwnd[j];
+                    epoch_t[j] = 0.0;
+                }
+                continue;
+            }
+            let k = (w_max[j] * (1.0 - CUBIC_BETA) / CUBIC_C).cbrt();
+            let target = CUBIC_C * (epoch_t[j] - k).powi(3) + w_max[j];
+            let aimd_floor = cwnd[j] + dt / rtt_s;
+            if target > cwnd[j] {
+                cwnd[j] += ((target - cwnd[j]) * dt / rtt_s).max(0.0);
+            }
+            cwnd[j] = cwnd[j].max(aimd_floor.min(target.max(aimd_floor)));
+        }
     }
 }
 
@@ -410,6 +495,81 @@ mod tests {
                     aos.cwnd_rate_gbps(RTT).to_bits(),
                     soa.cwnd_rate_gbps(i, RTT).to_bits(),
                     "rate diverged at step {step}"
+                );
+            }
+        }
+    }
+
+    /// The batched row passes (`rates_into`, `grow_row`) and the scalar
+    /// per-slot path (`cwnd_rate_gbps` + caps, `on_loss`, `grow` with the
+    /// tick's app-limited derivation) evolve a seeded row bit-for-bit
+    /// identically through randomized rescales, loss masks and RTT drift —
+    /// the associative-safe half of the batching contract (§Perf in
+    /// `net/sim.rs`).
+    #[test]
+    fn batched_row_ops_match_per_slot_ops_bit_for_bit() {
+        const N: usize = 7; // odd width: no lane-multiple luck
+        let mut scalar = StreamArena::new();
+        let mut batched = StreamArena::new();
+        assert_eq!(scalar.push_fresh(N), 0);
+        assert_eq!(batched.push_fresh(N), 0);
+        let (cap_stream, cap_io) = (1.0, 0.6);
+        let caps = f64::min(cap_stream, cap_io);
+        let mut state = 0x243F6A8885A308D3u64;
+        let mut next = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut rates_s = [0.0f64; N];
+        let mut rates_b = [0.0f64; N];
+        for step in 0..3_000 {
+            let rtt = RTT * (1.0 + (next() % 64) as f64 / 256.0);
+            for (j, r) in rates_s.iter_mut().enumerate() {
+                *r = scalar.cwnd_rate_gbps(j, rtt).min(cap_stream).min(cap_io);
+            }
+            batched.rates_into(0, rtt, cap_stream, cap_io, &mut rates_b);
+            for j in 0..N {
+                assert_eq!(
+                    rates_s[j].to_bits(),
+                    rates_b[j].to_bits(),
+                    "rate diverged at step {step} slot {j}"
+                );
+            }
+            // Occasionally rescale (the demand-cap path) so growth sees
+            // app-limited slots.
+            if next() % 3 == 0 {
+                let scale = (next() % 1000) as f64 / 1000.0;
+                for j in 0..N {
+                    rates_s[j] *= scale;
+                    rates_b[j] *= scale;
+                }
+            }
+            // Random pre-gathered loss mask, applied per slot on both.
+            for j in 0..N {
+                if next() % 11 == 0 {
+                    assert_eq!(
+                        scalar.on_loss(j, rtt),
+                        batched.on_loss(j, rtt),
+                        "loss outcome diverged at step {step} slot {j}"
+                    );
+                }
+            }
+            // Scalar growth exactly as the pre-batch tick derived it.
+            for j in 0..N {
+                let cwnd_rate = scalar.cwnd_rate_gbps(j, rtt);
+                let app_limited = rates_s[j] + 1e-12 < cwnd_rate || cwnd_rate >= caps;
+                scalar.grow(j, DT, rtt, app_limited);
+            }
+            batched.grow_row(0, &rates_b, DT, rtt, caps);
+            for j in 0..N {
+                assert_eq!(
+                    scalar.cwnd(j).to_bits(),
+                    batched.cwnd(j).to_bits(),
+                    "cwnd diverged at step {step} slot {j}: {} vs {}",
+                    scalar.cwnd(j),
+                    batched.cwnd(j)
                 );
             }
         }
