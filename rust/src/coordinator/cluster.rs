@@ -1,0 +1,365 @@
+//! Cluster-scale fleets: many per-host [`Session`]s behind one stepping
+//! surface.
+//!
+//! A [`Cluster`] shards transfer lanes across N sender-host sessions —
+//! each host with its own substrate ([`crate::net::stream::StreamArena`]),
+//! its own [`crate::energy::HostLedger`] pair and rail calibration — and
+//! presents the same admit/step/control API as a single [`Session`]
+//! (formally: both implement [`super::Stepping`], so `sparta fleet` drives
+//! either without caring about scale).
+//!
+//! ## Incast model
+//!
+//! The hosts of an incast fleet (N senders → one receiver) share the WAN
+//! and the receiver-ingest stage. Each host session simulates its *static
+//! fair share* of those stages ([`Topology::incast_host`]: capacity, queue
+//! and cross traffic all divided by N; the sender NIC stays private and
+//! full-rate), so host simulations are fully independent. That
+//! independence is what makes cluster runs exactly reproducible: there is
+//! no cross-host event ordering to race on, and every host seed is
+//! identity-derived from `(cluster seed, host index)` — runner-style — so
+//! a fleet report is bit-identical at any `--jobs` count, which CI
+//! enforces byte-for-byte on `sparta fleet --hosts 4`.
+//!
+//! ## Energy
+//!
+//! Each host session bills a private sender host (`<testbed>-tx<h>`) plus
+//! a `1/N` slice of the single physical receiver
+//! ([`crate::energy::HostSpec::share`]): residency rails (fixed power, NIC
+//! LPI idle) divide by N while traffic-proportional rails ride with the
+//! host's own lanes, so summing attribution over every host session pays
+//! the receiver exactly once. Per-session conservation (Σ lane attribution
+//! == ledger truth) therefore composes into the cluster invariant
+//! Σ lanes == Σ per-host totals == [`Cluster::host_energy_j`], asserted
+//! per trial by `sparta fleet` and under churn by `tests/energy_ledger.rs`.
+//!
+//! ## Stepping and lane identity
+//!
+//! [`Cluster::admit`] places lanes round-robin across hosts and returns
+//! *global* [`LaneId`]s (admission order, same contract as a session).
+//! [`Cluster::step_into`] advances every host by one MI in host order —
+//! sessions run in lockstep, so `time_s`/`mi` agree everywhere — and
+//! merges the per-host event streams into the caller's buffer with lane
+//! ids rewritten to global. Record state buffers recycle back to their
+//! owning host's pool ([`Session::recycle_record`]), keeping cluster
+//! stepping allocation-free at steady state (§Perf in [`super::session`]).
+
+use super::session::{Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session};
+use crate::energy::RailEnergy;
+use crate::net::{Testbed, Topology};
+use crate::util::rng::mix_seed;
+
+/// Receiver-ingest provisioning of [`Cluster::incast`] relative to WAN
+/// capacity: below 1.0 the receiver, not the WAN, is the incast
+/// bottleneck.
+pub const INCAST_RX_OVER_WAN: f64 = 0.8;
+
+/// N per-host [`Session`]s behind one [`super::Stepping`] surface (see the
+/// module docs).
+pub struct Cluster {
+    hosts: Vec<Session>,
+    /// Global lane id → (host index, host-local lane id).
+    locus: Vec<(usize, LaneId)>,
+    /// Per host: host-local lane index → global lane id.
+    global_of: Vec<Vec<usize>>,
+    /// Round-robin admission cursor.
+    next_host: usize,
+    /// Cluster MIs stepped (hosts run in lockstep).
+    mi: usize,
+    /// Reusable per-host event staging buffer (§Perf).
+    scratch: Vec<Event>,
+}
+
+impl Cluster {
+    /// Build an `n`-host cluster from a per-host session factory. Host `h`
+    /// is handed the identity-derived seed `mix_seed(seed, "cluster/host",
+    /// h)` — the factory must use it (not the raw cluster seed) so fleet
+    /// results depend only on configuration, never on sharding.
+    pub fn build(n: usize, seed: u64, mut host: impl FnMut(usize, u64) -> Session) -> Cluster {
+        assert!(n > 0, "a cluster needs at least one host");
+        let hosts: Vec<Session> =
+            (0..n).map(|h| host(h, mix_seed(seed, "cluster/host", h as u64))).collect();
+        Cluster {
+            global_of: vec![Vec::new(); hosts.len()],
+            hosts,
+            locus: Vec::new(),
+            next_host: 0,
+            mi: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// The default incast fleet over a testbed: every sender host runs a
+    /// private NIC into its fair share of the testbed WAN and of a
+    /// receiver provisioned at [`INCAST_RX_OVER_WAN`] × WAN capacity
+    /// (receiver-limited), with host-resolved energy accounting
+    /// ([`Testbed::energy_hosts_of`]).
+    pub fn incast(tb: &Testbed, n: usize, seed: u64) -> Cluster {
+        Cluster::build(n, seed, |h, host_seed| {
+            Session::builder(tb.clone())
+                .topology(Topology::incast_host(tb, n, INCAST_RX_OVER_WAN))
+                .energy(tb.energy_hosts_of(h, n))
+                .seed(host_seed)
+                .build()
+        })
+    }
+
+    /// Admit a lane on the next host round-robin; returns its *global*
+    /// lane id (admission order across the whole cluster).
+    pub fn admit(&mut self, spec: LaneSpec) -> LaneId {
+        let h = self.next_host;
+        self.next_host = (self.next_host + 1) % self.hosts.len();
+        let local = self.hosts[h].admit(spec);
+        let global = LaneId(self.locus.len());
+        self.locus.push((h, local));
+        debug_assert_eq!(self.global_of[h].len(), local.0);
+        self.global_of[h].push(global.0);
+        global
+    }
+
+    /// Advance every host session by one monitoring interval (host order),
+    /// merging their event streams — lane ids rewritten to global — into
+    /// the caller-reused `events` buffer. The previous batch's record
+    /// buffers are first routed back to their owning hosts' pools.
+    pub fn step_into(&mut self, events: &mut Vec<Event>) {
+        for ev in events.drain(..) {
+            if let Event::MiCompleted { lane, record } = ev {
+                let (h, _) = self.locus[lane.0];
+                self.hosts[h].recycle_record(record);
+            }
+        }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for h in 0..self.hosts.len() {
+            self.hosts[h].step_into(&mut scratch);
+            for mut ev in scratch.drain(..) {
+                self.globalize(h, &mut ev);
+                events.push(ev);
+            }
+        }
+        self.scratch = scratch;
+        self.mi += 1;
+    }
+
+    /// Rewrite a host-local event to cluster-global lane identity.
+    fn globalize(&self, host: usize, ev: &mut Event) {
+        match ev {
+            Event::Admitted { lane, .. }
+            | Event::MiCompleted { lane, .. }
+            | Event::Paused { lane, .. }
+            | Event::Resumed { lane, .. }
+            | Event::Completed { lane, .. }
+            | Event::Departed { lane, .. } => *lane = LaneId(self.global_of[host][lane.0]),
+        }
+    }
+
+    fn resolve(&self, id: LaneId) -> Option<(usize, LaneId)> {
+        self.locus.get(id.0).copied()
+    }
+
+    pub fn pause(&mut self, id: LaneId) -> bool {
+        self.resolve(id).is_some_and(|(h, l)| self.hosts[h].pause(l))
+    }
+
+    pub fn resume(&mut self, id: LaneId) -> bool {
+        self.resolve(id).is_some_and(|(h, l)| self.hosts[h].resume(l))
+    }
+
+    pub fn cancel(&mut self, id: LaneId) -> bool {
+        self.resolve(id).is_some_and(|(h, l)| self.hosts[h].cancel(l))
+    }
+
+    pub fn status(&self, id: LaneId) -> Option<LaneStatus> {
+        self.resolve(id).and_then(|(h, l)| self.hosts[h].status(l))
+    }
+
+    pub fn lane_name(&self, id: LaneId) -> Option<&str> {
+        self.resolve(id).and_then(|(h, l)| self.hosts[h].lane_name(l))
+    }
+
+    /// True when every lane on every host has completed or departed.
+    pub fn is_idle(&self) -> bool {
+        self.hosts.iter().all(Session::is_idle)
+    }
+
+    /// Cluster MIs run so far (hosts step in lockstep).
+    pub fn mi(&self) -> usize {
+        self.mi
+    }
+
+    /// Simulated time, seconds (identical on every host — lockstep MIs).
+    pub fn time_s(&self) -> f64 {
+        self.hosts[0].time_s()
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.locus.len()
+    }
+
+    pub fn lanes_in_flight(&self) -> usize {
+        self.hosts.iter().map(Session::lanes_in_flight).sum()
+    }
+
+    pub fn host_count(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// The per-host sessions, host order — for host-resolved reporting
+    /// (`sparta fleet --hosts` reads each host's ledger truth here).
+    pub fn hosts(&self) -> &[Session] {
+        &self.hosts
+    }
+
+    /// Cluster energy truth: the sum of every host session's ledger total
+    /// (each host already pays only its `1/N` receiver share), joules.
+    pub fn host_energy_j(&self) -> f64 {
+        self.hosts.iter().map(Session::host_energy_j).sum()
+    }
+
+    /// Energy attributed to one lane so far, joules.
+    pub fn lane_energy_j(&self, id: LaneId) -> Option<f64> {
+        self.resolve(id).and_then(|(h, l)| self.hosts[h].lane_energy_j(l))
+    }
+
+    /// Cluster-wide per-rail breakdown (None when any host runs the
+    /// lumped compat rail).
+    pub fn energy_rails(&self) -> Option<RailEnergy> {
+        let mut acc = RailEnergy::default();
+        for h in &self.hosts {
+            acc.add(&h.energy_rails()?);
+        }
+        Some(acc)
+    }
+
+    /// One lane's per-rail attribution (None on the lumped compat rail).
+    pub fn lane_energy_rails(&self, id: LaneId) -> Option<RailEnergy> {
+        self.resolve(id).and_then(|(h, l)| self.hosts[h].lane_energy_rails(l))
+    }
+
+    /// Route a record's state buffer back to its owning host's pool (the
+    /// cluster analogue of [`Session::recycle_record`], for drivers that
+    /// keep events past the next step).
+    pub fn recycle_record(&mut self, lane: LaneId, record: MiRecord) {
+        if let Some((h, _)) = self.resolve(lane) {
+            self.hosts[h].recycle_record(record);
+        }
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        self.hosts[0].testbed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::StaticTool;
+    use crate::transfer::TransferJob;
+
+    fn lane(files: usize) -> LaneSpec {
+        LaneSpec::new(Box::new(StaticTool::rclone()), TransferJob::files(files, 64 << 20))
+    }
+
+    fn incast3(seed: u64) -> Cluster {
+        Cluster::incast(&Testbed::chameleon(), 3, seed)
+    }
+
+    #[test]
+    fn round_robin_admission_returns_global_ids() {
+        let mut c = incast3(7);
+        for k in 0..7 {
+            assert_eq!(c.admit(lane(4)), LaneId(k));
+        }
+        assert_eq!(c.lane_count(), 7);
+        assert_eq!(c.host_count(), 3);
+        // Round robin: hosts get 3/2/2 lanes.
+        let per_host: Vec<usize> = c.hosts().iter().map(Session::lane_count).collect();
+        assert_eq!(per_host, [3, 2, 2]);
+        for k in 0..7 {
+            assert_eq!(c.status(LaneId(k)), Some(LaneStatus::Active));
+        }
+        assert_eq!(c.status(LaneId(99)), None);
+    }
+
+    #[test]
+    fn merged_events_carry_global_lane_ids() {
+        let mut c = incast3(11);
+        let n = 6;
+        for _ in 0..n {
+            c.admit(lane(2));
+        }
+        let mut events = Vec::new();
+        let mut admitted = Vec::new();
+        for _ in 0..4 {
+            c.step_into(&mut events);
+            for ev in &events {
+                if let Event::Admitted { lane, .. } = ev {
+                    admitted.push(lane.0);
+                }
+                assert!(ev.lane().0 < n, "event lane {} out of range", ev.lane().0);
+            }
+        }
+        admitted.sort_unstable();
+        assert_eq!(admitted, (0..n).collect::<Vec<_>>());
+        assert_eq!(c.mi(), 4);
+        assert!(c.time_s() > 0.0);
+    }
+
+    /// External control routes through global ids, and cluster energy
+    /// truth equals the sum of per-host ledgers and of lane attribution.
+    #[test]
+    fn control_and_energy_route_through_global_ids() {
+        let mut c = incast3(23);
+        for _ in 0..6 {
+            c.admit(lane(8));
+        }
+        let mut events = Vec::new();
+        for _ in 0..3 {
+            c.step_into(&mut events);
+        }
+        assert!(c.pause(LaneId(4)));
+        c.step_into(&mut events);
+        assert_eq!(c.status(LaneId(4)), Some(LaneStatus::Paused));
+        assert!(c.resume(LaneId(4)));
+        assert!(c.cancel(LaneId(5)));
+        for _ in 0..3 {
+            c.step_into(&mut events);
+        }
+        let per_host: f64 = c.hosts().iter().map(Session::host_energy_j).sum();
+        let total = c.host_energy_j();
+        assert!((per_host - total).abs() <= 1e-9 * total.max(1.0));
+        let attributed: f64 =
+            (0..c.lane_count()).map(|k| c.lane_energy_j(LaneId(k)).unwrap()).sum();
+        assert!(
+            (attributed - total).abs() <= 1e-9 * total.max(1.0),
+            "lanes {attributed} J vs cluster {total} J"
+        );
+        let rails = c.energy_rails().expect("incast clusters are host-resolved");
+        assert!((rails.total_j() - total).abs() <= 1e-6 * total.max(1.0));
+    }
+
+    /// The same configuration and seed reproduce the event stream exactly;
+    /// host identity seeds derive from the cluster seed, not admission
+    /// timing.
+    #[test]
+    fn cluster_runs_are_deterministic() {
+        let run = |seed: u64| {
+            let mut c = incast3(seed);
+            for _ in 0..5 {
+                c.admit(lane(3));
+            }
+            let mut events = Vec::new();
+            let mut digest = Vec::new();
+            for _ in 0..6 {
+                c.step_into(&mut events);
+                for ev in &events {
+                    if let Event::MiCompleted { lane, record } = ev {
+                        digest.push((lane.0, record.throughput_gbps.to_bits()));
+                    }
+                }
+            }
+            digest
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+}

@@ -10,29 +10,202 @@
 //! 4. applies it by pausing/resuming transfer threads, and
 //! 5. computes the F&E or T/E reward and feeds it back for learning.
 //!
-//! The public API is the step-driven [`Session`] ([`session`]): lanes are
-//! admitted (possibly mid-run) with [`Session::admit`], each
-//! [`Session::step`] advances one MI and streams [`Event`]s into any
-//! [`crate::telemetry::TelemetrySink`], and external
-//! pause/resume/cancel model transfers that come and go. The batch
-//! [`Controller`] ([`controller`]) is the compat wrapper: fixed lanes, run
-//! to completion, [`RunReport`] rebuilt from the event stream by
+//! The public API is the [`Stepping`] surface: lanes are admitted
+//! (possibly mid-run) with `admit`, each buffer-taking `step_into`
+//! advances one MI and streams [`Event`]s, and external
+//! pause/resume/cancel model transfers that come and go. Two scales
+//! implement it — the single-host [`Session`] ([`session`]) and the
+//! multi-host [`Cluster`] ([`cluster`]), which shards lanes across many
+//! per-host sessions over incast topologies — so fleet drivers run
+//! unchanged from one host to a datacenter. The batch [`Controller`]
+//! ([`controller`]) is the compat wrapper: fixed lanes, run to
+//! completion, [`RunReport`] rebuilt from the event stream by
 //! [`crate::telemetry::ReportSink`] — bit-identical to the pre-redesign
 //! behavior, so every figure regenerates unchanged.
 
+use crate::energy::RailEnergy;
+
 pub mod actions;
+pub mod cluster;
 pub mod controller;
 pub mod reward;
 pub mod session;
 pub mod state;
 
 pub use actions::{ActionId, ParamBounds, ACTIONS, N_ACTIONS};
+pub use cluster::{Cluster, INCAST_RX_OVER_WAN};
 pub use controller::{Controller, ControllerBuilder, LaneReport, RunReport};
 pub use reward::{RewardConfig, RewardKind, RewardTracker};
 pub use session::{
     Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session, SessionBuilder, DEFAULT_MAX_MIS,
 };
 pub use state::{FeatureWindow, Observation, FEATURES};
+
+/// The unified stepping surface: one host ([`Session`]) or a sharded fleet
+/// of hosts ([`Cluster`]) behind the same admit / step-into-buffer /
+/// external-control / energy-truth API.
+///
+/// Drivers written against this trait — `sparta fleet` is the canonical
+/// one — run unchanged at any scale, and monomorphize, so the single-host
+/// path keeps its zero-alloc stepping profile. The buffer-taking
+/// [`Stepping::step_into`] is the one stepping primitive; the allocating
+/// [`Stepping::step`] default exists for interactive/doc use only.
+pub trait Stepping {
+    /// Admit a lane (legal mid-run); returns its id in admission order.
+    fn admit(&mut self, spec: LaneSpec) -> LaneId;
+
+    /// Advance one monitoring interval, writing produced events into the
+    /// caller-reused buffer (see [`Session::step_into`]).
+    fn step_into(&mut self, events: &mut Vec<Event>);
+
+    /// Externally pause an active lane. False if it wasn't pausable.
+    fn pause(&mut self, id: LaneId) -> bool;
+
+    /// Resume an externally-paused lane. False if it wasn't paused.
+    fn resume(&mut self, id: LaneId) -> bool;
+
+    /// Cancel a lane before completion. False if it already ended.
+    fn cancel(&mut self, id: LaneId) -> bool;
+
+    fn status(&self, id: LaneId) -> Option<LaneStatus>;
+
+    /// True when every admitted lane has completed or departed.
+    fn is_idle(&self) -> bool;
+
+    /// Monitoring intervals run so far.
+    fn mi(&self) -> usize;
+
+    /// Simulated time elapsed, seconds.
+    fn time_s(&self) -> f64;
+
+    fn lane_count(&self) -> usize;
+
+    /// Ledger-truth energy integrated so far (all hosts), joules.
+    fn host_energy_j(&self) -> f64;
+
+    /// Energy attributed to one lane so far, joules.
+    fn lane_energy_j(&self, id: LaneId) -> Option<f64>;
+
+    /// Per-rail energy breakdown, all hosts combined (None on the lumped
+    /// compat rail).
+    fn energy_rails(&self) -> Option<RailEnergy>;
+
+    /// Allocating convenience over [`Stepping::step_into`] — fine for
+    /// examples and tests, deprecated-in-docs for hot-path drivers.
+    fn step(&mut self) -> Vec<Event> {
+        let mut events = Vec::new();
+        self.step_into(&mut events);
+        events
+    }
+}
+
+impl Stepping for Session {
+    fn admit(&mut self, spec: LaneSpec) -> LaneId {
+        Session::admit(self, spec)
+    }
+
+    fn step_into(&mut self, events: &mut Vec<Event>) {
+        Session::step_into(self, events)
+    }
+
+    fn pause(&mut self, id: LaneId) -> bool {
+        Session::pause(self, id)
+    }
+
+    fn resume(&mut self, id: LaneId) -> bool {
+        Session::resume(self, id)
+    }
+
+    fn cancel(&mut self, id: LaneId) -> bool {
+        Session::cancel(self, id)
+    }
+
+    fn status(&self, id: LaneId) -> Option<LaneStatus> {
+        Session::status(self, id)
+    }
+
+    fn is_idle(&self) -> bool {
+        Session::is_idle(self)
+    }
+
+    fn mi(&self) -> usize {
+        Session::mi(self)
+    }
+
+    fn time_s(&self) -> f64 {
+        Session::time_s(self)
+    }
+
+    fn lane_count(&self) -> usize {
+        Session::lane_count(self)
+    }
+
+    fn host_energy_j(&self) -> f64 {
+        Session::host_energy_j(self)
+    }
+
+    fn lane_energy_j(&self, id: LaneId) -> Option<f64> {
+        Session::lane_energy_j(self, id)
+    }
+
+    fn energy_rails(&self) -> Option<RailEnergy> {
+        Session::energy_rails(self)
+    }
+}
+
+impl Stepping for Cluster {
+    fn admit(&mut self, spec: LaneSpec) -> LaneId {
+        Cluster::admit(self, spec)
+    }
+
+    fn step_into(&mut self, events: &mut Vec<Event>) {
+        Cluster::step_into(self, events)
+    }
+
+    fn pause(&mut self, id: LaneId) -> bool {
+        Cluster::pause(self, id)
+    }
+
+    fn resume(&mut self, id: LaneId) -> bool {
+        Cluster::resume(self, id)
+    }
+
+    fn cancel(&mut self, id: LaneId) -> bool {
+        Cluster::cancel(self, id)
+    }
+
+    fn status(&self, id: LaneId) -> Option<LaneStatus> {
+        Cluster::status(self, id)
+    }
+
+    fn is_idle(&self) -> bool {
+        Cluster::is_idle(self)
+    }
+
+    fn mi(&self) -> usize {
+        Cluster::mi(self)
+    }
+
+    fn time_s(&self) -> f64 {
+        Cluster::time_s(self)
+    }
+
+    fn lane_count(&self) -> usize {
+        Cluster::lane_count(self)
+    }
+
+    fn host_energy_j(&self) -> f64 {
+        Cluster::host_energy_j(self)
+    }
+
+    fn lane_energy_j(&self, id: LaneId) -> Option<f64> {
+        Cluster::lane_energy_j(self, id)
+    }
+
+    fn energy_rails(&self) -> Option<RailEnergy> {
+        Cluster::energy_rails(self)
+    }
+}
 
 /// A (cc, p) decision returned by an optimizer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -482,9 +482,15 @@ impl Session {
 
     /// Advance exactly one monitoring interval, writing the events it
     /// produced (queued admission/control events first, in call order)
-    /// into the caller-reused `events` buffer — the allocation-free
-    /// primitive behind [`Session::step`] (§Perf; the fleet driver holds
-    /// one buffer across all MIs).
+    /// into the caller-reused `events` buffer.
+    ///
+    /// This is the session's **one stepping primitive** (§Perf): the
+    /// allocation-free path every driver funnels through. The two
+    /// siblings are thin conveniences over it — [`Session::step_with`]
+    /// streams the same events into a [`TelemetrySink`] from an internal
+    /// pooled buffer, and [`Session::step`] is the allocating compat
+    /// wrapper. Fleet and [`crate::coordinator::Cluster`] hold one buffer
+    /// across all MIs and call this directly.
     pub fn step_into(&mut self, events: &mut Vec<Event>) {
         self.reclaim_events(events);
         events.append(&mut self.pending);
@@ -506,11 +512,30 @@ impl Session {
         }
     }
 
+    /// Return a previously-emitted record's state buffer to the session
+    /// pool. [`Session::step_into`] reclaims buffers it finds in the
+    /// passed-in `events`; a driver that *moved* events elsewhere (the
+    /// [`crate::coordinator::Cluster`] merges per-host streams into one
+    /// buffer) hands each record back through here instead, keeping
+    /// cluster stepping allocation-free at steady state.
+    pub fn recycle_record(&mut self, record: MiRecord) {
+        let mut buf = record.state;
+        buf.clear();
+        self.state_pool.push(buf);
+    }
+
     /// Advance exactly one monitoring interval and return the events it
-    /// produced (allocating compat wrapper over [`Session::step_into`]).
+    /// produced — a thin allocating wrapper over [`Session::step_into`].
+    ///
+    /// **Deprecated for external drivers:** this allocates a fresh `Vec`
+    /// (and fresh record-state buffers) every MI. Hot-path drivers —
+    /// fleet, [`crate::coordinator::Cluster`], anything stepping many
+    /// sessions — should hold one buffer and call [`Session::step_into`]
+    /// (or [`Session::step_with`] to stream into a sink). `step` stays for
+    /// interactive/doc-example use and the batch compat wrapper.
     pub fn step(&mut self) -> Vec<Event> {
-        let mut events = std::mem::take(&mut self.pending);
-        self.step_mi(&mut events);
+        let mut events = Vec::new();
+        self.step_into(&mut events);
         events
     }
 

@@ -57,6 +57,22 @@ impl HostSpec {
         }
     }
 
+    /// This spec's static `1/n` slice of a physical host shared by `n`
+    /// cluster shards — the incast receiver every sender-host session
+    /// bills independently. Rails paid *once per host* (fixed engine
+    /// residency, NIC LPI idle) and the noise scale divide by `n`, so
+    /// summing the slices over all shards pays the physical host's
+    /// residency exactly once; traffic-proportional rails (per-Gbps
+    /// CPU/NIC, per-stream CPU, per-paused-lane idle) stay untouched —
+    /// they already sum naturally across shards.
+    pub fn share(mut self, n: usize) -> HostSpec {
+        let n = n.max(1) as f64;
+        self.fixed.active_w /= n;
+        self.nic.lpi_idle_w /= n;
+        self.noise_w /= n;
+        self
+    }
+
     /// Deterministic host power with `streams` total active streams moving
     /// `gbps` of goodput (no engine overhead, no paused lanes), W. For a
     /// single lane this equals the lumped efficient curve.

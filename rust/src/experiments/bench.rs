@@ -1,10 +1,15 @@
 //! `sparta bench` — the repo's recorded performance trajectory.
 //!
-//! Runs a **scale curve** (fleet `churn-heavy` at 16/64/256 lanes via
-//! [`ArrivalSchedule::churn_heavy_scaled`]) on both simulator hot loops —
-//! the struct-of-arrays arena ([`crate::net::NetworkSim`]) and the frozen
-//! pre-arena loop ([`crate::net::baseline::BaselineSim`]) — plus the
-//! hot-path microbenches, and emits a machine-readable `BENCH_*.json`.
+//! Runs a **scale curve** — fleet `churn-heavy` at 16/64/256 lanes on one
+//! host (via [`ArrivalSchedule::churn_heavy_scaled`]), then at **cluster
+//! scale**: 1024 lanes sharded across 8 incast sender hosts (and 4096
+//! across 16 in full mode) through [`crate::coordinator::Cluster`] — on
+//! both simulator hot loops — the struct-of-arrays arena
+//! ([`crate::net::NetworkSim`]) and the frozen pre-arena loop
+//! ([`crate::net::baseline::BaselineSim`]) — plus the hot-path
+//! microbenches, and emits a machine-readable `BENCH_*.json`. The
+//! headline is **host-MIs/s at cluster scale**: cluster MIs × hosts per
+//! wall second.
 //! Because the baseline is timed **in the same process on the same
 //! machine**, the reported speedups are honest ratios, not stale
 //! constants; and because both loops must produce byte-identical fleet
@@ -14,19 +19,23 @@
 //! passes `--against <last committed BENCH_*.json>` so every PR pays its
 //! perf bill visibly (see [`trend_gate`]).
 //!
-//! ## `BENCH_*.json` schema (version 2)
+//! ## `BENCH_*.json` schema (version 3)
 //!
-//! Version 2 (PR 6) extends version 1 (PR 5) with stable-comparison
-//! metadata (`meta`, `iters`), per-trial MI counts (`trial_mis`), and the
-//! MIs/s headline the trend gate reports. Version-1 anchors remain
-//! readable — the gate only needs `scale_curve[*].{lanes,
-//! wall_s_per_trial, baseline_wall_s_per_trial}` and `measured`.
+//! Version 3 (PR 7) extends version 2 with per-point `hosts` — the incast
+//! sender-host count the lanes are sharded across — and the cluster-scale
+//! points ([`BENCH_CLUSTER`]); on those points `mis_per_s` counts
+//! **host-MIs** (cluster MIs × hosts). Version 2 (PR 6) added
+//! stable-comparison metadata (`meta`, `iters`), per-trial MI counts
+//! (`trial_mis`), and the MIs/s headline over version 1 (PR 5). Old
+//! anchors remain readable — the gate only needs `scale_curve[*].{lanes,
+//! wall_s_per_trial, baseline_wall_s_per_trial}` and `measured`, and
+//! points without `hosts` are treated as single-host.
 //!
 //! ```json
 //! {
 //!   "bench": "sparta-bench",          // harness identifier
-//!   "schema_version": 2,
-//!   "pr": 6,                          // PR that introduced the schema
+//!   "schema_version": 3,
+//!   "pr": 7,                          // PR that introduced the schema
 //!   "mode": "quick" | "full",         // --quick: 120-MI horizon; full: 360
 //!   "baseline": "net::baseline::BaselineSim (pre-arena loop, d6d9964),
 //!                timed in-process",
@@ -43,8 +52,12 @@
 //!     "cpus": 8,                      // available parallelism
 //!     "rustc": "rustc 1.79.0"         // compiler that built the binary
 //!   },
-//!   "scale_curve": [                  // one point per fleet size
+//!   "scale_curve": [                  // one point per (lanes, hosts)
 //!     { "lanes": 256,                 // requested fleet size
+//!       "hosts": 1,                   // incast sender hosts the lanes are
+//!                                     // sharded across (1 = single-host;
+//!                                     // the trend gate matches points by
+//!                                     // (lanes, hosts))
 //!       "trials": 2,                  // seeded trials timed (jobs = 1)
 //!       "horizon_mis": 120,           // MI cap per trial
 //!       "mis_run": 240,               // MIs actually stepped, all trials
@@ -53,8 +66,8 @@
 //!                                     // `mis_run`), so MIs/s per trial
 //!                                     // needs no re-derivation
 //!       "wall_s_per_trial": 0.6,      // arena loop, wall s per trial
-//!       "mis_per_s": 400.0,           // simulated MIs per wall second —
-//!                                     // the headline number
+//!       "mis_per_s": 400.0,           // host-MIs (MIs × hosts) per wall
+//!                                     // second — the headline number
 //!       "ticks_per_s": 8000.0,        // fluid-model ticks per wall second
 //!       "baseline_wall_s_per_trial": 2.1,  // pre-arena loop, same workload
 //!       "speedup_x": 3.5 }            // baseline / arena wall per trial
@@ -93,8 +106,14 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::time::Instant;
 
-/// The fleet sizes of the scale curve.
+/// The single-host fleet sizes of the scale curve.
 pub const BENCH_LANES: [usize; 3] = [16, 64, 256];
+
+/// The cluster-scale points of the curve, `(lanes, sender hosts)`: lanes
+/// sharded round-robin across an incast [`crate::coordinator::Cluster`].
+/// The first point runs in `--quick` mode too (it feeds the CI perf-trend
+/// ratchet); the rest are full-mode only.
+pub const BENCH_CLUSTER: [(usize, usize); 2] = [(1024, 8), (4096, 16)];
 
 /// Maximum tolerated worsening of the arena/baseline wall ratio vs the
 /// anchor before the trend gate fails (15%).
@@ -129,6 +148,10 @@ impl Default for BenchOpts {
 #[derive(Debug, Clone)]
 pub struct ScalePoint {
     pub lanes: usize,
+    /// Incast sender hosts the lanes are sharded across (1 = single-host
+    /// point; above 1 the workload runs a [`crate::coordinator::Cluster`]
+    /// and `mis_per_s` / `ticks_per_s` count host-MIs / host-ticks).
+    pub hosts: usize,
     pub trials: usize,
     pub horizon_mis: usize,
     /// MIs actually stepped, summed over trials (identical across loops —
@@ -250,13 +273,15 @@ pub fn session_step_micro(lanes: usize, reps: usize) -> f64 {
 
 /// Time one side of a scale point: `trials × churn-heavy(lanes)` at
 /// `--jobs 1` (so wall per trial is not muddied by worker scheduling).
+/// `hosts` above 1 runs each trial as an incast cluster.
 fn timed_fleet(
     paths: &Paths,
     sched: &ArrivalSchedule,
     methods: &[String],
     baseline_loop: bool,
+    hosts: usize,
 ) -> Result<(fleet::FleetReport, f64)> {
-    let opts = FleetOpts { baseline_loop, ..FleetOpts::default() };
+    let opts = FleetOpts { baseline_loop, hosts, ..FleetOpts::default() };
     let t0 = Instant::now();
     let report = fleet::run(paths, sched, methods, Scale::Quick, 42, 1, opts)?;
     Ok((report, t0.elapsed().as_secs_f64()))
@@ -272,14 +297,22 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
     // statics, allocator growth, page-cache warmup) are not billed to
     // whichever side happens to be timed first.
     let warmup = ArrivalSchedule::churn_heavy_scaled(8, 30);
-    timed_fleet(paths, &warmup, &methods, false)?;
-    timed_fleet(paths, &warmup, &methods, true)?;
-    let lanes_curve: Vec<usize> = match &opts.lanes {
-        Some(subset) => subset.clone(),
-        None => BENCH_LANES.to_vec(),
+    timed_fleet(paths, &warmup, &methods, false, 1)?;
+    timed_fleet(paths, &warmup, &methods, true, 1)?;
+    // The curve as (lanes, hosts) points: the single-host sizes, then the
+    // incast cluster points (the first also in quick mode). An explicit
+    // --lanes subset keeps the curve single-host.
+    let curve: Vec<(usize, usize)> = match &opts.lanes {
+        Some(subset) => subset.iter().map(|&l| (l, 1)).collect(),
+        None => {
+            let mut c: Vec<(usize, usize)> = BENCH_LANES.iter().map(|&l| (l, 1)).collect();
+            let cluster = if opts.quick { &BENCH_CLUSTER[..1] } else { &BENCH_CLUSTER[..] };
+            c.extend(cluster.iter().copied());
+            c
+        }
     };
     let mut points = Vec::new();
-    for &lanes in &lanes_curve {
+    for &(lanes, hosts) in &curve {
         let sched = ArrivalSchedule::churn_heavy_scaled(lanes, horizon);
         // Stable-comparison mode: repeat the timing and keep the minimum
         // wall per side — interference only ever adds time, so the min is
@@ -288,7 +321,7 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
         let mut base_wall = f64::INFINITY;
         let mut report = None;
         for _ in 0..iters {
-            let (rep, mut w) = timed_fleet(paths, &sched, &methods, false)?;
+            let (rep, mut w) = timed_fleet(paths, &sched, &methods, false, hosts)?;
             if opts.inject_slowdown > 0.0 {
                 // Real sleep, billed to the arena wall: the synthetic
                 // regression the CI perf-trend job proves it can catch.
@@ -296,7 +329,7 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
                 std::thread::sleep(std::time::Duration::from_secs_f64(pause));
                 w += pause;
             }
-            let (base_rep, base_w) = timed_fleet(paths, &sched, &methods, true)?;
+            let (base_rep, base_w) = timed_fleet(paths, &sched, &methods, true, hosts)?;
             // The bench doubles as a drift gate: both loops must produce
             // the same report bytes (full suite: tests/golden_replay.rs).
             if fleet::to_json(&rep).to_string() != fleet::to_json(&base_rep).to_string() {
@@ -316,21 +349,26 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
         // Fluid ticks per MI at the bench scenario's defaults (1.0-s MI,
         // 0.05-s tick).
         let ticks_per_mi = (1.0 / SimConfig::default().tick_s).round();
+        // Cluster points report host-MIs: every cluster MI steps all hosts.
+        let host_mis = (mis_run * hosts) as f64;
         let point = ScalePoint {
             lanes,
+            hosts,
             trials,
             horizon_mis: horizon,
             mis_run,
             trial_mis,
             wall_s_per_trial: wall / trials as f64,
-            mis_per_s: mis_run as f64 / wall,
-            ticks_per_s: mis_run as f64 * ticks_per_mi / wall,
+            mis_per_s: host_mis / wall,
+            ticks_per_s: host_mis * ticks_per_mi / wall,
             baseline_wall_s_per_trial: base_wall / trials as f64,
             speedup_x: base_wall / wall,
         };
         crate::log_info!(
-            "bench: {} lanes, {} trials, arena {:.2} s/trial vs baseline {:.2} s/trial ({:.2}x)",
+            "bench: {} lanes x {} host(s), {} trials, arena {:.2} s/trial vs baseline {:.2} \
+             s/trial ({:.2}x)",
             lanes,
+            hosts,
             trials,
             point.wall_s_per_trial,
             point.baseline_wall_s_per_trial,
@@ -372,10 +410,11 @@ pub fn print(report: &BenchReport) {
     if let Some(peak) = report.points.iter().map(|p| p.mis_per_s).fold(None, |m: Option<f64>, x| {
         Some(m.map_or(x, |m| m.max(x)))
     }) {
-        println!("  headline: {peak:.0} MIs/s peak across the curve");
+        println!("  headline: {peak:.0} host-MIs/s peak across the curve (cluster scale)");
     }
     let mut t = Table::new(&[
         "lanes",
+        "hosts",
         "trials",
         "MIs run",
         "s/trial",
@@ -386,6 +425,7 @@ pub fn print(report: &BenchReport) {
     for p in &report.points {
         t.row(vec![
             p.lanes.to_string(),
+            p.hosts.to_string(),
             p.trials.to_string(),
             p.mis_run.to_string(),
             format!("{:.3}", p.wall_s_per_trial),
@@ -411,8 +451,8 @@ pub fn print(report: &BenchReport) {
 pub fn to_json(report: &BenchReport) -> Json {
     Json::obj(vec![
         ("bench", Json::from("sparta-bench")),
-        ("schema_version", Json::from(2usize)),
-        ("pr", Json::from(6usize)),
+        ("schema_version", Json::from(3usize)),
+        ("pr", Json::from(7usize)),
         ("mode", Json::from(if report.quick { "quick" } else { "full" })),
         (
             "baseline",
@@ -439,6 +479,7 @@ pub fn to_json(report: &BenchReport) -> Json {
                     .map(|p| {
                         Json::obj(vec![
                             ("lanes", Json::from(p.lanes)),
+                            ("hosts", Json::from(p.hosts)),
                             ("trials", Json::from(p.trials)),
                             ("horizon_mis", Json::from(p.horizon_mis)),
                             ("mis_run", Json::from(p.mis_run)),
@@ -486,6 +527,9 @@ pub fn to_json(report: &BenchReport) -> Json {
 #[derive(Debug, Clone)]
 pub struct TrendRow {
     pub lanes: usize,
+    /// Incast hosts of the point (points are matched by `(lanes, hosts)`;
+    /// pre-v3 anchor points without a `hosts` field are single-host).
+    pub hosts: usize,
     /// Anchor's arena/baseline wall ratio (`1 / speedup_x`) — the
     /// machine-normalized quantity the ratchet tracks.
     pub anchor_ratio: f64,
@@ -533,15 +577,17 @@ pub fn trend_gate(
     let measured = anchor.get("measured").and_then(Json::as_bool).unwrap_or(false);
     let empty: [Json; 0] = [];
     let curve = anchor.get("scale_curve").and_then(Json::as_arr).unwrap_or(&empty);
-    // Anchor points with usable timings, keyed by fleet size.
-    let mut anchor_ratios: Vec<(usize, f64)> = Vec::new();
+    // Anchor points with usable timings, keyed by (lanes, hosts) — points
+    // without a `hosts` field (schema < 3) are single-host.
+    let mut anchor_ratios: Vec<(usize, usize, f64)> = Vec::new();
     for p in curve {
         let lanes = p.get("lanes").and_then(Json::as_usize);
+        let hosts = p.get("hosts").and_then(Json::as_usize).unwrap_or(1);
         let wall = p.get("wall_s_per_trial").and_then(Json::as_f64);
         let base = p.get("baseline_wall_s_per_trial").and_then(Json::as_f64);
         if let (Some(l), Some(w), Some(b)) = (lanes, wall, base) {
             if w > 0.0 && b > 0.0 {
-                anchor_ratios.push((l, w / b));
+                anchor_ratios.push((l, hosts, w / b));
             }
         }
     }
@@ -556,7 +602,10 @@ pub fn trend_gate(
     let mut rows = Vec::new();
     let mut skipped = Vec::new();
     for p in &current.points {
-        let anchor_ratio = anchor_ratios.iter().find(|(l, _)| *l == p.lanes).map(|(_, r)| *r);
+        let anchor_ratio = anchor_ratios
+            .iter()
+            .find(|(l, h, _)| *l == p.lanes && *h == p.hosts)
+            .map(|(_, _, r)| *r);
         let current_ratio = if p.baseline_wall_s_per_trial > 0.0 {
             Some(p.wall_s_per_trial / p.baseline_wall_s_per_trial)
         } else {
@@ -567,6 +616,7 @@ pub fn trend_gate(
                 let delta_frac = c / a - 1.0;
                 rows.push(TrendRow {
                     lanes: p.lanes,
+                    hosts: p.hosts,
                     anchor_ratio: a,
                     current_ratio: c,
                     delta_frac,
@@ -591,10 +641,12 @@ pub fn trend_print(trend: &TrendReport) {
         "\nPerf trend vs anchor (arena/baseline wall ratio; fail above +{:.0}%):",
         trend.max_regress_frac * 100.0
     );
-    let mut t = Table::new(&["lanes", "anchor ratio", "current ratio", "delta", "verdict"]);
+    let mut t =
+        Table::new(&["lanes", "hosts", "anchor ratio", "current ratio", "delta", "verdict"]);
     for r in &trend.rows {
         t.row(vec![
             r.lanes.to_string(),
+            r.hosts.to_string(),
             format!("{:.4}", r.anchor_ratio),
             format!("{:.4}", r.current_ratio),
             format!("{:+.1}%", r.delta_frac * 100.0),
@@ -620,12 +672,13 @@ pub fn trend_markdown(trend: &TrendReport) -> String {
         "Arena/baseline wall ratio per fleet size; gate fails above +{:.0}%.\n\n",
         trend.max_regress_frac * 100.0
     ));
-    md.push_str("| lanes | anchor ratio | current ratio | delta | verdict |\n");
-    md.push_str("|---:|---:|---:|---:|---|\n");
+    md.push_str("| lanes | hosts | anchor ratio | current ratio | delta | verdict |\n");
+    md.push_str("|---:|---:|---:|---:|---:|---|\n");
     for r in &trend.rows {
         md.push_str(&format!(
-            "| {} | {:.4} | {:.4} | {:+.1}% | {} |\n",
+            "| {} | {} | {:.4} | {:.4} | {:+.1}% | {} |\n",
             r.lanes,
+            r.hosts,
             r.anchor_ratio,
             r.current_ratio,
             r.delta_frac * 100.0,
@@ -646,6 +699,7 @@ mod tests {
     fn point(lanes: usize, wall: f64, base: f64) -> ScalePoint {
         ScalePoint {
             lanes,
+            hosts: 1,
             trials: 2,
             horizon_mis: 120,
             mis_run: 240,
@@ -730,6 +784,24 @@ mod tests {
         let hollow =
             Json::parse(r#"{"measured":true,"scale_curve":[]}"#).unwrap();
         assert!(trend_gate(&current, &hollow, TREND_MAX_REGRESS_FRAC).unwrap().seed_only);
+    }
+
+    #[test]
+    fn trend_gate_matches_points_by_lanes_and_hosts() {
+        // A cluster point only compares against an anchor point with the
+        // same (lanes, hosts) pair.
+        let cluster = ScalePoint { hosts: 8, ..point(1024, 2.0, 7.0) };
+        let anchor = anchor_of(vec![cluster.clone()]);
+        let t = trend_gate(&rep(vec![cluster]), &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0].hosts, 8);
+        assert!(!t.failed());
+        // The same lane count on one host has no counterpart: skipped, so
+        // re-sharding a point can never trip the ratchet silently.
+        let t = trend_gate(&rep(vec![point(1024, 2.0, 7.0)]), &anchor, TREND_MAX_REGRESS_FRAC)
+            .unwrap();
+        assert!(t.rows.is_empty());
+        assert_eq!(t.skipped, vec![1024]);
     }
 
     #[test]

@@ -28,8 +28,11 @@
 use super::common::{make_optimizer, Scale, SpartaCtx};
 use super::runner;
 use crate::config::Paths;
-use crate::coordinator::{Event, LaneId, LaneSpec, LaneStatus};
+use crate::coordinator::{
+    Cluster, Event, LaneId, LaneSpec, LaneStatus, Session, Stepping, INCAST_RX_OVER_WAN,
+};
 use crate::energy::RailEnergy;
+use crate::net::Topology;
 use crate::runtime::WeightSnapshot;
 use crate::scenarios::ArrivalSchedule;
 use crate::telemetry::{FairnessSink, Table, TelemetrySink};
@@ -55,7 +58,7 @@ pub const YIELD_GAP_MIS: usize = 10;
 pub const YIELD_COST_BUDGET_J: f64 = 1.0;
 
 /// Fleet run knobs (see the module docs).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct FleetOpts {
     /// Paused lanes emit zero-throughput records carrying idle energy, so
     /// their optimizers (and the yield controller) see preemption costs.
@@ -67,6 +70,28 @@ pub struct FleetOpts {
     /// the measured "before" side of `sparta bench` and the golden-replay
     /// byte-identity suite. Reports must be byte-identical either way.
     pub baseline_loop: bool,
+    /// Sender hosts. 1 (the default) keeps the single-session path with
+    /// byte-identical reports; above 1 each trial runs a [`Cluster`] of
+    /// per-host sessions over the incast topology
+    /// ([`Topology::incast_host`]) with lanes placed round-robin, and the
+    /// report carries per-host ledger rows.
+    pub hosts: usize,
+}
+
+impl Default for FleetOpts {
+    fn default() -> FleetOpts {
+        FleetOpts { observe_paused: false, yield_policy: false, baseline_loop: false, hosts: 1 }
+    }
+}
+
+/// One sender host's ledger truth inside a cluster trial (sender rails
+/// plus its `1/N` receiver share — see
+/// [`crate::energy::HostSpec::share`]).
+#[derive(Debug, Clone)]
+pub struct HostEnergyRow {
+    pub name: String,
+    pub energy_j: f64,
+    pub rails: Option<RailEnergy>,
 }
 
 /// Final accounting for one admitted lane.
@@ -109,8 +134,12 @@ pub struct FleetTrial {
     /// (identical across loops and `--jobs` counts), so the byte-compare
     /// gates are unaffected.
     pub mis_run: usize,
-    /// Host-truth per-rail energy breakdown (both hosts combined).
+    /// Host-truth per-rail energy breakdown (all hosts combined).
     pub rails: Option<RailEnergy>,
+    /// Per-sender-host ledger rows — empty on single-host runs (whose
+    /// JSON stays byte-identical to pre-cluster reports), one row per
+    /// host on `--hosts N` cluster trials, summing to the cluster truth.
+    pub hosts: Vec<HostEnergyRow>,
 }
 
 /// The full fleet report.
@@ -122,6 +151,8 @@ pub struct FleetReport {
     pub horizon_mis: usize,
     pub observe_paused: bool,
     pub yield_policy: bool,
+    /// Sender hosts per trial (1 = single-session fleet).
+    pub hosts: usize,
     pub trials: Vec<FleetTrial>,
 }
 
@@ -180,6 +211,7 @@ pub fn run(
         horizon_mis: schedule.horizon_mis,
         observe_paused: opts.observe_paused,
         yield_policy: opts.yield_policy,
+        hosts: opts.hosts.max(1),
         trials: out_trials,
     })
 }
@@ -216,7 +248,10 @@ pub fn run_observe_comparison(
     Ok((blind, observing))
 }
 
-/// One seeded session over the schedule's arrival process.
+/// One seeded trial over the schedule's arrival process: build the trial's
+/// stepping scale — a single host-resolved [`Session`], or for `--hosts N`
+/// an incast [`Cluster`] of per-host sessions — then drive it with
+/// [`drive_trial`].
 fn run_trial(
     ctx: &SpartaCtx,
     schedule: &ArrivalSchedule,
@@ -225,7 +260,50 @@ fn run_trial(
     trial_seed: u64,
     opts: FleetOpts,
 ) -> Result<FleetTrial> {
-    let arrivals = schedule.arrivals(trial_seed);
+    let hosts = opts.hosts.max(1);
+    if hosts > 1 {
+        // N sender hosts into the scenario testbed's shared WAN and one
+        // receiver-ingest stage (incast). Each host session gets its own
+        // ledger pair; the receiver's fixed power is shared 1/N so the
+        // cluster total pays it exactly once.
+        let tb = &schedule.scenario.testbed;
+        let mut cluster = Cluster::build(hosts, trial_seed, |h, host_seed| {
+            let topo = Topology::incast_host(tb, hosts, INCAST_RX_OVER_WAN);
+            let mut builder = Session::builder(tb.clone())
+                .energy(tb.energy_hosts_of(h, hosts))
+                .observe_paused(opts.observe_paused)
+                .seed(host_seed);
+            if opts.baseline_loop {
+                builder = builder.substrate(Box::new(
+                    crate::net::baseline::BaselineSim::from_topology(tb.clone(), &topo, host_seed),
+                ));
+            }
+            builder.topology(topo).build()
+        });
+        let mut out = drive_trial(ctx, schedule, methods, trial, trial_seed, opts, &mut cluster)?;
+        // Host-resolved rows, plus the cluster-level conservation check:
+        // per-host ledger truth sums to the cluster total the trial billed.
+        let mut per_host_j = 0.0;
+        out.hosts = cluster
+            .hosts()
+            .iter()
+            .enumerate()
+            .map(|(h, s)| {
+                per_host_j += s.host_energy_j();
+                HostEnergyRow {
+                    name: format!("{}-tx{h}", tb.name),
+                    energy_j: s.host_energy_j(),
+                    rails: s.energy_rails(),
+                }
+            })
+            .collect();
+        let cluster_j = cluster.host_energy_j();
+        assert!(
+            (per_host_j - cluster_j).abs() <= 1e-9 * cluster_j.max(1.0),
+            "cluster energy leaked: hosts {per_host_j} J vs cluster {cluster_j} J"
+        );
+        return Ok(out);
+    }
     // Host-resolved accounting: every lane bills the scenario's shared
     // sender/receiver ledgers instead of a private lumped meter.
     let mut builder = schedule
@@ -243,6 +321,23 @@ fn run_trial(
         )));
     }
     let mut session = builder.build();
+    drive_trial(ctx, schedule, methods, trial, trial_seed, opts, &mut session)
+}
+
+/// Drive one trial over any [`Stepping`] scale — a single [`Session`] or a
+/// sharded [`Cluster`] — admitting lanes as the arrival process fires.
+/// Monomorphizes per scale, so the single-host path keeps its zero-alloc
+/// stepping profile (§Perf in [`Session::step_into`]).
+fn drive_trial<S: Stepping>(
+    ctx: &SpartaCtx,
+    schedule: &ArrivalSchedule,
+    methods: &[String],
+    trial: usize,
+    trial_seed: u64,
+    opts: FleetOpts,
+    session: &mut S,
+) -> Result<FleetTrial> {
+    let arrivals = schedule.arrivals(trial_seed);
 
     // Per-lane trackers, indexed by LaneId (admission order).
     let mut admitted_mi: Vec<usize> = Vec::new();
@@ -308,7 +403,7 @@ fn run_trial(
         }
         if opts.yield_policy {
             run_yield_policy(
-                &mut session,
+                session,
                 mi,
                 &mut policy_paused_at,
                 &mut yield_exempt,
@@ -407,6 +502,7 @@ fn run_trial(
         yields_refused,
         mis_run: session.mi(),
         rails: session.energy_rails(),
+        hosts: Vec::new(),
     })
 }
 
@@ -419,8 +515,8 @@ fn run_trial(
 /// [`YIELD_COST_BUDGET_J`]; a refusal is permanent (the lane is exempt
 /// from further asks).
 #[allow(clippy::too_many_arguments)]
-fn run_yield_policy(
-    session: &mut crate::coordinator::Session,
+fn run_yield_policy<S: Stepping>(
+    session: &mut S,
     mi: usize,
     policy_paused_at: &mut [Option<usize>],
     yield_exempt: &mut [bool],
@@ -473,13 +569,18 @@ fn run_yield_policy(
 /// Paper-style summary: one row per trial plus per-lane detail at verbose.
 pub fn print(report: &FleetReport) {
     println!(
-        "\nFleet — {} arrivals on '{}' ({} MI horizon, methods: {}{}{}):",
+        "\nFleet — {} arrivals on '{}' ({} MI horizon, methods: {}{}{}{}):",
         report.schedule,
         report.scenario,
         report.horizon_mis,
         report.methods.join(","),
         if report.observe_paused { ", observe-paused" } else { "" },
         if report.yield_policy { ", yield policy" } else { "" },
+        if report.hosts > 1 {
+            format!(", {} incast hosts", report.hosts)
+        } else {
+            String::new()
+        },
     );
     let mut table = Table::new(&[
         "trial",
@@ -527,6 +628,30 @@ pub fn print(report: &FleetReport) {
             avg(|r| r.idle_j),
         );
     }
+    // Host-resolved ledger truth, averaged over trials (cluster runs only).
+    if report.hosts > 1 {
+        let n = report.trials.len().max(1) as f64;
+        let mut table = Table::new(&["host", "mean kJ/trial", "cpu", "nic", "fixed", "idle"]);
+        for h in 0..report.hosts {
+            let rows: Vec<&HostEnergyRow> =
+                report.trials.iter().filter_map(|t| t.hosts.get(h)).collect();
+            let Some(first) = rows.first() else { continue };
+            let mean_kj = rows.iter().map(|r| r.energy_j).sum::<f64>() / n / 1000.0;
+            let rail = |f: fn(&RailEnergy) -> f64| {
+                let sum: f64 = rows.iter().filter_map(|r| r.rails.as_ref()).map(f).sum();
+                format!("{:.1}", sum / n / 1000.0)
+            };
+            table.row(vec![
+                first.name.clone(),
+                format!("{mean_kj:.1}"),
+                rail(|r| r.cpu_j),
+                rail(|r| r.nic_j),
+                rail(|r| r.fixed_j),
+                rail(|r| r.idle_j),
+            ]);
+        }
+        table.print();
+    }
 }
 
 /// Side-by-side summary for `--compare-observe`.
@@ -552,8 +677,12 @@ pub fn print_comparison(blind: &FleetReport, observing: &FleetReport) {
 }
 
 /// Machine-readable report (for `--out` and the CI determinism check).
+///
+/// Byte-compat note: the report-level `hosts` field and the per-trial
+/// `hosts` arrays are emitted only on cluster runs (`--hosts` > 1), so
+/// single-host reports serialize byte-identically to pre-cluster SPARTA.
 pub fn to_json(report: &FleetReport) -> Json {
-    Json::obj(vec![
+    let mut top = vec![
         ("schedule", Json::from(report.schedule.clone())),
         ("scenario", Json::from(report.scenario.clone())),
         (
@@ -564,56 +693,82 @@ pub fn to_json(report: &FleetReport) -> Json {
         ("epoch_mis", Json::from(EPOCH_MIS)),
         ("observe_paused", Json::from(report.observe_paused)),
         ("yield_policy", Json::from(report.yield_policy)),
-        (
-            "trials",
-            Json::Arr(
-                report
-                    .trials
-                    .iter()
-                    .map(|t| {
-                        let mut o = vec![
-                            ("trial", Json::from(t.trial)),
-                            ("epoch_jfi", Json::arr_f64(&t.epoch_jfi)),
-                            ("energy_per_gb_j", Json::from(t.energy_per_gb_j)),
-                            ("completion_s", Json::arr_f64(&t.completion_s)),
-                            ("pauses", Json::from(t.pauses)),
-                            ("yields_refused", Json::from(t.yields_refused)),
-                            ("mis_run", Json::from(t.mis_run)),
-                        ];
-                        if let Some(r) = &t.rails {
-                            o.push((
-                                "energy_rails_j",
-                                Json::obj(vec![
-                                    ("cpu", Json::from(r.cpu_j)),
-                                    ("nic", Json::from(r.nic_j)),
-                                    ("fixed", Json::from(r.fixed_j)),
-                                    ("idle", Json::from(r.idle_j)),
-                                ]),
-                            ));
-                        }
+    ];
+    if report.hosts > 1 {
+        top.push(("hosts", Json::from(report.hosts)));
+    }
+    top.push((
+        "trials",
+        Json::Arr(
+            report
+                .trials
+                .iter()
+                .map(|t| {
+                    let mut o = vec![
+                        ("trial", Json::from(t.trial)),
+                        ("epoch_jfi", Json::arr_f64(&t.epoch_jfi)),
+                        ("energy_per_gb_j", Json::from(t.energy_per_gb_j)),
+                        ("completion_s", Json::arr_f64(&t.completion_s)),
+                        ("pauses", Json::from(t.pauses)),
+                        ("yields_refused", Json::from(t.yields_refused)),
+                        ("mis_run", Json::from(t.mis_run)),
+                    ];
+                    if let Some(r) = &t.rails {
+                        o.push(("energy_rails_j", rails_json(r)));
+                    }
+                    if !t.hosts.is_empty() {
                         o.push((
-                            "lanes",
+                            "hosts",
                             Json::Arr(
-                                t.lanes
+                                t.hosts
                                     .iter()
-                                    .map(|l| {
-                                        Json::obj(vec![
-                                            ("name", Json::from(l.name.clone())),
-                                            ("admitted_mi", Json::from(l.admitted_mi)),
-                                            ("completed", Json::from(l.completed)),
-                                            ("departed_early", Json::from(l.departed_early)),
-                                            ("duration_s", Json::from(l.duration_s)),
-                                            ("bytes_gb", Json::from(l.bytes_gb)),
-                                            ("energy_kj", Json::from(l.energy_kj)),
-                                        ])
+                                    .map(|h| {
+                                        let mut ho = vec![
+                                            ("name", Json::from(h.name.clone())),
+                                            ("energy_j", Json::from(h.energy_j)),
+                                        ];
+                                        if let Some(r) = &h.rails {
+                                            ho.push(("energy_rails_j", rails_json(r)));
+                                        }
+                                        Json::obj(ho)
                                     })
                                     .collect(),
                             ),
                         ));
-                        Json::obj(o)
-                    })
-                    .collect(),
-            ),
+                    }
+                    o.push((
+                        "lanes",
+                        Json::Arr(
+                            t.lanes
+                                .iter()
+                                .map(|l| {
+                                    Json::obj(vec![
+                                        ("name", Json::from(l.name.clone())),
+                                        ("admitted_mi", Json::from(l.admitted_mi)),
+                                        ("completed", Json::from(l.completed)),
+                                        ("departed_early", Json::from(l.departed_early)),
+                                        ("duration_s", Json::from(l.duration_s)),
+                                        ("bytes_gb", Json::from(l.bytes_gb)),
+                                        ("energy_kj", Json::from(l.energy_kj)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                    Json::obj(o)
+                })
+                .collect(),
         ),
+    ));
+    Json::obj(top)
+}
+
+/// The shared `energy_rails_j` object shape.
+fn rails_json(r: &RailEnergy) -> Json {
+    Json::obj(vec![
+        ("cpu", Json::from(r.cpu_j)),
+        ("nic", Json::from(r.nic_j)),
+        ("fixed", Json::from(r.fixed_j)),
+        ("idle", Json::from(r.idle_j)),
     ])
 }

@@ -55,6 +55,24 @@
 //! lanes are billed the idle rail, observable to optimizers behind
 //! `--observe-paused`.
 //!
+//! Above the single-host session sits the cluster layer
+//! ([`coordinator::Cluster`]): `sparta fleet --hosts N` shards the lane
+//! fleet round-robin across N per-host [`Session`]s — each sender host
+//! with its own [`energy::HostLedger`], rail calibration, and stream
+//! arena — joined through an N-senders→one-receiver incast topology
+//! ([`net::Topology::incast_host`]: private sender NICs feeding
+//! fair-share slices of the shared WAN and receiver stages, see
+//! [`net::SegmentSpec::shared_slice`]). Host simulations stay fully
+//! independent, so host seeds are identity-derived and cluster reports
+//! are byte-identical at any `--jobs` count; receiver residency is
+//! shared once cluster-wide via [`energy::HostSpec::share`], and fleet
+//! reports resolve energy per host and per rail with Σ per-host
+//! attribution equal to the cluster total. Everything that steps — a
+//! [`Session`] or a [`Cluster`] — presents the same unified
+//! [`coordinator::Stepping`] surface (admit / `step_into` / pause /
+//! resume / cancel / energy queries), so drivers like the fleet loop are
+//! written once and monomorphize over either.
+//!
 //! Scenarios are the *training* substrate too, not just an evaluation toy:
 //! [`experiments::train_pipeline`] takes a [`experiments::TrainSource`]
 //! (bare testbed or registered scenario), explores and fine-tunes under it,
@@ -65,14 +83,18 @@
 //!
 //! The hot path is arena-backed (§Perf): [`net::NetworkSim`] keeps all
 //! stream state in a flat struct-of-arrays [`net::stream::StreamArena`]
-//! and ticks only active streams, [`coordinator::Session`] steps without
-//! allocating (pooled buffers, [`net::Substrate::run_mi_into`],
-//! [`coordinator::Session::step_into`]), and `sparta bench` records the
-//! perf trajectory as `BENCH_*.json` — the fleet churn-heavy scale curve
-//! at 16/64/256 lanes timed against the frozen pre-arena loop
-//! ([`net::baseline::BaselineSim`]), which `tests/golden_replay.rs` also
-//! holds byte-identical to the arena loop, so speedups can never smuggle
-//! in result changes.
+//! and ticks only active streams, and the buffer-taking entry points are
+//! the *required* surface — [`net::Substrate::run_mi_into`] is the one
+//! method substrates implement (`run_mi` is a default allocating
+//! wrapper), and [`coordinator::Session::step_into`] /
+//! [`coordinator::Cluster::step_into`] recycle event buffers across MIs
+//! (`step()` is a convenience wrapper). `sparta bench` records the perf
+//! trajectory as `BENCH_*.json` — the fleet churn-heavy scale curve at
+//! 16/64/256 lanes single-host plus 1024/4096-lane incast cluster points
+//! (8/16 hosts, headline in host-MIs/s), timed against the frozen
+//! pre-arena loop ([`net::baseline::BaselineSim`]), which
+//! `tests/golden_replay.rs` also holds byte-identical to the arena loop,
+//! so speedups can never smuggle in result changes.
 //!
 //! Trained weights split into a write path ([`runtime::WeightStore`]) and a
 //! read path ([`runtime::WeightSnapshot`]): evaluation loads every weight
@@ -88,6 +110,7 @@
 //!
 //! [`Controller`]: coordinator::Controller
 //! [`Session`]: coordinator::Session
+//! [`Cluster`]: coordinator::Cluster
 //!
 //! ## Quick tour
 //!
@@ -164,10 +187,10 @@
 //! generalize::print(&report);
 //! ```
 //!
-//! Perf trajectory — time the fleet churn-heavy scale curve on the arena
-//! loop and the frozen pre-arena baseline, and write `BENCH_6.json`
-//! (`sparta bench --quick` on the CLI; add `--against BENCH_6.json` for
-//! the CI perf-trend ratchet):
+//! Perf trajectory — time the fleet churn-heavy scale curve (including
+//! the incast cluster points) on the arena loop and the frozen pre-arena
+//! baseline, and write `BENCH_7.json` (`sparta bench --quick` on the
+//! CLI; add `--against BENCH_7.json` for the CI perf-trend ratchet):
 //!
 //! ```no_run
 //! use sparta::config::Paths;

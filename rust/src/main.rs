@@ -103,13 +103,63 @@ fn ctx() -> Result<SpartaCtx> {
     SpartaCtx::load(Paths::resolve())
 }
 
-/// `--out <path>`: write a machine-readable report file.
-fn maybe_save(args: &Args, json: &Json) -> Result<()> {
-    if let Some(out) = args.get("out") {
-        save_report(Path::new(out), json)?;
-        println!("report written to {out}");
+/// The flag surface the experiment arms share — `--scenario`, `--jobs`,
+/// `--out`, `--events`, `--observe-paused` — parsed once, in one place, so
+/// `compare`/`sweep`/`fleet`/`transfer`/`bench` can't drift apart in
+/// spelling or defaults. Arms consume the subset that applies and
+/// [`CommonOpts::forbid`] the rest: a flag a subcommand cannot honor is a
+/// loud error, never silently ignored.
+struct CommonOpts<'a> {
+    scenario: Option<&'a str>,
+    jobs: usize,
+    /// Whether `--jobs` was given explicitly (vs the all-cores default) —
+    /// lets `bench`, which always times at jobs 1, reject it loudly.
+    jobs_given: bool,
+    out: Option<&'a str>,
+    events: Option<&'a str>,
+    observe_paused: bool,
+}
+
+impl<'a> CommonOpts<'a> {
+    fn parse(args: &'a Args) -> Result<CommonOpts<'a>> {
+        Ok(CommonOpts {
+            scenario: args.get("scenario"),
+            jobs: args.get_usize("jobs", experiments::default_jobs()).map_err(|e| anyhow!(e))?,
+            jobs_given: args.get("jobs").is_some(),
+            out: args.get("out"),
+            events: args.get("events"),
+            observe_paused: args.flag("observe-paused"),
+        })
     }
-    Ok(())
+
+    /// Write the machine-readable report when `--out` was given — the one
+    /// save path every arm shares.
+    fn save(&self, json: &Json) -> Result<()> {
+        if let Some(out) = self.out {
+            save_report(Path::new(out), json)?;
+            println!("report written to {out}");
+        }
+        Ok(())
+    }
+
+    /// Reject common flags this subcommand cannot honor, with uniform
+    /// error text.
+    fn forbid(&self, cmd: &str, flags: &[&str]) -> Result<()> {
+        for f in flags {
+            let given = match *f {
+                "scenario" => self.scenario.is_some(),
+                "jobs" => self.jobs_given,
+                "out" => self.out.is_some(),
+                "events" => self.events.is_some(),
+                "observe-paused" => self.observe_paused,
+                other => unreachable!("unknown common flag '{other}'"),
+            };
+            if given {
+                return Err(anyhow!("--{f} is not supported by `sparta {cmd}`"));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// `--methods a,b,c` on `compare`, defaulting to the paper's six methods.
@@ -123,9 +173,8 @@ fn methods_arg(args: &Args) -> Vec<String> {
 fn dispatch(args: &Args) -> Result<()> {
     let scale = Scale::by_name(args.get_or("scale", "quick"));
     let seed = args.get_u64("seed", 42).map_err(|e| anyhow!(e))?;
-    let jobs = args
-        .get_usize("jobs", experiments::default_jobs())
-        .map_err(|e| anyhow!(e))?;
+    let common = CommonOpts::parse(args)?;
+    let jobs = common.jobs;
     match args.subcommand.as_deref() {
         None | Some("help") => {
             println!("{}", HELP);
@@ -256,7 +305,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 jobs,
             )?;
             experiments::generalize::print(&report);
-            maybe_save(args, &experiments::generalize::to_json(&report))?;
+            common.save(&experiments::generalize::to_json(&report))?;
             Ok(())
         }
         Some("transfer") => {
@@ -274,7 +323,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // records carrying idle energy (a single batch transfer is never
             // paused, but the knob is plumbed for session-driving callers).
             let mut session = builder
-                .observe_paused(args.flag("observe-paused"))
+                .observe_paused(common.observe_paused)
                 .seed(seed)
                 .build();
             session.admit(
@@ -285,7 +334,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // Stream MI-granular events to --events FILE while the report
             // sink rebuilds the summary from the same stream.
             let mut report_sink = ReportSink::new();
-            match args.get("events") {
+            match common.events {
                 Some(path) => {
                     let f = std::fs::File::create(path)
                         .map_err(|e| anyhow!("creating {path}: {e}"))?;
@@ -312,12 +361,11 @@ fn dispatch(args: &Args) -> Result<()> {
             t.row(vec!["energy/GB (J)".into(), format!("{:.1}", lane.energy_per_gb())]);
             t.row(vec!["avg plr".into(), format!("{:.5}", lane.avg_plr())]);
             t.print();
-            if let Some(out) = args.get("out") {
-                sparta::telemetry::save_report(std::path::Path::new(out), &lane_json(lane))?;
-            }
+            common.save(&lane_json(lane))?;
             Ok(())
         }
         Some("sweep") => {
+            common.forbid("sweep", &["events", "observe-paused"])?;
             let grid = [1u32, 2, 4, 8, 16];
             // `--scenario all`: iterate the full registry and emit one
             // combined report.
@@ -328,7 +376,7 @@ fn dispatch(args: &Args) -> Result<()> {
                     experiments::fig1::print(&pts, &grid);
                     combined.extend(pts);
                 }
-                maybe_save(args, &experiments::fig1::to_json(&combined))?;
+                common.save(&experiments::fig1::to_json(&combined))?;
                 return Ok(());
             }
             let pts = match scenario_arg(args)? {
@@ -339,7 +387,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 }
             };
             experiments::fig1::print(&pts, &grid);
-            maybe_save(args, &experiments::fig1::to_json(&pts))?;
+            common.save(&experiments::fig1::to_json(&pts))?;
             Ok(())
         }
         Some("algos") => {
@@ -354,7 +402,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 jobs,
             )?;
             experiments::fig4::print(&cells);
-            maybe_save(args, &experiments::fig4::to_json(&cells))?;
+            common.save(&experiments::fig4::to_json(&cells))?;
             Ok(())
         }
         Some("tune") => {
@@ -366,10 +414,11 @@ fn dispatch(args: &Args) -> Result<()> {
                 jobs,
             )?;
             experiments::fig5::print(&curves);
-            maybe_save(args, &experiments::fig5::to_json(&curves))?;
+            common.save(&experiments::fig5::to_json(&curves))?;
             Ok(())
         }
         Some("compare") => {
+            common.forbid("compare", &["events", "observe-paused"])?;
             let scenarios = scenario_list_arg(args)?;
             let methods = methods_arg(args);
             let cells = experiments::fig6::run(
@@ -387,7 +436,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 let (thr, en) = experiments::fig6::headline(&cells);
                 println!("\nheadline: +{thr:.0}% throughput, -{en:.0}% energy vs static tools");
             }
-            maybe_save(args, &experiments::fig6::to_json(&cells))?;
+            common.save(&experiments::fig6::to_json(&cells))?;
             Ok(())
         }
         Some("fairness") => {
@@ -413,14 +462,17 @@ fn dispatch(args: &Args) -> Result<()> {
             } else {
                 experiments::table1::to_json(&rows)
             };
-            maybe_save(args, &json)?;
+            common.save(&json)?;
             Ok(())
         }
         Some("bench") => {
-            // Perf trajectory: fleet churn-heavy scale curve + hot-path
-            // microbenches, emitted as BENCH_6.json (schema v2 in
+            // Perf trajectory: fleet churn-heavy scale curve (single-host
+            // sizes plus the incast cluster points) + hot-path
+            // microbenches, emitted as BENCH_7.json (schema v3 in
             // `experiments::bench`). `--quick` is the CI lane; `--against`
-            // turns the run into the perf-trend ratchet.
+            // turns the run into the perf-trend ratchet. Bench always
+            // times at jobs 1, so an explicit --jobs is rejected.
+            common.forbid("bench", &["scenario", "jobs", "events", "observe-paused"])?;
             let lanes = match args.get("lanes") {
                 None => None,
                 Some(s) => {
@@ -439,7 +491,7 @@ fn dispatch(args: &Args) -> Result<()> {
             };
             let report = experiments::bench::run(&Paths::resolve(), opts)?;
             experiments::bench::print(&report);
-            let out = args.get_or("out", "BENCH_6.json");
+            let out = common.out.unwrap_or("BENCH_7.json");
             save_report(Path::new(out), &experiments::bench::to_json(&report))?;
             println!("bench report written to {out}");
             if let Some(anchor_path) = args.get("against") {
@@ -468,7 +520,8 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("fleet") => {
-            let name = args.get("scenario").ok_or_else(|| {
+            common.forbid("fleet", &["events"])?;
+            let name = common.scenario.ok_or_else(|| {
                 anyhow!(
                     "fleet needs --scenario <schedule> (one of: {})",
                     ArrivalSchedule::names().join(", ")
@@ -487,10 +540,18 @@ fn dispatch(args: &Args) -> Result<()> {
                 None => ["falcon_mp", "2-phase", "rclone"].iter().map(|m| m.to_string()).collect(),
                 Some(list) => list.split(',').map(|m| m.trim().to_string()).collect(),
             };
+            // --hosts N: run every trial as an incast cluster of N sender
+            // hosts sharing the schedule testbed's WAN and one receiver.
+            let hosts = args.get_usize("hosts", 1).map_err(|e| anyhow!(e))?;
             // --compare-observe: run the yield-policy fleet blind and with
             // pause-cost observation, side by side (lanes that see their
             // idle bills pause less eagerly).
             if args.flag("compare-observe") {
+                if hosts > 1 {
+                    return Err(anyhow!(
+                        "--compare-observe runs single-host fleets (drop --hosts)"
+                    ));
+                }
                 let (blind, observing) = experiments::fleet::run_observe_comparison(
                     &Paths::resolve(),
                     &schedule,
@@ -502,18 +563,15 @@ fn dispatch(args: &Args) -> Result<()> {
                 experiments::fleet::print(&blind);
                 experiments::fleet::print(&observing);
                 experiments::fleet::print_comparison(&blind, &observing);
-                if let Some(out) = args.get("out") {
-                    let json = Json::obj(vec![
-                        ("blind", experiments::fleet::to_json(&blind)),
-                        ("observing", experiments::fleet::to_json(&observing)),
-                    ]);
-                    save_report(Path::new(out), &json)?;
-                    println!("report written to {out}");
-                }
+                common.save(&Json::obj(vec![
+                    ("blind", experiments::fleet::to_json(&blind)),
+                    ("observing", experiments::fleet::to_json(&observing)),
+                ]))?;
                 return Ok(());
             }
             let opts = experiments::fleet::FleetOpts {
-                observe_paused: args.flag("observe-paused"),
+                observe_paused: common.observe_paused,
+                hosts,
                 ..experiments::fleet::FleetOpts::default()
             };
             let report = experiments::fleet::run(
@@ -526,7 +584,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 opts,
             )?;
             experiments::fleet::print(&report);
-            maybe_save(args, &experiments::fleet::to_json(&report))?;
+            common.save(&experiments::fleet::to_json(&report))?;
             Ok(())
         }
         Some(other) => Err(anyhow!("unknown subcommand '{other}' — try `sparta help`")),
@@ -606,16 +664,25 @@ subcommands:
                                            power is paid once per host
             [--observe-paused]             (optimizers see paused MIs: idle
                                            energy bills, preemption cost)
+            [--hosts N]                    (incast cluster: shard the lanes
+                                           round-robin over N sender hosts,
+                                           each with its own ledgers, feeding
+                                           a shared WAN + receiver; reports
+                                           gain per-host rail rows and stay
+                                           bit-identical at any --jobs)
             [--compare-observe]            (yield-policy churn comparison:
                                            blind vs pause-cost-observing lanes;
                                            observing lanes pause less eagerly)
   bench     [--quick] [--out FILE]        perf trajectory: fleet churn-heavy
-                                           at 16/64/256 lanes + simulator-MI
-                                           and Session-step microbenches,
-                                           written as BENCH_6.json, schema v2
-                                           (the CI bench lane uploads it;
-                                           speedups are vs the recorded
-                                           pre-arena baseline)
+                                           at 16/64/256 lanes single-host plus
+                                           incast cluster points (1024 lanes x
+                                           8 hosts; full mode adds 4096 x 16)
+                                           + simulator-MI and Session-step
+                                           microbenches, written as
+                                           BENCH_7.json, schema v3 (the CI
+                                           bench lane uploads it; speedups are
+                                           vs the recorded pre-arena baseline;
+                                           always times at --jobs 1)
             [--iters N]                    (stable mode: keep the min wall of
                                            N timing repetitions per point)
             [--lanes L1,L2,...]            (restrict the curve to these
@@ -650,6 +717,10 @@ common flags: --scale quick|paper  --seed N  --jobs N  --quiet --verbose
   cores); every experiment evaluates over one shared read-only weight
   snapshot and seeds each cell from its own identity, so reports are
   bit-identical at any jobs count for a fixed seed
-  --out FILE (sweep/algos/tune/compare/table1/generalize/fleet) writes a
-  JSON report
+  --out FILE (sweep/algos/tune/compare/table1/generalize/fleet/transfer/
+  bench) writes a JSON report
+  --scenario/--jobs/--out/--events/--observe-paused are parsed by one
+  shared helper with one spelling and one default everywhere; a subcommand
+  that cannot honor one of them rejects it loudly (e.g. --events outside
+  transfer, --jobs on bench) instead of silently ignoring it
 ";

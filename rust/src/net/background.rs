@@ -58,6 +58,31 @@ impl Background {
         }
     }
 
+    /// Scale every nominal rate by `f`, keeping timing/switching behavior
+    /// unchanged — one host's fair share of cross traffic on a stage
+    /// shared by `1/f` hosts (see
+    /// [`super::topology::SegmentSpec::shared_slice`]).
+    pub fn scaled(self, f: f64) -> Background {
+        match self {
+            Background::Idle => Background::Idle,
+            Background::Constant { gbps } => Background::Constant { gbps: gbps * f },
+            Background::Diurnal { mean_gbps, amplitude_gbps, period_s, jitter_gbps } => {
+                Background::Diurnal {
+                    mean_gbps: mean_gbps * f,
+                    amplitude_gbps: amplitude_gbps * f,
+                    period_s,
+                    jitter_gbps: jitter_gbps * f,
+                }
+            }
+            Background::Bursty { low_gbps, high_gbps, switch_prob } => {
+                Background::Bursty { low_gbps: low_gbps * f, high_gbps: high_gbps * f, switch_prob }
+            }
+            Background::Steps { schedule } => Background::Steps {
+                schedule: schedule.into_iter().map(|(t, g)| (t, g * f)).collect(),
+            },
+        }
+    }
+
     pub fn into_state(self) -> BackgroundState {
         BackgroundState {
             spec: self,

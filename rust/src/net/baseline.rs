@@ -297,7 +297,7 @@ impl Substrate for BaselineSim {
         self.flows[id.0].active_stream_count()
     }
 
-    fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
+    fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>) {
         for f in &mut self.flows {
             f.acc_delivered_bits = 0.0;
             f.acc_sent_bits = 0.0;
@@ -312,7 +312,7 @@ impl Substrate for BaselineSim {
         let actual_dur = ticks as f64 * self.cfg.tick_s;
         let noise = self.cfg.rtt_noise_s;
         let fallback_rtt = self.link_rtt_s();
-        let mut out = Vec::with_capacity(self.flows.len());
+        out.clear();
         // Borrow dance: collect metrics first, then add noise with rng.
         let metrics: Vec<(f64, f64, f64, f64, usize)> = self
             .flows
@@ -337,7 +337,6 @@ impl Substrate for BaselineSim {
                 duration_s: actual_dur,
             });
         }
-        out
     }
 
     fn time_s(&self) -> f64 {

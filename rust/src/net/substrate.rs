@@ -11,8 +11,8 @@
 use super::sim::{FlowId, MiMetrics, NetworkSim};
 use super::testbed::Testbed;
 
-/// A network substrate: the `add_flow` / `set_cc_p` / `run_mi` surface of
-/// [`NetworkSim`], object-safe so controllers can hold `Box<dyn Substrate>`.
+/// A network substrate: the `add_flow` / `set_cc_p` / `run_mi_into` surface
+/// of [`NetworkSim`], object-safe so controllers can hold `Box<dyn Substrate>`.
 pub trait Substrate: Send {
     /// Add a flow with an engine-specific per-task I/O cap; returns its id.
     /// `task_io_gbps = None` uses the testbed's efficient-engine default.
@@ -27,16 +27,22 @@ pub trait Substrate: Send {
     /// Number of currently active streams of a flow.
     fn active_streams(&self, id: FlowId) -> usize;
 
-    /// Advance one monitoring interval of `dur_s` seconds; returns per-flow
-    /// metrics in flow-id order.
-    fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics>;
+    /// Advance one monitoring interval of `dur_s` seconds, writing per-flow
+    /// metrics in flow-id order into a caller-reused buffer (cleared first).
+    ///
+    /// This is the trait's single source of truth for MI stepping — the
+    /// allocation-free path the session's step loop and the cluster drive
+    /// (§Perf). Implementations must leave `out` holding exactly one
+    /// [`MiMetrics`] per flow, regardless of the buffer's prior contents.
+    fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>);
 
-    /// Like [`Substrate::run_mi`], writing into a caller-reused buffer —
-    /// the allocation-free path the session's step loop drives (§Perf).
-    /// The default delegates to `run_mi`; substrates with a native
-    /// zero-alloc path (the arena [`NetworkSim`]) override it.
-    fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>) {
-        *out = self.run_mi(dur_s);
+    /// Allocating convenience wrapper over [`Substrate::run_mi_into`] for
+    /// tests and one-shot probes. External drivers on the hot path should
+    /// hold a buffer and call `run_mi_into` instead.
+    fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
+        let mut out = Vec::new();
+        self.run_mi_into(dur_s, &mut out);
+        out
     }
 
     /// Simulated time elapsed, seconds.
@@ -64,10 +70,6 @@ impl Substrate for NetworkSim {
 
     fn active_streams(&self, id: FlowId) -> usize {
         NetworkSim::active_streams(self, id)
-    }
-
-    fn run_mi(&mut self, dur_s: f64) -> Vec<MiMetrics> {
-        NetworkSim::run_mi(self, dur_s)
     }
 
     fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>) {
@@ -103,6 +105,11 @@ mod tests {
         let m = sub.run_mi(1.0);
         assert_eq!(m.len(), 1);
         assert!(m[0].rtt_s > 0.0);
+        // The allocating wrapper and the buffer path share one source of
+        // truth: a dirty, over-capacity buffer comes back identical.
+        let mut buf = vec![m[0]; 7];
+        sub.run_mi_into(1.0, &mut buf);
+        assert_eq!(buf.len(), 1);
         assert!(sub.time_s() > 0.0);
         assert_eq!(sub.testbed().name, "chameleon");
     }

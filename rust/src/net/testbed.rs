@@ -110,6 +110,19 @@ impl Testbed {
     pub fn energy_hosts(&self) -> EnergyConfig {
         EnergyConfig::Hosts { sender: self.sender_host(), receiver: self.receiver_host() }
     }
+
+    /// Host-resolved accounting for sender host `h` of an incast fleet of
+    /// `hosts` senders: a private sender host (`<name>-tx<h>`) plus a
+    /// `1/hosts` share of the single physical receiver
+    /// ([`HostSpec::share`]), so summing attribution over every host
+    /// session pays the receiver's residency exactly once — the cluster
+    /// conservation invariant.
+    pub fn energy_hosts_of(&self, h: usize, hosts: usize) -> EnergyConfig {
+        EnergyConfig::Hosts {
+            sender: HostSpec::efficient(format!("{}-tx{h}", self.name)),
+            receiver: self.receiver_host().share(hosts),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -70,6 +70,23 @@ impl SegmentSpec {
         self
     }
 
+    /// This stage as one host's static fair share of a segment shared by
+    /// `n` sender hosts: capacity divides by `n`, and because `buffer_s`
+    /// is a *duration* at stage capacity, the bit-buffer scales down
+    /// proportionally too (each host owns 1/n of the queue). Delay and
+    /// cross traffic semantics are unchanged — per-host cross traffic is
+    /// the caller's share. A static slice keeps host simulations fully
+    /// independent, which is what makes cluster runs bit-identical at any
+    /// shard count.
+    pub fn shared_slice(mut self, n: usize) -> SegmentSpec {
+        let n = n.max(1) as f64;
+        self.capacity_gbps /= n;
+        if let Some(bg) = self.background.take() {
+            self.background = Some(bg.scaled(1.0 / n));
+        }
+        self
+    }
+
     /// Build the droptail link for this stage.
     pub fn link(&self) -> Link {
         // Link sizes its buffer as a multiple of capacity × delay, so a
@@ -100,6 +117,32 @@ impl Topology {
                 SegmentSpec::wan_of(tb),
                 SegmentSpec::edge("rx", rx_gbps),
             ],
+        }
+    }
+
+    /// One sender host's path in an N-senders → one-receiver **incast**
+    /// fleet: a private full-rate NIC edge, then the testbed WAN and a
+    /// receiver-ingest edge both sliced to this host's static fair share
+    /// (capacity and queue each divided by `hosts`; per-host share of the
+    /// WAN cross traffic rides along). The receiver edge is provisioned at
+    /// `rx_over_wan` × WAN capacity *before* slicing — below `hosts` ×
+    /// that, the receiver, not the WAN, is the incast bottleneck.
+    ///
+    /// Hosts simulate independently over their slices (no cross-host
+    /// coupling), which is what keeps cluster fleets bit-identical at any
+    /// shard count ([`crate::coordinator::Cluster`]).
+    pub fn incast_host(tb: &Testbed, hosts: usize, rx_over_wan: f64) -> Topology {
+        // Attach the testbed's default cross traffic *before* slicing so
+        // the per-host WAN slice carries its 1/hosts share of it (a bare
+        // WAN segment would inherit the full-capacity background from
+        // `NetworkSim::from_topology`).
+        let wan = SegmentSpec::wan_of(tb)
+            .with_background(tb.default_background.clone())
+            .shared_slice(hosts);
+        let rx =
+            SegmentSpec::edge("rx", tb.capacity_gbps * rx_over_wan).shared_slice(hosts);
+        Topology {
+            segments: vec![SegmentSpec::edge("nic", tb.capacity_gbps), wan, rx],
         }
     }
 
@@ -165,6 +208,26 @@ mod tests {
         assert!(topo.segments[0].background.is_none());
         assert!(topo.segments[1].background.is_some());
         assert!(topo.segments[2].background.is_none());
+    }
+
+    #[test]
+    fn incast_host_slices_shared_stages() {
+        let tb = Testbed::chameleon();
+        let solo = Topology::incast_host(&tb, 1, 0.8);
+        let topo = Topology::incast_host(&tb, 4, 0.8);
+        let names: Vec<&str> = topo.segments.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["nic", "wan", "rx"]);
+        assert_eq!(topo.wan_index(), 1);
+        // NIC stays private/full-rate; WAN and RX divide by host count.
+        assert_eq!(topo.segments[0].capacity_gbps, tb.capacity_gbps);
+        assert!((topo.segments[1].capacity_gbps - tb.capacity_gbps / 4.0).abs() < 1e-12);
+        assert!((topo.segments[2].capacity_gbps - 0.8 * tb.capacity_gbps / 4.0).abs() < 1e-12);
+        // The bit-buffer scales with the slice (buffer_s is a duration).
+        let full = solo.segments[1].link().buffer_bits;
+        let slice = topo.segments[1].link().buffer_bits;
+        assert!((slice - full / 4.0).abs() < 1.0, "{slice} vs {full}/4");
+        // Receiver ingest, not the WAN, is the incast bottleneck.
+        assert_eq!(topo.min_capacity_gbps(), topo.segments[2].capacity_gbps);
     }
 
     #[test]

@@ -253,6 +253,94 @@ fn observing_fleets_pause_less_eagerly_than_blind() {
     }
 }
 
+/// Cluster-scale conservation: a 3-sender-host incast cluster under churn
+/// — mid-run admissions, a pause window, a cancel — conserves energy at
+/// every level of the hierarchy: Σ global lane attribution == each host's
+/// ledger total (per host) == Σ per-host totals == cluster total, with
+/// paused lanes still billing idle rails while preempted.
+#[test]
+fn cluster_attribution_conserves_across_hosts_under_churn() {
+    use sparta::coordinator::{Cluster, LaneId, INCAST_RX_OVER_WAN};
+    use sparta::net::Topology;
+    let tb = Testbed::chameleon();
+    let hosts = 3usize;
+    for seed in [3u64, 41] {
+        let mut c = Cluster::build(hosts, seed, |h, host_seed| {
+            Session::builder(tb.clone())
+                .topology(Topology::incast_host(&tb, hosts, INCAST_RX_OVER_WAN))
+                .energy(tb.energy_hosts_of(h, hosts))
+                .observe_paused(true)
+                .seed(host_seed)
+                .build()
+        });
+        // Churn across all three hosts (round-robin placement): two lanes
+        // up front, three admitted mid-run, one paused through a window,
+        // one cancelled before it can complete.
+        let a = c.admit(static_lane(64));
+        let b = c.admit(static_lane(256));
+        let mut lanes = vec![a, b];
+        let mut at_pause = 0.0;
+        // One reused event buffer — the cluster stepping surface is the
+        // same buffer-taking primitive sessions expose.
+        let mut events = Vec::new();
+        for mi in 0..90 {
+            match mi {
+                4 => lanes.push(c.admit(static_lane(128))),
+                7 => lanes.push(c.admit(static_lane(16))),
+                12 => lanes.push(c.admit(static_lane(96))),
+                20 => {
+                    assert!(c.pause(a));
+                    at_pause = c.lane_energy_j(a).unwrap();
+                }
+                40 => {
+                    // The paused lane kept billing its idle rails.
+                    assert!(
+                        c.lane_energy_j(a).unwrap() > at_pause,
+                        "seed {seed}: no idle energy accrued while paused"
+                    );
+                    assert!(c.resume(a));
+                }
+                55 => {
+                    assert!(c.cancel(b));
+                }
+                _ => {}
+            }
+            c.step_into(&mut events);
+        }
+        // Per-host conservation: each host session's lanes sum to that
+        // host's ledger truth.
+        let mut per_host_sum = 0.0;
+        for s in c.hosts() {
+            let host_j = s.host_energy_j();
+            let host_attr: f64 =
+                (0..s.lane_count()).map(|k| s.lane_energy_j(LaneId(k)).unwrap()).sum();
+            assert!(
+                (host_attr - host_j).abs() <= 1e-9 * host_j.max(1.0),
+                "seed {seed}: host attribution leaked: {host_attr} vs {host_j}"
+            );
+            per_host_sum += host_j;
+        }
+        // Cluster-level conservation: global lane attribution and the
+        // per-host totals both equal the cluster truth.
+        let cluster_j = c.host_energy_j();
+        let attributed: f64 = lanes.iter().map(|&id| c.lane_energy_j(id).unwrap()).sum();
+        assert!(cluster_j > 0.0);
+        assert!(
+            (per_host_sum - cluster_j).abs() <= 1e-9 * cluster_j,
+            "seed {seed}: per-host totals {per_host_sum} J vs cluster {cluster_j} J"
+        );
+        assert!(
+            (attributed - cluster_j).abs() <= 1e-9 * cluster_j,
+            "seed {seed}: lane attribution {attributed} J vs cluster {cluster_j} J"
+        );
+        // Rails resolve cluster-wide too, and the pause window left its
+        // mark on the idle rail.
+        let rails = c.energy_rails().expect("host-resolved cluster has rails");
+        assert!((rails.total_j() - cluster_j).abs() <= 1e-6 * cluster_j);
+        assert!(rails.idle_j > 0.0, "seed {seed}: paused window billed no idle rail");
+    }
+}
+
 /// Sanity on the host definitions themselves: the efficient host spec's
 /// single-lane power equals the lumped curve (compat anchor used by both
 /// fig1's rail columns and the testbed presets).
