@@ -124,4 +124,30 @@ impl Optimizer for DrlOptimizer {
     fn is_learning(&self) -> bool {
         self.online_learning
     }
+
+    fn state_vec(&self) -> Vec<f64> {
+        // A frozen policy net is a rebuild-time constant; only the wrapper's
+        // decision bookkeeping is captured (last_state length-prefixed).
+        let mut v = vec![
+            self.idle_underuse as f64,
+            if self.last_action.is_some() { 1.0 } else { 0.0 },
+            self.last_action.unwrap_or(0) as f64,
+            self.last_state.len() as f64,
+        ];
+        v.extend(self.last_state.iter().map(|&x| x as f64));
+        v
+    }
+
+    fn restore_state(&mut self, state: &[f64]) {
+        if state.len() < 4 {
+            return;
+        }
+        let n = state[3] as usize;
+        if state.len() != 4 + n {
+            return;
+        }
+        self.idle_underuse = state[0] as u32;
+        self.last_action = (state[1] != 0.0).then_some(state[2] as usize);
+        self.last_state = state[4..].iter().map(|&x| x as f32).collect();
+    }
 }

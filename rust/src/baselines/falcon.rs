@@ -138,6 +138,40 @@ impl Optimizer for FalconMp {
         }
         Decision { cc: self.cc, p: self.p, action: None }
     }
+
+    fn state_vec(&self) -> Vec<f64> {
+        vec![
+            self.cc as f64,
+            self.p as f64,
+            if self.prev_utility.is_some() { 1.0 } else { 0.0 },
+            self.prev_utility.unwrap_or(0.0),
+            self.acc,
+            self.acc_n as f64,
+            self.direction as f64,
+            if self.axis_p { 1.0 } else { 0.0 },
+            self.reversals as f64,
+            if self.holding { 1.0 } else { 0.0 },
+            self.hold_left as f64,
+        ]
+    }
+
+    fn restore_state(&mut self, state: &[f64]) {
+        let [cc, p, has_prev, prev, acc, acc_n, direction, axis_p, reversals, holding, hold_left] =
+            state
+        else {
+            return;
+        };
+        self.cc = *cc as u32;
+        self.p = *p as u32;
+        self.prev_utility = (*has_prev != 0.0).then_some(*prev);
+        self.acc = *acc;
+        self.acc_n = *acc_n as usize;
+        self.direction = *direction as i32;
+        self.axis_p = *axis_p != 0.0;
+        self.reversals = *reversals as u32;
+        self.holding = *holding != 0.0;
+        self.hold_left = *hold_left as usize;
+    }
 }
 
 #[cfg(test)]

@@ -44,7 +44,7 @@
 //! owning host's pool ([`Session::recycle_record`]), keeping cluster
 //! stepping allocation-free at steady state (§Perf in [`super::session`]).
 
-use super::session::{Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session};
+use super::session::{Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session, SessionState};
 use crate::energy::RailEnergy;
 use crate::net::{Testbed, Topology};
 use crate::util::rng::mix_seed;
@@ -247,6 +247,42 @@ impl Cluster {
     pub fn testbed(&self) -> &Testbed {
         self.hosts[0].testbed()
     }
+
+    /// Capture the cluster's complete logical state at an MI boundary: the
+    /// lockstep MI counter plus every host session's capture, host order.
+    /// `None` under the same conditions as [`Session::export_state`] on any
+    /// host. The lane placement (`locus`/`global_of`/round-robin cursor) is
+    /// regenerated by replaying the admission sequence, so it is not part
+    /// of the capture.
+    pub fn export_state(&self) -> Option<ClusterState> {
+        Some(ClusterState {
+            mi: self.mi,
+            hosts: self.hosts.iter().map(Session::export_state).collect::<Option<Vec<_>>>()?,
+        })
+    }
+
+    /// Restore a [`Cluster::export_state`] capture into a cluster rebuilt
+    /// with the same configuration, seed and admission sequence. Returns
+    /// `false` on a shape mismatch (see [`Session::import_state`]).
+    pub fn import_state(&mut self, state: &ClusterState) -> bool {
+        if self.hosts.len() != state.hosts.len() {
+            return false;
+        }
+        if !self.hosts.iter_mut().zip(&state.hosts).all(|(h, s)| h.import_state(s)) {
+            return false;
+        }
+        self.mi = state.mi;
+        true
+    }
+}
+
+/// A captured [`Cluster`] (see [`Cluster::export_state`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterState {
+    /// Cluster MIs stepped (hosts run in lockstep).
+    pub mi: usize,
+    /// One capture per host session, host order.
+    pub hosts: Vec<SessionState>,
 }
 
 #[cfg(test)]

@@ -33,13 +33,14 @@ pub mod session;
 pub mod state;
 
 pub use actions::{ActionId, ParamBounds, ACTIONS, N_ACTIONS};
-pub use cluster::{Cluster, INCAST_RX_OVER_WAN};
+pub use cluster::{Cluster, ClusterState, INCAST_RX_OVER_WAN};
 pub use controller::{Controller, ControllerBuilder, LaneReport, RunReport};
-pub use reward::{RewardConfig, RewardKind, RewardTracker};
+pub use reward::{RewardConfig, RewardKind, RewardTracker, TrackerState};
 pub use session::{
-    Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session, SessionBuilder, DEFAULT_MAX_MIS,
+    Event, LaneId, LaneSpec, LaneState, LaneStatus, MiRecord, Session, SessionBuilder,
+    SessionState, DEFAULT_MAX_MIS,
 };
-pub use state::{FeatureWindow, Observation, FEATURES};
+pub use state::{FeatureWindow, Observation, WindowState, FEATURES};
 
 /// The unified stepping surface: one host ([`Session`]) or a sharded fleet
 /// of hosts ([`Cluster`]) behind the same admit / step-into-buffer /
@@ -251,4 +252,17 @@ pub trait Optimizer {
     fn is_learning(&self) -> bool {
         false
     }
+
+    /// The optimizer's mutable decision state as a flat `f64` vector, for
+    /// checkpointing. Paired with [`Optimizer::restore_state`]: a fresh
+    /// optimizer built with the same constructor arguments, `start`-ed and
+    /// then restored, must decide exactly as the captured one would. The
+    /// empty default is correct for stateless policies (e.g. static tools).
+    fn state_vec(&self) -> Vec<f64> {
+        Vec::new()
+    }
+
+    /// Restore a [`Optimizer::state_vec`] capture. The default ignores it
+    /// (stateless policies).
+    fn restore_state(&mut self, _state: &[f64]) {}
 }

@@ -161,6 +161,35 @@ impl RewardTracker {
         self.hist_energy.clear();
         self.prev_metric = None;
     }
+
+    /// Capture the tracker's mutable state for checkpointing (`kind` and
+    /// `cfg` are rebuild-time constants).
+    pub fn export_state(&self) -> TrackerState {
+        TrackerState {
+            hist_util: self.hist_util.iter().copied().collect(),
+            hist_thr: self.hist_thr.iter().copied().collect(),
+            hist_energy: self.hist_energy.iter().copied().collect(),
+            prev_metric: self.prev_metric,
+        }
+    }
+
+    /// Restore a [`RewardTracker::export_state`] capture.
+    pub fn import_state(&mut self, state: &TrackerState) {
+        self.hist_util = state.hist_util.iter().copied().collect();
+        self.hist_thr = state.hist_thr.iter().copied().collect();
+        self.hist_energy = state.hist_energy.iter().copied().collect();
+        self.prev_metric = state.prev_metric;
+    }
+}
+
+/// A captured [`RewardTracker`]: the three metric histories (oldest first)
+/// and the previous windowed metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrackerState {
+    pub hist_util: Vec<f64>,
+    pub hist_thr: Vec<f64>,
+    pub hist_energy: Vec<f64>,
+    pub prev_metric: Option<f64>,
 }
 
 fn push_cap(q: &mut VecDeque<f64>, v: f64, cap: usize) {

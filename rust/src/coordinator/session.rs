@@ -49,12 +49,12 @@
 //! events and reports share the same backing string.
 
 use super::actions::ParamBounds;
-use super::reward::{RewardConfig, RewardKind, RewardTracker};
-use super::state::{FeatureWindow, Observation};
+use super::reward::{RewardConfig, RewardKind, RewardTracker, TrackerState};
+use super::state::{FeatureWindow, Observation, WindowState};
 use super::{Decision, MiContext, Optimizer};
-use crate::energy::{EnergyConfig, EnergyPlane, LaneActivity, LaneBill, RailEnergy};
+use crate::energy::{EnergyConfig, EnergyPlane, LaneActivity, LaneBill, LedgerState, RailEnergy};
 use crate::net::background::Background;
-use crate::net::{FlowId, MiMetrics, NetworkSim, Substrate, Testbed, Topology};
+use crate::net::{FlowId, MiMetrics, NetworkSim, SimState, Substrate, Testbed, Topology};
 use crate::telemetry::TelemetrySink;
 use crate::transfer::{EngineProfile, TransferJob};
 use std::sync::Arc;
@@ -857,6 +857,70 @@ impl Session {
         self.lanes.get(id.0).map(|l| l.name.as_ref())
     }
 
+    /// Capture the session's complete logical state at an MI boundary, for
+    /// checkpointing (`sparta serve` snapshots). Returns `None` when the
+    /// substrate cannot checkpoint itself ([`Substrate::save_state`] is
+    /// `None` — e.g. the frozen baseline sim) or when control events are
+    /// still queued (`admit`/`pause`/… called since the last step) — a
+    /// capture between a control call and its step would lose those events.
+    pub fn export_state(&self) -> Option<SessionState> {
+        if !self.pending.is_empty() {
+            return None;
+        }
+        let sim = self.sim.save_state()?;
+        Some(SessionState {
+            mi: self.mi,
+            lanes: self
+                .lanes
+                .iter()
+                .map(|l| LaneState {
+                    status: l.status,
+                    cc: l.cc,
+                    p: l.p,
+                    has_pending_decision: l.has_pending_decision,
+                    delivered_bytes: l.job.delivered_bytes(),
+                    window: l.window.export_state(),
+                    reward: l.reward.export_state(),
+                    optimizer: l.optimizer.state_vec(),
+                })
+                .collect(),
+            energy: self.energy.export_state(),
+            sim,
+        })
+    }
+
+    /// Restore a [`Session::export_state`] capture into a session rebuilt
+    /// with the same builder configuration, seed and admission sequence
+    /// (the replay-then-inject restore contract: constructors and `admit`
+    /// calls rebuild every rebuild-time constant, this injects the mutable
+    /// state). The replayed admissions' queued `Admitted` events are
+    /// discarded — they already streamed before the capture. Subsequent
+    /// stepping is bit-identical to the captured session's. Returns `false`
+    /// (session partially untouched) on a shape mismatch.
+    pub fn import_state(&mut self, state: &SessionState) -> bool {
+        if self.lanes.len() != state.lanes.len() {
+            return false;
+        }
+        if !self.sim.load_state(&state.sim) || !self.energy.import_state(&state.energy) {
+            return false;
+        }
+        for (lane, ls) in self.lanes.iter_mut().zip(&state.lanes) {
+            lane.status = ls.status;
+            lane.cc = ls.cc;
+            lane.p = ls.p;
+            lane.has_pending_decision = ls.has_pending_decision;
+            // A fresh job's credit is zero, so one advance restores the
+            // delivered total bit-exactly (0.0 + x == x).
+            lane.job.advance(ls.delivered_bytes);
+            lane.window.import_state(&ls.window);
+            lane.reward.import_state(&ls.reward);
+            lane.optimizer.restore_state(&ls.optimizer);
+        }
+        self.mi = state.mi;
+        self.pending.clear();
+        true
+    }
+
     pub fn bounds(&self) -> &ParamBounds {
         &self.bounds
     }
@@ -864,6 +928,37 @@ impl Session {
     pub fn testbed(&self) -> &Testbed {
         self.sim.testbed()
     }
+}
+
+/// A captured [`Session`] at an MI boundary (see [`Session::export_state`]).
+/// Rebuild-time constants — builder config, seed, lane names, optimizer
+/// construction, flow/account wiring — are not part of the capture; they
+/// are regenerated by replaying the admission sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    /// Monitoring intervals run so far.
+    pub mi: usize,
+    /// One entry per admitted lane, in admission order.
+    pub lanes: Vec<LaneState>,
+    /// Energy-plane ledgers, in ledger order.
+    pub energy: Vec<LedgerState>,
+    /// The substrate capture.
+    pub sim: SimState,
+}
+
+/// One lane's captured mutable state (see [`SessionState`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneState {
+    pub status: LaneStatus,
+    pub cc: u32,
+    pub p: u32,
+    pub has_pending_decision: bool,
+    /// The job's delivered-byte total (restored via one `advance`).
+    pub delivered_bytes: f64,
+    pub window: WindowState,
+    pub reward: TrackerState,
+    /// The optimizer's [`Optimizer::state_vec`] capture.
+    pub optimizer: Vec<f64>,
 }
 
 #[cfg(test)]

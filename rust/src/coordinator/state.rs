@@ -103,6 +103,34 @@ impl FeatureWindow {
         self.prev_rtt_s = None;
         self.buf.fill(0.0);
     }
+
+    /// Capture the window's mutable state for checkpointing (the size and
+    /// normalizers are rebuild-time constants).
+    pub fn export_state(&self) -> WindowState {
+        WindowState {
+            rtt_min_s: self.rtt_min_s,
+            prev_rtt_s: self.prev_rtt_s,
+            buf: self.buf.clone(),
+        }
+    }
+
+    /// Restore a [`FeatureWindow::export_state`] capture into a window
+    /// rebuilt with the same size and normalizers.
+    pub fn import_state(&mut self, state: &WindowState) {
+        self.rtt_min_s = state.rtt_min_s;
+        self.prev_rtt_s = state.prev_rtt_s;
+        self.buf = state.buf.clone();
+    }
+}
+
+/// A captured [`FeatureWindow`]: the session-minimum RTT (possibly still
+/// the `f64::MAX` sentinel), the previous RTT sample, and the flattened
+/// feature ring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowState {
+    pub rtt_min_s: f64,
+    pub prev_rtt_s: Option<f64>,
+    pub buf: Vec<f32>,
 }
 
 #[cfg(test)]

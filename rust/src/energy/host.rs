@@ -317,7 +317,10 @@ impl HostLedger {
                 }
             } else {
                 // Nothing moving anywhere: the NIC sits in LPI, shared.
-                spec.nic.lpi_idle_w / n_present
+                // An engine that keeps the link chatty holds the NIC out of
+                // its deepest idle state, raising the floor for its lane.
+                let engine_floor_w = accounts[a.lane].power.nic_lpi_idle_w;
+                spec.nic.lpi_idle_w.max(engine_floor_w) / n_present
             };
             let fixed_w = spec.fixed.active_w / n_present;
             let idle_w = if a.paused { spec.fixed.lane_idle_w } else { 0.0 };
@@ -354,6 +357,61 @@ impl HostLedger {
             bills.push(LaneBill { lane: a.lane, energy_j: e, rails: Some(billed) });
         }
         bills
+    }
+}
+
+/// A captured lane account: accumulated energy plus the lane-noise RNG
+/// position (advanced only in lumped mode). `power` and `seed` are
+/// rebuild-time constants restored by replaying `open_lane`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccountState {
+    pub rng: [u64; 4],
+    pub total_j: f64,
+    pub rails: RailEnergy,
+}
+
+/// A captured [`HostLedger`]: host totals, the host-noise RNG position,
+/// and one [`AccountState`] per opened lane. The mode and seeds are
+/// rebuild-time constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerState {
+    pub rng: [u64; 4],
+    pub total_j: f64,
+    pub rails: RailEnergy,
+    pub accounts: Vec<AccountState>,
+}
+
+impl HostLedger {
+    /// Capture the ledger's mutable state for checkpointing.
+    pub fn export_state(&self) -> LedgerState {
+        LedgerState {
+            rng: self.rng.state(),
+            total_j: self.total_j,
+            rails: self.rails,
+            accounts: self
+                .accounts
+                .iter()
+                .map(|a| AccountState { rng: a.rng.state(), total_j: a.total_j, rails: a.rails })
+                .collect(),
+        }
+    }
+
+    /// Restore a [`HostLedger::export_state`] capture into a ledger rebuilt
+    /// with the same mode and `open_lane` sequence. Returns `false` (ledger
+    /// untouched) when the account counts disagree.
+    pub fn import_state(&mut self, state: &LedgerState) -> bool {
+        if self.accounts.len() != state.accounts.len() {
+            return false;
+        }
+        self.rng = Rng::from_state(state.rng);
+        self.total_j = state.total_j;
+        self.rails = state.rails;
+        for (a, s) in self.accounts.iter_mut().zip(&state.accounts) {
+            a.rng = Rng::from_state(s.rng);
+            a.total_j = s.total_j;
+            a.rails = s.rails;
+        }
+        true
     }
 }
 
@@ -478,6 +536,23 @@ impl EnergyPlane {
         for l in &mut self.ledgers {
             l.reset();
         }
+    }
+
+    /// Capture every ledger's mutable state, in ledger order (lumped: one;
+    /// host-resolved: sender then receiver).
+    pub fn export_state(&self) -> Vec<LedgerState> {
+        self.ledgers.iter().map(HostLedger::export_state).collect()
+    }
+
+    /// Restore an [`EnergyPlane::export_state`] capture into a plane rebuilt
+    /// with the same config and `open_lane` sequence. Returns `false` when
+    /// the ledger or account shapes disagree (partially-restored ledgers are
+    /// possible only on a shape mismatch, which callers treat as fatal).
+    pub fn import_state(&mut self, state: &[LedgerState]) -> bool {
+        if self.ledgers.len() != state.len() {
+            return false;
+        }
+        self.ledgers.iter_mut().zip(state).all(|(l, s)| l.import_state(s))
     }
 }
 

@@ -42,7 +42,10 @@ pub mod meter;
 pub mod power;
 pub mod rail;
 
-pub use host::{EnergyConfig, EnergyPlane, HostLedger, HostSpec, LaneActivity, LaneBill};
+pub use host::{
+    AccountState, EnergyConfig, EnergyPlane, HostLedger, HostSpec, LaneActivity, LaneBill,
+    LedgerState,
+};
 pub use meter::EnergyMeter;
 pub use power::PowerModel;
 pub use rail::{CpuRail, FixedRail, NicRail, RailEnergy};

@@ -14,6 +14,12 @@ pub struct PowerModel {
     /// Extra per-Gbps CPU cost of the engine (checksums/encryption), W/Gbps.
     /// 0 for an efficient zero-copy engine; >0 for rclone/escp-style tools.
     pub engine_overhead_w_per_gbps: f64,
+    /// NIC idle floor this engine holds the link to when nothing moves, W.
+    /// A zero-copy engine lets the NIC reach its deepest LPI state; engines
+    /// that poll or keep connections chatty (rclone's HTTP keepalives,
+    /// escp's control channel) hold it in a shallower — hungrier — state.
+    /// Consumed by the host-rail ledger, not by the lumped curve.
+    pub nic_lpi_idle_w: f64,
     /// Measurement noise std-dev, W (RAPL sampling jitter).
     pub noise_w: f64,
 }
@@ -28,18 +34,29 @@ impl PowerModel {
             c_stream_w: 0.85,
             c_gbps_w: 6.0,
             engine_overhead_w_per_gbps: 0.0,
+            nic_lpi_idle_w: 1.0,
             noise_w: 0.8,
         }
     }
 
-    /// rclone-style engine: per-chunk hashing + HTTP framing.
+    /// rclone-style engine: per-chunk hashing + HTTP framing. Keepalive
+    /// chatter holds the NIC out of deep LPI between chunks.
     pub fn rclone() -> PowerModel {
-        PowerModel { engine_overhead_w_per_gbps: 3.5, ..PowerModel::efficient() }
+        PowerModel {
+            engine_overhead_w_per_gbps: 3.5,
+            nic_lpi_idle_w: 1.6,
+            ..PowerModel::efficient()
+        }
     }
 
-    /// escp-style engine: encryption on the wire.
+    /// escp-style engine: encryption on the wire, plus a control channel
+    /// that keeps the NIC in a shallow idle state.
     pub fn escp() -> PowerModel {
-        PowerModel { engine_overhead_w_per_gbps: 4.5, ..PowerModel::efficient() }
+        PowerModel {
+            engine_overhead_w_per_gbps: 4.5,
+            nic_lpi_idle_w: 1.8,
+            ..PowerModel::efficient()
+        }
     }
 
     /// Instantaneous dynamic power for `streams` active streams moving
@@ -88,6 +105,19 @@ mod tests {
         let esc = PowerModel::escp();
         assert!(rcl.power_w(16, 5.0) > eff.power_w(16, 5.0));
         assert!(esc.power_w(16, 5.0) > rcl.power_w(16, 5.0));
+    }
+
+    /// Engines carry their own NIC idle states: the efficient engine lets
+    /// the NIC reach the hardware LPI floor, the chatty tools hold it
+    /// shallower. The lumped curve ignores the field (compat).
+    #[test]
+    fn nic_idle_floors_rank_by_engine_chatter() {
+        let eff = PowerModel::efficient();
+        let rcl = PowerModel::rclone();
+        let esc = PowerModel::escp();
+        assert!(eff.nic_lpi_idle_w < rcl.nic_lpi_idle_w);
+        assert!(rcl.nic_lpi_idle_w < esc.nic_lpi_idle_w);
+        assert_eq!(eff.power_w(0, 0.0), eff.p_fixed_w);
     }
 
     #[test]

@@ -27,8 +27,10 @@ pub struct SweepPoint {
     pub power_w: f64,
     /// Host-truth rail decomposition of the same operating points (mean W
     /// per MI): CPU (stream bookkeeping + data touching), NIC per-bit,
-    /// fixed engine residency. The rails re-sum to `power_w` (the Fig.-1b
-    /// columns now come from the host model, not the lumped curve alone).
+    /// fixed engine residency — from the testbed's sender node class. On
+    /// Efficient-class testbeds (FABRIC) the rails re-sum to `power_w`;
+    /// heterogeneous classes (Chameleon's Xeons, CloudLab's EPYCs)
+    /// deliberately diverge from the lumped compat column.
     pub cpu_w: f64,
     pub nic_w: f64,
     pub fixed_w: f64,
@@ -237,11 +239,12 @@ mod tests {
         }
     }
 
-    /// The host-truth rail columns re-sum to the lumped power column: the
-    /// Fig.-1b decomposition conserves the compat number.
+    /// On an Efficient-class testbed the host-truth rail columns re-sum to
+    /// the lumped power column (the compat anchor); on Chameleon the Xeon
+    /// calibration diverges from it by design.
     #[test]
-    fn rail_columns_resum_to_lumped_power() {
-        let tb = Testbed::chameleon();
+    fn rail_columns_resum_to_lumped_power_on_efficient_class() {
+        let tb = Testbed::fabric();
         let pts = sweep(&tb, &[1, 8], &["low"], 13, 2);
         for p in &pts {
             let resum = p.cpu_w + p.nic_w + p.fixed_w;
@@ -254,5 +257,9 @@ mod tests {
             );
             assert!(p.fixed_w > 0.0 && p.cpu_w > 0.0);
         }
+        let xeon = sweep(&Testbed::chameleon(), &[8], &["low"], 13, 2);
+        assert!(xeon
+            .iter()
+            .any(|p| (p.cpu_w + p.nic_w + p.fixed_w - p.power_w).abs() > 1e-3 * p.power_w));
     }
 }

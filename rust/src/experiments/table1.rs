@@ -136,9 +136,9 @@ pub fn run(
             let tune = meter.stop();
             // Add the end-system transfer energy the tuning phase burned
             // (suboptimal exploration transfers): host-truth power of the
-            // CloudLab sender host at the tuning workload — identical to
-            // the lumped curve for a single lane, but sourced from the
-            // per-preset host definition like the other energy columns.
+            // CloudLab sender at the tuning workload, sourced from the
+            // c6525-100g node-class calibration like the other energy
+            // columns.
             let transfer_kj =
                 Testbed::cloudlab().sender_host().power_w(36, 5.0) * tune.wall_s / 1000.0;
 

@@ -46,7 +46,8 @@
 //! `nic-limited`, `contended-peers`, plus the paper's testbeds) — select
 //! one with `--scenario <name>` on the CLI. On top of the session API,
 //! [`scenarios::ArrivalSchedule`] presets (`churn-light`, `churn-heavy`,
-//! `flash-crowd`) describe seeded Poisson/trace arrival processes, and
+//! `flash-crowd`, plus the wall-clock-indexed `open-loop` and
+//! `timed-burst`) describe seeded Poisson/trace arrival processes, and
 //! `sparta fleet` ([`experiments::fleet`]) runs N agents joining/leaving a
 //! shared bottleneck, reporting per-epoch Jain's fairness
 //! ([`telemetry::FairnessSink`]), host-truth energy per delivered GB with
@@ -72,6 +73,18 @@
 //! [`coordinator::Stepping`] surface (admit / `step_into` / pause /
 //! resume / cancel / energy queries), so drivers like the fleet loop are
 //! written once and monomorphize over either.
+//!
+//! Where `sparta fleet` replays a whole workload batch-style, `sparta
+//! serve` ([`serve`]) keeps a fleet *resident*: a daemon owns a
+//! [`Session`] or [`Cluster`] behind a Unix-socket control plane
+//! (line-delimited JSON — `admit`, `pause`/`resume`/`cancel`, `status`,
+//! `snapshot`, `subscribe`, `shutdown`), a pacer steps it in scaled or
+//! real time (`--time-scale`), and wall-clock-indexed arrival schedules
+//! drive open-loop load. Every control op lands on an MI boundary, so a
+//! served run is replayable; the flagship consequence is bit-identical
+//! checkpoint/restore ([`serve::ServeSnapshot`]): snapshot, kill the
+//! daemon, `sparta serve --restore`, and the concatenated event stream
+//! is byte-for-byte what the uninterrupted run would have emitted.
 //!
 //! Scenarios are the *training* substrate too, not just an evaluation toy:
 //! [`experiments::train_pipeline`] takes a [`experiments::TrainSource`]
@@ -164,6 +177,49 @@
 //! session.cancel(late);                        // departs before finishing
 //! ```
 //!
+//! A resident service with live admissions and bit-identical
+//! checkpoint/restore — the in-process core behind `sparta serve`
+//! (the daemon adds a Unix-socket control plane and a pacer around
+//! this same engine):
+//!
+//! ```no_run
+//! use sparta::config::Paths;
+//! use sparta::experiments::SpartaCtx;
+//! use sparta::serve::{AdmitRec, OpKind, ServeEngine, ServeSnapshot};
+//! use sparta::serve::ServeSpec;
+//!
+//! let ctx = SpartaCtx::load(Paths::resolve()).unwrap();
+//! let spec = ServeSpec {
+//!     scenario: "chameleon".to_string(),
+//!     schedule: Some("open-loop".to_string()), // wall-clock Poisson load
+//!     methods: vec!["falcon_mp".to_string(), "2-phase".to_string()],
+//!     hosts: 1,
+//!     seed: 42,
+//!     mi_s: 1.0,
+//!     max_mis: 360,
+//!     observe_paused: false,
+//! };
+//! let mut engine = ServeEngine::new(ctx, spec).unwrap();
+//! let mut events = Vec::new();
+//! for _ in 0..60 { engine.step(&mut events).unwrap(); }
+//! // An operator walks up mid-run:
+//! engine.enqueue(OpKind::Admit(AdmitRec {
+//!     method: "rclone".to_string(),
+//!     files: 8,
+//!     file_bytes: 128 << 20,
+//!     name: None,               // resolved deterministically at execution
+//!     seed: None,
+//!     max_lifetime_mis: Some(40),
+//! }), None).unwrap();
+//! let snap = engine.snapshot().unwrap();    // full logical state, versioned
+//! snap.save("service.snap.json".as_ref()).unwrap();
+//! // ...kill the process; later, byte-identical resumption:
+//! let ctx = SpartaCtx::load(Paths::resolve()).unwrap();
+//! let snap = ServeSnapshot::load("service.snap.json".as_ref()).unwrap();
+//! let mut engine = ServeEngine::restore(ctx, snap).unwrap();
+//! for _ in 0..300 { engine.step(&mut events).unwrap(); }
+//! ```
+//!
 //! Scenario-aware training and the cross-scenario generalization matrix
 //! (runs on a fresh checkout — the `linq` fallback core needs no AOT
 //! artifacts):
@@ -211,6 +267,7 @@ pub mod experiments;
 pub mod net;
 pub mod runtime;
 pub mod scenarios;
+pub mod serve;
 pub mod telemetry;
 pub mod trainer;
 pub mod transfer;

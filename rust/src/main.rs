@@ -9,7 +9,9 @@
 //! sparta train-all --scale quick      # all 5 algos x both rewards
 //! sparta generalize --scale quick     # train x eval scenario matrix
 //! sparta transfer --method sparta-fe --scenario lossy-wan
-//! sparta fleet    --scenario churn-heavy           # arrivals/departures
+//! sparta fleet    --schedule churn-heavy           # arrivals/departures
+//! sparta serve    --schedule open-loop --events ev.jsonl  # resident daemon
+//! sparta serve-ctl '{"cmd":"status"}'              # poke the daemon
 //! sparta sweep    --testbed chameleon             # Fig 1
 //! sparta algos    --reward te                     # Fig 4
 //! sparta tune                                      # Fig 5
@@ -200,7 +202,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 ]);
             }
             t.print();
-            println!("\narrival schedules (use with `sparta fleet --scenario <name>`):");
+            println!("\narrival schedules (use with `sparta fleet`/`sparta serve --schedule <name>`):");
             let mut t = Table::new(&["name", "scenario", "horizon", "description"]);
             for sched in ArrivalSchedule::all() {
                 t.row(vec![
@@ -521,12 +523,22 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("fleet") => {
             common.forbid("fleet", &["events"])?;
-            let name = common.scenario.ok_or_else(|| {
-                anyhow!(
-                    "fleet needs --scenario <schedule> (one of: {})",
-                    ArrivalSchedule::names().join(", ")
-                )
-            })?;
+            // --schedule is the precise spelling (an arrival schedule pins
+            // its own scenario); --scenario stays as the historical alias.
+            let name = match (args.get("schedule"), common.scenario) {
+                (Some(_), Some(_)) => {
+                    return Err(anyhow!(
+                        "--schedule and --scenario conflict on fleet (they are aliases)"
+                    ));
+                }
+                (Some(s), None) | (None, Some(s)) => s,
+                (None, None) => {
+                    return Err(anyhow!(
+                        "fleet needs --schedule <name> (one of: {})",
+                        ArrivalSchedule::names().join(", ")
+                    ));
+                }
+            };
             let schedule = ArrivalSchedule::by_name(name).ok_or_else(|| {
                 anyhow!(
                     "unknown arrival schedule '{name}' (one of: {})",
@@ -587,8 +599,109 @@ fn dispatch(args: &Args) -> Result<()> {
             common.save(&experiments::fleet::to_json(&report))?;
             Ok(())
         }
+        Some("serve") => {
+            common.forbid("serve", &["jobs", "out"])?;
+            serve_cmd(args, &common, seed)
+        }
+        Some("serve-ctl") => serve_ctl_cmd(args),
         Some(other) => Err(anyhow!("unknown subcommand '{other}' — try `sparta help`")),
     }
+}
+
+/// `sparta serve`: boot the resident transfer service (unix only — the
+/// control plane is a unix-domain socket).
+#[cfg(unix)]
+fn serve_cmd(args: &Args, common: &CommonOpts, seed: u64) -> Result<()> {
+    use sparta::serve::daemon::{run_daemon, Boot, ServeOptions};
+    use sparta::serve::ServeSpec;
+    use std::path::PathBuf;
+
+    let opts = ServeOptions {
+        socket: PathBuf::from(args.get_or("socket", "sparta-serve.sock")),
+        events: common.events.map(PathBuf::from),
+        time_scale: args.get_f64("time-scale", 0.0).map_err(|e| anyhow!(e))?,
+        hold: args.flag("hold"),
+    };
+    let boot = match args.get("restore") {
+        Some(path) => {
+            if common.scenario.is_some() || args.get("schedule").is_some() {
+                return Err(anyhow!(
+                    "--restore conflicts with --scenario/--schedule: the snapshot \
+                     carries its own spec"
+                ));
+            }
+            Boot::Restore(PathBuf::from(path))
+        }
+        None => {
+            let schedule = args.get("schedule");
+            let scenario = match (common.scenario, schedule) {
+                (Some(_), Some(_)) => {
+                    return Err(anyhow!(
+                        "--scenario and --schedule conflict on serve: the schedule \
+                         pins its own scenario"
+                    ));
+                }
+                (Some(sc), None) => sc.to_string(),
+                (None, Some(name)) => {
+                    let sched = ArrivalSchedule::by_name(name).ok_or_else(|| {
+                        anyhow!(
+                            "unknown arrival schedule '{name}' (one of: {})",
+                            ArrivalSchedule::names().join(", ")
+                        )
+                    })?;
+                    sched.scenario.name.to_string()
+                }
+                (None, None) => "calm".to_string(),
+            };
+            let methods: Vec<String> = match args.get("methods") {
+                None => ["falcon_mp", "2-phase", "rclone"].iter().map(|m| m.to_string()).collect(),
+                Some(list) => list.split(',').map(|m| m.trim().to_string()).collect(),
+            };
+            Boot::Fresh(ServeSpec {
+                scenario,
+                schedule: schedule.map(str::to_string),
+                methods,
+                hosts: args.get_usize("hosts", 1).map_err(|e| anyhow!(e))?,
+                seed,
+                mi_s: args.get_f64("mi", 1.0).map_err(|e| anyhow!(e))?,
+                max_mis: args.get_usize("max-mis", DEFAULT_MAX_MIS).map_err(|e| anyhow!(e))?,
+                observe_paused: common.observe_paused,
+            })
+        }
+    };
+    run_daemon(ctx()?, boot, opts)
+}
+
+#[cfg(not(unix))]
+fn serve_cmd(_args: &Args, _common: &CommonOpts, _seed: u64) -> Result<()> {
+    Err(anyhow!("`sparta serve` needs unix-domain sockets (unix only)"))
+}
+
+/// `sparta serve-ctl 'JSON' ...`: send request lines to a running serve
+/// daemon and print each reply; `--stdin` pipes request lines instead.
+#[cfg(unix)]
+fn serve_ctl_cmd(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+
+    let socket = Path::new(args.get_or("socket", "sparta-serve.sock"));
+    let mut lines: Vec<String> = args.positional.clone();
+    if args.flag("stdin") {
+        for line in std::io::stdin().lock().lines() {
+            let line = line.map_err(|e| anyhow!("reading stdin: {e}"))?;
+            if !line.trim().is_empty() {
+                lines.push(line);
+            }
+        }
+    }
+    if lines.is_empty() {
+        lines.push(r#"{"cmd":"status"}"#.to_string());
+    }
+    sparta::serve::daemon::run_ctl(socket, &lines)
+}
+
+#[cfg(not(unix))]
+fn serve_ctl_cmd(_args: &Args) -> Result<()> {
+    Err(anyhow!("`sparta serve-ctl` needs unix-domain sockets (unix only)"))
 }
 
 fn info() -> Result<()> {
@@ -652,7 +765,9 @@ subcommands:
                                            as JSON lines while it runs)
             [--observe-paused]             (paused lanes emit zero-throughput
                                            records carrying idle energy)
-  fleet     --scenario churn-light|churn-heavy|flash-crowd
+  fleet     --schedule churn-light|churn-heavy|flash-crowd|open-loop|timed-burst
+            (--scenario is an alias)       (open-loop/timed-burst index arrivals
+                                           in wall-clock seconds, not MIs)
             [--methods M1,M2,...]          N transfers joining/leaving a shared
                                            bottleneck (seeded arrival process;
                                            per-epoch JFI, host-truth J/GB +
@@ -673,6 +788,27 @@ subcommands:
             [--compare-observe]            (yield-policy churn comparison:
                                            blind vs pause-cost-observing lanes;
                                            observing lanes pause less eagerly)
+  serve     [--scenario S|--schedule A]    resident transfer service (unix):
+                                           daemon owns a session (--hosts N:
+                                           an incast cluster), steps it on a
+                                           pacer, and takes live admit/pause/
+                                           resume/cancel over a local socket
+            [--socket PATH]                (default sparta-serve.sock)
+            [--events FILE]                (stream events as JSON lines)
+            [--time-scale F]               (0 = flat out, 1 = real time,
+                                           10 = 10 sim seconds per wall s)
+            [--hold]                       (boot paused until a `go` request)
+            [--mi SECS] [--max-mis N]      (MI length / run horizon)
+            [--restore FILE]               (resume a snapshot; the continued
+                                           event stream is byte-identical to
+                                           an uninterrupted run)
+  serve-ctl ['JSON' ... | --stdin]         send request lines to the daemon
+                                           and print each reply; `subscribe`
+                                           then streams live events to stdout
+                                           (cmds: admit, pause, resume, cancel,
+                                           status, snapshot, subscribe, go,
+                                           shutdown; default: status)
+            [--socket PATH]                (default sparta-serve.sock)
   bench     [--quick] [--out FILE]        perf trajectory: fleet churn-heavy
                                            at 16/64/256 lanes single-host plus
                                            incast cluster points (1024 lanes x

@@ -127,6 +127,19 @@ impl BackgroundState {
         responsive + open_loop
     }
 
+    /// The mutable runtime state — `(bursty_high, responsive_scale)` — for
+    /// checkpointing. The spec and `responsive_frac` are rebuild-time
+    /// constants, so they are not part of the captured state.
+    pub fn runtime_state(&self) -> (bool, f64) {
+        (self.bursty_high, self.responsive_scale)
+    }
+
+    /// Restore a captured [`BackgroundState::runtime_state`].
+    pub fn set_runtime_state(&mut self, bursty_high: bool, responsive_scale: f64) {
+        self.bursty_high = bursty_high;
+        self.responsive_scale = responsive_scale;
+    }
+
     /// Feed back the link's drop fraction; responsive share backs off on loss
     /// and additively recovers when the path is clean.
     pub fn observe_loss(&mut self, drop_frac: f64, dt: f64) {

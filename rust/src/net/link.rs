@@ -81,6 +81,16 @@ impl Link {
         self.queue_bits / self.buffer_bits
     }
 
+    /// Raw queue occupancy in bits (checkpointing).
+    pub fn queue_bits(&self) -> f64 {
+        self.queue_bits
+    }
+
+    /// Restore a captured queue occupancy (checkpointing).
+    pub fn set_queue_bits(&mut self, bits: f64) {
+        self.queue_bits = bits;
+    }
+
     /// Reset queue state (new experiment).
     pub fn reset(&mut self) {
         self.queue_bits = 0.0;

@@ -25,7 +25,7 @@ pub mod topology;
 
 pub use background::Background;
 pub use link::Link;
-pub use sim::{FlowId, MiMetrics, NetworkSim, SimConfig};
+pub use sim::{FlowId, MiMetrics, NetworkSim, SimConfig, SimState};
 pub use stream::CubicStream;
 pub use substrate::Substrate;
 pub use testbed::Testbed;

@@ -78,11 +78,52 @@
 
 use super::background::{Background, BackgroundState};
 use super::link::Link;
-use super::stream::StreamArena;
+use super::stream::{ArenaState, StreamArena};
 use super::testbed::Testbed;
 use super::topology::Topology;
 use super::MSS_BITS;
 use crate::util::Rng;
+
+/// A captured [`NetworkSim`] at a monitoring-interval boundary — everything
+/// the tick loop mutates (flows incl. their arena row tables, the arena
+/// itself, per-segment queues and background runtime state, the RNG, and
+/// the clock). The per-MI `acc_*` accumulators are reset at the start of
+/// every [`NetworkSim::run_mi_into`], so a boundary capture omits them;
+/// per-tick scratch buffers are likewise rebuilt on demand. Restoring into
+/// a sim rebuilt with the same topology and admit sequence resumes the
+/// exact tick/RNG trajectory (the serve snapshot contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimState {
+    pub time_s: f64,
+    pub rng: [u64; 4],
+    pub active_total: usize,
+    pub flows: Vec<FlowState>,
+    pub segments: Vec<SegmentState>,
+    pub arena: ArenaState,
+}
+
+/// One flow's captured state: its arena row table `(base, created, cap)`
+/// per task plus the active counts and rate caps. Row indices refer to the
+/// captured [`SimState::arena`] layout, which is imported wholesale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowState {
+    pub tasks: Vec<(usize, usize, usize)>,
+    pub cc_active: usize,
+    pub p_active: usize,
+    pub active_streams: usize,
+    pub task_io_gbps: f64,
+    pub stream_cap_gbps: f64,
+    pub demand_cap_gbps: f64,
+}
+
+/// One path stage's captured runtime state: droptail queue occupancy plus
+/// the cross-traffic process state when the stage has one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentState {
+    pub queue_bits: f64,
+    /// `(bursty_high, responsive_scale)` of the stage's background, if any.
+    pub background: Option<(bool, f64)>,
+}
 
 /// Identifies a flow within a [`NetworkSim`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -402,6 +443,74 @@ impl NetworkSim {
     /// no allocation per call (collect if a snapshot is needed).
     pub fn segment_queue_fills(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
         self.segments.iter().map(|s| (s.name, s.link.queue_fill()))
+    }
+
+    /// Capture the complete mutable simulator state at an MI boundary (see
+    /// [`SimState`] for what is and is not included).
+    pub fn save_state(&self) -> SimState {
+        SimState {
+            time_s: self.time_s,
+            rng: self.rng.state(),
+            active_total: self.active_total,
+            flows: self
+                .flows
+                .iter()
+                .map(|f| FlowState {
+                    tasks: f.tasks.iter().map(|t| (t.base, t.created, t.cap)).collect(),
+                    cc_active: f.cc_active,
+                    p_active: f.p_active,
+                    active_streams: f.active_streams,
+                    task_io_gbps: f.task_io_gbps,
+                    stream_cap_gbps: f.stream_cap_gbps,
+                    demand_cap_gbps: f.demand_cap_gbps,
+                })
+                .collect(),
+            segments: self
+                .segments
+                .iter()
+                .map(|s| SegmentState {
+                    queue_bits: s.link.queue_bits(),
+                    background: s.background.as_ref().map(BackgroundState::runtime_state),
+                })
+                .collect(),
+            arena: self.arena.export_state(),
+        }
+    }
+
+    /// Restore a [`SimState`] captured from a sim built with the same
+    /// topology and `add_flow` sequence. Flow row tables, the arena, link
+    /// queues, background runtime state, the RNG and the clock are all
+    /// overwritten wholesale; per-MI accumulators are left to their
+    /// start-of-MI reset. Returns `false` (sim untouched) when the flow or
+    /// segment counts disagree with the capture.
+    pub fn load_state(&mut self, state: &SimState) -> bool {
+        if self.flows.len() != state.flows.len() || self.segments.len() != state.segments.len() {
+            return false;
+        }
+        for (flow, fs) in self.flows.iter_mut().zip(&state.flows) {
+            flow.tasks = fs
+                .tasks
+                .iter()
+                .map(|&(base, created, cap)| TaskRange { base, created, cap })
+                .collect();
+            flow.cc_active = fs.cc_active;
+            flow.p_active = fs.p_active;
+            flow.active_streams = fs.active_streams;
+            flow.task_io_gbps = fs.task_io_gbps;
+            flow.stream_cap_gbps = fs.stream_cap_gbps;
+            flow.demand_cap_gbps = fs.demand_cap_gbps;
+        }
+        for (seg, ss) in self.segments.iter_mut().zip(&state.segments) {
+            seg.link.set_queue_bits(ss.queue_bits);
+            if let (Some(bg), Some((high, scale))) = (seg.background.as_mut(), ss.background) {
+                bg.set_runtime_state(high, scale);
+            }
+        }
+        self.arena.import_state(&state.arena);
+        self.active_total = state.active_total;
+        self.time_s = state.time_s;
+        self.rng = Rng::from_state(state.rng);
+        true
     }
 
     /// Advance one tick of the fluid model. §Perf: walks active slots

@@ -167,6 +167,19 @@ pub struct StreamArena {
     active: Vec<bool>,
 }
 
+/// A captured [`StreamArena`] — one parallel column per arena field, in
+/// slot order. Part of the serve snapshot ([`crate::net::SimState`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArenaState {
+    pub cwnd: Vec<f64>,
+    pub w_max: Vec<f64>,
+    pub ssthresh: Vec<f64>,
+    pub epoch_t: Vec<f64>,
+    pub since_cut: Vec<f64>,
+    pub in_slow_start: Vec<bool>,
+    pub active: Vec<bool>,
+}
+
 impl StreamArena {
     pub fn new() -> StreamArena {
         StreamArena::default()
@@ -271,6 +284,33 @@ impl StreamArena {
         self.epoch_t[i] = 0.0;
         self.since_cut[i] = 0.0;
         true
+    }
+
+    /// Capture the full arena — every column of every slot — for
+    /// checkpointing. Slot order is the arena layout itself, so a restored
+    /// arena is indistinguishable from the original.
+    pub fn export_state(&self) -> ArenaState {
+        ArenaState {
+            cwnd: self.cwnd.clone(),
+            w_max: self.w_max.clone(),
+            ssthresh: self.ssthresh.clone(),
+            epoch_t: self.epoch_t.clone(),
+            since_cut: self.since_cut.clone(),
+            in_slow_start: self.in_slow_start.clone(),
+            active: self.active.clone(),
+        }
+    }
+
+    /// Overwrite the arena wholesale from a captured [`ArenaState`]
+    /// (checkpoint restore; replaces any slots the rebuild created).
+    pub fn import_state(&mut self, s: &ArenaState) {
+        self.cwnd = s.cwnd.clone();
+        self.w_max = s.w_max.clone();
+        self.ssthresh = s.ssthresh.clone();
+        self.epoch_t = s.epoch_t.clone();
+        self.since_cut = s.since_cut.clone();
+        self.in_slow_start = s.in_slow_start.clone();
+        self.active = s.active.clone();
     }
 
     /// Batched rate pass over one task row's active prefix: writes the

@@ -8,7 +8,7 @@
 //! kernel-backed substrate can slot in behind the same trait without
 //! touching the control loop.
 
-use super::sim::{FlowId, MiMetrics, NetworkSim};
+use super::sim::{FlowId, MiMetrics, NetworkSim, SimState};
 use super::testbed::Testbed;
 
 /// A network substrate: the `add_flow` / `set_cc_p` / `run_mi_into` surface
@@ -53,6 +53,22 @@ pub trait Substrate: Send {
 
     /// The testbed preset this substrate models.
     fn testbed(&self) -> &Testbed;
+
+    /// Capture the substrate's complete mutable state at an MI boundary for
+    /// checkpointing (the serve snapshot). Substrates that cannot express
+    /// their state as a [`SimState`] return `None` — such substrates cannot
+    /// back a checkpointable service.
+    fn save_state(&self) -> Option<SimState> {
+        None
+    }
+
+    /// Restore a state captured by [`Substrate::save_state`] into a
+    /// substrate rebuilt with the same topology and flow sequence. Returns
+    /// `false` when the substrate does not support restore or the capture
+    /// does not match its shape.
+    fn load_state(&mut self, _state: &SimState) -> bool {
+        false
+    }
 }
 
 impl Substrate for NetworkSim {
@@ -86,6 +102,14 @@ impl Substrate for NetworkSim {
 
     fn testbed(&self) -> &Testbed {
         NetworkSim::testbed(self)
+    }
+
+    fn save_state(&self) -> Option<SimState> {
+        Some(NetworkSim::save_state(self))
+    }
+
+    fn load_state(&mut self, state: &SimState) -> bool {
+        NetworkSim::load_state(self, state)
     }
 }
 

@@ -2,7 +2,62 @@
 
 use super::background::Background;
 use super::link::Link;
-use crate::energy::{EnergyConfig, HostSpec};
+use crate::energy::{CpuRail, EnergyConfig, FixedRail, HostSpec, NicRail};
+
+/// Hardware class of an end node, carrying its component-rail calibration.
+///
+/// The paper's testbeds do not share silicon: Chameleon's gpu_p100 nodes
+/// are Haswell-era Xeon E5-2670 v3 machines with 10 GbE NICs, while
+/// CloudLab pairs an EPYC 7302P sender (c6525-100g, ConnectX-5 100 GbE)
+/// with a dual-EPYC d7525 receiver. Each class resolves to a [`HostSpec`]
+/// with its own CPU/NIC/fixed rail coefficients; only [`NodeClass::Efficient`]
+/// re-sums to the lumped [`crate::energy::PowerModel::efficient`] curve
+/// (the compat anchor used by FABRIC, whose virtualized hosts are never
+/// billed anyway).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeClass {
+    /// The lumped-compat calibration ([`HostSpec::efficient`]).
+    Efficient,
+    /// Xeon E5-2670 v3 (Haswell, 10 GbE): pricier per stream and per bit,
+    /// higher resident draw, shallow NIC LPI.
+    Xeon2670,
+    /// c6525-100g (EPYC 7302P, ConnectX-5 100 GbE): modern cores and a NIC
+    /// that moves more bits per joule.
+    C6525,
+    /// d7525 (dual EPYC 7302, GPU chassis): like c6525 but with a higher
+    /// base draw from the bigger chassis.
+    D7525,
+}
+
+impl NodeClass {
+    /// Resolve this class to a named host spec.
+    pub fn host(&self, name: impl Into<String>) -> HostSpec {
+        match self {
+            NodeClass::Efficient => HostSpec::efficient(name),
+            NodeClass::Xeon2670 => HostSpec {
+                name: name.into(),
+                cpu: CpuRail { c_stream_w: 1.1, stream_exp: 0.9, c_gbps_w: 3.2 },
+                nic: NicRail { c_gbps_w: 4.1, lpi_idle_w: 1.4 },
+                fixed: FixedRail { active_w: 24.0, lane_idle_w: 3.0 },
+                noise_w: 0.8,
+            },
+            NodeClass::C6525 => HostSpec {
+                name: name.into(),
+                cpu: CpuRail { c_stream_w: 0.7, stream_exp: 0.9, c_gbps_w: 2.1 },
+                nic: NicRail { c_gbps_w: 3.0, lpi_idle_w: 0.8 },
+                fixed: FixedRail { active_w: 16.0, lane_idle_w: 2.2 },
+                noise_w: 0.8,
+            },
+            NodeClass::D7525 => HostSpec {
+                name: name.into(),
+                cpu: CpuRail { c_stream_w: 0.75, stream_exp: 0.9, c_gbps_w: 2.3 },
+                nic: NicRail { c_gbps_w: 3.2, lpi_idle_w: 0.9 },
+                fixed: FixedRail { active_w: 17.0, lane_idle_w: 2.4 },
+                noise_w: 0.8,
+            },
+        }
+    }
+}
 
 /// A named testbed configuration (link + node characteristics).
 #[derive(Debug, Clone)]
@@ -22,6 +77,10 @@ pub struct Testbed {
     pub has_energy_counters: bool,
     /// Default background regime for evaluation runs.
     pub default_background: Background,
+    /// Hardware class of the sending node (rail calibration).
+    pub sender_node: NodeClass,
+    /// Hardware class of the receiving node (rail calibration).
+    pub receiver_node: NodeClass,
 }
 
 impl Testbed {
@@ -37,6 +96,8 @@ impl Testbed {
             task_io_gbps: 3.0,
             has_energy_counters: true,
             default_background: Background::regime("medium", 10.0),
+            sender_node: NodeClass::Xeon2670,
+            receiver_node: NodeClass::Xeon2670,
         }
     }
 
@@ -52,6 +113,8 @@ impl Testbed {
             task_io_gbps: 10.0,
             has_energy_counters: true,
             default_background: Background::regime("medium", 25.0),
+            sender_node: NodeClass::C6525,
+            receiver_node: NodeClass::D7525,
         }
     }
 
@@ -68,6 +131,8 @@ impl Testbed {
             task_io_gbps: 8.0,
             has_energy_counters: false,
             default_background: Background::regime("medium", 30.0),
+            sender_node: NodeClass::Efficient,
+            receiver_node: NodeClass::Efficient,
         }
     }
 
@@ -91,16 +156,18 @@ impl Testbed {
         Link::new(self.capacity_gbps, self.base_rtt_s, self.buffer_bdp)
     }
 
-    /// The sender end host's component-rail definition (the efficient
-    /// calibration, named per preset — e.g. `chameleon-tx`). On FABRIC the
-    /// spec exists but is never billed (`has_energy_counters` is false).
+    /// The sender end host's component-rail definition, resolved from
+    /// [`Testbed::sender_node`] and named per preset — e.g. `chameleon-tx`.
+    /// On FABRIC the spec exists but is never billed
+    /// (`has_energy_counters` is false).
     pub fn sender_host(&self) -> HostSpec {
-        HostSpec::efficient(format!("{}-tx", self.name))
+        self.sender_node.host(format!("{}-tx", self.name))
     }
 
-    /// The receiver end host's component-rail definition (`<name>-rx`).
+    /// The receiver end host's component-rail definition (`<name>-rx`),
+    /// resolved from [`Testbed::receiver_node`].
     pub fn receiver_host(&self) -> HostSpec {
-        HostSpec::efficient(format!("{}-rx", self.name))
+        self.receiver_node.host(format!("{}-rx", self.name))
     }
 
     /// Host-resolved energy accounting over this testbed's sender and
@@ -119,7 +186,7 @@ impl Testbed {
     /// conservation invariant.
     pub fn energy_hosts_of(&self, h: usize, hosts: usize) -> EnergyConfig {
         EnergyConfig::Hosts {
-            sender: HostSpec::efficient(format!("{}-tx{h}", self.name)),
+            sender: self.sender_node.host(format!("{}-tx{h}", self.name)),
             receiver: self.receiver_host().share(hosts),
         }
     }
@@ -152,26 +219,59 @@ mod tests {
         }
     }
 
-    /// Every preset defines sender/receiver hosts whose single-lane rail
-    /// power re-sums to the lumped efficient curve (the compat guarantee).
+    /// Every preset defines named sender/receiver hosts whose rail
+    /// decomposition re-sums to that host's own power curve; only the
+    /// Efficient node class (FABRIC) also matches the lumped compat curve.
     #[test]
-    fn hosts_defined_per_preset_and_match_lumped_curve() {
-        let lumped = crate::energy::PowerModel::efficient();
+    fn hosts_defined_per_preset_and_rails_self_consistent() {
         for tb in Testbed::all() {
             let tx = tb.sender_host();
             let rx = tb.receiver_host();
             assert_eq!(tx.name, format!("{}-tx", tb.name));
             assert_eq!(rx.name, format!("{}-rx", tb.name));
             for (streams, gbps) in [(1usize, 1.0), (16, 5.0), (256, 8.0)] {
-                let want = lumped.power_w(streams, gbps);
+                let (cpu, nic, fixed) = tx.rails_w(streams, gbps);
                 let got = tx.power_w(streams, gbps);
                 assert!(
-                    (got - want).abs() <= 1e-9 * want,
-                    "{}: rails {got} vs lumped {want}",
+                    (cpu + nic + fixed - got).abs() <= 1e-9 * got,
+                    "{}: rails don't re-sum at ({streams}, {gbps})",
                     tb.name
                 );
             }
             assert!(matches!(tb.energy_hosts(), EnergyConfig::Hosts { .. }));
         }
+    }
+
+    /// Per-node-class calibrations: FABRIC keeps the lumped-compat
+    /// efficient class; Chameleon's Haswell Xeons burn more per bit than
+    /// either CloudLab EPYC class; CloudLab's sender and receiver differ.
+    #[test]
+    fn node_classes_are_heterogeneous_and_fabric_stays_lumped_compat() {
+        let lumped = crate::energy::PowerModel::efficient();
+        let fab = Testbed::fabric().sender_host();
+        for (streams, gbps) in [(1usize, 1.0), (16, 5.0), (256, 8.0)] {
+            let want = lumped.power_w(streams, gbps);
+            let got = fab.power_w(streams, gbps);
+            assert!((got - want).abs() <= 1e-9 * want, "fabric: {got} vs lumped {want}");
+        }
+
+        let cham = Testbed::chameleon();
+        assert_eq!(cham.sender_node, NodeClass::Xeon2670);
+        let xeon = cham.sender_host();
+        let cl = Testbed::cloudlab();
+        assert_eq!((cl.sender_node, cl.receiver_node), (NodeClass::C6525, NodeClass::D7525));
+        let c6525 = cl.sender_host();
+        let d7525 = cl.receiver_host();
+
+        // Haswell is the hungriest class at every operating point probed.
+        for (streams, gbps) in [(1usize, 1.0), (16, 5.0), (64, 8.0)] {
+            let x = xeon.power_w(streams, gbps);
+            assert!(x > c6525.power_w(streams, gbps), "xeon vs c6525 at ({streams}, {gbps})");
+            assert!(x > d7525.power_w(streams, gbps), "xeon vs d7525 at ({streams}, {gbps})");
+        }
+        // The CloudLab pair is asymmetric: the GPU-chassis receiver idles
+        // higher than the sender.
+        assert!(d7525.fixed.active_w > c6525.fixed.active_w);
+        assert_ne!(c6525.power_w(16, 5.0), d7525.power_w(16, 5.0));
     }
 }

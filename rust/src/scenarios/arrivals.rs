@@ -38,10 +38,23 @@ pub struct ArrivalSpec {
     pub max_lifetime_mis: Option<usize>,
 }
 
+/// One wall-clock-indexed arrival: admitted at the MI boundary covering
+/// `at_s` *simulated seconds*, whatever the MI length is. This is how a
+/// long-running service (`sparta serve`) expresses "a user shows up at
+/// 09:00:45" independently of its pacing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedArrival {
+    /// Arrival time, simulated seconds since the run started.
+    pub at_s: f64,
+    pub files: usize,
+    pub file_bytes: u64,
+    pub max_lifetime_mis: Option<usize>,
+}
+
 /// How arrivals are generated.
 #[derive(Debug, Clone)]
 enum Process {
-    /// Seeded Poisson process: exponential inter-arrival gaps.
+    /// Seeded Poisson process: exponential inter-arrival gaps, in MIs.
     Poisson {
         mean_gap_mis: f64,
         max_agents: usize,
@@ -50,8 +63,22 @@ enum Process {
         file_bytes: u64,
         max_lifetime_mis: Option<usize>,
     },
+    /// Open-loop (rate-based) Poisson process: exponential gaps drawn in
+    /// *seconds* at a fixed offered rate, independent of MI length. The
+    /// same schedule offers the same load per wall-clock second whether
+    /// the service paces 0.5-second or 2-second MIs.
+    OpenLoop {
+        rate_per_s: f64,
+        max_agents: usize,
+        /// Inclusive range of per-arrival file counts.
+        files: (usize, usize),
+        file_bytes: u64,
+        max_lifetime_mis: Option<usize>,
+    },
     /// Explicit trace (already sorted by `at_mi`).
     Trace(Vec<ArrivalSpec>),
+    /// Explicit wall-clock trace (already sorted by `at_s`).
+    TimedTrace(Vec<TimedArrival>),
 }
 
 /// A named, reproducible dynamic workload over a registered [`Scenario`].
@@ -75,6 +102,8 @@ impl ArrivalSchedule {
             ArrivalSchedule::churn_light(),
             ArrivalSchedule::churn_heavy(),
             ArrivalSchedule::flash_crowd(),
+            ArrivalSchedule::open_loop(),
+            ArrivalSchedule::timed_burst(),
         ]
     }
 
@@ -87,11 +116,39 @@ impl ArrivalSchedule {
         ArrivalSchedule::all().iter().map(|s| s.name).collect()
     }
 
-    /// Materialize the arrival list for one trial. Deterministic: the same
-    /// `(schedule, seed)` yields the same workload; traces ignore the seed.
+    /// Materialize the arrival list for one trial at 1-second MIs.
+    /// Deterministic: the same `(schedule, seed)` yields the same
+    /// workload; traces ignore the seed. See
+    /// [`ArrivalSchedule::arrivals_scaled`] for other MI lengths.
     pub fn arrivals(&self, seed: u64) -> Vec<ArrivalSpec> {
+        self.arrivals_scaled(seed, 1.0)
+    }
+
+    /// Materialize the arrival list for a run pacing `mi_s`-second MIs.
+    /// Wall-clock-indexed processes (open-loop rates, timed traces) land
+    /// at `at_mi = floor(at_s / mi_s)` — the workload tracks simulated
+    /// *time*, so halving the MI length doubles the arrival's MI index
+    /// but keeps its wall-clock instant. MI-indexed processes (Poisson
+    /// gaps in MIs, MI traces) ignore `mi_s` by construction.
+    pub fn arrivals_scaled(&self, seed: u64, mi_s: f64) -> Vec<ArrivalSpec> {
         match &self.process {
             Process::Trace(t) => t.clone(),
+            Process::TimedTrace(t) => {
+                let mut out = Vec::new();
+                for a in t {
+                    let at_mi = (a.at_s / mi_s).floor() as usize;
+                    if at_mi >= self.horizon_mis {
+                        continue;
+                    }
+                    out.push(ArrivalSpec {
+                        at_mi,
+                        files: a.files,
+                        file_bytes: a.file_bytes,
+                        max_lifetime_mis: a.max_lifetime_mis,
+                    });
+                }
+                out
+            }
             Process::Poisson { mean_gap_mis, max_agents, files, file_bytes, max_lifetime_mis } => {
                 // The schedule name joins the mix so two schedules under
                 // the same trial seed draw different processes.
@@ -109,6 +166,33 @@ impl ArrivalSchedule {
                     // Exponential inter-arrival gap.
                     at += -mean_gap_mis * (1.0 - rng.f64()).ln();
                     let at_mi = at.floor() as usize;
+                    if at_mi >= self.horizon_mis {
+                        break;
+                    }
+                    out.push(ArrivalSpec {
+                        at_mi,
+                        files: files.0 + rng.below(files.1 - files.0 + 1),
+                        file_bytes: *file_bytes,
+                        max_lifetime_mis: *max_lifetime_mis,
+                    });
+                }
+                out
+            }
+            Process::OpenLoop { rate_per_s, max_agents, files, file_bytes, max_lifetime_mis } => {
+                let mut rng = Rng::new(mix_seed(seed, self.name, 0));
+                let mut out = Vec::new();
+                // One lane from the start, mirroring the Poisson presets.
+                out.push(ArrivalSpec {
+                    at_mi: 0,
+                    files: files.0 + rng.below(files.1 - files.0 + 1),
+                    file_bytes: *file_bytes,
+                    max_lifetime_mis: *max_lifetime_mis,
+                });
+                let mut at_s = 0.0f64;
+                while out.len() < *max_agents {
+                    // Exponential inter-arrival gap, in seconds.
+                    at_s += -(1.0 - rng.f64()).ln() / rate_per_s;
+                    let at_mi = (at_s / mi_s).floor() as usize;
                     if at_mi >= self.horizon_mis {
                         break;
                     }
@@ -213,6 +297,68 @@ impl ArrivalSchedule {
             process: Process::Trace(trace),
         }
     }
+
+    /// Open-loop churn: users arrive at a fixed offered rate (~1 per
+    /// 5.6 wall-clock seconds) regardless of how fast the service is
+    /// draining — the rate-based regime a long-running `sparta serve`
+    /// daemon faces, where slowing down does not slow the arrivals.
+    /// Lifetimes are still counted in MIs (a lane's forced departure is
+    /// a control decision, not a wall-clock event).
+    pub fn open_loop() -> ArrivalSchedule {
+        ArrivalSchedule {
+            name: "open-loop",
+            summary: "open-loop poisson (~0.18 arrivals/s, max 30), forced departure after 60 MIs",
+            scenario: Scenario::by_name("chameleon").expect("chameleon preset registered"),
+            horizon_mis: 360,
+            process: Process::OpenLoop {
+                rate_per_s: 0.18,
+                max_agents: 30,
+                files: (8, 24),
+                file_bytes: 128 << 20,
+                max_lifetime_mis: Some(60),
+            },
+        }
+    }
+
+    /// Wall-clock burst trace: a marathon at t=0, a three-user pile-up
+    /// in the 45–48 s window, and two latecomers — all pinned to
+    /// simulated seconds, so the same burst lands mid-run whether the
+    /// service paces sub-second or multi-second MIs.
+    pub fn timed_burst() -> ArrivalSchedule {
+        let mut trace = vec![TimedArrival {
+            at_s: 0.0,
+            files: 200,
+            file_bytes: 128 << 20,
+            max_lifetime_mis: None,
+        }];
+        for k in 0..3 {
+            trace.push(TimedArrival {
+                at_s: 45.5 + 1.25 * k as f64,
+                files: 6,
+                file_bytes: 128 << 20,
+                max_lifetime_mis: Some(80),
+            });
+        }
+        trace.push(TimedArrival {
+            at_s: 120.75,
+            files: 10,
+            file_bytes: 128 << 20,
+            max_lifetime_mis: None,
+        });
+        trace.push(TimedArrival {
+            at_s: 240.0,
+            files: 8,
+            file_bytes: 128 << 20,
+            max_lifetime_mis: Some(60),
+        });
+        ArrivalSchedule {
+            name: "timed-burst",
+            summary: "wall-clock trace: marathon + 3-user pile-up at ~45 s + latecomers (calm WAN)",
+            scenario: Scenario::by_name("calm").expect("calm preset registered"),
+            horizon_mis: 360,
+            process: Process::TimedTrace(trace),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -222,7 +368,7 @@ mod tests {
     #[test]
     fn registry_resolves_and_names_are_unique() {
         let names = ArrivalSchedule::names();
-        for want in ["churn-light", "churn-heavy", "flash-crowd"] {
+        for want in ["churn-light", "churn-heavy", "flash-crowd", "open-loop", "timed-burst"] {
             assert!(names.contains(&want), "missing schedule '{want}'");
         }
         let mut dedup = names.clone();
@@ -270,6 +416,42 @@ mod tests {
             assert!(a.len() <= lanes, "{lanes} lanes: {} arrivals", a.len());
             assert_eq!(s.arrivals(42), a, "{lanes} lanes: not seed-deterministic");
         }
+    }
+
+    #[test]
+    fn open_loop_holds_its_wall_clock_rate_across_mi_lengths() {
+        let ol = ArrivalSchedule::by_name("open-loop").unwrap();
+        let fine = ol.arrivals_scaled(7, 0.5);
+        let coarse = ol.arrivals_scaled(7, 2.0);
+        assert_eq!(ol.arrivals_scaled(7, 0.5), fine, "not deterministic");
+        // Coarser MIs cover more wall clock inside the same MI horizon,
+        // so the coarse expansion can only extend the fine one; the
+        // shared prefix is the same wall-clock process, so MI indices
+        // relate by exact floor division and workloads match.
+        assert!(!fine.is_empty() && fine.len() <= coarse.len());
+        for (f, c) in fine.iter().zip(coarse.iter()) {
+            assert_eq!(c.at_mi, f.at_mi / 4, "mismatched wall-clock instant");
+            assert_eq!(c.files, f.files);
+        }
+        // And the rate is really per second: ~0.18/s over a 720 s coarse
+        // horizon easily saturates the 30-agent cap.
+        assert_eq!(coarse.len(), 30);
+    }
+
+    #[test]
+    fn timed_trace_lands_on_wall_clock_boundaries() {
+        let tb = ArrivalSchedule::by_name("timed-burst").unwrap();
+        let unit = tb.arrivals(1);
+        assert_eq!(unit, tb.arrivals(2), "traces must ignore the seed");
+        assert_eq!(unit[0].at_mi, 0);
+        let burst: Vec<usize> = unit[1..4].iter().map(|a| a.at_mi).collect();
+        assert_eq!(burst, vec![45, 46, 48], "pile-up MIs at 1 s per MI");
+        let half = tb.arrivals_scaled(1, 0.5);
+        let burst: Vec<usize> = half[1..4].iter().map(|a| a.at_mi).collect();
+        assert_eq!(burst, vec![91, 93, 96], "pile-up MIs at 0.5 s per MI");
+        // At 0.5 s per MI the 360-MI horizon covers only 180 s, so the
+        // 240 s latecomer falls off the end.
+        assert_eq!(half.len() + 1, unit.len(), "horizon must truncate in wall clock");
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! The serve daemon: a Unix-socket control plane wrapped around a
+//! [`ServeEngine`], plus the pacer loop that steps it.
+//!
+//! Threading model: the pacer (the caller's thread) is the only thread
+//! that touches the engine. A listener thread accepts control
+//! connections and spawns one handler thread per connection; handlers
+//! parse request lines and forward them to the pacer over an mpsc
+//! channel, blocking on a per-request reply channel. The pacer drains
+//! control messages at every MI boundary — so every op lands at a
+//! boundary, which is what keeps socket-driven runs replayable — and
+//! replies immediately (scheduled ops acknowledge with the boundary
+//! they will fire at).
+//!
+//! Event fan-out: each MI's events go to the `--events` JSONL sink and
+//! to every subscribed connection (a `subscribe` request hands its
+//! socket's write half to the pacer). Dead subscribers are dropped on
+//! the first failed write.
+//!
+//! Pacing: `time_scale` 0 steps as fast as possible; `s > 0` sleeps
+//! `mi_s / s` wall seconds per MI (1 = real time). `--hold` boots the
+//! daemon paused at MI 0 until a `go` request releases it, so a test
+//! harness can queue admissions before the first step.
+
+use super::engine::ServeEngine;
+use super::protocol::{err_line, ok_line, parse_request, Request};
+use super::snapshot::{OpKind, ServeSnapshot};
+use super::ServeSpec;
+use crate::coordinator::Event;
+use crate::experiments::SpartaCtx;
+use crate::telemetry::{event_json, JsonlSink, TelemetrySink};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+use std::time::Duration;
+
+/// How to boot: a fresh [`ServeSpec`], or resume from a snapshot file
+/// (which carries its own spec).
+pub enum Boot {
+    Fresh(ServeSpec),
+    Restore(PathBuf),
+}
+
+/// Daemon knobs that are *not* part of the logical run — none of these
+/// affect the event stream, so they may differ between an interrupted
+/// run and its restore without breaking bit-identity.
+pub struct ServeOptions {
+    /// Control socket path (rebound on boot, removed on exit).
+    pub socket: PathBuf,
+    /// Optional JSONL event log.
+    pub events: Option<PathBuf>,
+    /// Simulated-to-wall-clock ratio: 0 = as fast as possible,
+    /// 1 = real time, 10 = ten simulated seconds per wall second.
+    pub time_scale: f64,
+    /// Boot paused; the first `go` request releases the pacer.
+    pub hold: bool,
+}
+
+/// One parsed request in flight from a handler thread to the pacer.
+struct CtlMsg {
+    req: Request,
+    /// Per-request reply line, sent exactly once.
+    reply: Sender<String>,
+    /// The connection's write half, riding along on `subscribe`.
+    stream: Option<UnixStream>,
+}
+
+/// Run the daemon to completion: until `max_mis`, a `shutdown` request,
+/// or a halting snapshot. The socket is (re)bound on entry and removed
+/// on exit, success or failure.
+pub fn run_daemon(ctx: SpartaCtx, boot: Boot, opts: ServeOptions) -> Result<()> {
+    let mut engine = match boot {
+        Boot::Fresh(spec) => ServeEngine::new(ctx, spec)?,
+        Boot::Restore(path) => {
+            let snap = ServeSnapshot::load(&path)
+                .with_context(|| format!("loading snapshot {}", path.display()))?;
+            ServeEngine::restore(ctx, snap)?
+        }
+    };
+    let _ = std::fs::remove_file(&opts.socket);
+    let listener = UnixListener::bind(&opts.socket)
+        .with_context(|| format!("binding {}", opts.socket.display()))?;
+    let (tx, rx) = channel();
+    // The listener thread owns the only long-lived sender; it blocks in
+    // accept() and dies with the process when the pacer returns.
+    thread::spawn(move || listen_loop(listener, tx));
+    let result = pacer_loop(&mut engine, &rx, &opts);
+    let _ = std::fs::remove_file(&opts.socket);
+    result
+}
+
+fn listen_loop(listener: UnixListener, tx: Sender<CtlMsg>) {
+    for conn in listener.incoming() {
+        let Ok(stream) = conn else { break };
+        let tx = tx.clone();
+        thread::spawn(move || handle_conn(stream, tx));
+    }
+}
+
+/// One control connection: request lines in, one reply line out per
+/// request. Parse errors are answered locally; everything else round
+/// trips through the pacer.
+fn handle_conn(stream: UnixStream, tx: Sender<CtlMsg>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let reader = BufReader::new(read_half);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_line = match parse_request(&line) {
+            Err(e) => err_line(&format!("{e:#}")),
+            Ok(req) => {
+                let sub = if req == Request::Subscribe { writer.try_clone().ok() } else { None };
+                let (reply_tx, reply_rx) = channel();
+                let msg = CtlMsg { req, reply: reply_tx, stream: sub };
+                if tx.send(msg).is_err() {
+                    break; // pacer gone: the daemon is shutting down
+                }
+                match reply_rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            }
+        };
+        if writeln!(writer, "{reply_line}").is_err() {
+            break;
+        }
+    }
+}
+
+/// The pacer: one iteration per MI boundary. Drain control (blocking
+/// cheaply while held), write due snapshots, step, fan the MI's events
+/// out, sleep if pacing slower than flat out.
+fn pacer_loop(engine: &mut ServeEngine, rx: &Receiver<CtlMsg>, opts: &ServeOptions) -> Result<()> {
+    let mut sink = match &opts.events {
+        Some(path) => {
+            let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+            Some(JsonlSink::new(BufWriter::new(f)))
+        }
+        None => None,
+    };
+    let mut subscribers: Vec<UnixStream> = Vec::new();
+    let mut snaps: Vec<(PathBuf, usize, bool)> = Vec::new();
+    let mut holding = opts.hold;
+    let mut shutdown = false;
+    let mut events: Vec<Event> = Vec::new();
+    loop {
+        loop {
+            let msg = if holding {
+                rx.recv_timeout(Duration::from_millis(50)).ok()
+            } else {
+                rx.try_recv().ok()
+            };
+            let Some(msg) = msg else { break };
+            ctl(engine, msg, &mut subscribers, &mut snaps, &mut holding, &mut shutdown);
+        }
+        if shutdown {
+            break;
+        }
+        // Write snapshots due at this boundary; a halting snapshot ends
+        // the run (its restore continues the stream bit-identically).
+        let mi = engine.mi();
+        let mut halt = false;
+        let mut failed = None;
+        snaps.retain(|(path, at, h)| {
+            if *at > mi {
+                return true;
+            }
+            match engine.snapshot().and_then(|s| s.save(path)) {
+                Ok(()) => halt |= *h,
+                Err(e) => failed = Some(e),
+            }
+            false
+        });
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        if halt {
+            break;
+        }
+        if holding {
+            continue;
+        }
+        if mi >= engine.spec().max_mis {
+            break;
+        }
+        engine.step(&mut events)?;
+        for ev in &events {
+            if let Some(s) = sink.as_mut() {
+                s.on_event(ev);
+            }
+            if !subscribers.is_empty() {
+                let line = format!("{}\n", event_json(ev));
+                subscribers.retain_mut(|s| s.write_all(line.as_bytes()).is_ok());
+            }
+        }
+        if opts.time_scale > 0.0 {
+            thread::sleep(Duration::from_secs_f64(engine.spec().mi_s / opts.time_scale));
+        }
+    }
+    Ok(()) // sink drops here, flushing the event log
+}
+
+/// Apply one control message at an MI boundary and answer it.
+fn ctl(
+    engine: &mut ServeEngine,
+    msg: CtlMsg,
+    subscribers: &mut Vec<UnixStream>,
+    snaps: &mut Vec<(PathBuf, usize, bool)>,
+    holding: &mut bool,
+    shutdown: &mut bool,
+) {
+    let CtlMsg { req, reply, stream } = msg;
+    let line = match req {
+        Request::Admit { rec, at_mi } => queued(engine.enqueue(OpKind::Admit(rec), at_mi)),
+        Request::Pause { lane, at_mi } => queued(engine.enqueue(OpKind::Pause(lane), at_mi)),
+        Request::Resume { lane, at_mi } => queued(engine.enqueue(OpKind::Resume(lane), at_mi)),
+        Request::Cancel { lane, at_mi } => queued(engine.enqueue(OpKind::Cancel(lane), at_mi)),
+        Request::Status => ok_line(vec![("status", engine.status_json())]),
+        Request::Snapshot { path, at_mi, halt } => {
+            let at = at_mi.unwrap_or_else(|| engine.mi());
+            snaps.push((PathBuf::from(path), at, halt));
+            ok_line(vec![("snapshot_at_mi", Json::from(at)), ("halt", Json::from(halt))])
+        }
+        Request::Subscribe => match stream {
+            Some(s) => {
+                subscribers.push(s);
+                ok_line(vec![("subscribed", Json::from(true))])
+            }
+            None => err_line("subscribe stream unavailable"),
+        },
+        Request::Go => {
+            *holding = false;
+            ok_line(vec![("running", Json::from(true))])
+        }
+        Request::Shutdown => {
+            *shutdown = true;
+            ok_line(vec![("stopping", Json::from(true))])
+        }
+    };
+    let _ = reply.send(line);
+}
+
+fn queued(at: Result<usize>) -> String {
+    match at {
+        Ok(at) => ok_line(vec![("queued_at_mi", Json::from(at))]),
+        Err(e) => err_line(&format!("{e:#}")),
+    }
+}
+
+/// `sparta serve-ctl`: connect, send each request line, print each
+/// reply line. If any request was a `subscribe`, the remaining event
+/// stream is copied to stdout until the daemon closes the connection.
+pub fn run_ctl(socket: &Path, lines: &[String]) -> Result<()> {
+    let stream = connect_retry(socket)?;
+    let mut writer = stream.try_clone().context("cloning control stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut subscribed = false;
+    for line in lines {
+        writeln!(writer, "{line}").context("writing request")?;
+        let mut reply = String::new();
+        if reader.read_line(&mut reply).context("reading reply")? == 0 {
+            return Err(anyhow!("daemon closed the connection"));
+        }
+        print!("{reply}");
+        subscribed |= matches!(parse_request(line), Ok(Request::Subscribe));
+    }
+    if subscribed {
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            println!("{line}");
+        }
+    }
+    Ok(())
+}
+
+/// The daemon binds its socket after forking away from the caller, so
+/// give it ~5 s to appear before giving up.
+fn connect_retry(socket: &Path) -> Result<UnixStream> {
+    for _ in 0..50 {
+        if let Ok(s) = UnixStream::connect(socket) {
+            return Ok(s);
+        }
+        thread::sleep(Duration::from_millis(100));
+    }
+    UnixStream::connect(socket).with_context(|| format!("connecting to {}", socket.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Paths;
+
+    #[test]
+    fn daemon_answers_control_requests_and_runs_to_completion() {
+        let root = std::env::temp_dir().join("sparta_serve_daemon_unit");
+        let _ = std::fs::remove_dir_all(&root);
+        let ctx = SpartaCtx::load(Paths::with_root(&root)).expect("fresh context loads");
+        let spec = ServeSpec {
+            scenario: "calm".to_string(),
+            schedule: None,
+            methods: vec!["rclone".to_string()],
+            hosts: 1,
+            seed: 5,
+            mi_s: 1.0,
+            max_mis: 6,
+            observe_paused: false,
+        };
+        let socket = root.join("ctl.sock");
+        let opts = ServeOptions {
+            socket: socket.clone(),
+            events: Some(root.join("events.jsonl")),
+            time_scale: 0.0,
+            hold: true,
+        };
+        let daemon = thread::spawn(move || run_daemon(ctx, Boot::Fresh(spec), opts));
+
+        let stream = connect_retry(&socket).expect("daemon socket comes up");
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut ask = |line: &str| -> Json {
+            writeln!(writer, "{line}").unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            Json::parse(&reply).expect("reply is one JSON object")
+        };
+
+        let r = ask(r#"{"cmd":"admit","method":"rclone","files":1,"at_mi":0}"#);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "admit: {r}");
+        assert_eq!(r.get("queued_at_mi").and_then(Json::as_usize), Some(0));
+        let r = ask(r#"{"cmd":"admit","method":"no-such-method"}"#);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "bad admit: {r}");
+        let r = ask(r#"{"cmd":"status"}"#);
+        let mi = r.get("status").and_then(|s| s.get("mi")).and_then(Json::as_usize);
+        assert_eq!(mi, Some(0), "held daemon must sit at MI 0: {r}");
+        let r = ask(r#"{"cmd":"go"}"#);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "go: {r}");
+
+        daemon.join().unwrap().expect("daemon exits cleanly at max_mis");
+        let log = std::fs::read_to_string(root.join("events.jsonl")).unwrap();
+        assert!(!log.is_empty(), "event log must be written and flushed");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

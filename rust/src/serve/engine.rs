@@ -1,0 +1,359 @@
+//! The serve daemon's single-threaded core: a [`Fleet`] plus a queue of
+//! pending control operations, stepped one MI boundary at a time.
+//!
+//! All control flows through the op queue — schedule-driven admissions
+//! queued at boot, socket requests queued by the daemon — and every op
+//! carries the MI boundary it is due at. [`ServeEngine::step`] applies
+//! the due ops *in insertion order* and then steps the fleet, so a run
+//! is fully determined by (spec, op sequence): the property the
+//! byte-identical checkpoint/restore contract rests on. The daemon's
+//! sockets and pacing live in [`super::daemon`]; everything here is
+//! plain and in-process, which is how the integration tests drive it.
+
+use super::snapshot::{status_str, AdmitRec, OpKind, PendingOp, ServeSnapshot};
+use super::{build_fleet, Fleet, ServeSpec};
+use crate::coordinator::{Event, LaneId, LaneSpec};
+use crate::experiments::fleet::EPOCH_MIS;
+use crate::experiments::runner::cell_seed;
+use crate::experiments::{make_optimizer, SpartaCtx};
+use crate::scenarios::ArrivalSchedule;
+use crate::telemetry::{FairnessSink, TelemetrySink};
+use crate::transfer::TransferJob;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// A live serve fleet with its pending-op queue and admission log.
+pub struct ServeEngine {
+    ctx: SpartaCtx,
+    spec: ServeSpec,
+    fleet: Fleet,
+    /// Admissions already executed, resolved, in admission order — the
+    /// snapshot replay log.
+    admits: Vec<AdmitRec>,
+    /// Ops waiting for their MI boundary, in arrival order.
+    queue: Vec<PendingOp>,
+    /// Per-epoch JFI over the event stream since (re)start, for `status`.
+    fairness: FairnessSink,
+}
+
+impl ServeEngine {
+    /// Boot a fresh fleet. A `spec.schedule` is expanded here into queued
+    /// admissions (methods cycled per arrival, seeds/names resolved at
+    /// execution), so the schedule behaves exactly like a scripted
+    /// operator issuing `admit` requests at those boundaries.
+    pub fn new(ctx: SpartaCtx, spec: ServeSpec) -> Result<ServeEngine> {
+        let fleet = build_fleet(&spec)?;
+        let mut queue = Vec::new();
+        if let Some(name) = &spec.schedule {
+            let sched = ArrivalSchedule::by_name(name)
+                .ok_or_else(|| anyhow!("unknown arrival schedule '{name}'"))?;
+            if spec.methods.is_empty() {
+                return Err(anyhow!("a schedule needs at least one method to cycle through"));
+            }
+            for (k, a) in sched.arrivals_scaled(spec.seed, spec.mi_s).iter().enumerate() {
+                let method = spec.methods[k % spec.methods.len()].clone();
+                queue.push(PendingOp {
+                    at_mi: a.at_mi,
+                    op: OpKind::Admit(AdmitRec {
+                        method,
+                        files: a.files,
+                        file_bytes: a.file_bytes,
+                        name: None,
+                        seed: None,
+                        max_lifetime_mis: a.max_lifetime_mis,
+                    }),
+                });
+            }
+        }
+        let fairness = FairnessSink::new(EPOCH_MIS);
+        Ok(ServeEngine { ctx, spec, fleet, admits: Vec::new(), queue, fairness })
+    }
+
+    /// Resume from a snapshot: rebuild the fleet from the spec, replay the
+    /// admission log (regenerating every rebuild-time constant — meter
+    /// seeds, flows, arena rows, ledger accounts), then inject the
+    /// captured mutable state. The snapshot queue is adopted as-is; no
+    /// schedule re-expansion, no lifetime re-arming — the queue already
+    /// holds exactly the not-yet-applied remainder.
+    pub fn restore(ctx: SpartaCtx, snap: ServeSnapshot) -> Result<ServeEngine> {
+        let ServeSnapshot { spec, admits, queue, state } = snap;
+        let mut fleet = build_fleet(&spec)?;
+        for rec in &admits {
+            let seed = rec.seed.ok_or_else(|| anyhow!("snapshot admit: no seed"))?;
+            let name = rec.name.clone().ok_or_else(|| anyhow!("snapshot admit: no name"))?;
+            let (opt, engine, reward) = make_optimizer(&ctx, &rec.method, seed)?;
+            let job = TransferJob::files(rec.files, rec.file_bytes);
+            let lane = LaneSpec::new(opt, job).engine(engine).reward(reward).named(name);
+            fleet.stepping().admit(lane);
+        }
+        if !fleet.import_state(&state) {
+            return Err(anyhow!("snapshot state does not match the rebuilt fleet shape"));
+        }
+        let fairness = FairnessSink::new(EPOCH_MIS);
+        Ok(ServeEngine { ctx, spec, fleet, admits, queue, fairness })
+    }
+
+    /// Queue a control op for `at_mi` (default: the next boundary).
+    /// Admissions are validated up front — unknown methods and online
+    /// learners (whose training state is not snapshot-safe) are rejected
+    /// at the socket instead of crashing the pacer later.
+    pub fn enqueue(&mut self, op: OpKind, at_mi: Option<usize>) -> Result<usize> {
+        if let OpKind::Admit(rec) = &op {
+            let (probe, _, _) = make_optimizer(&self.ctx, &rec.method, 0)
+                .map_err(|e| anyhow!("admit rejected: {e:#}"))?;
+            if probe.is_learning() {
+                return Err(anyhow!("admit rejected: learning optimizers are not snapshot-safe"));
+            }
+        }
+        let at = at_mi.unwrap_or_else(|| self.mi());
+        self.queue.push(PendingOp { at_mi: at, op });
+        Ok(at)
+    }
+
+    /// Advance one monitoring interval: apply every op due at the current
+    /// boundary (insertion order), step the fleet into `events`, feed the
+    /// fairness series. The buffer is reclaimed by the fleet each call —
+    /// after return it holds exactly this MI's events.
+    pub fn step(&mut self, events: &mut Vec<Event>) -> Result<()> {
+        let mi = self.fleet.view().mi();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].at_mi <= mi {
+                let due = self.queue.remove(i);
+                self.apply(due.op)?;
+            } else {
+                i += 1;
+            }
+        }
+        self.fleet.stepping().step_into(events);
+        for ev in events.iter() {
+            self.fairness.on_event(ev);
+        }
+        Ok(())
+    }
+
+    fn apply(&mut self, op: OpKind) -> Result<()> {
+        match op {
+            OpKind::Admit(rec) => self.apply_admit(rec),
+            OpKind::Pause(l) => {
+                self.fleet.stepping().pause(LaneId(l));
+                Ok(())
+            }
+            OpKind::Resume(l) => {
+                self.fleet.stepping().resume(LaneId(l));
+                Ok(())
+            }
+            OpKind::Cancel(l) => {
+                self.fleet.stepping().cancel(LaneId(l));
+                Ok(())
+            }
+        }
+    }
+
+    /// Execute an admission: resolve seed and name from the admission
+    /// index (deterministic, so a restored run resolves identically), arm
+    /// the lifetime cancel, and append the resolved record to the replay
+    /// log.
+    fn apply_admit(&mut self, rec: AdmitRec) -> Result<()> {
+        let k = self.admits.len() as u64;
+        let derived = cell_seed(self.spec.seed, &rec.method, k);
+        let seed = rec.seed.unwrap_or(derived);
+        let name = rec.name.clone().unwrap_or_else(|| format!("{}#{k}", rec.method));
+        let (opt, engine, reward) = make_optimizer(&self.ctx, &rec.method, seed)?;
+        let job = TransferJob::files(rec.files, rec.file_bytes);
+        let lane = LaneSpec::new(opt, job).engine(engine).reward(reward).named(name.clone());
+        let id = self.fleet.stepping().admit(lane);
+        if let Some(life) = rec.max_lifetime_mis {
+            let at_mi = self.fleet.view().mi() + life;
+            self.queue.push(PendingOp { at_mi, op: OpKind::Cancel(id.0) });
+        }
+        self.admits.push(AdmitRec {
+            method: rec.method,
+            files: rec.files,
+            file_bytes: rec.file_bytes,
+            name: Some(name),
+            seed: Some(seed),
+            max_lifetime_mis: rec.max_lifetime_mis,
+        });
+        Ok(())
+    }
+
+    /// Capture the complete logical state (see [`ServeSnapshot`]). Legal
+    /// at any clean MI boundary — the queue is captured as-is, *including*
+    /// ops due at the current MI, which the restored run applies itself.
+    pub fn snapshot(&self) -> Result<ServeSnapshot> {
+        let Some(state) = self.fleet.export_state() else {
+            return Err(anyhow!("fleet is not at a clean MI boundary"));
+        };
+        Ok(ServeSnapshot {
+            spec: self.spec.clone(),
+            admits: self.admits.clone(),
+            queue: self.queue.clone(),
+            state,
+        })
+    }
+
+    /// The `status` reply body: counters, per-lane table, energy truth,
+    /// per-epoch JFI since (re)start.
+    pub fn status_json(&self) -> Json {
+        let v = self.fleet.view();
+        let mut lanes = Vec::new();
+        for k in 0..v.lane_count() {
+            let id = LaneId(k);
+            let name = self.fleet.lane_name(id).map(Json::from).unwrap_or(Json::Null);
+            let status = match v.status(id) {
+                Some(s) => Json::from(status_str(s)),
+                None => Json::Null,
+            };
+            let energy = v.lane_energy_j(id).map(Json::from).unwrap_or(Json::Null);
+            lanes.push(Json::obj(vec![
+                ("lane", Json::from(k)),
+                ("name", name),
+                ("status", status),
+                ("energy_j", energy),
+            ]));
+        }
+        let mut fields = vec![
+            ("mi", Json::from(v.mi())),
+            ("time_s", Json::from(v.time_s())),
+            ("idle", Json::from(v.is_idle())),
+            ("queued_ops", Json::from(self.queue.len())),
+            ("admitted", Json::from(self.admits.len())),
+            ("host_energy_j", Json::from(v.host_energy_j())),
+            ("epoch_jfi", Json::arr_f64(&self.fairness.epoch_jfi())),
+            ("lanes", Json::Arr(lanes)),
+        ];
+        if let Some(r) = v.energy_rails() {
+            let rails = Json::obj(vec![
+                ("cpu_j", Json::from(r.cpu_j)),
+                ("nic_j", Json::from(r.nic_j)),
+                ("fixed_j", Json::from(r.fixed_j)),
+                ("idle_j", Json::from(r.idle_j)),
+            ]);
+            fields.push(("rails", rails));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn spec(&self) -> &ServeSpec {
+        &self.spec
+    }
+
+    pub fn mi(&self) -> usize {
+        self.fleet.view().mi()
+    }
+
+    pub fn time_s(&self) -> f64 {
+        self.fleet.view().time_s()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.fleet.view().is_idle()
+    }
+
+    /// Ops still waiting for their boundary.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Paths;
+    use crate::telemetry::event_json;
+
+    fn test_ctx(tag: &str) -> SpartaCtx {
+        let root = std::env::temp_dir().join(format!("sparta_serve_engine_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        SpartaCtx::load(Paths::with_root(&root)).expect("fresh context loads")
+    }
+
+    fn spec(scenario: &str) -> ServeSpec {
+        ServeSpec {
+            scenario: scenario.to_string(),
+            schedule: None,
+            methods: vec!["rclone".to_string()],
+            hosts: 1,
+            seed: 11,
+            mi_s: 1.0,
+            max_mis: 24,
+            observe_paused: false,
+        }
+    }
+
+    fn admit(method: &str, files: usize, life: Option<usize>) -> OpKind {
+        OpKind::Admit(AdmitRec {
+            method: method.to_string(),
+            files,
+            file_bytes: 32 << 20,
+            name: None,
+            seed: None,
+            max_lifetime_mis: life,
+        })
+    }
+
+    fn run_lines(engine: &mut ServeEngine, mis: usize) -> Vec<String> {
+        let mut events = Vec::new();
+        let mut lines = Vec::new();
+        for _ in 0..mis {
+            engine.step(&mut events).unwrap();
+            for ev in &events {
+                lines.push(event_json(ev).to_string());
+            }
+        }
+        lines
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let mut reference = ServeEngine::new(test_ctx("rt_a"), spec("calm")).unwrap();
+        reference.enqueue(admit("rclone", 2, None), Some(0)).unwrap();
+        reference.enqueue(admit("2-phase", 2, Some(18)), Some(3)).unwrap();
+        reference.enqueue(OpKind::Pause(0), Some(6)).unwrap();
+        reference.enqueue(OpKind::Resume(0), Some(8)).unwrap();
+        let head = run_lines(&mut reference, 10);
+        let snap = reference.snapshot().unwrap();
+        let tail_ref = run_lines(&mut reference, 14);
+
+        let mut restored = ServeEngine::restore(test_ctx("rt_b"), snap).unwrap();
+        assert_eq!(restored.mi(), 10);
+        let tail = run_lines(&mut restored, 14);
+        assert_eq!(tail, tail_ref, "restored stream diverged from the uninterrupted run");
+        assert!(!head.is_empty() && !tail.is_empty(), "workload produced no events");
+    }
+
+    #[test]
+    fn schedule_expansion_queues_every_arrival() {
+        let mut s = spec("chameleon");
+        s.schedule = Some("churn-light".to_string());
+        s.methods = vec!["rclone".to_string(), "2-phase".to_string()];
+        let engine = ServeEngine::new(test_ctx("sched"), s).unwrap();
+        let sched = ArrivalSchedule::by_name("churn-light").unwrap();
+        assert_eq!(engine.queue_len(), sched.arrivals_scaled(11, 1.0).len());
+    }
+
+    #[test]
+    fn unknown_methods_are_rejected_at_enqueue() {
+        let mut engine = ServeEngine::new(test_ctx("reject"), spec("calm")).unwrap();
+        let err = engine.enqueue(admit("no-such-method", 1, None), None);
+        assert!(err.is_err(), "bogus method must be rejected");
+        assert_eq!(engine.queue_len(), 0);
+    }
+
+    #[test]
+    fn status_json_reports_lane_table() {
+        let mut engine = ServeEngine::new(test_ctx("status"), spec("calm")).unwrap();
+        engine.enqueue(admit("rclone", 1, None), Some(0)).unwrap();
+        let mut events = Vec::new();
+        for _ in 0..3 {
+            engine.step(&mut events).unwrap();
+        }
+        let st = engine.status_json();
+        assert_eq!(st.get("mi").and_then(Json::as_usize), Some(3));
+        let lanes = st.get("lanes").and_then(Json::as_arr).unwrap();
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(lanes[0].get("name").and_then(Json::as_str), Some("rclone#0"));
+        assert_eq!(lanes[0].get("status").and_then(Json::as_str), Some("active"));
+    }
+}

@@ -1,0 +1,167 @@
+//! `sparta serve` — a long-running transfer service over the
+//! [`Stepping`](crate::coordinator::Stepping) fleet API.
+//!
+//! The batch drivers (`sparta transfer`, `sparta fleet`) decide the whole
+//! workload up front and run to completion. `serve` inverts that: a daemon
+//! owns the fleet — a single-host [`Session`] or a multi-host [`Cluster`],
+//! per [`ServeSpec::hosts`] — and a local-socket control plane admits,
+//! pauses, resumes and cancels lanes *while it runs*. A pacer thread steps
+//! one monitoring interval at a time, in scaled or real time, streaming
+//! the event feed to an `--events` JSONL file and to any subscribed
+//! control connections.
+//!
+//! The layers, bottom up:
+//!
+//! - [`engine::ServeEngine`] — the daemon's single-threaded core: the
+//!   fleet plus a queue of pending control ops (admissions from an
+//!   [`crate::scenarios::ArrivalSchedule`] or from the socket), applied at
+//!   their due MI boundary. Fully in-process testable; the integration
+//!   suite drives it directly.
+//! - [`snapshot`] — the versioned checkpoint codec. A
+//!   [`snapshot::ServeSnapshot`] carries the rebuild spec, the resolved
+//!   admission replay log, the not-yet-due op queue and the fleet's
+//!   bit-exact mutable state (every `f64` is serialized as its IEEE bit
+//!   pattern, so nothing is lost to decimal formatting).
+//! - [`protocol`] — the line-delimited JSON request/response surface
+//!   shared by the daemon and `sparta serve-ctl`.
+//! - [`daemon`] (unix only) — the socket listener, per-connection
+//!   handlers, and the pacer loop that ties it all together.
+//!
+//! The headline contract is **bit-identical checkpoint/restore**: snapshot
+//! a running service at an MI boundary, kill it, `sparta serve --restore
+//! FILE`, and the resumed event stream concatenated onto the
+//! pre-snapshot stream is byte-for-byte the stream an uninterrupted run
+//! would have produced. Restore is replay-then-inject: the spec rebuilds
+//! the fleet, the admission log replays every lane (regenerating seeds,
+//! flows, arena rows and ledger accounts), and the captured state is then
+//! injected wholesale — see [`Session::import_state`].
+
+pub mod engine;
+pub mod protocol;
+pub mod snapshot;
+
+#[cfg(unix)]
+pub mod daemon;
+
+pub use engine::ServeEngine;
+pub use snapshot::{AdmitRec, OpKind, PendingOp, ServeSnapshot, SNAPSHOT_VERSION};
+
+use crate::coordinator::{
+    Cluster, ClusterState, LaneId, Session, SessionState, Stepping, INCAST_RX_OVER_WAN,
+};
+use crate::net::Topology;
+use crate::scenarios::Scenario;
+use anyhow::{anyhow, Result};
+
+/// Everything needed to rebuild a serve fleet from scratch — the
+/// constructor half of the snapshot contract. Stored verbatim in every
+/// [`ServeSnapshot`] so `--restore` needs no flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Registered [`Scenario`] name pinning testbed + topology.
+    pub scenario: String,
+    /// Optional [`crate::scenarios::ArrivalSchedule`] name expanded into
+    /// queued admissions at boot (fresh boots only; a restored queue
+    /// already carries the not-yet-due remainder).
+    pub schedule: Option<String>,
+    /// Methods cycled through by schedule-driven admissions.
+    pub methods: Vec<String>,
+    /// 1 = single-host [`Session`]; above 1, an incast [`Cluster`].
+    pub hosts: usize,
+    pub seed: u64,
+    /// Monitoring-interval length, simulated seconds.
+    pub mi_s: f64,
+    /// The pacer stops stepping at this MI.
+    pub max_mis: usize,
+    /// Whether paused lanes emit zero-throughput observation records.
+    pub observe_paused: bool,
+}
+
+/// The two fleet scales behind one serve daemon, unified where the
+/// [`Stepping`] trait object cannot reach (lane names, state capture).
+pub enum Fleet {
+    Single(Box<Session>),
+    Cluster(Cluster),
+}
+
+/// A captured [`Fleet`] (the state half of a [`ServeSnapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetState {
+    Single(Box<SessionState>),
+    Cluster(ClusterState),
+}
+
+impl Fleet {
+    /// The mutable stepping surface.
+    pub fn stepping(&mut self) -> &mut dyn Stepping {
+        match self {
+            Fleet::Single(s) => s.as_mut(),
+            Fleet::Cluster(c) => c,
+        }
+    }
+
+    /// The read-only stepping surface.
+    pub fn view(&self) -> &dyn Stepping {
+        match self {
+            Fleet::Single(s) => s.as_ref(),
+            Fleet::Cluster(c) => c,
+        }
+    }
+
+    pub fn lane_name(&self, id: LaneId) -> Option<&str> {
+        match self {
+            Fleet::Single(s) => s.lane_name(id),
+            Fleet::Cluster(c) => c.lane_name(id),
+        }
+    }
+
+    /// Capture the fleet's mutable state at a clean MI boundary (`None`
+    /// when control events are pending or the substrate cannot
+    /// checkpoint itself).
+    pub fn export_state(&self) -> Option<FleetState> {
+        match self {
+            Fleet::Single(s) => s.export_state().map(|st| FleetState::Single(Box::new(st))),
+            Fleet::Cluster(c) => c.export_state().map(FleetState::Cluster),
+        }
+    }
+
+    /// Inject a capture into a fleet rebuilt with the same spec and
+    /// admission sequence. False on a shape mismatch.
+    pub fn import_state(&mut self, state: &FleetState) -> bool {
+        match (self, state) {
+            (Fleet::Single(s), FleetState::Single(st)) => s.import_state(st),
+            (Fleet::Cluster(c), FleetState::Cluster(st)) => c.import_state(st),
+            _ => false,
+        }
+    }
+}
+
+/// Build the fleet a [`ServeSpec`] describes — the same construction
+/// `sparta fleet` uses, so serve inherits its determinism contract: one
+/// host-resolved session, or an incast cluster of per-host sessions
+/// sharing the scenario testbed's WAN and one receiver.
+pub fn build_fleet(spec: &ServeSpec) -> Result<Fleet> {
+    let sc = Scenario::by_name(&spec.scenario)
+        .ok_or_else(|| anyhow!("unknown scenario '{}'", spec.scenario))?;
+    let hosts = spec.hosts.max(1);
+    if hosts == 1 {
+        let session = sc
+            .session_host_resolved()
+            .mi(spec.mi_s)
+            .observe_paused(spec.observe_paused)
+            .seed(spec.seed)
+            .build();
+        return Ok(Fleet::Single(Box::new(session)));
+    }
+    let tb = &sc.testbed;
+    let cluster = Cluster::build(hosts, spec.seed, |h, host_seed| {
+        Session::builder(tb.clone())
+            .energy(tb.energy_hosts_of(h, hosts))
+            .observe_paused(spec.observe_paused)
+            .seed(host_seed)
+            .mi(spec.mi_s)
+            .topology(Topology::incast_host(tb, hosts, INCAST_RX_OVER_WAN))
+            .build()
+    });
+    Ok(Fleet::Cluster(cluster))
+}

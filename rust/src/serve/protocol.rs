@@ -1,0 +1,191 @@
+//! The serve control-plane wire protocol: one JSON object per line.
+//!
+//! Requests are `{"cmd": "...", ...}`; every request gets exactly one
+//! reply line, `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
+//! A `subscribe` reply is followed by the live event stream (the same
+//! JSONL records `--events` writes) until the connection closes. The
+//! same parser serves the daemon and `sparta serve-ctl`, so the two
+//! cannot drift.
+//!
+//! Commands:
+//!
+//! | cmd        | fields                                                  |
+//! |------------|---------------------------------------------------------|
+//! | `admit`    | `method` (required), `files`, `file_bytes`, `name`, `seed`, `max_lifetime_mis`, `at_mi` |
+//! | `pause` / `resume` / `cancel` | `lane` (required), `at_mi`           |
+//! | `status`   | —                                                       |
+//! | `snapshot` | `path` (required), `at_mi`, `halt`                      |
+//! | `subscribe`| —                                                       |
+//! | `go`       | — (release a `--hold` daemon)                           |
+//! | `shutdown` | —                                                       |
+//!
+//! `at_mi` schedules the op for a future MI boundary; omitted, it lands
+//! at the next one. Scheduling ops at explicit boundaries is what makes
+//! socket-driven runs reproducible enough to diff byte-for-byte.
+
+use super::snapshot::AdmitRec;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Default per-admission workload when the request does not override it:
+/// 8 files of 128 MiB.
+pub const DEFAULT_FILES: usize = 8;
+pub const DEFAULT_FILE_BYTES: u64 = 128 << 20;
+
+/// A parsed control request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Admit { rec: AdmitRec, at_mi: Option<usize> },
+    Pause { lane: usize, at_mi: Option<usize> },
+    Resume { lane: usize, at_mi: Option<usize> },
+    Cancel { lane: usize, at_mi: Option<usize> },
+    Status,
+    Snapshot { path: String, at_mi: Option<usize>, halt: bool },
+    Subscribe,
+    Go,
+    Shutdown,
+}
+
+/// Parse one request line. Unknown commands and malformed JSON are
+/// errors; unknown *fields* are ignored (forward compatibility).
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad request: {e}"))?;
+    let cmd = get_str(&j, "cmd").ok_or_else(|| anyhow!("request needs 'cmd'"))?;
+    let at_mi = get_usize(&j, "at_mi");
+    match cmd.as_str() {
+        "admit" => {
+            let method = get_str(&j, "method").ok_or_else(|| anyhow!("admit needs 'method'"))?;
+            let rec = AdmitRec {
+                method,
+                files: get_usize(&j, "files").unwrap_or(DEFAULT_FILES),
+                file_bytes: get_u64(&j, "file_bytes").unwrap_or(DEFAULT_FILE_BYTES),
+                name: get_str(&j, "name"),
+                seed: get_u64(&j, "seed"),
+                max_lifetime_mis: get_usize(&j, "max_lifetime_mis"),
+            };
+            Ok(Request::Admit { rec, at_mi })
+        }
+        "pause" | "resume" | "cancel" => {
+            let lane = get_usize(&j, "lane").ok_or_else(|| anyhow!("{cmd} needs 'lane'"))?;
+            Ok(match cmd.as_str() {
+                "pause" => Request::Pause { lane, at_mi },
+                "resume" => Request::Resume { lane, at_mi },
+                _ => Request::Cancel { lane, at_mi },
+            })
+        }
+        "status" => Ok(Request::Status),
+        "snapshot" => {
+            let path = get_str(&j, "path").ok_or_else(|| anyhow!("snapshot needs 'path'"))?;
+            let halt = j.get("halt").and_then(Json::as_bool).unwrap_or(false);
+            Ok(Request::Snapshot { path, at_mi, halt })
+        }
+        "subscribe" => Ok(Request::Subscribe),
+        "go" => Ok(Request::Go),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(anyhow!("unknown cmd '{other}'")),
+    }
+}
+
+fn get_str(j: &Json, key: &str) -> Option<String> {
+    j.get(key).and_then(Json::as_str).map(str::to_string)
+}
+
+fn get_usize(j: &Json, key: &str) -> Option<usize> {
+    j.get(key).and_then(Json::as_usize)
+}
+
+/// `u64` request fields accept both a JSON number and a decimal string
+/// (numbers above 2^53 only survive the string form).
+fn get_u64(j: &Json, key: &str) -> Option<u64> {
+    match j.get(key)? {
+        Json::Str(s) => s.parse::<u64>().ok(),
+        other => other.as_f64().map(|x| x as u64),
+    }
+}
+
+/// An `{"ok": true, ...}` reply line (no trailing newline).
+pub fn ok_line(extra: Vec<(&str, Json)>) -> String {
+    let mut fields = vec![("ok", Json::from(true))];
+    fields.extend(extra);
+    Json::obj(fields).to_string()
+}
+
+/// An `{"ok": false, "error": ...}` reply line (no trailing newline).
+pub fn err_line(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::from(false)), ("error", Json::from(msg))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_parses_with_defaults_and_overrides() {
+        let r = parse_request(r#"{"cmd":"admit","method":"rclone"}"#).unwrap();
+        match r {
+            Request::Admit { rec, at_mi } => {
+                assert_eq!(rec.method, "rclone");
+                assert_eq!(rec.files, DEFAULT_FILES);
+                assert_eq!(rec.file_bytes, DEFAULT_FILE_BYTES);
+                assert_eq!(rec.name, None);
+                assert_eq!(rec.seed, None);
+                assert_eq!(rec.max_lifetime_mis, None);
+                assert_eq!(at_mi, None);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        let line = r#"{"cmd":"admit","method":"2-phase","files":3,"file_bytes":1024,
+                       "name":"x","seed":"18446744073709551615","max_lifetime_mis":9,"at_mi":4}"#;
+        let line = line.replace('\n', " ");
+        match parse_request(&line).unwrap() {
+            Request::Admit { rec, at_mi } => {
+                assert_eq!(rec.files, 3);
+                assert_eq!(rec.file_bytes, 1024);
+                assert_eq!(rec.name.as_deref(), Some("x"));
+                assert_eq!(rec.seed, Some(u64::MAX));
+                assert_eq!(rec.max_lifetime_mis, Some(9));
+                assert_eq!(at_mi, Some(4));
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_and_simple_commands_parse() {
+        let r = parse_request(r#"{"cmd":"pause","lane":2,"at_mi":10}"#).unwrap();
+        assert_eq!(r, Request::Pause { lane: 2, at_mi: Some(10) });
+        let r = parse_request(r#"{"cmd":"resume","lane":2}"#).unwrap();
+        assert_eq!(r, Request::Resume { lane: 2, at_mi: None });
+        let r = parse_request(r#"{"cmd":"cancel","lane":0}"#).unwrap();
+        assert_eq!(r, Request::Cancel { lane: 0, at_mi: None });
+        let r = parse_request(r#"{"cmd":"snapshot","path":"s.json","at_mi":20,"halt":true}"#);
+        let want = Request::Snapshot { path: "s.json".to_string(), at_mi: Some(20), halt: true };
+        assert_eq!(r.unwrap(), want);
+        assert_eq!(parse_request(r#"{"cmd":"status"}"#).unwrap(), Request::Status);
+        assert_eq!(parse_request(r#"{"cmd":"subscribe"}"#).unwrap(), Request::Subscribe);
+        assert_eq!(parse_request(r#"{"cmd":"go"}"#).unwrap(), Request::Go);
+        assert_eq!(parse_request(r#"{"cmd":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"no_cmd":1}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"warp"}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"admit"}"#).is_err(), "admit without method");
+        assert!(parse_request(r#"{"cmd":"pause"}"#).is_err(), "pause without lane");
+        assert!(parse_request(r#"{"cmd":"snapshot"}"#).is_err(), "snapshot without path");
+    }
+
+    #[test]
+    fn reply_lines_are_single_json_objects() {
+        let ok = ok_line(vec![("queued_at_mi", Json::from(7usize))]);
+        let j = Json::parse(&ok).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("queued_at_mi").and_then(Json::as_usize), Some(7));
+        let err = err_line("nope");
+        let j = Json::parse(&err).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("nope"));
+    }
+}

@@ -1,0 +1,793 @@
+//! The versioned serve checkpoint codec.
+//!
+//! A [`ServeSnapshot`] is the complete logical state of a running serve
+//! daemon at a monitoring-interval boundary, as one JSON document:
+//!
+//! - the [`ServeSpec`] (rebuild-time constants: scenario, hosts, seed…),
+//! - the **admission replay log** — every lane admitted so far, with its
+//!   *resolved* method seed and name, so `--restore` can replay the exact
+//!   admission sequence and regenerate flows, arena rows and ledger
+//!   accounts,
+//! - the **pending op queue** — admissions/pauses/resumes/cancels not yet
+//!   due (the snapshot is captured *before* the ops due at its MI are
+//!   applied, so the restored run applies them itself),
+//! - the fleet's captured mutable state ([`FleetState`]).
+//!
+//! Bit-exactness: the repo's [`Json`] printer renders numbers through
+//! decimal formatting, which does not round-trip every `f64`. The codec
+//! therefore encodes every float as its IEEE-754 bit pattern in fixed-width
+//! hex (`f64` → 16 hex digits, `f32` → 8) and every `u64` (seeds, RNG
+//! words) as a decimal string. Restored state is therefore *identical*,
+//! not merely close — which is what makes the resumed event stream
+//! byte-identical to an uninterrupted run's.
+
+use super::{FleetState, ServeSpec};
+use crate::coordinator::{
+    ClusterState, LaneState, LaneStatus, SessionState, TrackerState, WindowState,
+};
+use crate::energy::{AccountState, LedgerState, RailEnergy};
+use crate::net::sim::{FlowState, SegmentState};
+use crate::net::stream::ArenaState;
+use crate::net::SimState;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Bumped on any incompatible change to the snapshot document layout.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// One admission, as queued (unresolved `seed`/`name`) or as replayed
+/// (both resolved at execution time and recorded in the admission log).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmitRec {
+    /// Method name for [`crate::experiments::make_optimizer`].
+    pub method: String,
+    /// Workload: `files` × `file_bytes`.
+    pub files: usize,
+    pub file_bytes: u64,
+    /// Lane name; `None` defaults to `{method}#{admission index}`.
+    pub name: Option<String>,
+    /// Optimizer seed; `None` derives from (serve seed, method, index).
+    pub seed: Option<u64>,
+    /// Forced cancel this many MIs after admission, if still running.
+    pub max_lifetime_mis: Option<usize>,
+}
+
+/// A control operation waiting in the serve queue.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    Admit(AdmitRec),
+    Pause(usize),
+    Resume(usize),
+    Cancel(usize),
+}
+
+/// An [`OpKind`] plus the MI boundary at which it becomes due.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingOp {
+    pub at_mi: usize,
+    pub op: OpKind,
+}
+
+/// A complete serve checkpoint (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSnapshot {
+    pub spec: ServeSpec,
+    /// Admissions already executed, resolved, in admission order.
+    pub admits: Vec<AdmitRec>,
+    /// Ops not yet applied (includes everything due at the capture MI).
+    pub queue: Vec<PendingOp>,
+    pub state: FleetState,
+}
+
+impl ServeSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::from(SNAPSHOT_VERSION)),
+            ("spec", spec_json(&self.spec)),
+            ("admits", Json::Arr(self.admits.iter().map(admit_json).collect())),
+            ("queue", Json::Arr(self.queue.iter().map(op_json).collect())),
+            ("state", fleet_json(&self.state)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeSnapshot> {
+        let version = gusize(field(j, "version")?, "version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(anyhow!(
+                "snapshot version {version} not supported (this build reads {SNAPSHOT_VERSION})"
+            ));
+        }
+        Ok(ServeSnapshot {
+            spec: gspec(field(j, "spec")?)?,
+            admits: gadmits(field(j, "admits")?)?,
+            queue: gops(field(j, "queue")?)?,
+            state: gfleet(field(j, "state")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow!("writing snapshot {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ServeSnapshot> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading snapshot {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("snapshot {}: {e}", path.display()))?;
+        ServeSnapshot::from_json(&j)
+    }
+}
+
+/// Canonical wire names for [`LaneStatus`] (also used by `status` replies).
+pub fn status_str(s: LaneStatus) -> &'static str {
+    match s {
+        LaneStatus::Active => "active",
+        LaneStatus::Paused => "paused",
+        LaneStatus::Completed => "completed",
+        LaneStatus::Departed => "departed",
+    }
+}
+
+fn status_from(s: &str) -> Result<LaneStatus> {
+    match s {
+        "active" => Ok(LaneStatus::Active),
+        "paused" => Ok(LaneStatus::Paused),
+        "completed" => Ok(LaneStatus::Completed),
+        "departed" => Ok(LaneStatus::Departed),
+        other => Err(anyhow!("snapshot: unknown lane status '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitive codec: bit-pattern floats, string u64s.
+
+fn jf64(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn jf32(x: f32) -> Json {
+    Json::Str(format!("{:08x}", x.to_bits()))
+}
+
+fn ju64(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+fn jf64s(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| jf64(x)).collect())
+}
+
+fn jbools(xs: &[bool]) -> Json {
+    Json::Arr(xs.iter().map(|&b| Json::from(b)).collect())
+}
+
+fn jopt<T: Copy>(x: Option<T>, f: impl Fn(T) -> Json) -> Json {
+    match x {
+        Some(v) => f(v),
+        None => Json::Null,
+    }
+}
+
+fn jrng(r: &[u64; 4]) -> Json {
+    Json::Arr(r.iter().map(|&w| ju64(w)).collect())
+}
+
+fn field<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.get(k).ok_or_else(|| anyhow!("snapshot: missing field '{k}'"))
+}
+
+fn gstr(j: &Json, what: &str) -> Result<String> {
+    j.as_str().map(str::to_string).ok_or_else(|| anyhow!("snapshot: {what} must be a string"))
+}
+
+fn gbool(j: &Json, what: &str) -> Result<bool> {
+    j.as_bool().ok_or_else(|| anyhow!("snapshot: {what} must be a bool"))
+}
+
+fn gusize(j: &Json, what: &str) -> Result<usize> {
+    j.as_usize().ok_or_else(|| anyhow!("snapshot: {what} must be a non-negative integer"))
+}
+
+fn gu64(j: &Json, what: &str) -> Result<u64> {
+    let s = j.as_str().ok_or_else(|| anyhow!("snapshot: {what} must be a decimal u64 string"))?;
+    s.parse::<u64>().map_err(|_| anyhow!("snapshot: {what}: bad u64 '{s}'"))
+}
+
+fn gf64(j: &Json, what: &str) -> Result<f64> {
+    let s = j.as_str().ok_or_else(|| anyhow!("snapshot: {what} must be a hex f64 string"))?;
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|_| anyhow!("snapshot: {what}: bad f64 bit pattern '{s}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn gf32(j: &Json, what: &str) -> Result<f32> {
+    let s = j.as_str().ok_or_else(|| anyhow!("snapshot: {what} must be a hex f32 string"))?;
+    let bits = u32::from_str_radix(s, 16)
+        .map_err(|_| anyhow!("snapshot: {what}: bad f32 bit pattern '{s}'"))?;
+    Ok(f32::from_bits(bits))
+}
+
+fn garr<'a>(j: &'a Json, what: &str) -> Result<&'a [Json]> {
+    j.as_arr().ok_or_else(|| anyhow!("snapshot: {what} must be an array"))
+}
+
+fn gf64s(j: &Json, what: &str) -> Result<Vec<f64>> {
+    garr(j, what)?.iter().map(|x| gf64(x, what)).collect()
+}
+
+fn gbools(j: &Json, what: &str) -> Result<Vec<bool>> {
+    garr(j, what)?.iter().map(|x| gbool(x, what)).collect()
+}
+
+fn gopt<T>(j: &Json, f: impl Fn(&Json) -> Result<T>) -> Result<Option<T>> {
+    match j {
+        Json::Null => Ok(None),
+        other => f(other).map(Some),
+    }
+}
+
+fn grng(j: &Json, what: &str) -> Result<[u64; 4]> {
+    let words = garr(j, what)?;
+    if words.len() != 4 {
+        return Err(anyhow!("snapshot: {what} must hold 4 RNG words"));
+    }
+    let mut out = [0u64; 4];
+    for (slot, w) in out.iter_mut().zip(words) {
+        *slot = gu64(w, what)?;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Spec / ops.
+
+fn spec_json(s: &ServeSpec) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::from(s.scenario.as_str())),
+        ("schedule", jopt(s.schedule.as_deref(), Json::from)),
+        ("methods", Json::Arr(s.methods.iter().map(|m| Json::from(m.as_str())).collect())),
+        ("hosts", Json::from(s.hosts)),
+        ("seed", ju64(s.seed)),
+        ("mi_s", jf64(s.mi_s)),
+        ("max_mis", Json::from(s.max_mis)),
+        ("observe_paused", Json::from(s.observe_paused)),
+    ])
+}
+
+fn gspec(j: &Json) -> Result<ServeSpec> {
+    Ok(ServeSpec {
+        scenario: gstr(field(j, "scenario")?, "spec.scenario")?,
+        schedule: gopt(field(j, "schedule")?, |x| gstr(x, "spec.schedule"))?,
+        methods: garr(field(j, "methods")?, "spec.methods")?
+            .iter()
+            .map(|m| gstr(m, "spec.methods"))
+            .collect::<Result<Vec<_>>>()?,
+        hosts: gusize(field(j, "hosts")?, "spec.hosts")?,
+        seed: gu64(field(j, "seed")?, "spec.seed")?,
+        mi_s: gf64(field(j, "mi_s")?, "spec.mi_s")?,
+        max_mis: gusize(field(j, "max_mis")?, "spec.max_mis")?,
+        observe_paused: gbool(field(j, "observe_paused")?, "spec.observe_paused")?,
+    })
+}
+
+fn gadmits(j: &Json) -> Result<Vec<AdmitRec>> {
+    garr(j, "admits")?.iter().map(gadmit).collect()
+}
+
+fn gops(j: &Json) -> Result<Vec<PendingOp>> {
+    garr(j, "queue")?.iter().map(gop).collect()
+}
+
+fn admit_json(a: &AdmitRec) -> Json {
+    Json::obj(vec![
+        ("method", Json::from(a.method.as_str())),
+        ("files", Json::from(a.files)),
+        ("file_bytes", ju64(a.file_bytes)),
+        ("name", jopt(a.name.as_deref(), Json::from)),
+        ("seed", jopt(a.seed, ju64)),
+        ("max_lifetime_mis", jopt(a.max_lifetime_mis, Json::from)),
+    ])
+}
+
+fn gadmit(j: &Json) -> Result<AdmitRec> {
+    Ok(AdmitRec {
+        method: gstr(field(j, "method")?, "admit.method")?,
+        files: gusize(field(j, "files")?, "admit.files")?,
+        file_bytes: gu64(field(j, "file_bytes")?, "admit.file_bytes")?,
+        name: gopt(field(j, "name")?, |x| gstr(x, "admit.name"))?,
+        seed: gopt(field(j, "seed")?, |x| gu64(x, "admit.seed"))?,
+        max_lifetime_mis: gopt(field(j, "max_lifetime_mis")?, |x| {
+            gusize(x, "admit.max_lifetime_mis")
+        })?,
+    })
+}
+
+fn op_json(p: &PendingOp) -> Json {
+    let mut fields = vec![("at_mi", Json::from(p.at_mi))];
+    match &p.op {
+        OpKind::Admit(a) => {
+            fields.push(("kind", Json::from("admit")));
+            fields.push(("admit", admit_json(a)));
+        }
+        OpKind::Pause(l) => {
+            fields.push(("kind", Json::from("pause")));
+            fields.push(("lane", Json::from(*l)));
+        }
+        OpKind::Resume(l) => {
+            fields.push(("kind", Json::from("resume")));
+            fields.push(("lane", Json::from(*l)));
+        }
+        OpKind::Cancel(l) => {
+            fields.push(("kind", Json::from("cancel")));
+            fields.push(("lane", Json::from(*l)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn gop(j: &Json) -> Result<PendingOp> {
+    let at_mi = gusize(field(j, "at_mi")?, "op.at_mi")?;
+    let kind = gstr(field(j, "kind")?, "op.kind")?;
+    let op = match kind.as_str() {
+        "admit" => OpKind::Admit(gadmit(field(j, "admit")?)?),
+        "pause" => OpKind::Pause(gusize(field(j, "lane")?, "op.lane")?),
+        "resume" => OpKind::Resume(gusize(field(j, "lane")?, "op.lane")?),
+        "cancel" => OpKind::Cancel(gusize(field(j, "lane")?, "op.lane")?),
+        other => return Err(anyhow!("snapshot: unknown op kind '{other}'")),
+    };
+    Ok(PendingOp { at_mi, op })
+}
+
+// ---------------------------------------------------------------------------
+// Fleet state.
+
+fn fleet_json(f: &FleetState) -> Json {
+    match f {
+        FleetState::Single(s) => Json::obj(vec![
+            ("kind", Json::from("single")),
+            ("session", session_json(s)),
+        ]),
+        FleetState::Cluster(c) => Json::obj(vec![
+            ("kind", Json::from("cluster")),
+            ("mi", Json::from(c.mi)),
+            ("hosts", Json::Arr(c.hosts.iter().map(session_json).collect())),
+        ]),
+    }
+}
+
+fn gfleet(j: &Json) -> Result<FleetState> {
+    match gstr(field(j, "kind")?, "state.kind")?.as_str() {
+        "single" => Ok(FleetState::Single(Box::new(gsession(field(j, "session")?)?))),
+        "cluster" => Ok(FleetState::Cluster(ClusterState {
+            mi: gusize(field(j, "mi")?, "state.mi")?,
+            hosts: garr(field(j, "hosts")?, "state.hosts")?
+                .iter()
+                .map(gsession)
+                .collect::<Result<Vec<_>>>()?,
+        })),
+        other => Err(anyhow!("snapshot: unknown fleet kind '{other}'")),
+    }
+}
+
+fn session_json(s: &SessionState) -> Json {
+    Json::obj(vec![
+        ("mi", Json::from(s.mi)),
+        ("lanes", Json::Arr(s.lanes.iter().map(lane_json).collect())),
+        ("energy", Json::Arr(s.energy.iter().map(ledger_json).collect())),
+        ("sim", sim_json(&s.sim)),
+    ])
+}
+
+fn gsession(j: &Json) -> Result<SessionState> {
+    Ok(SessionState {
+        mi: gusize(field(j, "mi")?, "session.mi")?,
+        lanes: garr(field(j, "lanes")?, "session.lanes")?
+            .iter()
+            .map(glane)
+            .collect::<Result<Vec<_>>>()?,
+        energy: garr(field(j, "energy")?, "session.energy")?
+            .iter()
+            .map(gledger)
+            .collect::<Result<Vec<_>>>()?,
+        sim: gsim(field(j, "sim")?)?,
+    })
+}
+
+fn lane_json(l: &LaneState) -> Json {
+    Json::obj(vec![
+        ("status", Json::from(status_str(l.status))),
+        ("cc", Json::from(l.cc as usize)),
+        ("p", Json::from(l.p as usize)),
+        ("has_pending_decision", Json::from(l.has_pending_decision)),
+        ("delivered_bytes", jf64(l.delivered_bytes)),
+        ("window", window_json(&l.window)),
+        ("reward", tracker_json(&l.reward)),
+        ("optimizer", jf64s(&l.optimizer)),
+    ])
+}
+
+fn glane(j: &Json) -> Result<LaneState> {
+    Ok(LaneState {
+        status: status_from(&gstr(field(j, "status")?, "lane.status")?)?,
+        cc: gusize(field(j, "cc")?, "lane.cc")? as u32,
+        p: gusize(field(j, "p")?, "lane.p")? as u32,
+        has_pending_decision: gbool(field(j, "has_pending_decision")?, "lane.pending")?,
+        delivered_bytes: gf64(field(j, "delivered_bytes")?, "lane.delivered_bytes")?,
+        window: gwindow(field(j, "window")?)?,
+        reward: gtracker(field(j, "reward")?)?,
+        optimizer: gf64s(field(j, "optimizer")?, "lane.optimizer")?,
+    })
+}
+
+fn window_json(w: &WindowState) -> Json {
+    Json::obj(vec![
+        ("rtt_min_s", jf64(w.rtt_min_s)),
+        ("prev_rtt_s", jopt(w.prev_rtt_s, jf64)),
+        ("buf", Json::Arr(w.buf.iter().map(|&x| jf32(x)).collect())),
+    ])
+}
+
+fn gwindow(j: &Json) -> Result<WindowState> {
+    Ok(WindowState {
+        rtt_min_s: gf64(field(j, "rtt_min_s")?, "window.rtt_min_s")?,
+        prev_rtt_s: gopt(field(j, "prev_rtt_s")?, |x| gf64(x, "window.prev_rtt_s"))?,
+        buf: garr(field(j, "buf")?, "window.buf")?
+            .iter()
+            .map(|x| gf32(x, "window.buf"))
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn tracker_json(t: &TrackerState) -> Json {
+    Json::obj(vec![
+        ("hist_util", jf64s(&t.hist_util)),
+        ("hist_thr", jf64s(&t.hist_thr)),
+        ("hist_energy", jf64s(&t.hist_energy)),
+        ("prev_metric", jopt(t.prev_metric, jf64)),
+    ])
+}
+
+fn gtracker(j: &Json) -> Result<TrackerState> {
+    Ok(TrackerState {
+        hist_util: gf64s(field(j, "hist_util")?, "reward.hist_util")?,
+        hist_thr: gf64s(field(j, "hist_thr")?, "reward.hist_thr")?,
+        hist_energy: gf64s(field(j, "hist_energy")?, "reward.hist_energy")?,
+        prev_metric: gopt(field(j, "prev_metric")?, |x| gf64(x, "reward.prev_metric"))?,
+    })
+}
+
+fn rails_json(r: &RailEnergy) -> Json {
+    Json::obj(vec![
+        ("cpu_j", jf64(r.cpu_j)),
+        ("nic_j", jf64(r.nic_j)),
+        ("fixed_j", jf64(r.fixed_j)),
+        ("idle_j", jf64(r.idle_j)),
+    ])
+}
+
+fn grails(j: &Json) -> Result<RailEnergy> {
+    Ok(RailEnergy {
+        cpu_j: gf64(field(j, "cpu_j")?, "rails.cpu_j")?,
+        nic_j: gf64(field(j, "nic_j")?, "rails.nic_j")?,
+        fixed_j: gf64(field(j, "fixed_j")?, "rails.fixed_j")?,
+        idle_j: gf64(field(j, "idle_j")?, "rails.idle_j")?,
+    })
+}
+
+fn account_json(a: &AccountState) -> Json {
+    Json::obj(vec![
+        ("rng", jrng(&a.rng)),
+        ("total_j", jf64(a.total_j)),
+        ("rails", rails_json(&a.rails)),
+    ])
+}
+
+fn gaccount(j: &Json) -> Result<AccountState> {
+    Ok(AccountState {
+        rng: grng(field(j, "rng")?, "account.rng")?,
+        total_j: gf64(field(j, "total_j")?, "account.total_j")?,
+        rails: grails(field(j, "rails")?)?,
+    })
+}
+
+fn ledger_json(l: &LedgerState) -> Json {
+    Json::obj(vec![
+        ("rng", jrng(&l.rng)),
+        ("total_j", jf64(l.total_j)),
+        ("rails", rails_json(&l.rails)),
+        ("accounts", Json::Arr(l.accounts.iter().map(account_json).collect())),
+    ])
+}
+
+fn gledger(j: &Json) -> Result<LedgerState> {
+    Ok(LedgerState {
+        rng: grng(field(j, "rng")?, "ledger.rng")?,
+        total_j: gf64(field(j, "total_j")?, "ledger.total_j")?,
+        rails: grails(field(j, "rails")?)?,
+        accounts: garr(field(j, "accounts")?, "ledger.accounts")?
+            .iter()
+            .map(gaccount)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn sim_json(s: &SimState) -> Json {
+    Json::obj(vec![
+        ("time_s", jf64(s.time_s)),
+        ("rng", jrng(&s.rng)),
+        ("active_total", Json::from(s.active_total)),
+        ("flows", Json::Arr(s.flows.iter().map(flow_json).collect())),
+        ("segments", Json::Arr(s.segments.iter().map(segment_json).collect())),
+        ("arena", arena_json(&s.arena)),
+    ])
+}
+
+fn gsim(j: &Json) -> Result<SimState> {
+    Ok(SimState {
+        time_s: gf64(field(j, "time_s")?, "sim.time_s")?,
+        rng: grng(field(j, "rng")?, "sim.rng")?,
+        active_total: gusize(field(j, "active_total")?, "sim.active_total")?,
+        flows: garr(field(j, "flows")?, "sim.flows")?
+            .iter()
+            .map(gflow)
+            .collect::<Result<Vec<_>>>()?,
+        segments: garr(field(j, "segments")?, "sim.segments")?
+            .iter()
+            .map(gsegment)
+            .collect::<Result<Vec<_>>>()?,
+        arena: garena(field(j, "arena")?)?,
+    })
+}
+
+fn task_json(t: &(usize, usize, usize)) -> Json {
+    Json::Arr(vec![Json::from(t.0), Json::from(t.1), Json::from(t.2)])
+}
+
+fn gtask(j: &Json) -> Result<(usize, usize, usize)> {
+    let trip = garr(j, "flow.tasks")?;
+    if trip.len() != 3 {
+        return Err(anyhow!("snapshot: flow.tasks entries must be [base, created, cap]"));
+    }
+    let base = gusize(&trip[0], "flow.tasks.base")?;
+    let created = gusize(&trip[1], "flow.tasks.created")?;
+    let cap = gusize(&trip[2], "flow.tasks.cap")?;
+    Ok((base, created, cap))
+}
+
+fn flow_json(f: &FlowState) -> Json {
+    Json::obj(vec![
+        ("tasks", Json::Arr(f.tasks.iter().map(task_json).collect())),
+        ("cc_active", Json::from(f.cc_active)),
+        ("p_active", Json::from(f.p_active)),
+        ("active_streams", Json::from(f.active_streams)),
+        ("task_io_gbps", jf64(f.task_io_gbps)),
+        ("stream_cap_gbps", jf64(f.stream_cap_gbps)),
+        ("demand_cap_gbps", jf64(f.demand_cap_gbps)),
+    ])
+}
+
+fn gflow(j: &Json) -> Result<FlowState> {
+    let tasks = garr(field(j, "tasks")?, "flow.tasks")?
+        .iter()
+        .map(gtask)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(FlowState {
+        tasks,
+        cc_active: gusize(field(j, "cc_active")?, "flow.cc_active")?,
+        p_active: gusize(field(j, "p_active")?, "flow.p_active")?,
+        active_streams: gusize(field(j, "active_streams")?, "flow.active_streams")?,
+        task_io_gbps: gf64(field(j, "task_io_gbps")?, "flow.task_io_gbps")?,
+        stream_cap_gbps: gf64(field(j, "stream_cap_gbps")?, "flow.stream_cap_gbps")?,
+        demand_cap_gbps: gf64(field(j, "demand_cap_gbps")?, "flow.demand_cap_gbps")?,
+    })
+}
+
+fn segment_json(s: &SegmentState) -> Json {
+    let background = match s.background {
+        Some((high, scale)) => Json::Arr(vec![Json::from(high), jf64(scale)]),
+        None => Json::Null,
+    };
+    Json::obj(vec![("queue_bits", jf64(s.queue_bits)), ("background", background)])
+}
+
+fn gbackground(j: &Json) -> Result<(bool, f64)> {
+    let pair = garr(j, "segment.background")?;
+    if pair.len() != 2 {
+        return Err(anyhow!("snapshot: segment.background must be [high, scale]"));
+    }
+    let high = gbool(&pair[0], "segment.background")?;
+    let scale = gf64(&pair[1], "segment.background")?;
+    Ok((high, scale))
+}
+
+fn gsegment(j: &Json) -> Result<SegmentState> {
+    Ok(SegmentState {
+        queue_bits: gf64(field(j, "queue_bits")?, "segment.queue_bits")?,
+        background: gopt(field(j, "background")?, gbackground)?,
+    })
+}
+
+fn arena_json(a: &ArenaState) -> Json {
+    Json::obj(vec![
+        ("cwnd", jf64s(&a.cwnd)),
+        ("w_max", jf64s(&a.w_max)),
+        ("ssthresh", jf64s(&a.ssthresh)),
+        ("epoch_t", jf64s(&a.epoch_t)),
+        ("since_cut", jf64s(&a.since_cut)),
+        ("in_slow_start", jbools(&a.in_slow_start)),
+        ("active", jbools(&a.active)),
+    ])
+}
+
+fn garena(j: &Json) -> Result<ArenaState> {
+    Ok(ArenaState {
+        cwnd: gf64s(field(j, "cwnd")?, "arena.cwnd")?,
+        w_max: gf64s(field(j, "w_max")?, "arena.w_max")?,
+        ssthresh: gf64s(field(j, "ssthresh")?, "arena.ssthresh")?,
+        epoch_t: gf64s(field(j, "epoch_t")?, "arena.epoch_t")?,
+        since_cut: gf64s(field(j, "since_cut")?, "arena.since_cut")?,
+        in_slow_start: gbools(field(j, "in_slow_start")?, "arena.in_slow_start")?,
+        active: gbools(field(j, "active")?, "arena.active")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_codec_round_trips_awkward_bit_patterns() {
+        for x in [0.0f64, -0.0, 0.1, 0.1 + 0.2, 1e-308, f64::MAX, f64::MIN_POSITIVE, -17.25] {
+            let back = gf64(&jf64(x), "t").unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "f64 {x:?} lost bits");
+        }
+        for x in [0.0f32, -0.0, 0.1, 3.4e38, f32::MIN_POSITIVE] {
+            let back = gf32(&jf32(x), "t").unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "f32 {x:?} lost bits");
+        }
+        assert_eq!(gu64(&ju64(u64::MAX), "t").unwrap(), u64::MAX);
+    }
+
+    fn sample_snapshot() -> ServeSnapshot {
+        let session = SessionState {
+            mi: 7,
+            lanes: vec![LaneState {
+                status: LaneStatus::Paused,
+                cc: 4,
+                p: 2,
+                has_pending_decision: true,
+                delivered_bytes: 0.1 + 0.2,
+                window: WindowState {
+                    rtt_min_s: 0.023,
+                    prev_rtt_s: Some(0.5),
+                    buf: vec![0.1f32, -3.25],
+                },
+                reward: TrackerState {
+                    hist_util: vec![0.3, 0.7],
+                    hist_thr: vec![],
+                    hist_energy: vec![1e9],
+                    prev_metric: None,
+                },
+                optimizer: vec![1.0, f64::MIN_POSITIVE],
+            }],
+            energy: vec![LedgerState {
+                rng: [1, 2, 3, u64::MAX],
+                total_j: 123.456,
+                rails: RailEnergy { cpu_j: 0.1, nic_j: -0.0, fixed_j: 3.0, idle_j: 4.0 },
+                accounts: vec![AccountState {
+                    rng: [9, 8, 7, 6],
+                    total_j: 0.25,
+                    rails: RailEnergy::default(),
+                }],
+            }],
+            sim: SimState {
+                time_s: 17.25,
+                rng: [5, 6, 7, 8],
+                active_total: 2,
+                flows: vec![FlowState {
+                    tasks: vec![(0, 1, 2), (2, 2, 2)],
+                    cc_active: 1,
+                    p_active: 2,
+                    active_streams: 2,
+                    task_io_gbps: 10.0,
+                    stream_cap_gbps: 0.75,
+                    demand_cap_gbps: 1e18,
+                }],
+                segments: vec![
+                    SegmentState { queue_bits: 1234.5, background: Some((true, 0.5)) },
+                    SegmentState { queue_bits: 0.0, background: None },
+                ],
+                arena: ArenaState {
+                    cwnd: vec![1.5, 0.1],
+                    w_max: vec![2.5, 0.2],
+                    ssthresh: vec![3.5, 0.3],
+                    epoch_t: vec![0.0, 0.4],
+                    since_cut: vec![1.0, 0.5],
+                    in_slow_start: vec![true, false],
+                    active: vec![false, true],
+                },
+            },
+        };
+        ServeSnapshot {
+            spec: ServeSpec {
+                scenario: "calm".to_string(),
+                schedule: Some("churn-heavy".to_string()),
+                methods: vec!["rclone".to_string(), "2-phase".to_string()],
+                hosts: 1,
+                seed: 0x9E3779B97F4A7C15,
+                mi_s: 1.0,
+                max_mis: 40,
+                observe_paused: false,
+            },
+            admits: vec![AdmitRec {
+                method: "rclone".to_string(),
+                files: 8,
+                file_bytes: 128 << 20,
+                name: Some("rclone#0".to_string()),
+                seed: Some(12345),
+                max_lifetime_mis: Some(40),
+            }],
+            queue: vec![
+                PendingOp {
+                    at_mi: 9,
+                    op: OpKind::Admit(AdmitRec {
+                        method: "2-phase".to_string(),
+                        files: 4,
+                        file_bytes: 64 << 20,
+                        name: None,
+                        seed: None,
+                        max_lifetime_mis: None,
+                    }),
+                },
+                PendingOp { at_mi: 12, op: OpKind::Pause(0) },
+                PendingOp { at_mi: 14, op: OpKind::Resume(0) },
+                PendingOp { at_mi: 40, op: OpKind::Cancel(1) },
+            ],
+            state: FleetState::Single(Box::new(session)),
+        }
+    }
+
+    #[test]
+    fn snapshot_document_round_trips_exactly() {
+        let snap = sample_snapshot();
+        let doc = snap.to_json();
+        let back = ServeSnapshot::from_json(&doc).unwrap();
+        assert_eq!(back, snap);
+        // And through the textual form (what the file on disk holds).
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(ServeSnapshot::from_json(&reparsed).unwrap(), snap);
+    }
+
+    #[test]
+    fn snapshot_file_round_trips_and_rejects_future_versions() {
+        let dir = std::env::temp_dir().join("sparta_serve_snapshot_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let snap = sample_snapshot();
+        snap.save(&path).unwrap();
+        assert_eq!(ServeSnapshot::load(&path).unwrap(), snap);
+
+        let mut doc = snap.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("version".to_string(), Json::from(SNAPSHOT_VERSION + 1));
+        }
+        let err = ServeSnapshot::from_json(&doc).unwrap_err();
+        assert!(err.to_string().contains("version"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn cluster_state_round_trips() {
+        let single = match sample_snapshot().state {
+            FleetState::Single(s) => *s,
+            FleetState::Cluster(_) => unreachable!(),
+        };
+        let mut snap = sample_snapshot();
+        snap.spec.hosts = 2;
+        snap.state =
+            FleetState::Cluster(ClusterState { mi: 7, hosts: vec![single.clone(), single] });
+        let back = ServeSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+    }
+}

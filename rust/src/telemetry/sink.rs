@@ -291,23 +291,44 @@ impl TelemetrySink for FanoutSink<'_> {
 /// Streams events as JSON lines to any writer (files, pipes, sockets).
 /// Write errors are swallowed: telemetry must never abort a transfer.
 ///
+/// The writer is flushed on drop (and on [`JsonlSink::flush`]), so a sink
+/// over a `BufWriter` that goes out of scope mid-run — a daemon shutting
+/// down, a driver bailing on error — leaves no buffered tail behind.
+///
 /// §Perf: each event is formatted into a reusable `String` and handed to
 /// the writer as one `write_all` — no per-event buffer allocation, and no
 /// `Display`-adapter round trips through the writer's fine-grained
 /// `write_fmt` machinery.
 pub struct JsonlSink<W: Write> {
-    out: W,
+    /// `None` only after `into_inner` moved the writer out (the `Drop`
+    /// impl forbids a plain field move).
+    out: Option<W>,
     /// Reusable line buffer.
     buf: String,
 }
 
 impl<W: Write> JsonlSink<W> {
     pub fn new(out: W) -> JsonlSink<W> {
-        JsonlSink { out, buf: String::new() }
+        JsonlSink { out: Some(out), buf: String::new() }
     }
 
-    pub fn into_inner(self) -> W {
-        self.out
+    /// Flush the underlying writer (errors swallowed, like writes).
+    pub fn flush(&mut self) {
+        if let Some(out) = &mut self.out {
+            let _ = out.flush();
+        }
+    }
+
+    /// Recover the writer without flushing (the caller owns it again and
+    /// decides — e.g. `sparta transfer` flushes the `BufWriter` itself).
+    pub fn into_inner(mut self) -> W {
+        self.out.take().expect("writer already taken")
+    }
+}
+
+impl<W: Write> Drop for JsonlSink<W> {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -317,7 +338,9 @@ impl<W: Write> TelemetrySink for JsonlSink<W> {
         self.buf.clear();
         let _ = write!(self.buf, "{}", event_json(event));
         self.buf.push('\n');
-        let _ = self.out.write_all(self.buf.as_bytes());
+        if let Some(out) = &mut self.out {
+            let _ = out.write_all(self.buf.as_bytes());
+        }
     }
 }
 
@@ -457,6 +480,54 @@ mod tests {
         without.on_event(&mi_event(0, active));
         assert_eq!(with_paused.epoch_jfi(), without.epoch_jfi());
         assert_eq!(with_paused.epoch_jfi(), vec![1.0]);
+    }
+
+    /// Dropping the sink flushes the writer exactly once — a daemon (or a
+    /// driver bailing on error) that lets a `JsonlSink<BufWriter<_>>` go
+    /// out of scope leaves no buffered tail behind. `into_inner` hands the
+    /// unflushed writer back instead (the caller owns the flush).
+    #[test]
+    fn jsonl_sink_flushes_writer_on_drop() {
+        use std::sync::{Arc, Mutex};
+        struct CountingWriter {
+            bytes: Arc<Mutex<Vec<u8>>>,
+            flushes: Arc<Mutex<usize>>,
+        }
+        impl Write for CountingWriter {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.bytes.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                *self.flushes.lock().unwrap() += 1;
+                Ok(())
+            }
+        }
+        let bytes = Arc::new(Mutex::new(Vec::new()));
+        let flushes = Arc::new(Mutex::new(0));
+        {
+            let mut sink = JsonlSink::new(CountingWriter {
+                bytes: Arc::clone(&bytes),
+                flushes: Arc::clone(&flushes),
+            });
+            sink.on_event(&Event::Admitted {
+                lane: LaneId(0),
+                name: "x".into(),
+                mi: 0,
+                time_s: 0.0,
+            });
+            assert_eq!(*flushes.lock().unwrap(), 0, "no flush before drop");
+        }
+        assert_eq!(*flushes.lock().unwrap(), 1, "drop must flush exactly once");
+        assert_eq!(String::from_utf8(bytes.lock().unwrap().clone()).unwrap().lines().count(), 1);
+        // The into_inner path: the writer comes back unflushed.
+        let mut sink = JsonlSink::new(CountingWriter {
+            bytes: Arc::clone(&bytes),
+            flushes: Arc::clone(&flushes),
+        });
+        sink.on_event(&Event::Paused { lane: LaneId(0), mi: 1, time_s: 1.0 });
+        let _w = sink.into_inner();
+        assert_eq!(*flushes.lock().unwrap(), 1, "into_inner must not flush");
     }
 
     #[test]

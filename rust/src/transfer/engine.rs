@@ -41,6 +41,15 @@ impl EngineProfile {
     pub fn task_io_gbps(&self, testbed_task_io_gbps: f64) -> f64 {
         self.io_efficiency * testbed_task_io_gbps
     }
+
+    /// The NIC idle floor this engine holds the link to when none of its
+    /// lanes move bytes, W. Chatty engines (rclone keepalives, escp's
+    /// control channel) keep the NIC out of deep LPI; the host-rail ledger
+    /// bills whichever is shallower — this floor or the host NIC's own
+    /// LPI draw.
+    pub fn nic_lpi_idle_w(&self) -> f64 {
+        self.power.nic_lpi_idle_w
+    }
 }
 
 #[cfg(test)]
@@ -63,5 +72,14 @@ mod tests {
         let r = EngineProfile::rclone();
         let cap = 4.0 * r.task_io_gbps(3.0);
         assert!(cap > 4.0 && cap < 6.5, "cap={cap}");
+    }
+
+    #[test]
+    fn engines_carry_their_own_nic_idle_states() {
+        let e = EngineProfile::efficient();
+        let r = EngineProfile::rclone();
+        let s = EngineProfile::escp();
+        assert!(e.nic_lpi_idle_w() < r.nic_lpi_idle_w());
+        assert!(r.nic_lpi_idle_w() < s.nic_lpi_idle_w());
     }
 }

@@ -46,6 +46,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_A5A5_5A5A_5A5A)
     }
 
+    /// The raw xoshiro256** state word, for checkpointing. Restoring it
+    /// with [`Rng::from_state`] resumes the exact draw sequence — the
+    /// serve snapshot codec round-trips every generator this way.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a captured [`Rng::state`] word.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

@@ -104,9 +104,9 @@ fn fleet_of_lanes_pays_fixed_power_once() {
     };
     let one = run(1);
     let four = run(4);
-    // 2 hosts × 18 W × 40 MIs = 1440 J of fixed energy either way; noise
-    // perturbs the reading by a few joules at most.
-    let expect = 2.0 * 18.0 * 40.0;
+    // 2 Xeon hosts × 24 W × 40 MIs = 1920 J of fixed energy either way;
+    // noise perturbs the reading by a few joules at most.
+    let expect = 2.0 * 24.0 * 40.0;
     for (label, rails) in [("one", &one), ("four", &four)] {
         assert!(
             (rails.fixed_j - expect).abs() < 0.05 * expect,

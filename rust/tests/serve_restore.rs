@@ -1,0 +1,169 @@
+//! The serve checkpoint/restore contract, exhaustively: a churn script
+//! (mid-run admissions, a pause window, a cancel, a lane lifetime) is run
+//! uninterrupted while snapshotting at **every** MI boundary; each
+//! snapshot is then restored into a fresh engine and replayed to
+//! completion. The restored event stream must be byte-identical to the
+//! uninterrupted run's remainder, and the final lane table / energy
+//! totals must match bit-for-bit — for a single-host `Session` and a
+//! 3-host incast `Cluster` alike.
+
+use std::path::{Path, PathBuf};
+
+use sparta::config::Paths;
+use sparta::experiments::SpartaCtx;
+use sparta::serve::{AdmitRec, OpKind, ServeEngine, ServeSpec};
+use sparta::telemetry::event_json;
+use sparta::util::json::Json;
+
+const TOTAL_MIS: usize = 24;
+
+fn fresh_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("sparta_it_serve_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+fn ctx_at(root: &Path) -> SpartaCtx {
+    SpartaCtx::load(Paths::with_root(root)).expect("context loads")
+}
+
+fn spec(hosts: usize) -> ServeSpec {
+    ServeSpec {
+        scenario: "calm".to_string(),
+        schedule: None,
+        methods: vec!["rclone".to_string()],
+        hosts,
+        seed: 23,
+        mi_s: 1.0,
+        max_mis: TOTAL_MIS,
+        observe_paused: true,
+    }
+}
+
+fn admit(method: &str, files: usize, life: Option<usize>) -> OpKind {
+    OpKind::Admit(AdmitRec {
+        method: method.to_string(),
+        files,
+        // 2 GiB files: big enough that every lane is still moving bytes
+        // when its pause window or cancel boundary arrives.
+        file_bytes: 2 << 30,
+        name: None,
+        seed: None,
+        max_lifetime_mis: life,
+    })
+}
+
+/// The churn script every run replays: admissions land mid-run, lane 0
+/// takes a pause window, lane 2 carries a lifetime that fires at MI 16,
+/// lane 1 takes an explicit cancel.
+fn churn(engine: &mut ServeEngine) {
+    engine.enqueue(admit("rclone", 2, None), Some(0)).unwrap();
+    engine.enqueue(admit("2-phase", 2, Some(16)), Some(3)).unwrap();
+    engine.enqueue(admit("rclone", 6, Some(9)), Some(7)).unwrap();
+    engine.enqueue(OpKind::Pause(0), Some(10)).unwrap();
+    engine.enqueue(OpKind::Resume(0), Some(14)).unwrap();
+    engine.enqueue(OpKind::Cancel(1), Some(18)).unwrap();
+}
+
+fn step_lines(engine: &mut ServeEngine) -> Vec<String> {
+    let mut events = Vec::new();
+    engine.step(&mut events).unwrap();
+    events.iter().map(|ev| event_json(ev).to_string()).collect()
+}
+
+/// The parts of `status` that summarize the whole run (the "final
+/// report"): MI/time cursor, host energy, and the full lane table. The
+/// epoch-JFI series is deliberately excluded — it tracks fairness since
+/// (re)start, so a restored engine reports only its own tail.
+fn report(engine: &ServeEngine) -> String {
+    let s = engine.status_json();
+    let mut parts = Vec::new();
+    for key in ["mi", "time_s", "host_energy_j", "lanes", "rails"] {
+        if let Some(v) = s.get(key) {
+            parts.push(format!("{key}={v}"));
+        }
+    }
+    parts.join(" ")
+}
+
+/// Run the script uninterrupted, snapshotting at every boundary; restore
+/// every snapshot and demand byte-identity of the remaining stream and of
+/// the final report.
+fn snapshot_everywhere_roundtrip(hosts: usize, tag: &str) {
+    let root = fresh_root(tag);
+    let mut reference = ServeEngine::new(ctx_at(&root), spec(hosts)).unwrap();
+    churn(&mut reference);
+
+    let mut snaps = vec![reference.snapshot().unwrap()];
+    let mut per_mi: Vec<Vec<String>> = Vec::new();
+    for _ in 0..TOTAL_MIS {
+        per_mi.push(step_lines(&mut reference));
+        snaps.push(reference.snapshot().unwrap());
+    }
+    let final_report = report(&reference);
+    let total_events: usize = per_mi.iter().map(Vec::len).sum();
+    assert!(total_events > 0, "churn script produced no events");
+
+    for (boundary, snap) in snaps.into_iter().enumerate() {
+        let mut restored = ServeEngine::restore(ctx_at(&root), snap).unwrap();
+        assert_eq!(restored.mi(), boundary, "restore landed on the wrong boundary");
+        let mut tail = Vec::new();
+        for _ in boundary..TOTAL_MIS {
+            tail.extend(step_lines(&mut restored));
+        }
+        let expected: Vec<String> = per_mi[boundary..].concat();
+        assert_eq!(
+            tail, expected,
+            "hosts={hosts}: stream diverged after restoring at MI {boundary}"
+        );
+        assert_eq!(
+            report(&restored),
+            final_report,
+            "hosts={hosts}: final report diverged after restoring at MI {boundary}"
+        );
+    }
+}
+
+#[test]
+fn session_snapshot_at_every_boundary_replays_bit_identically() {
+    snapshot_everywhere_roundtrip(1, "session_everywhere");
+}
+
+#[test]
+fn cluster_snapshot_at_every_boundary_replays_bit_identically() {
+    snapshot_everywhere_roundtrip(3, "cluster_everywhere");
+}
+
+/// Snapshots survive the disk: save → load → restore stays bit-identical,
+/// and the file round-trips every `f64` through the hex-bits codec (a
+/// reload of the saved file re-serializes to the same bytes).
+#[test]
+fn snapshot_file_roundtrip_is_lossless() {
+    let root = fresh_root("file_roundtrip");
+    let mut reference = ServeEngine::new(ctx_at(&root), spec(1)).unwrap();
+    churn(&mut reference);
+    let mut head = Vec::new();
+    for _ in 0..12 {
+        head.extend(step_lines(&mut reference));
+    }
+    assert!(!head.is_empty());
+
+    let path = root.join("mid.snap.json");
+    let snap = reference.snapshot().unwrap();
+    snap.save(&path).unwrap();
+    let loaded = sparta::serve::ServeSnapshot::load(&path).unwrap();
+    assert_eq!(loaded.to_json().to_string(), snap.to_json().to_string());
+    let reparsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(reparsed.to_string(), snap.to_json().to_string());
+
+    let mut tail_ref = Vec::new();
+    for _ in 12..TOTAL_MIS {
+        tail_ref.extend(step_lines(&mut reference));
+    }
+    let mut restored = ServeEngine::restore(ctx_at(&root), loaded).unwrap();
+    let mut tail = Vec::new();
+    for _ in 12..TOTAL_MIS {
+        tail.extend(step_lines(&mut restored));
+    }
+    assert_eq!(tail, tail_ref, "disk round-trip changed the stream");
+}
