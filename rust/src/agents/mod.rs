@@ -32,7 +32,10 @@ use anyhow::{anyhow, Result};
 /// Common interface of the learning cores (distinct from
 /// [`crate::coordinator::Optimizer`], which adds the (cc, p) mapping —
 /// see [`wrapper::DrlOptimizer`]).
-pub trait DrlAgent {
+///
+/// `Send` because boxed agents ride inside per-lane optimizers that move to
+/// cluster worker threads (never shared, only moved with the owning host).
+pub trait DrlAgent: Send {
     fn name(&self) -> &str;
 
     /// Select an action for `state`; `explore` enables ε/noise exploration.

@@ -37,22 +37,164 @@
 //!
 //! [`Cluster::admit`] places lanes round-robin across hosts and returns
 //! *global* [`LaneId`]s (admission order, same contract as a session).
-//! [`Cluster::step_into`] advances every host by one MI in host order —
-//! sessions run in lockstep, so `time_s`/`mi` agree everywhere — and
-//! merges the per-host event streams into the caller's buffer with lane
-//! ids rewritten to global. Record state buffers recycle back to their
-//! owning host's pool ([`Session::recycle_record`]), keeping cluster
-//! stepping allocation-free at steady state (§Perf in [`super::session`]).
+//! [`Cluster::step_into`] advances every host by one MI — sessions run in
+//! lockstep, so `time_s`/`mi` agree everywhere — and merges the per-host
+//! event streams into the caller's buffer with lane ids rewritten to
+//! global. Record state buffers recycle back to their owning host's pool
+//! ([`Session::recycle_record`]), keeping cluster stepping allocation-free
+//! at steady state (§Perf in [`super::session`]).
+//!
+//! ## §Perf: parallel intra-step execution
+//!
+//! Host independence (no shared mutable state, static WAN slices,
+//! identity-derived seeds) means the per-MI host loop is embarrassingly
+//! parallel. [`Cluster::set_step_threads`] turns it on: a persistent
+//! worker pool — std threads spawned once per cluster, jobs dispatched
+//! over channels, because per-step `thread::scope` spawning would dominate
+//! at ~ms MI wall times — steps each host `Session` into a dedicated
+//! per-host event buffer, and the coordinator then merges those buffers
+//! **in host order** while rewriting lane ids to global. Because each
+//! host's internal event order is whatever that host produced and the
+//! merge order is fixed by host index (never completion order), the merged
+//! stream is byte-identical to the serial loop at any thread count — the
+//! same contract style as `experiments/runner.rs` trial sharding, and CI
+//! enforces it byte-for-byte (`fleet --hosts 4 --step-threads 1` vs `4`).
+//!
+//! Contract details:
+//! * **Per-host buffers.** Each host steps into its own `Vec<Event>`
+//!   (pool-owned while in flight, cluster-owned between steps), so workers
+//!   never contend on the caller's merge buffer. Buffers are recycled
+//!   every MI; at steady state (no admissions, stable event volume) a
+//!   pooled step performs no allocation per host worker, which a debug
+//!   assertion enforces (`debug_assertions` builds only).
+//! * **Host-order merge.** The coordinator collects all N results (it
+//!   blocks until every host finished the MI), then drains buffers
+//!   `0..N`. Worker scheduling can never reorder the merged stream.
+//! * **No cross-host state sharing.** Workers receive a raw pointer to one
+//!   distinct host session each; nothing else is shared. Record recycling
+//!   ([`Event::MiCompleted`] buffers from the *previous* MI) is routed
+//!   back to owning hosts by the coordinator **before** dispatch, so
+//!   workers never touch another host's pools.
+//! * **Snapshot / control synchronization.** `pause`/`resume`/`cancel`,
+//!   [`Cluster::export_state`] and [`Cluster::import_state`] run between
+//!   steps, when the pool is quiescent (every `step_into` call joins all N
+//!   results before returning), so MI-boundary snapshot capture of a
+//!   threaded cluster is identical to the serial cluster's — `serve`
+//!   checkpoint/restore stays bit-exact at any thread count, including
+//!   restoring at a *different* thread count (`tests/cluster_threaded.rs`).
+//!
+//! The knob rides through `sparta fleet/serve/bench --step-threads N`
+//! (`0` = auto: one thread under outer `--jobs` trial sharding to avoid
+//! oversubscription, else `min(hosts, cores)` — see
+//! `experiments::fleet::resolve_step_threads`).
 
 use super::session::{Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session, SessionState};
 use crate::energy::RailEnergy;
 use crate::net::{Testbed, Topology};
 use crate::util::rng::mix_seed;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
 
 /// Receiver-ingest provisioning of [`Cluster::incast`] relative to WAN
 /// capacity: below 1.0 the receiver, not the WAN, is the incast
 /// bottleneck.
 pub const INCAST_RX_OVER_WAN: f64 = 0.8;
+
+// The pooled step hands worker threads `*mut Session`; this is only sound
+// if a Session can move between threads at all. Assert it at compile time
+// so a non-Send field added to Session (or a lane optimizer losing the
+// `Send` supertrait) fails here, not at a distance.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Session>()
+};
+
+/// A `*mut Session` that may cross a channel to a worker thread.
+///
+/// SAFETY: `Send` is sound because the coordinator upholds, for every job
+/// in flight, that (a) each pointer targets a *distinct* element of
+/// `Cluster::hosts`, (b) `Cluster::step_into` blocks until every result is
+/// collected before returning (so the `Vec` is never reallocated, moved or
+/// dropped while workers hold pointers into it), and (c) `Session: Send`
+/// (asserted above), so mutating one from a worker thread is ordinary.
+struct SendPtr(*mut Session);
+unsafe impl Send for SendPtr {}
+
+/// One dispatched host step: step the session one MI into `out`.
+struct StepJob {
+    host: usize,
+    session: SendPtr,
+    out: Vec<Event>,
+}
+
+/// A finished host step. `panicked` reports a caught worker panic — the
+/// result is still sent so the coordinator's collect loop never deadlocks;
+/// it re-panics after all hosts are accounted for.
+struct StepResult {
+    host: usize,
+    out: Vec<Event>,
+    panicked: bool,
+}
+
+/// Persistent worker pool for pooled cluster stepping (§Perf). Spawned
+/// lazily on the first multi-threaded step, kept for the cluster's
+/// lifetime; dropping it closes the job channel and joins every worker.
+struct StepPool {
+    /// `Some` while the pool is live; taken in `Drop` to close the channel.
+    jobs: Option<Sender<StepJob>>,
+    results: Receiver<StepResult>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl StepPool {
+    fn new(threads: usize) -> StepPool {
+        let (job_tx, job_rx) = channel::<StepJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = channel::<StepResult>();
+        let workers = (0..threads)
+            .map(|k| {
+                let job_rx = Arc::clone(&job_rx);
+                let res_tx = res_tx.clone();
+                thread::Builder::new()
+                    .name(format!("sparta-step-{k}"))
+                    .spawn(move || loop {
+                        // Hold the lock only for the dequeue, not the step.
+                        let job = {
+                            let rx = job_rx.lock().unwrap_or_else(|p| p.into_inner());
+                            rx.recv()
+                        };
+                        let Ok(StepJob { host, session, mut out }) = job else {
+                            return; // channel closed: pool is shutting down
+                        };
+                        let panicked = catch_unwind(AssertUnwindSafe(|| {
+                            // SAFETY: see `SendPtr` — distinct host, backing
+                            // Vec pinned until the coordinator collects us.
+                            unsafe { (*session.0).step_into(&mut out) }
+                        }))
+                        .is_err();
+                        let _ = res_tx.send(StepResult { host, out, panicked });
+                    })
+                    .expect("spawn cluster step worker")
+            })
+            .collect();
+        StepPool { jobs: Some(job_tx), results: res_rx, workers }
+    }
+
+    fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        self.jobs.take(); // closing the channel makes every worker return
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
 
 /// N per-host [`Session`]s behind one [`super::Stepping`] surface (see the
 /// module docs).
@@ -66,8 +208,23 @@ pub struct Cluster {
     next_host: usize,
     /// Cluster MIs stepped (hosts run in lockstep).
     mi: usize,
-    /// Reusable per-host event staging buffer (§Perf).
+    /// Reusable per-host event staging buffer (§Perf, serial path).
     scratch: Vec<Event>,
+    /// Intra-step worker count (1 = serial; capped at `hosts.len()`).
+    step_threads: usize,
+    /// Lazily-spawned worker pool; `None` until the first pooled step and
+    /// after a `set_step_threads` change.
+    pool: Option<StepPool>,
+    /// Per-host event buffers cycled through the pool (§Perf).
+    host_bufs: Vec<Vec<Event>>,
+    /// Per-host buffer capacity after the last pooled step, for the
+    /// steady-state allocation-free debug assertion.
+    evt_cap: Vec<usize>,
+    /// Per-host event-count high water mark across pooled steps.
+    evt_hiwater: Vec<usize>,
+    /// Set by `admit` (admissions emit events and may grow arenas), cleared
+    /// each step: suppresses the allocation-free assertion for one MI.
+    admits_since_step: bool,
 }
 
 impl Cluster {
@@ -81,11 +238,17 @@ impl Cluster {
             (0..n).map(|h| host(h, mix_seed(seed, "cluster/host", h as u64))).collect();
         Cluster {
             global_of: vec![Vec::new(); hosts.len()],
+            host_bufs: (0..hosts.len()).map(|_| Vec::new()).collect(),
+            evt_cap: vec![0; hosts.len()],
+            evt_hiwater: vec![0; hosts.len()],
             hosts,
             locus: Vec::new(),
             next_host: 0,
             mi: 0,
             scratch: Vec::new(),
+            step_threads: 1,
+            pool: None,
+            admits_since_step: false,
         }
     }
 
@@ -104,6 +267,39 @@ impl Cluster {
         })
     }
 
+    /// Set the intra-step worker count (§Perf). `threads <= 1` is the
+    /// serial loop; higher values are capped at the host count when the
+    /// pool spawns. Changing the count drops the old pool (workers join)
+    /// and respawns lazily on the next step — the merged event stream is
+    /// byte-identical at any value, so this is purely a wall-clock knob
+    /// and is deliberately *not* part of the logical configuration
+    /// (snapshots don't record it; restore at any thread count).
+    pub fn set_step_threads(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        if threads != self.step_threads {
+            self.step_threads = threads;
+            self.pool = None;
+        }
+    }
+
+    /// Current intra-step worker setting (1 = serial).
+    pub fn step_threads(&self) -> usize {
+        self.step_threads
+    }
+
+    /// Capacity hints for an expected total of `n` lanes (e.g. a fleet
+    /// schedule's arrival count): reserves the global lane maps and each
+    /// host's lane table + stream arena, so 100k-lane admit storms don't
+    /// grow cluster-level tables one push at a time.
+    pub fn reserve_lanes(&mut self, n: usize) {
+        self.locus.reserve(n);
+        let per_host = n / self.hosts.len() + 1;
+        for (host, map) in self.hosts.iter_mut().zip(&mut self.global_of) {
+            map.reserve(per_host);
+            host.reserve_lanes(per_host);
+        }
+    }
+
     /// Admit a lane on the next host round-robin; returns its *global*
     /// lane id (admission order across the whole cluster).
     pub fn admit(&mut self, spec: LaneSpec) -> LaneId {
@@ -114,13 +310,16 @@ impl Cluster {
         self.locus.push((h, local));
         debug_assert_eq!(self.global_of[h].len(), local.0);
         self.global_of[h].push(global.0);
+        self.admits_since_step = true;
         global
     }
 
-    /// Advance every host session by one monitoring interval (host order),
-    /// merging their event streams — lane ids rewritten to global — into
-    /// the caller-reused `events` buffer. The previous batch's record
-    /// buffers are first routed back to their owning hosts' pools.
+    /// Advance every host session by one monitoring interval, merging
+    /// their event streams — lane ids rewritten to global, **host order**
+    /// regardless of thread count — into the caller-reused `events`
+    /// buffer. The previous batch's record buffers are first routed back
+    /// to their owning hosts' pools (before dispatch, so pooled workers
+    /// never touch another host's pools — §Perf).
     pub fn step_into(&mut self, events: &mut Vec<Event>) {
         for ev in events.drain(..) {
             if let Event::MiCompleted { lane, record } = ev {
@@ -128,16 +327,75 @@ impl Cluster {
                 self.hosts[h].recycle_record(record);
             }
         }
-        let mut scratch = std::mem::take(&mut self.scratch);
-        for h in 0..self.hosts.len() {
-            self.hosts[h].step_into(&mut scratch);
-            for mut ev in scratch.drain(..) {
+        let threads = self.step_threads.min(self.hosts.len());
+        if threads <= 1 {
+            let mut scratch = std::mem::take(&mut self.scratch);
+            for h in 0..self.hosts.len() {
+                self.hosts[h].step_into(&mut scratch);
+                for mut ev in scratch.drain(..) {
+                    self.globalize(h, &mut ev);
+                    events.push(ev);
+                }
+            }
+            self.scratch = scratch;
+        } else {
+            self.step_pooled(threads, events);
+        }
+        self.admits_since_step = false;
+        self.mi += 1;
+    }
+
+    /// The pooled step: dispatch one job per host to the persistent worker
+    /// pool, block until all N results are back, then merge in host order
+    /// (§Perf).
+    fn step_pooled(&mut self, threads: usize, events: &mut Vec<Event>) {
+        let n = self.hosts.len();
+        if self.pool.as_ref().map(StepPool::threads) != Some(threads) {
+            self.pool = Some(StepPool::new(threads));
+        }
+        // Take the pool out so dispatching can borrow `self.hosts` mutably.
+        let pool = self.pool.take().expect("pool just ensured above");
+        let jobs = pool.jobs.as_ref().expect("pool job channel open");
+        let base = self.hosts.as_mut_ptr();
+        for h in 0..n {
+            let out = std::mem::take(&mut self.host_bufs[h]);
+            // SAFETY: each job gets a distinct host index, and we recv all
+            // `n` results below before `self.hosts` can move again.
+            let session = SendPtr(unsafe { base.add(h) });
+            jobs.send(StepJob { host: h, session, out }).expect("step worker pool alive");
+        }
+        let mut panicked = false;
+        for _ in 0..n {
+            let r = pool.results.recv().expect("step worker pool alive");
+            panicked |= r.panicked;
+            self.host_bufs[r.host] = r.out;
+        }
+        self.pool = Some(pool);
+        if panicked {
+            panic!("a host session panicked during a pooled cluster step");
+        }
+        for h in 0..n {
+            let mut buf = std::mem::take(&mut self.host_bufs[h]);
+            // Steady state (no admissions, event volume at or below the
+            // high water mark) must not have grown the buffer: pooled
+            // stepping is allocation-free per host worker.
+            if !self.admits_since_step && buf.len() <= self.evt_hiwater[h] {
+                debug_assert!(
+                    self.evt_cap[h] == 0 || buf.capacity() == self.evt_cap[h],
+                    "host {h} event buffer reallocated at steady state \
+                     ({} -> {} cap)",
+                    self.evt_cap[h],
+                    buf.capacity()
+                );
+            }
+            self.evt_hiwater[h] = self.evt_hiwater[h].max(buf.len());
+            self.evt_cap[h] = buf.capacity();
+            for mut ev in buf.drain(..) {
                 self.globalize(h, &mut ev);
                 events.push(ev);
             }
+            self.host_bufs[h] = buf;
         }
-        self.scratch = scratch;
-        self.mi += 1;
     }
 
     /// Rewrite a host-local event to cluster-global lane identity.
@@ -253,7 +511,9 @@ impl Cluster {
     /// `None` under the same conditions as [`Session::export_state`] on any
     /// host. The lane placement (`locus`/`global_of`/round-robin cursor) is
     /// regenerated by replaying the admission sequence, so it is not part
-    /// of the capture.
+    /// of the capture — and neither is `step_threads`, which never affects
+    /// the logical state (§Perf: the pool is quiescent between steps, so
+    /// capture needs no synchronization beyond being called at a boundary).
     pub fn export_state(&self) -> Option<ClusterState> {
         Some(ClusterState {
             mi: self.mi,
@@ -397,5 +657,148 @@ mod tests {
         };
         assert_eq!(run(42), run(42));
         assert_ne!(run(42), run(43));
+    }
+
+    /// Replay one churn script (admissions mid-run, pause/resume/cancel)
+    /// at a given thread count and digest the full merged event stream
+    /// bit-exactly.
+    fn churn_digest(threads: usize) -> Vec<(usize, String)> {
+        let mut c = Cluster::incast(&Testbed::chameleon(), 4, 99);
+        c.set_step_threads(threads);
+        for _ in 0..6 {
+            c.admit(lane(3));
+        }
+        let mut events = Vec::new();
+        let mut digest = Vec::new();
+        for mi in 0..12 {
+            if mi == 2 {
+                c.admit(lane(2));
+                c.admit(lane(2));
+            }
+            if mi == 3 {
+                assert!(c.pause(LaneId(1)));
+            }
+            if mi == 5 {
+                assert!(c.resume(LaneId(1)));
+                assert!(c.cancel(LaneId(6)));
+            }
+            c.step_into(&mut events);
+            for ev in &events {
+                let bits = match ev {
+                    Event::MiCompleted { record, .. } => format!(
+                        "mi thr={:016x} e={:016x}",
+                        record.throughput_gbps.to_bits(),
+                        record.energy_total_j.to_bits()
+                    ),
+                    other => format!("{other:?}"),
+                };
+                digest.push((ev.lane().0, bits));
+            }
+        }
+        digest
+    }
+
+    /// §Perf contract: the pooled step's host-order merge is byte-identical
+    /// to the serial loop under churn, at several thread counts (including
+    /// more threads than hosts, which caps at the host count).
+    #[test]
+    fn pooled_step_matches_serial_bit_for_bit() {
+        let serial = churn_digest(1);
+        assert_eq!(serial, churn_digest(2));
+        assert_eq!(serial, churn_digest(4));
+        assert_eq!(serial, churn_digest(16));
+    }
+
+    /// Changing the thread count mid-run (pool respawn) never perturbs the
+    /// stream: run half serial, switch to pooled, and compare against the
+    /// all-serial run.
+    #[test]
+    fn thread_count_can_change_mid_run() {
+        let run = |switch: Option<usize>| {
+            let mut c = incast3(31);
+            for _ in 0..5 {
+                c.admit(lane(3));
+            }
+            let mut events = Vec::new();
+            let mut digest = Vec::new();
+            for mi in 0..10 {
+                if Some(mi) == switch {
+                    c.set_step_threads(3);
+                }
+                c.step_into(&mut events);
+                for ev in &events {
+                    if let Event::MiCompleted { lane, record } = ev {
+                        digest.push((lane.0, record.throughput_gbps.to_bits()));
+                    }
+                }
+            }
+            digest
+        };
+        assert_eq!(run(None), run(Some(5)));
+    }
+
+    /// Snapshot capture at an MI boundary of a pooled cluster restores
+    /// into a serial cluster (and vice versa) with an identical tail —
+    /// thread count is not logical state.
+    #[test]
+    fn pooled_snapshot_restores_into_serial_cluster() {
+        let tail = |head_threads: usize, tail_threads: usize| {
+            let mut c = incast3(57);
+            c.set_step_threads(head_threads);
+            for _ in 0..5 {
+                c.admit(lane(4));
+            }
+            let mut events = Vec::new();
+            for _ in 0..4 {
+                c.step_into(&mut events);
+            }
+            events.clear();
+            let state = c.export_state().expect("boundary capture");
+            let mut r = incast3(57);
+            r.set_step_threads(tail_threads);
+            for _ in 0..5 {
+                r.admit(lane(4));
+            }
+            assert!(r.import_state(&state));
+            assert_eq!(r.mi(), 4);
+            let mut digest = Vec::new();
+            for _ in 0..6 {
+                r.step_into(&mut events);
+                for ev in &events {
+                    if let Event::MiCompleted { lane, record } = ev {
+                        digest.push((lane.0, record.throughput_gbps.to_bits()));
+                    }
+                }
+            }
+            digest
+        };
+        assert_eq!(tail(3, 1), tail(1, 3));
+    }
+
+    /// `reserve_lanes` is a pure capacity hint: admissions and stepping
+    /// after a reservation match an unreserved run exactly.
+    #[test]
+    fn reserve_lanes_does_not_perturb_runs() {
+        let run = |reserve: bool| {
+            let mut c = incast3(77);
+            if reserve {
+                c.reserve_lanes(64);
+            }
+            for _ in 0..6 {
+                c.admit(lane(3));
+            }
+            let mut events = Vec::new();
+            let mut digest = Vec::new();
+            for _ in 0..5 {
+                c.step_into(&mut events);
+                for ev in &events {
+                    if let Event::MiCompleted { lane, record } = ev {
+                        digest.push((lane.0, record.throughput_gbps.to_bits()));
+                    }
+                }
+            }
+            digest
+        };
+        assert_eq!(run(true), run(false));
     }
 }

@@ -59,6 +59,12 @@ pub trait Stepping {
     /// caller-reused buffer (see [`Session::step_into`]).
     fn step_into(&mut self, events: &mut Vec<Event>);
 
+    /// Capacity hint for an expected total of `n` lanes (e.g. a fleet
+    /// schedule's arrival count). Purely advisory — never affects results
+    /// — so the default is a no-op; [`Session`] and [`Cluster`] reserve
+    /// their lane tables and stream arenas (§Perf: 100k-lane admits).
+    fn reserve_lanes(&mut self, _n: usize) {}
+
     /// Externally pause an active lane. False if it wasn't pausable.
     fn pause(&mut self, id: LaneId) -> bool;
 
@@ -107,6 +113,10 @@ impl Stepping for Session {
 
     fn step_into(&mut self, events: &mut Vec<Event>) {
         Session::step_into(self, events)
+    }
+
+    fn reserve_lanes(&mut self, n: usize) {
+        Session::reserve_lanes(self, n)
     }
 
     fn pause(&mut self, id: LaneId) -> bool {
@@ -161,6 +171,10 @@ impl Stepping for Cluster {
 
     fn step_into(&mut self, events: &mut Vec<Event>) {
         Cluster::step_into(self, events)
+    }
+
+    fn reserve_lanes(&mut self, n: usize) {
+        Cluster::reserve_lanes(self, n)
     }
 
     fn pause(&mut self, id: LaneId) -> bool {
@@ -234,7 +248,11 @@ pub struct MiContext<'a> {
 }
 
 /// A transfer-parameter optimizer: a DRL agent or a baseline tool policy.
-pub trait Optimizer {
+///
+/// `Send` is a supertrait so a whole [`Session`] (which boxes one optimizer
+/// per lane) can be stepped on a [`Cluster`] worker thread; optimizers are
+/// never *shared* across threads, only moved with their owning host.
+pub trait Optimizer: Send {
     fn name(&self) -> &str;
 
     /// Initial (cc, p) at transfer start.

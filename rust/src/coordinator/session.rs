@@ -512,6 +512,16 @@ impl Session {
         }
     }
 
+    /// Capacity hint for an expected total of `n` lanes: reserves the
+    /// lane table and the substrate's flow tables/stream arena up front
+    /// (see [`crate::net::Substrate::reserve_flows`]), so large admit
+    /// storms (100k-lane fleets) don't grow hot vectors one push at a
+    /// time. Purely a capacity hint — never affects results.
+    pub fn reserve_lanes(&mut self, n: usize) {
+        self.lanes.reserve(n);
+        self.sim.reserve_flows(n);
+    }
+
     /// Return a previously-emitted record's state buffer to the session
     /// pool. [`Session::step_into`] reclaims buffers it finds in the
     /// passed-in `events`; a driver that *moved* events elsewhere (the

@@ -1,41 +1,54 @@
 //! `sparta bench` — the repo's recorded performance trajectory.
 //!
 //! Runs a **scale curve** — fleet `churn-heavy` at 16/64/256 lanes on one
-//! host (via [`ArrivalSchedule::churn_heavy_scaled`]), then at **cluster
+//! host (via [`ArrivalSchedule::churn_heavy_scaled`]), at **cluster
 //! scale**: 1024 lanes sharded across 8 incast sender hosts (and 4096
-//! across 16 in full mode) through [`crate::coordinator::Cluster`] — on
-//! both simulator hot loops — the struct-of-arrays arena
-//! ([`crate::net::NetworkSim`]) and the frozen pre-arena loop
-//! ([`crate::net::baseline::BaselineSim`]) — plus the hot-path
-//! microbenches, and emits a machine-readable `BENCH_*.json`. The
-//! headline is **host-MIs/s at cluster scale**: cluster MIs × hosts per
-//! wall second.
+//! across 16 in full mode) through [`crate::coordinator::Cluster`], and at
+//! **giant scale** ([`BENCH_GIANT`]): 16384 lanes × 32 hosts in quick mode
+//! and 65536 × 64 in full — on both simulator hot loops — the
+//! struct-of-arrays arena ([`crate::net::NetworkSim`]) and the frozen
+//! pre-arena loop ([`crate::net::baseline::BaselineSim`]) — plus the
+//! hot-path microbenches, and emits a machine-readable `BENCH_*.json`.
+//! The headline is **host-MIs/s at cluster scale**: cluster MIs × hosts
+//! per wall second. Multi-host points are additionally timed with the
+//! cluster's intra-step worker pool (§Perf in
+//! [`crate::coordinator::cluster`]): a `threaded_wall_s_per_trial` column
+//! at `min(hosts, cores)` step threads, whose report bytes the bench
+//! requires to be identical to the serial run's — the threaded-vs-serial
+//! wall comparison is a speedup claim only because the streams match.
 //! Because the baseline is timed **in the same process on the same
 //! machine**, the reported speedups are honest ratios, not stale
 //! constants; and because both loops must produce byte-identical fleet
 //! reports, every bench run doubles as a results-drift gate (the full gate
-//! lives in `tests/golden_replay.rs`). CI runs `sparta bench --quick` and
+//! lives in `tests/golden_replay.rs`). The giant points skip the baseline
+//! loop (a frozen O(N²)-ish reference at 65k lanes would dominate the
+//! run for no information) — their ratchet quantity is the
+//! threaded/serial ratio instead. CI runs `sparta bench --quick` and
 //! uploads the `BENCH_*.json` artifact; the perf-trend job additionally
-//! passes `--against <last committed BENCH_*.json>` so every PR pays its
-//! perf bill visibly (see [`trend_gate`]).
+//! passes `--against <anchor>` so every PR pays its perf bill visibly
+//! (see [`trend_gate`]).
 //!
-//! ## `BENCH_*.json` schema (version 3)
+//! ## `BENCH_*.json` schema (version 4)
 //!
-//! Version 3 (PR 7) extends version 2 with per-point `hosts` — the incast
-//! sender-host count the lanes are sharded across — and the cluster-scale
-//! points ([`BENCH_CLUSTER`]); on those points `mis_per_s` counts
-//! **host-MIs** (cluster MIs × hosts). Version 2 (PR 6) added
-//! stable-comparison metadata (`meta`, `iters`), per-trial MI counts
-//! (`trial_mis`), and the MIs/s headline over version 1 (PR 5). Old
-//! anchors remain readable — the gate only needs `scale_curve[*].{lanes,
-//! wall_s_per_trial, baseline_wall_s_per_trial}` and `measured`, and
-//! points without `hosts` are treated as single-host.
+//! Version 4 (PR 9) adds per-point `step_threads` plus the threaded
+//! timing columns (`threaded_wall_s_per_trial`, `thread_speedup_x`), the
+//! giant cluster points, and makes the baseline columns
+//! (`baseline_wall_s_per_trial`, `speedup_x`) optional — absent on points
+//! that skip the pre-arena loop. Version 3 (PR 7) added per-point `hosts`
+//! and the cluster points ([`BENCH_CLUSTER`]); on multi-host points
+//! `mis_per_s` counts **host-MIs** (cluster MIs × hosts). Version 2
+//! (PR 6) added stable-comparison metadata (`meta`, `iters`), per-trial
+//! MI counts (`trial_mis`), and the MIs/s headline over version 1 (PR 5).
+//! Old anchors remain readable — the gate only needs
+//! `scale_curve[*].{lanes, wall_s_per_trial}` plus whichever ratio
+//! columns a point has, and `measured`; points without `hosts` /
+//! `step_threads` are treated as single-host / serial.
 //!
 //! ```json
 //! {
 //!   "bench": "sparta-bench",          // harness identifier
-//!   "schema_version": 3,
-//!   "pr": 7,                          // PR that introduced the schema
+//!   "schema_version": 4,
+//!   "pr": 9,                          // PR that introduced the schema
 //!   "mode": "quick" | "full",         // --quick: 120-MI horizon; full: 360
 //!   "baseline": "net::baseline::BaselineSim (pre-arena loop, d6d9964),
 //!                timed in-process",
@@ -57,7 +70,10 @@
 //!       "hosts": 1,                   // incast sender hosts the lanes are
 //!                                     // sharded across (1 = single-host;
 //!                                     // the trend gate matches points by
-//!                                     // (lanes, hosts))
+//!                                     // (lanes, hosts, step_threads))
+//!       "step_threads": 1,            // intra-step cluster workers of the
+//!                                     // threaded column (1 = no threaded
+//!                                     // timing: single host or one core)
 //!       "trials": 2,                  // seeded trials timed (jobs = 1)
 //!       "horizon_mis": 120,           // MI cap per trial
 //!       "mis_run": 240,               // MIs actually stepped, all trials
@@ -65,12 +81,20 @@
 //!                                     // fleet report's serialized
 //!                                     // `mis_run`), so MIs/s per trial
 //!                                     // needs no re-derivation
-//!       "wall_s_per_trial": 0.6,      // arena loop, wall s per trial
+//!       "wall_s_per_trial": 0.6,      // arena loop, serial stepping,
+//!                                     // wall s per trial
 //!       "mis_per_s": 400.0,           // host-MIs (MIs × hosts) per wall
 //!                                     // second — the headline number
+//!                                     // (serial wall)
 //!       "ticks_per_s": 8000.0,        // fluid-model ticks per wall second
 //!       "baseline_wall_s_per_trial": 2.1,  // pre-arena loop, same workload
-//!       "speedup_x": 3.5 }            // baseline / arena wall per trial
+//!                                     // (absent on giant points)
+//!       "speedup_x": 3.5,             // baseline / arena wall per trial
+//!                                     // (absent on giant points)
+//!       "threaded_wall_s_per_trial": 0.2,  // arena loop at step_threads
+//!                                     // workers (absent when
+//!                                     // step_threads == 1)
+//!       "thread_speedup_x": 3.0 }     // serial / threaded wall per trial
 //!   ],
 //!   "micro": [                        // hot-path microbenches
 //!     { "name": "net sim MI (256 streams)", "per_op_s": ..., "ops_per_s": ... }
@@ -81,17 +105,25 @@
 //! ## The perf-trend gate
 //!
 //! Wall seconds are machine-dependent, so the gate never compares them
-//! across runs. Instead it compares the **arena/baseline wall ratio**
-//! (`1 / speedup_x`): both loops run the identical seeded workload in the
-//! same process, so machine speed cancels and the ratio isolates how much
-//! of the baseline's cost the arena loop still pays. A point regresses
-//! when its ratio worsens by more than [`TREND_MAX_REGRESS_FRAC`] relative
-//! to the anchor's. Anchors with `"measured": false` (or an empty curve)
-//! are **seed-only**: the gate records the fresh numbers and passes, so
-//! the first measured run after a schema anchor establishes the ratchet
-//! instead of tripping it. `--inject-slowdown <frac>` sleeps that fraction
-//! of each arena timing (test flag) — CI uses it to prove the gate fails a
-//! synthetic 15%+ slowdown.
+//! across runs. Instead it compares **same-process wall ratios**: on
+//! points with a baseline column, the arena/baseline ratio
+//! (`1 / speedup_x`); on giant points (no baseline), the threaded/serial
+//! ratio (`1 / thread_speedup_x`). Both sides of either ratio run the
+//! identical seeded workload in the same process, so machine speed
+//! cancels and the ratio isolates a real code regression. Points are
+//! matched by `(lanes, hosts, step_threads)` — anchor points without the
+//! newer fields default to single-host/serial — and the two runs must
+//! agree on which ratio a point carries (a point that changed metric is
+//! skipped, never silently compared). A point regresses when its ratio
+//! worsens by more than [`TREND_MAX_REGRESS_FRAC`] relative to the
+//! anchor's. Anchors with `"measured": false` (or an empty curve) are
+//! **seed-only**: the gate records the fresh numbers and passes, so the
+//! first measured run after a schema anchor establishes the ratchet
+//! instead of tripping it — the CI `perf-trend` job caches its own
+//! measured runs per runner class precisely so this gate compares
+//! measured-vs-measured in practice. `--inject-slowdown <frac>` sleeps
+//! that fraction of each arena timing (test flag) — CI uses it to prove
+//! the gate fails a synthetic 15%+ slowdown.
 
 use super::common::Scale;
 use super::fleet::{self, FleetOpts};
@@ -115,6 +147,13 @@ pub const BENCH_LANES: [usize; 3] = [16, 64, 256];
 /// ratchet); the rest are full-mode only.
 pub const BENCH_CLUSTER: [(usize, usize); 2] = [(1024, 8), (4096, 16)];
 
+/// The giant cluster points, `(lanes, sender hosts)` — the 16k–65k end of
+/// the curve the intra-step worker pool exists for. The first runs in
+/// `--quick` mode, the second full-mode only. These skip the pre-arena
+/// baseline loop (its wall at this scale adds nothing but hours); their
+/// ratchet quantity is the threaded/serial wall ratio instead.
+pub const BENCH_GIANT: [(usize, usize); 2] = [(16384, 32), (65536, 64)];
+
 /// Maximum tolerated worsening of the arena/baseline wall ratio vs the
 /// anchor before the trend gate fails (15%).
 pub const TREND_MAX_REGRESS_FRAC: f64 = 0.15;
@@ -135,11 +174,17 @@ pub struct BenchOpts {
     /// Restrict the curve to these fleet sizes (None = full
     /// [`BENCH_LANES`] curve).
     pub lanes: Option<Vec<usize>>,
+    /// Intra-step cluster workers for the threaded timing column on
+    /// multi-host points: `0` (the default) resolves to
+    /// `min(hosts, cores)` per point; an explicit value is used as given.
+    /// When the resolved count is 1 (single core, or single-host points)
+    /// the threaded column is skipped.
+    pub step_threads: usize,
 }
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        BenchOpts { quick: false, iters: 1, inject_slowdown: 0.0, lanes: None }
+        BenchOpts { quick: false, iters: 1, inject_slowdown: 0.0, lanes: None, step_threads: 0 }
     }
 }
 
@@ -152,6 +197,10 @@ pub struct ScalePoint {
     /// point; above 1 the workload runs a [`crate::coordinator::Cluster`]
     /// and `mis_per_s` / `ticks_per_s` count host-MIs / host-ticks).
     pub hosts: usize,
+    /// Intra-step cluster workers of the threaded timing column (1 = no
+    /// threaded column; the trend gate keys points by
+    /// `(lanes, hosts, step_threads)`).
+    pub step_threads: usize,
     pub trials: usize,
     pub horizon_mis: usize,
     /// MIs actually stepped, summed over trials (identical across loops —
@@ -160,14 +209,21 @@ pub struct ScalePoint {
     /// Per-trial MI counts, in trial order (the fleet report's serialized
     /// `mis_run` values).
     pub trial_mis: Vec<usize>,
-    /// Arena loop, wall seconds per trial.
+    /// Arena loop, serial stepping, wall seconds per trial.
     pub wall_s_per_trial: f64,
     pub mis_per_s: f64,
     pub ticks_per_s: f64,
     /// Frozen pre-arena loop, wall seconds per trial, same workload.
-    pub baseline_wall_s_per_trial: f64,
-    /// `baseline / arena` wall per trial.
-    pub speedup_x: f64,
+    /// `None` on giant points, which skip the baseline loop.
+    pub baseline_wall_s_per_trial: Option<f64>,
+    /// `baseline / arena` wall per trial (`None` with no baseline timing).
+    pub speedup_x: Option<f64>,
+    /// Arena loop at `step_threads` intra-step workers, wall seconds per
+    /// trial. `None` when `step_threads == 1`.
+    pub threaded_wall_s_per_trial: Option<f64>,
+    /// `serial / threaded` wall per trial (`None` with no threaded
+    /// timing).
+    pub thread_speedup_x: Option<f64>,
 }
 
 /// One hot-path microbench row.
@@ -273,15 +329,17 @@ pub fn session_step_micro(lanes: usize, reps: usize) -> f64 {
 
 /// Time one side of a scale point: `trials × churn-heavy(lanes)` at
 /// `--jobs 1` (so wall per trial is not muddied by worker scheduling).
-/// `hosts` above 1 runs each trial as an incast cluster.
+/// `hosts` above 1 runs each trial as an incast cluster; `step_threads`
+/// above 1 steps its hosts with the intra-step worker pool.
 fn timed_fleet(
     paths: &Paths,
     sched: &ArrivalSchedule,
     methods: &[String],
     baseline_loop: bool,
     hosts: usize,
+    step_threads: usize,
 ) -> Result<(fleet::FleetReport, f64)> {
-    let opts = FleetOpts { baseline_loop, hosts, ..FleetOpts::default() };
+    let opts = FleetOpts { baseline_loop, hosts, step_threads, ..FleetOpts::default() };
     let t0 = Instant::now();
     let report = fleet::run(paths, sched, methods, Scale::Quick, 42, 1, opts)?;
     Ok((report, t0.elapsed().as_secs_f64()))
@@ -297,31 +355,43 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
     // statics, allocator growth, page-cache warmup) are not billed to
     // whichever side happens to be timed first.
     let warmup = ArrivalSchedule::churn_heavy_scaled(8, 30);
-    timed_fleet(paths, &warmup, &methods, false, 1)?;
-    timed_fleet(paths, &warmup, &methods, true, 1)?;
-    // The curve as (lanes, hosts) points: the single-host sizes, then the
-    // incast cluster points (the first also in quick mode). An explicit
-    // --lanes subset keeps the curve single-host.
-    let curve: Vec<(usize, usize)> = match &opts.lanes {
-        Some(subset) => subset.iter().map(|&l| (l, 1)).collect(),
+    timed_fleet(paths, &warmup, &methods, false, 1, 1)?;
+    timed_fleet(paths, &warmup, &methods, true, 1, 1)?;
+    // The curve as (lanes, hosts, with_baseline) points: the single-host
+    // sizes, the incast cluster points, then the giant points (which skip
+    // the frozen baseline loop — module docs). The first cluster and giant
+    // points also run in quick mode. An explicit --lanes subset keeps the
+    // curve single-host.
+    let curve: Vec<(usize, usize, bool)> = match &opts.lanes {
+        Some(subset) => subset.iter().map(|&l| (l, 1, true)).collect(),
         None => {
-            let mut c: Vec<(usize, usize)> = BENCH_LANES.iter().map(|&l| (l, 1)).collect();
-            let cluster = if opts.quick { &BENCH_CLUSTER[..1] } else { &BENCH_CLUSTER[..] };
-            c.extend(cluster.iter().copied());
+            let mut c: Vec<(usize, usize, bool)> =
+                BENCH_LANES.iter().map(|&l| (l, 1, true)).collect();
+            let take = if opts.quick { 1 } else { 2 };
+            c.extend(BENCH_CLUSTER[..take].iter().map(|&(l, h)| (l, h, true)));
+            c.extend(BENCH_GIANT[..take].iter().map(|&(l, h)| (l, h, false)));
             c
         }
     };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut points = Vec::new();
-    for &(lanes, hosts) in &curve {
+    for &(lanes, hosts, with_baseline) in &curve {
         let sched = ArrivalSchedule::churn_heavy_scaled(lanes, horizon);
+        // The threaded column's worker count: explicit --step-threads, or
+        // min(hosts, cores). 1 (single host, or one core) skips the column.
+        let step_threads = match opts.step_threads {
+            0 => hosts.min(cores),
+            n => n.min(hosts),
+        };
         // Stable-comparison mode: repeat the timing and keep the minimum
         // wall per side — interference only ever adds time, so the min is
         // the low-noise estimator the trend gate compares.
         let mut wall = f64::INFINITY;
         let mut base_wall = f64::INFINITY;
+        let mut threaded_wall = f64::INFINITY;
         let mut report = None;
         for _ in 0..iters {
-            let (rep, mut w) = timed_fleet(paths, &sched, &methods, false, hosts)?;
+            let (rep, mut w) = timed_fleet(paths, &sched, &methods, false, hosts, 1)?;
             if opts.inject_slowdown > 0.0 {
                 // Real sleep, billed to the arena wall: the synthetic
                 // regression the CI perf-trend job proves it can catch.
@@ -329,17 +399,33 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
                 std::thread::sleep(std::time::Duration::from_secs_f64(pause));
                 w += pause;
             }
-            let (base_rep, base_w) = timed_fleet(paths, &sched, &methods, true, hosts)?;
-            // The bench doubles as a drift gate: both loops must produce
-            // the same report bytes (full suite: tests/golden_replay.rs).
-            if fleet::to_json(&rep).to_string() != fleet::to_json(&base_rep).to_string() {
-                return Err(anyhow!(
-                    "bench: arena and baseline loops diverged at {lanes} lanes — \
-                     results drift, not a perf difference"
-                ));
+            if with_baseline {
+                let (base_rep, base_w) = timed_fleet(paths, &sched, &methods, true, hosts, 1)?;
+                // The bench doubles as a drift gate: both loops must
+                // produce the same report bytes (full suite:
+                // tests/golden_replay.rs).
+                if fleet::to_json(&rep).to_string() != fleet::to_json(&base_rep).to_string() {
+                    return Err(anyhow!(
+                        "bench: arena and baseline loops diverged at {lanes} lanes — \
+                         results drift, not a perf difference"
+                    ));
+                }
+                base_wall = base_wall.min(base_w);
+            }
+            if step_threads > 1 {
+                let (thr_rep, thr_w) =
+                    timed_fleet(paths, &sched, &methods, false, hosts, step_threads)?;
+                // Byte-identity is what makes the threaded column a
+                // speedup rather than a different computation.
+                if fleet::to_json(&rep).to_string() != fleet::to_json(&thr_rep).to_string() {
+                    return Err(anyhow!(
+                        "bench: threaded cluster stepping diverged from serial at \
+                         {lanes} lanes x {hosts} hosts x {step_threads} threads"
+                    ));
+                }
+                threaded_wall = threaded_wall.min(thr_w);
             }
             wall = wall.min(w);
-            base_wall = base_wall.min(base_w);
             report = Some(rep);
         }
         let report = report.expect("iters >= 1");
@@ -351,9 +437,11 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
         let ticks_per_mi = (1.0 / SimConfig::default().tick_s).round();
         // Cluster points report host-MIs: every cluster MI steps all hosts.
         let host_mis = (mis_run * hosts) as f64;
+        let threaded = step_threads > 1;
         let point = ScalePoint {
             lanes,
             hosts,
+            step_threads: if threaded { step_threads } else { 1 },
             trials,
             horizon_mis: horizon,
             mis_run,
@@ -361,18 +449,25 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
             wall_s_per_trial: wall / trials as f64,
             mis_per_s: host_mis / wall,
             ticks_per_s: host_mis * ticks_per_mi / wall,
-            baseline_wall_s_per_trial: base_wall / trials as f64,
-            speedup_x: base_wall / wall,
+            baseline_wall_s_per_trial: with_baseline.then(|| base_wall / trials as f64),
+            speedup_x: with_baseline.then(|| base_wall / wall),
+            threaded_wall_s_per_trial: threaded.then(|| threaded_wall / trials as f64),
+            thread_speedup_x: threaded.then(|| wall / threaded_wall),
         };
+        let base_col = point
+            .speedup_x
+            .map(|s| format!("baseline {:.2}x", s))
+            .unwrap_or_else(|| "no baseline".to_string());
+        let thr_col = point
+            .thread_speedup_x
+            .map(|s| format!(", {} threads {:.2}x", point.step_threads, s))
+            .unwrap_or_default();
         crate::log_info!(
-            "bench: {} lanes x {} host(s), {} trials, arena {:.2} s/trial vs baseline {:.2} \
-             s/trial ({:.2}x)",
+            "bench: {} lanes x {} host(s), {} trials, arena {:.2} s/trial ({base_col}{thr_col})",
             lanes,
             hosts,
             trials,
             point.wall_s_per_trial,
-            point.baseline_wall_s_per_trial,
-            point.speedup_x
         );
         points.push(point);
     }
@@ -421,7 +516,12 @@ pub fn print(report: &BenchReport) {
         "baseline s/trial",
         "MIs/s",
         "speedup",
+        "threads",
+        "threaded s/trial",
+        "thread speedup",
     ]);
+    let opt3 = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into());
+    let optx = |v: Option<f64>| v.map(|x| format!("{x:.2}x")).unwrap_or_else(|| "-".into());
     for p in &report.points {
         t.row(vec![
             p.lanes.to_string(),
@@ -429,9 +529,12 @@ pub fn print(report: &BenchReport) {
             p.trials.to_string(),
             p.mis_run.to_string(),
             format!("{:.3}", p.wall_s_per_trial),
-            format!("{:.3}", p.baseline_wall_s_per_trial),
+            opt3(p.baseline_wall_s_per_trial),
             format!("{:.0}", p.mis_per_s),
-            format!("{:.2}x", p.speedup_x),
+            optx(p.speedup_x),
+            p.step_threads.to_string(),
+            opt3(p.threaded_wall_s_per_trial),
+            optx(p.thread_speedup_x),
         ]);
     }
     t.print();
@@ -451,8 +554,8 @@ pub fn print(report: &BenchReport) {
 pub fn to_json(report: &BenchReport) -> Json {
     Json::obj(vec![
         ("bench", Json::from("sparta-bench")),
-        ("schema_version", Json::from(3usize)),
-        ("pr", Json::from(7usize)),
+        ("schema_version", Json::from(4usize)),
+        ("pr", Json::from(9usize)),
         ("mode", Json::from(if report.quick { "quick" } else { "full" })),
         (
             "baseline",
@@ -477,9 +580,10 @@ pub fn to_json(report: &BenchReport) -> Json {
                     .points
                     .iter()
                     .map(|p| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("lanes", Json::from(p.lanes)),
                             ("hosts", Json::from(p.hosts)),
+                            ("step_threads", Json::from(p.step_threads)),
                             ("trials", Json::from(p.trials)),
                             ("horizon_mis", Json::from(p.horizon_mis)),
                             ("mis_run", Json::from(p.mis_run)),
@@ -490,12 +594,22 @@ pub fn to_json(report: &BenchReport) -> Json {
                             ("wall_s_per_trial", Json::from(p.wall_s_per_trial)),
                             ("mis_per_s", Json::from(p.mis_per_s)),
                             ("ticks_per_s", Json::from(p.ticks_per_s)),
-                            (
-                                "baseline_wall_s_per_trial",
-                                Json::from(p.baseline_wall_s_per_trial),
-                            ),
-                            ("speedup_x", Json::from(p.speedup_x)),
-                        ])
+                        ];
+                        // Optional columns are absent, not null, so old
+                        // readers (and the gate) need no null handling.
+                        if let Some(b) = p.baseline_wall_s_per_trial {
+                            fields.push(("baseline_wall_s_per_trial", Json::from(b)));
+                        }
+                        if let Some(s) = p.speedup_x {
+                            fields.push(("speedup_x", Json::from(s)));
+                        }
+                        if let Some(t) = p.threaded_wall_s_per_trial {
+                            fields.push(("threaded_wall_s_per_trial", Json::from(t)));
+                        }
+                        if let Some(s) = p.thread_speedup_x {
+                            fields.push(("thread_speedup_x", Json::from(s)));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
@@ -527,16 +641,24 @@ pub fn to_json(report: &BenchReport) -> Json {
 #[derive(Debug, Clone)]
 pub struct TrendRow {
     pub lanes: usize,
-    /// Incast hosts of the point (points are matched by `(lanes, hosts)`;
-    /// pre-v3 anchor points without a `hosts` field are single-host).
+    /// Incast hosts of the point (points are matched by `(lanes, hosts,
+    /// step_threads)`; anchor points without the newer fields are
+    /// single-host/serial).
     pub hosts: usize,
-    /// Anchor's arena/baseline wall ratio (`1 / speedup_x`) — the
-    /// machine-normalized quantity the ratchet tracks.
+    /// Intra-step workers of the point's threaded column (1 = serial).
+    pub step_threads: usize,
+    /// Which same-process wall ratio this row ratchets:
+    /// `"arena/baseline"` on points with a baseline column,
+    /// `"threaded/serial"` on giant points without one. Both runs must
+    /// carry the same metric for a point to compare.
+    pub metric: &'static str,
+    /// Anchor's ratio for `metric` — the machine-normalized quantity the
+    /// ratchet tracks.
     pub anchor_ratio: f64,
-    /// This run's arena/baseline wall ratio.
+    /// This run's ratio for `metric`.
     pub current_ratio: f64,
-    /// `current_ratio / anchor_ratio - 1`: positive means the arena loop
-    /// got slower relative to the in-process baseline.
+    /// `current_ratio / anchor_ratio - 1`: positive means this run got
+    /// slower relative to its in-process reference.
     pub delta_frac: f64,
     pub regressed: bool,
 }
@@ -577,17 +699,37 @@ pub fn trend_gate(
     let measured = anchor.get("measured").and_then(Json::as_bool).unwrap_or(false);
     let empty: [Json; 0] = [];
     let curve = anchor.get("scale_curve").and_then(Json::as_arr).unwrap_or(&empty);
-    // Anchor points with usable timings, keyed by (lanes, hosts) — points
-    // without a `hosts` field (schema < 3) are single-host.
-    let mut anchor_ratios: Vec<(usize, usize, f64)> = Vec::new();
+    // The ratchet quantity of one curve point: the arena/baseline wall
+    // ratio when the point carries a baseline column, else the
+    // threaded/serial ratio (giant points). The label rides along so the
+    // gate never compares a point whose metric changed between runs.
+    fn ratio_of(
+        wall: f64,
+        base: Option<f64>,
+        threaded: Option<f64>,
+    ) -> Option<(&'static str, f64)> {
+        if wall <= 0.0 {
+            return None;
+        }
+        if let Some(b) = base.filter(|&b| b > 0.0) {
+            return Some(("arena/baseline", wall / b));
+        }
+        threaded.filter(|&t| t > 0.0).map(|t| ("threaded/serial", t / wall))
+    }
+    // Anchor points with usable timings, keyed by (lanes, hosts,
+    // step_threads) — points without the newer fields (schema < 3 / < 4)
+    // are single-host / serial.
+    let mut anchor_ratios: Vec<(usize, usize, usize, &'static str, f64)> = Vec::new();
     for p in curve {
         let lanes = p.get("lanes").and_then(Json::as_usize);
         let hosts = p.get("hosts").and_then(Json::as_usize).unwrap_or(1);
+        let threads = p.get("step_threads").and_then(Json::as_usize).unwrap_or(1);
         let wall = p.get("wall_s_per_trial").and_then(Json::as_f64);
         let base = p.get("baseline_wall_s_per_trial").and_then(Json::as_f64);
-        if let (Some(l), Some(w), Some(b)) = (lanes, wall, base) {
-            if w > 0.0 && b > 0.0 {
-                anchor_ratios.push((l, hosts, w / b));
+        let thr = p.get("threaded_wall_s_per_trial").and_then(Json::as_f64);
+        if let (Some(l), Some(w)) = (lanes, wall) {
+            if let Some((metric, r)) = ratio_of(w, base, thr) {
+                anchor_ratios.push((l, hosts, threads, metric, r));
             }
         }
     }
@@ -602,21 +744,19 @@ pub fn trend_gate(
     let mut rows = Vec::new();
     let mut skipped = Vec::new();
     for p in &current.points {
-        let anchor_ratio = anchor_ratios
+        let anchor_hit = anchor_ratios
             .iter()
-            .find(|(l, h, _)| *l == p.lanes && *h == p.hosts)
-            .map(|(_, _, r)| *r);
-        let current_ratio = if p.baseline_wall_s_per_trial > 0.0 {
-            Some(p.wall_s_per_trial / p.baseline_wall_s_per_trial)
-        } else {
-            None
-        };
-        match (anchor_ratio, current_ratio) {
-            (Some(a), Some(c)) => {
+            .find(|(l, h, t, _, _)| *l == p.lanes && *h == p.hosts && *t == p.step_threads);
+        let current_ratio =
+            ratio_of(p.wall_s_per_trial, p.baseline_wall_s_per_trial, p.threaded_wall_s_per_trial);
+        match (anchor_hit, current_ratio) {
+            (Some(&(_, _, _, am, a)), Some((cm, c))) if am == cm => {
                 let delta_frac = c / a - 1.0;
                 rows.push(TrendRow {
                     lanes: p.lanes,
                     hosts: p.hosts,
+                    step_threads: p.step_threads,
+                    metric: cm,
                     anchor_ratio: a,
                     current_ratio: c,
                     delta_frac,
@@ -638,15 +778,25 @@ pub fn trend_print(trend: &TrendReport) {
         return;
     }
     println!(
-        "\nPerf trend vs anchor (arena/baseline wall ratio; fail above +{:.0}%):",
+        "\nPerf trend vs anchor (same-process wall ratios; fail above +{:.0}%):",
         trend.max_regress_frac * 100.0
     );
-    let mut t =
-        Table::new(&["lanes", "hosts", "anchor ratio", "current ratio", "delta", "verdict"]);
+    let mut t = Table::new(&[
+        "lanes",
+        "hosts",
+        "threads",
+        "metric",
+        "anchor ratio",
+        "current ratio",
+        "delta",
+        "verdict",
+    ]);
     for r in &trend.rows {
         t.row(vec![
             r.lanes.to_string(),
             r.hosts.to_string(),
+            r.step_threads.to_string(),
+            r.metric.to_string(),
             format!("{:.4}", r.anchor_ratio),
             format!("{:.4}", r.current_ratio),
             format!("{:+.1}%", r.delta_frac * 100.0),
@@ -669,16 +819,20 @@ pub fn trend_markdown(trend: &TrendReport) -> String {
         return md;
     }
     md.push_str(&format!(
-        "Arena/baseline wall ratio per fleet size; gate fails above +{:.0}%.\n\n",
+        "Same-process wall ratio per curve point; gate fails above +{:.0}%.\n\n",
         trend.max_regress_frac * 100.0
     ));
-    md.push_str("| lanes | hosts | anchor ratio | current ratio | delta | verdict |\n");
-    md.push_str("|---:|---:|---:|---:|---:|---|\n");
+    md.push_str(
+        "| lanes | hosts | threads | metric | anchor ratio | current ratio | delta | verdict |\n",
+    );
+    md.push_str("|---:|---:|---:|---|---:|---:|---:|---|\n");
     for r in &trend.rows {
         md.push_str(&format!(
-            "| {} | {} | {:.4} | {:.4} | {:+.1}% | {} |\n",
+            "| {} | {} | {} | {} | {:.4} | {:.4} | {:+.1}% | {} |\n",
             r.lanes,
             r.hosts,
+            r.step_threads,
+            r.metric,
             r.anchor_ratio,
             r.current_ratio,
             r.delta_frac * 100.0,
@@ -700,6 +854,7 @@ mod tests {
         ScalePoint {
             lanes,
             hosts: 1,
+            step_threads: 1,
             trials: 2,
             horizon_mis: 120,
             mis_run: 240,
@@ -707,8 +862,24 @@ mod tests {
             wall_s_per_trial: wall,
             mis_per_s: 240.0 / wall,
             ticks_per_s: 4800.0 / wall,
-            baseline_wall_s_per_trial: base,
-            speedup_x: base / wall,
+            baseline_wall_s_per_trial: Some(base),
+            speedup_x: Some(base / wall),
+            threaded_wall_s_per_trial: None,
+            thread_speedup_x: None,
+        }
+    }
+
+    /// A giant-style point: no baseline columns, a threaded column at
+    /// `threads` workers.
+    fn giant_point(lanes: usize, hosts: usize, threads: usize, wall: f64, thr: f64) -> ScalePoint {
+        ScalePoint {
+            hosts,
+            step_threads: threads,
+            baseline_wall_s_per_trial: None,
+            speedup_x: None,
+            threaded_wall_s_per_trial: Some(thr),
+            thread_speedup_x: Some(wall / thr),
+            ..point(lanes, wall, 0.0)
         }
     }
 
@@ -795,6 +966,7 @@ mod tests {
         let t = trend_gate(&rep(vec![cluster]), &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
         assert_eq!(t.rows.len(), 1);
         assert_eq!(t.rows[0].hosts, 8);
+        assert_eq!(t.rows[0].metric, "arena/baseline");
         assert!(!t.failed());
         // The same lane count on one host has no counterpart: skipped, so
         // re-sharding a point can never trip the ratchet silently.
@@ -802,6 +974,77 @@ mod tests {
             .unwrap();
         assert!(t.rows.is_empty());
         assert_eq!(t.skipped, vec![1024]);
+    }
+
+    #[test]
+    fn trend_gate_ratchets_threaded_ratio_on_giant_points() {
+        // Giant points have no baseline column: the ratchet quantity is
+        // the threaded/serial ratio, matched by (lanes, hosts,
+        // step_threads).
+        let anchor = anchor_of(vec![giant_point(16384, 32, 8, 10.0, 2.5)]);
+        // Same ratio, 2x slower machine: passes.
+        let t = trend_gate(
+            &rep(vec![giant_point(16384, 32, 8, 20.0, 5.0)]),
+            &anchor,
+            TREND_MAX_REGRESS_FRAC,
+        )
+        .unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0].metric, "threaded/serial");
+        assert_eq!(t.rows[0].step_threads, 8);
+        assert!(!t.failed(), "rows: {:?}", t.rows);
+        assert!(t.rows[0].delta_frac.abs() < 1e-9);
+        // Threaded wall worsening 30% relative to serial: regressed.
+        let t = trend_gate(
+            &rep(vec![giant_point(16384, 32, 8, 10.0, 3.25)]),
+            &anchor,
+            TREND_MAX_REGRESS_FRAC,
+        )
+        .unwrap();
+        assert!(t.failed());
+        // A different thread count (another runner class) never compares:
+        // the point is skipped, not misjudged.
+        let t = trend_gate(
+            &rep(vec![giant_point(16384, 32, 4, 10.0, 3.0)]),
+            &anchor,
+            TREND_MAX_REGRESS_FRAC,
+        )
+        .unwrap();
+        assert!(t.rows.is_empty());
+        assert_eq!(t.skipped, vec![16384]);
+    }
+
+    #[test]
+    fn trend_gate_skips_points_whose_metric_changed() {
+        // Anchor measured arena/baseline; the current run has only a
+        // threaded column for that shape. Comparing the two ratios would
+        // be meaningless — the point must be skipped.
+        let anchor = anchor_of(vec![point(256, 1.0, 3.0)]);
+        let current = rep(vec![ScalePoint {
+            baseline_wall_s_per_trial: None,
+            speedup_x: None,
+            threaded_wall_s_per_trial: Some(0.5),
+            thread_speedup_x: Some(2.0),
+            ..point(256, 1.0, 0.0)
+        }]);
+        let t = trend_gate(&current, &anchor, TREND_MAX_REGRESS_FRAC).unwrap();
+        assert!(t.rows.is_empty());
+        assert_eq!(t.skipped, vec![256]);
+    }
+
+    #[test]
+    fn scale_point_json_omits_absent_optional_columns() {
+        let j = Json::parse(&to_json(&rep(vec![giant_point(16384, 32, 8, 10.0, 2.5)])).to_string())
+            .unwrap();
+        let p = &j.get("scale_curve").and_then(Json::as_arr).unwrap()[0];
+        assert!(p.get("baseline_wall_s_per_trial").is_none());
+        assert!(p.get("speedup_x").is_none());
+        assert_eq!(p.get("step_threads").and_then(Json::as_usize), Some(8));
+        assert!((p.get("thread_speedup_x").and_then(Json::as_f64).unwrap() - 4.0).abs() < 1e-9);
+        let j = Json::parse(&to_json(&rep(vec![point(16, 1.0, 3.0)])).to_string()).unwrap();
+        let p = &j.get("scale_curve").and_then(Json::as_arr).unwrap()[0];
+        assert!(p.get("threaded_wall_s_per_trial").is_none());
+        assert!((p.get("speedup_x").and_then(Json::as_f64).unwrap() - 3.0).abs() < 1e-9);
     }
 
     #[test]

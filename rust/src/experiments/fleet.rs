@@ -76,12 +76,57 @@ pub struct FleetOpts {
     /// ([`Topology::incast_host`]) with lanes placed round-robin, and the
     /// report carries per-host ledger rows.
     pub hosts: usize,
+    /// Intra-step cluster worker threads (§Perf in
+    /// [`crate::coordinator::cluster`]): `1` steps hosts serially, `N > 1`
+    /// steps up to N hosts concurrently per MI with a byte-identical
+    /// merged stream, `0` resolves automatically — serial when the run is
+    /// already sharded across trial workers (`jobs > 1`), else
+    /// `min(hosts, cores)`. See [`resolve_step_threads`]; pure wall-clock
+    /// knob, never serialized into reports.
+    pub step_threads: usize,
 }
 
 impl Default for FleetOpts {
     fn default() -> FleetOpts {
-        FleetOpts { observe_paused: false, yield_policy: false, baseline_loop: false, hosts: 1 }
+        FleetOpts {
+            observe_paused: false,
+            yield_policy: false,
+            baseline_loop: false,
+            hosts: 1,
+            step_threads: 1,
+        }
     }
+}
+
+/// Resolve the `--step-threads` knob against the outer `--jobs` trial
+/// sharding. `0` (auto) picks serial stepping when trials are already
+/// sharded (`jobs > 1` would oversubscribe: every worker would spawn its
+/// own host pool), else `min(hosts, available cores)`. An explicit
+/// request is honored as given, but `jobs * threads > cores` warns once
+/// with the effective thread budget instead of silently oversubscribing.
+pub fn resolve_step_threads(step_threads: usize, hosts: usize, jobs: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let resolved = match step_threads {
+        0 if jobs > 1 => 1,
+        0 => hosts.max(1).min(cores),
+        n => n,
+    };
+    static OVERSUBSCRIBE_WARN: std::sync::Once = std::sync::Once::new();
+    if resolved > 1 && jobs.max(1) * resolved > cores {
+        OVERSUBSCRIBE_WARN.call_once(|| {
+            crate::log_warn!(
+                "--jobs {} x --step-threads {} = {} threads oversubscribes {} cores; \
+                 results are unaffected (byte-identical at any thread count) but \
+                 wall clock may regress — consider --step-threads {}",
+                jobs.max(1),
+                resolved,
+                jobs.max(1) * resolved,
+                cores,
+                (cores / jobs.max(1)).max(1)
+            );
+        });
+    }
+    resolved
 }
 
 /// One sender host's ledger truth inside a cluster trial (sender rails
@@ -182,6 +227,11 @@ pub fn run(
     if methods.is_empty() {
         return Err(anyhow!("fleet needs at least one method"));
     }
+    // Resolve the intra-step thread knob once against the trial sharding,
+    // so every worker steps its cluster with the same (warned-about)
+    // budget instead of re-deciding per trial.
+    let step_threads = resolve_step_threads(opts.step_threads, opts.hosts, jobs);
+    let opts = FleetOpts { step_threads, ..opts };
     let trials: Vec<usize> = (0..scale.trials()).collect();
     let snapshot = Arc::new(WeightSnapshot::load_dir(paths.weights())?);
     let worker_paths = paths.clone();
@@ -280,6 +330,7 @@ fn run_trial(
             }
             builder.topology(topo).build()
         });
+        cluster.set_step_threads(opts.step_threads.max(1));
         let mut out = drive_trial(ctx, schedule, methods, trial, trial_seed, opts, &mut cluster)?;
         // Host-resolved rows, plus the cluster-level conservation check:
         // per-host ledger truth sums to the cluster total the trial billed.
@@ -338,6 +389,9 @@ fn drive_trial<S: Stepping>(
     session: &mut S,
 ) -> Result<FleetTrial> {
     let arrivals = schedule.arrivals(trial_seed);
+    // Capacity hint (§Perf): the arrival list is the expected lane count,
+    // so lane tables and stream arenas grow once, not per admission.
+    session.reserve_lanes(arrivals.len());
 
     // Per-lane trackers, indexed by LaneId (admission order).
     let mut admitted_mi: Vec<usize> = Vec::new();

@@ -72,7 +72,13 @@
 //! [`Session`] or a [`Cluster`] — presents the same unified
 //! [`coordinator::Stepping`] surface (admit / `step_into` / pause /
 //! resume / cancel / energy queries), so drivers like the fleet loop are
-//! written once and monomorphize over either.
+//! written once and monomorphize over either. Because host simulations
+//! share nothing, the cluster can also step them *concurrently*: a
+//! persistent worker pool ([`coordinator::Cluster::set_step_threads`],
+//! `--step-threads N` on fleet/serve/bench) fans each MI out over the
+//! hosts and merges the per-host event buffers in host order, so the
+//! stream stays byte-identical to serial at any thread count — §Perf in
+//! [`coordinator::cluster`] has the full argument.
 //!
 //! Where `sparta fleet` replays a whole workload batch-style, `sparta
 //! serve` ([`serve`]) keeps a fleet *resident*: a daemon owns a
@@ -107,7 +113,13 @@
 //! (8/16 hosts, headline in host-MIs/s), timed against the frozen
 //! pre-arena loop ([`net::baseline::BaselineSim`]), which
 //! `tests/golden_replay.rs` also holds byte-identical to the arena loop,
-//! so speedups can never smuggle in result changes.
+//! so speedups can never smuggle in result changes. Schema v4
+//! (`BENCH_8.json`) extends the curve to giant 16384×32 and 65536×64
+//! incast points — past BaselineSim's wall-clock budget, so those rows
+//! instead carry a threaded-vs-serial column: the pooled cluster step
+//! timed against the serial loop, with report-byte identity required
+//! before the speedup is recorded, and the trend gate ratchets whichever
+//! ratio a point carries.
 //!
 //! Trained weights split into a write path ([`runtime::WeightStore`]) and a
 //! read path ([`runtime::WeightSnapshot`]): evaluation loads every weight
@@ -199,7 +211,7 @@
 //!     max_mis: 360,
 //!     observe_paused: false,
 //! };
-//! let mut engine = ServeEngine::new(ctx, spec).unwrap();
+//! let mut engine = ServeEngine::new(ctx, spec, 1).unwrap(); // 1 = serial stepping
 //! let mut events = Vec::new();
 //! for _ in 0..60 { engine.step(&mut events).unwrap(); }
 //! // An operator walks up mid-run:
@@ -216,7 +228,7 @@
 //! // ...kill the process; later, byte-identical resumption:
 //! let ctx = SpartaCtx::load(Paths::resolve()).unwrap();
 //! let snap = ServeSnapshot::load("service.snap.json".as_ref()).unwrap();
-//! let mut engine = ServeEngine::restore(ctx, snap).unwrap();
+//! let mut engine = ServeEngine::restore(ctx, snap, 1).unwrap();
 //! for _ in 0..300 { engine.step(&mut events).unwrap(); }
 //! ```
 //!
@@ -244,9 +256,10 @@
 //! ```
 //!
 //! Perf trajectory — time the fleet churn-heavy scale curve (including
-//! the incast cluster points) on the arena loop and the frozen pre-arena
-//! baseline, and write `BENCH_7.json` (`sparta bench --quick` on the
-//! CLI; add `--against BENCH_7.json` for the CI perf-trend ratchet):
+//! the incast cluster points and the giant threaded 16k–65k-lane points)
+//! on the arena loop and the frozen pre-arena baseline, and write
+//! `BENCH_8.json` (`sparta bench --quick` on the CLI; add `--against
+//! BENCH_8.json` for the CI perf-trend ratchet):
 //!
 //! ```no_run
 //! use sparta::config::Paths;

@@ -106,9 +106,10 @@ fn ctx() -> Result<SpartaCtx> {
 }
 
 /// The flag surface the experiment arms share — `--scenario`, `--jobs`,
-/// `--out`, `--events`, `--observe-paused` — parsed once, in one place, so
-/// `compare`/`sweep`/`fleet`/`transfer`/`bench` can't drift apart in
-/// spelling or defaults. Arms consume the subset that applies and
+/// `--out`, `--events`, `--observe-paused`, `--step-threads` — parsed
+/// once, in one place, so
+/// `compare`/`sweep`/`fleet`/`transfer`/`bench`/`serve` can't drift apart
+/// in spelling or defaults. Arms consume the subset that applies and
 /// [`CommonOpts::forbid`] the rest: a flag a subcommand cannot honor is a
 /// loud error, never silently ignored.
 struct CommonOpts<'a> {
@@ -120,6 +121,9 @@ struct CommonOpts<'a> {
     out: Option<&'a str>,
     events: Option<&'a str>,
     observe_paused: bool,
+    /// Intra-step cluster workers for multi-host stepping (fleet/serve/
+    /// bench); `None` = flag not given (auto / serial per arm).
+    step_threads: Option<usize>,
 }
 
 impl<'a> CommonOpts<'a> {
@@ -131,6 +135,12 @@ impl<'a> CommonOpts<'a> {
             out: args.get("out"),
             events: args.get("events"),
             observe_paused: args.flag("observe-paused"),
+            step_threads: match args.get("step-threads") {
+                None => None,
+                Some(_) => {
+                    Some(args.get_usize("step-threads", 0).map_err(|e| anyhow!(e))?)
+                }
+            },
         })
     }
 
@@ -154,6 +164,7 @@ impl<'a> CommonOpts<'a> {
                 "out" => self.out.is_some(),
                 "events" => self.events.is_some(),
                 "observe-paused" => self.observe_paused,
+                "step-threads" => self.step_threads.is_some(),
                 other => unreachable!("unknown common flag '{other}'"),
             };
             if given {
@@ -216,6 +227,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("collect") => {
+            common.forbid("collect", &["step-threads"])?;
             let c = ctx()?;
             match scenario_arg(args)? {
                 Some(sc) => {
@@ -231,6 +243,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("train") => {
+            common.forbid("train", &["step-threads"])?;
             let c = ctx()?;
             let algo = args.get_or("algo", "rppo").to_string();
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
@@ -260,6 +273,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("train-all") => {
+            common.forbid("train-all", &["step-threads"])?;
             let c = ctx()?;
             let scenario = scenario_arg(args)?;
             let tb = if scenario.is_none() { Some(testbed_arg(args)?) } else { None };
@@ -288,6 +302,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // cross-scenario generalization matrix. Defaults to the
             // artifact-free `linq` core so it runs on a fresh checkout;
             // pass `--algo rppo` (etc.) once artifacts are built.
+            common.forbid("generalize", &["step-threads"])?;
             let algo = args.get_or("algo", sparta::agents::FALLBACK_ALGO).to_string();
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
                 .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
@@ -311,6 +326,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("transfer") => {
+            common.forbid("transfer", &["step-threads"])?;
             let c = ctx()?;
             let scenario = scenario_arg(args)?;
             let method = args.get_or("method", "sparta-fe");
@@ -367,7 +383,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("sweep") => {
-            common.forbid("sweep", &["events", "observe-paused"])?;
+            common.forbid("sweep", &["events", "observe-paused", "step-threads"])?;
             let grid = [1u32, 2, 4, 8, 16];
             // `--scenario all`: iterate the full registry and emit one
             // combined report.
@@ -393,6 +409,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("algos") => {
+            common.forbid("algos", &["step-threads"])?;
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
                 .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
             let cells = experiments::fig4::run(
@@ -408,6 +425,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("tune") => {
+            common.forbid("tune", &["step-threads"])?;
             let curves = experiments::fig5::run(
                 &Paths::resolve(),
                 &sparta::agents::ALGOS,
@@ -420,7 +438,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("compare") => {
-            common.forbid("compare", &["events", "observe-paused"])?;
+            common.forbid("compare", &["events", "observe-paused", "step-threads"])?;
             let scenarios = scenario_list_arg(args)?;
             let methods = methods_arg(args);
             let cells = experiments::fig6::run(
@@ -442,6 +460,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("fairness") => {
+            common.forbid("fairness", &["step-threads"])?;
             let scenarios = experiments::fig7::run(&Paths::resolve(), scale, seed, jobs)?;
             experiments::fig7::print(&scenarios);
             Ok(())
@@ -451,6 +470,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // artifact-free core); `--deterministic` keeps/emits only the
             // simulation-derived columns so table1 joins the CI
             // byte-identity job.
+            common.forbid("table1", &["step-threads"])?;
             let algo_list: Vec<String> = match args.get("algos") {
                 None => sparta::agents::ALGOS.iter().map(|a| a.to_string()).collect(),
                 Some(list) => list.split(',').map(|a| a.trim().to_string()).collect(),
@@ -469,11 +489,13 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("bench") => {
             // Perf trajectory: fleet churn-heavy scale curve (single-host
-            // sizes plus the incast cluster points) + hot-path
-            // microbenches, emitted as BENCH_7.json (schema v3 in
-            // `experiments::bench`). `--quick` is the CI lane; `--against`
-            // turns the run into the perf-trend ratchet. Bench always
-            // times at jobs 1, so an explicit --jobs is rejected.
+            // sizes, the incast cluster points, and the giant 16k–65k-lane
+            // threaded points) + hot-path microbenches, emitted as
+            // BENCH_8.json (schema v4 in `experiments::bench`). `--quick`
+            // is the CI lane; `--against` turns the run into the
+            // perf-trend ratchet. Bench always times at jobs 1, so an
+            // explicit --jobs is rejected; `--step-threads` caps the
+            // threaded column's worker count.
             common.forbid("bench", &["scenario", "jobs", "events", "observe-paused"])?;
             let lanes = match args.get("lanes") {
                 None => None,
@@ -490,10 +512,11 @@ fn dispatch(args: &Args) -> Result<()> {
                 iters: args.get_usize("iters", 1).map_err(|e| anyhow!(e))?,
                 inject_slowdown: args.get_f64("inject-slowdown", 0.0).map_err(|e| anyhow!(e))?,
                 lanes,
+                step_threads: common.step_threads.unwrap_or(0),
             };
             let report = experiments::bench::run(&Paths::resolve(), opts)?;
             experiments::bench::print(&report);
-            let out = common.out.unwrap_or("BENCH_7.json");
+            let out = common.out.unwrap_or("BENCH_8.json");
             save_report(Path::new(out), &experiments::bench::to_json(&report))?;
             println!("bench report written to {out}");
             if let Some(anchor_path) = args.get("against") {
@@ -564,6 +587,11 @@ fn dispatch(args: &Args) -> Result<()> {
                         "--compare-observe runs single-host fleets (drop --hosts)"
                     ));
                 }
+                if common.step_threads.is_some() {
+                    return Err(anyhow!(
+                        "--compare-observe runs single-host fleets (drop --step-threads)"
+                    ));
+                }
                 let (blind, observing) = experiments::fleet::run_observe_comparison(
                     &Paths::resolve(),
                     &schedule,
@@ -581,9 +609,14 @@ fn dispatch(args: &Args) -> Result<()> {
                 ]))?;
                 return Ok(());
             }
+            // --step-threads N: intra-step cluster workers per trial
+            // (0 = auto: serial under --jobs sharding, else one per
+            // host up to the core count). Resolved in
+            // `experiments::fleet::run` so serve/bench share the policy.
             let opts = experiments::fleet::FleetOpts {
                 observe_paused: common.observe_paused,
                 hosts,
+                step_threads: common.step_threads.unwrap_or(0),
                 ..experiments::fleet::FleetOpts::default()
             };
             let report = experiments::fleet::run(
@@ -603,7 +636,10 @@ fn dispatch(args: &Args) -> Result<()> {
             common.forbid("serve", &["jobs", "out"])?;
             serve_cmd(args, &common, seed)
         }
-        Some("serve-ctl") => serve_ctl_cmd(args),
+        Some("serve-ctl") => {
+            common.forbid("serve-ctl", &["step-threads"])?;
+            serve_ctl_cmd(args)
+        }
         Some(other) => Err(anyhow!("unknown subcommand '{other}' — try `sparta help`")),
     }
 }
@@ -621,6 +657,9 @@ fn serve_cmd(args: &Args, common: &CommonOpts, seed: u64) -> Result<()> {
         events: common.events.map(PathBuf::from),
         time_scale: args.get_f64("time-scale", 0.0).map_err(|e| anyhow!(e))?,
         hold: args.flag("hold"),
+        // Wall-clock only (multi-host fleets); a restore may pick a
+        // different count than the interrupted run.
+        step_threads: common.step_threads.unwrap_or(1),
     };
     let boot = match args.get("restore") {
         Some(path) => {
@@ -788,6 +827,14 @@ subcommands:
             [--compare-observe]            (yield-policy churn comparison:
                                            blind vs pause-cost-observing lanes;
                                            observing lanes pause less eagerly)
+            [--step-threads N]             (intra-step cluster workers: each
+                                           trial's N-host step fans out over a
+                                           persistent pool, merged in host
+                                           order — byte-identical to serial at
+                                           any count. 0 = auto: serial when
+                                           --jobs shards trials, else one per
+                                           host up to the core count; default
+                                           1 = serial)
   serve     [--scenario S|--schedule A]    resident transfer service (unix):
                                            daemon owns a session (--hosts N:
                                            an incast cluster), steps it on a
@@ -802,6 +849,10 @@ subcommands:
             [--restore FILE]               (resume a snapshot; the continued
                                            event stream is byte-identical to
                                            an uninterrupted run)
+            [--step-threads N]             (intra-step workers for multi-host
+                                           fleets; wall-clock only, not in
+                                           snapshots — a restore may pick a
+                                           different count)
   serve-ctl ['JSON' ... | --stdin]         send request lines to the daemon
                                            and print each reply; `subscribe`
                                            then streams live events to stdout
@@ -813,12 +864,20 @@ subcommands:
                                            at 16/64/256 lanes single-host plus
                                            incast cluster points (1024 lanes x
                                            8 hosts; full mode adds 4096 x 16)
+                                           and giant threaded points (16384 x
+                                           32; full mode adds 65536 x 64) with
+                                           threaded-vs-serial wall columns
                                            + simulator-MI and Session-step
                                            microbenches, written as
-                                           BENCH_7.json, schema v3 (the CI
+                                           BENCH_8.json, schema v4 (the CI
                                            bench lane uploads it; speedups are
-                                           vs the recorded pre-arena baseline;
-                                           always times at --jobs 1)
+                                           vs the recorded pre-arena baseline
+                                           where it fits, threaded-vs-serial
+                                           on the giant points; always times
+                                           at --jobs 1)
+            [--step-threads N]             (cap the threaded column's worker
+                                           count; default: one per host up to
+                                           the core count)
             [--iters N]                    (stable mode: keep the min wall of
                                            N timing repetitions per point)
             [--lanes L1,L2,...]            (restrict the curve to these
@@ -855,8 +914,11 @@ common flags: --scale quick|paper  --seed N  --jobs N  --quiet --verbose
   bit-identical at any jobs count for a fixed seed
   --out FILE (sweep/algos/tune/compare/table1/generalize/fleet/transfer/
   bench) writes a JSON report
-  --scenario/--jobs/--out/--events/--observe-paused are parsed by one
-  shared helper with one spelling and one default everywhere; a subcommand
-  that cannot honor one of them rejects it loudly (e.g. --events outside
-  transfer, --jobs on bench) instead of silently ignoring it
+  --scenario/--jobs/--out/--events/--observe-paused/--step-threads are
+  parsed by one shared helper with one spelling and one default everywhere;
+  a subcommand that cannot honor one of them rejects it loudly (e.g.
+  --events outside transfer, --jobs on bench, --step-threads outside
+  fleet/serve/bench) instead of silently ignoring it
+  --jobs N and --step-threads T multiply: fleet warns once when J x T
+  oversubscribes the machine and suggests a budget that fits
 ";

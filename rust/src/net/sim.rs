@@ -387,6 +387,14 @@ impl NetworkSim {
         self.time_s
     }
 
+    /// Capacity hint for `n` additional flows: reserves the flow table and
+    /// enough arena slots for each flow's worst-case stream rows
+    /// (`max_p` per flow). A pure capacity hint — never affects results.
+    pub fn reserve_flows(&mut self, n: usize) {
+        self.flows.reserve(n);
+        self.arena.reserve(n * self.cfg.max_p as usize);
+    }
+
     /// Add a flow with an engine-specific per-task I/O cap; returns its id.
     /// `task_io_gbps = None` uses the testbed's efficient-engine default.
     pub fn add_flow(&mut self, cc: u32, p: u32, task_io_gbps: Option<f64>) -> FlowId {

@@ -194,6 +194,19 @@ impl StreamArena {
         self.cwnd.is_empty()
     }
 
+    /// Reserve capacity for `n` additional slots across every parallel
+    /// column — a pure capacity hint (§Perf: large fleet admits), never
+    /// affecting slot contents.
+    pub fn reserve(&mut self, n: usize) {
+        self.cwnd.reserve(n);
+        self.w_max.reserve(n);
+        self.ssthresh.reserve(n);
+        self.epoch_t.reserve(n);
+        self.since_cut.reserve(n);
+        self.in_slow_start.reserve(n);
+        self.active.reserve(n);
+    }
+
     /// Append `n` fresh slots (RFC 6928 initial window, slow start,
     /// active) and return the index of the first. Fresh-slot state is
     /// exactly [`CubicStream::new`].

@@ -27,6 +27,12 @@ pub trait Substrate: Send {
     /// Number of currently active streams of a flow.
     fn active_streams(&self, id: FlowId) -> usize;
 
+    /// Capacity hint for `n` additional flows (e.g. a fleet schedule's
+    /// expected lane count). Purely advisory — implementations may
+    /// preallocate flow tables and stream arenas; the default does
+    /// nothing. Must never affect simulation results.
+    fn reserve_flows(&mut self, _n: usize) {}
+
     /// Advance one monitoring interval of `dur_s` seconds, writing per-flow
     /// metrics in flow-id order into a caller-reused buffer (cleared first).
     ///
@@ -86,6 +92,10 @@ impl Substrate for NetworkSim {
 
     fn active_streams(&self, id: FlowId) -> usize {
         NetworkSim::active_streams(self, id)
+    }
+
+    fn reserve_flows(&mut self, n: usize) {
+        NetworkSim::reserve_flows(self, n)
     }
 
     fn run_mi_into(&mut self, dur_s: f64, out: &mut Vec<MiMetrics>) {

@@ -11,12 +11,12 @@ use anyhow::Result;
 #[cfg(feature = "xla")]
 use anyhow::anyhow;
 #[cfg(feature = "xla")]
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Shared PJRT client + compiled executables for one artifacts directory.
 pub struct Runtime {
     #[cfg(feature = "xla")]
-    client: Rc<xla::PjRtClient>,
+    client: Arc<xla::PjRtClient>,
     pub manifest: Manifest,
 }
 
@@ -36,7 +36,7 @@ impl Runtime {
                 std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
             }
             let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-            Ok(Runtime { client: Rc::new(client), manifest })
+            Ok(Runtime { client: Arc::new(client), manifest })
         }
         #[cfg(not(feature = "xla"))]
         Ok(Runtime { manifest })
@@ -78,7 +78,7 @@ pub struct Executable {
     #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
     #[cfg(feature = "xla")]
-    client: Rc<xla::PjRtClient>,
+    client: Arc<xla::PjRtClient>,
 }
 
 impl Executable {

@@ -58,6 +58,11 @@ pub struct ServeOptions {
     pub time_scale: f64,
     /// Boot paused; the first `go` request releases the pacer.
     pub hold: bool,
+    /// Intra-step cluster worker threads for multi-host fleets (§Perf in
+    /// [`crate::coordinator::cluster`]; 0/1 = serial). Wall-clock only —
+    /// the stream and snapshots are byte-identical at any value, so a
+    /// restore may pick a different count than the interrupted run.
+    pub step_threads: usize,
 }
 
 /// One parsed request in flight from a handler thread to the pacer.
@@ -74,11 +79,11 @@ struct CtlMsg {
 /// on exit, success or failure.
 pub fn run_daemon(ctx: SpartaCtx, boot: Boot, opts: ServeOptions) -> Result<()> {
     let mut engine = match boot {
-        Boot::Fresh(spec) => ServeEngine::new(ctx, spec)?,
+        Boot::Fresh(spec) => ServeEngine::new(ctx, spec, opts.step_threads)?,
         Boot::Restore(path) => {
             let snap = ServeSnapshot::load(&path)
                 .with_context(|| format!("loading snapshot {}", path.display()))?;
-            ServeEngine::restore(ctx, snap)?
+            ServeEngine::restore(ctx, snap, opts.step_threads)?
         }
     };
     let _ = std::fs::remove_file(&opts.socket);
@@ -318,6 +323,7 @@ mod tests {
             events: Some(root.join("events.jsonl")),
             time_scale: 0.0,
             hold: true,
+            step_threads: 1,
         };
         let daemon = thread::spawn(move || run_daemon(ctx, Boot::Fresh(spec), opts));
 

@@ -41,8 +41,12 @@ impl ServeEngine {
     /// admissions (methods cycled per arrival, seeds/names resolved at
     /// execution), so the schedule behaves exactly like a scripted
     /// operator issuing `admit` requests at those boundaries.
-    pub fn new(ctx: SpartaCtx, spec: ServeSpec) -> Result<ServeEngine> {
-        let fleet = build_fleet(&spec)?;
+    ///
+    /// `step_threads` parallelizes multi-host stepping inside each MI (see
+    /// [`build_fleet`]); it never affects the event stream, so it is not
+    /// part of the spec (or of snapshots).
+    pub fn new(ctx: SpartaCtx, spec: ServeSpec, step_threads: usize) -> Result<ServeEngine> {
+        let fleet = build_fleet(&spec, step_threads)?;
         let mut queue = Vec::new();
         if let Some(name) = &spec.schedule {
             let sched = ArrivalSchedule::by_name(name)
@@ -74,10 +78,16 @@ impl ServeEngine {
     /// seeds, flows, arena rows, ledger accounts), then inject the
     /// captured mutable state. The snapshot queue is adopted as-is; no
     /// schedule re-expansion, no lifetime re-arming — the queue already
-    /// holds exactly the not-yet-applied remainder.
-    pub fn restore(ctx: SpartaCtx, snap: ServeSnapshot) -> Result<ServeEngine> {
+    /// holds exactly the not-yet-applied remainder. The thread count is
+    /// the restoring process's own choice — snapshots don't record it, and
+    /// the tail is byte-identical at any value.
+    pub fn restore(
+        ctx: SpartaCtx,
+        snap: ServeSnapshot,
+        step_threads: usize,
+    ) -> Result<ServeEngine> {
         let ServeSnapshot { spec, admits, queue, state } = snap;
-        let mut fleet = build_fleet(&spec)?;
+        let mut fleet = build_fleet(&spec, step_threads)?;
         for rec in &admits {
             let seed = rec.seed.ok_or_else(|| anyhow!("snapshot admit: no seed"))?;
             let name = rec.name.clone().ok_or_else(|| anyhow!("snapshot admit: no name"))?;
@@ -307,7 +317,7 @@ mod tests {
 
     #[test]
     fn snapshot_restore_resumes_bit_identically() {
-        let mut reference = ServeEngine::new(test_ctx("rt_a"), spec("calm")).unwrap();
+        let mut reference = ServeEngine::new(test_ctx("rt_a"), spec("calm"), 1).unwrap();
         reference.enqueue(admit("rclone", 2, None), Some(0)).unwrap();
         reference.enqueue(admit("2-phase", 2, Some(18)), Some(3)).unwrap();
         reference.enqueue(OpKind::Pause(0), Some(6)).unwrap();
@@ -316,7 +326,7 @@ mod tests {
         let snap = reference.snapshot().unwrap();
         let tail_ref = run_lines(&mut reference, 14);
 
-        let mut restored = ServeEngine::restore(test_ctx("rt_b"), snap).unwrap();
+        let mut restored = ServeEngine::restore(test_ctx("rt_b"), snap, 1).unwrap();
         assert_eq!(restored.mi(), 10);
         let tail = run_lines(&mut restored, 14);
         assert_eq!(tail, tail_ref, "restored stream diverged from the uninterrupted run");
@@ -328,14 +338,14 @@ mod tests {
         let mut s = spec("chameleon");
         s.schedule = Some("churn-light".to_string());
         s.methods = vec!["rclone".to_string(), "2-phase".to_string()];
-        let engine = ServeEngine::new(test_ctx("sched"), s).unwrap();
+        let engine = ServeEngine::new(test_ctx("sched"), s, 1).unwrap();
         let sched = ArrivalSchedule::by_name("churn-light").unwrap();
         assert_eq!(engine.queue_len(), sched.arrivals_scaled(11, 1.0).len());
     }
 
     #[test]
     fn unknown_methods_are_rejected_at_enqueue() {
-        let mut engine = ServeEngine::new(test_ctx("reject"), spec("calm")).unwrap();
+        let mut engine = ServeEngine::new(test_ctx("reject"), spec("calm"), 1).unwrap();
         let err = engine.enqueue(admit("no-such-method", 1, None), None);
         assert!(err.is_err(), "bogus method must be rejected");
         assert_eq!(engine.queue_len(), 0);
@@ -343,7 +353,7 @@ mod tests {
 
     #[test]
     fn status_json_reports_lane_table() {
-        let mut engine = ServeEngine::new(test_ctx("status"), spec("calm")).unwrap();
+        let mut engine = ServeEngine::new(test_ctx("status"), spec("calm"), 1).unwrap();
         engine.enqueue(admit("rclone", 1, None), Some(0)).unwrap();
         let mut events = Vec::new();
         for _ in 0..3 {

@@ -140,7 +140,14 @@ impl Fleet {
 /// `sparta fleet` uses, so serve inherits its determinism contract: one
 /// host-resolved session, or an incast cluster of per-host sessions
 /// sharing the scenario testbed's WAN and one receiver.
-pub fn build_fleet(spec: &ServeSpec) -> Result<Fleet> {
+///
+/// `step_threads` is the intra-step cluster worker count (§Perf in
+/// [`crate::coordinator::cluster`]) — a pure wall-clock knob, which is why
+/// it is a parameter here and **not** a [`ServeSpec`] field: it never
+/// affects the event stream, is not part of the logical run, and stays out
+/// of snapshots (restore at any thread count). Ignored for single-host
+/// specs.
+pub fn build_fleet(spec: &ServeSpec, step_threads: usize) -> Result<Fleet> {
     let sc = Scenario::by_name(&spec.scenario)
         .ok_or_else(|| anyhow!("unknown scenario '{}'", spec.scenario))?;
     let hosts = spec.hosts.max(1);
@@ -154,7 +161,7 @@ pub fn build_fleet(spec: &ServeSpec) -> Result<Fleet> {
         return Ok(Fleet::Single(Box::new(session)));
     }
     let tb = &sc.testbed;
-    let cluster = Cluster::build(hosts, spec.seed, |h, host_seed| {
+    let mut cluster = Cluster::build(hosts, spec.seed, |h, host_seed| {
         Session::builder(tb.clone())
             .energy(tb.energy_hosts_of(h, hosts))
             .observe_paused(spec.observe_paused)
@@ -163,5 +170,6 @@ pub fn build_fleet(spec: &ServeSpec) -> Result<Fleet> {
             .topology(Topology::incast_host(tb, hosts, INCAST_RX_OVER_WAN))
             .build()
     });
+    cluster.set_step_threads(step_threads.max(1));
     Ok(Fleet::Cluster(cluster))
 }

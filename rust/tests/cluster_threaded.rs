@@ -1,0 +1,138 @@
+//! The parallel-cluster contract on the real driver paths: pooled
+//! intra-step execution (`--step-threads N`) must be a pure wall-clock
+//! knob. A churn-heavy 4-host fleet run must produce a byte-identical
+//! report at any worker count, and a threaded serve cluster must
+//! snapshot mid-churn and restore — at a *different* thread count — into
+//! a byte-identical event-stream tail.
+
+use std::path::{Path, PathBuf};
+
+use sparta::config::Paths;
+use sparta::experiments::{fleet, Scale, SpartaCtx};
+use sparta::scenarios::ArrivalSchedule;
+use sparta::serve::{AdmitRec, OpKind, ServeEngine, ServeSpec};
+use sparta::telemetry::event_json;
+
+fn fresh_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("sparta_it_threaded_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+/// Churn-heavy incast fleet, serial vs pooled: the report (lane tables,
+/// per-host rails, epoch JFI, completion distribution — everything
+/// `fleet::to_json` serializes) must not move by a byte when the 4-host
+/// step fans out over 4 workers.
+#[test]
+fn fleet_report_identical_across_step_threads() {
+    let root = fresh_root("fleet");
+    let paths = Paths::with_root(&root);
+    let schedule = ArrivalSchedule::by_name("churn-heavy").unwrap();
+    let methods: Vec<String> = vec!["2-phase".into(), "rclone".into()];
+    let run = |step_threads: usize| {
+        let opts = fleet::FleetOpts {
+            observe_paused: true,
+            hosts: 4,
+            step_threads,
+            ..fleet::FleetOpts::default()
+        };
+        let report = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 1, opts).unwrap();
+        fleet::to_json(&report).to_string()
+    };
+    let serial = run(1);
+    let pooled = run(4);
+    assert_eq!(
+        serial, pooled,
+        "fleet report differs between --step-threads 1 and --step-threads 4"
+    );
+    // Oversubscribed pools are clamped per MI, never divergent.
+    assert_eq!(serial, run(16), "report differs at --step-threads 16");
+}
+
+fn ctx_at(root: &Path) -> SpartaCtx {
+    SpartaCtx::load(Paths::with_root(root)).expect("context loads")
+}
+
+const TOTAL_MIS: usize = 20;
+const SNAP_AT: usize = 10;
+
+fn spec() -> ServeSpec {
+    ServeSpec {
+        scenario: "calm".to_string(),
+        schedule: None,
+        methods: vec!["rclone".to_string()],
+        hosts: 3,
+        seed: 31,
+        mi_s: 1.0,
+        max_mis: TOTAL_MIS,
+        observe_paused: true,
+    }
+}
+
+/// Mid-run admissions, a pause window and a cancel — enough churn that
+/// the snapshot boundary lands with lanes in every state.
+fn churn(engine: &mut ServeEngine) {
+    let admit = |method: &str, files: usize, life: Option<usize>| {
+        OpKind::Admit(AdmitRec {
+            method: method.to_string(),
+            files,
+            file_bytes: 2 << 30,
+            name: None,
+            seed: None,
+            max_lifetime_mis: life,
+        })
+    };
+    engine.enqueue(admit("rclone", 3, None), Some(0)).unwrap();
+    engine.enqueue(admit("2-phase", 2, Some(14)), Some(2)).unwrap();
+    engine.enqueue(admit("rclone", 4, Some(8)), Some(5)).unwrap();
+    engine.enqueue(OpKind::Pause(0), Some(7)).unwrap();
+    engine.enqueue(OpKind::Resume(0), Some(12)).unwrap();
+    engine.enqueue(OpKind::Cancel(1), Some(15)).unwrap();
+}
+
+fn step_lines(engine: &mut ServeEngine) -> Vec<String> {
+    let mut events = Vec::new();
+    engine.step(&mut events).unwrap();
+    events.iter().map(|ev| event_json(ev).to_string()).collect()
+}
+
+/// A 3-host cluster stepped by a 4-worker pool, snapshotted mid-churn and
+/// restored with 2 workers: head + restored tail must equal the serial
+/// uninterrupted stream byte-for-byte. The thread count is deliberately
+/// different on every leg — it lives outside the snapshot.
+#[test]
+fn threaded_serve_snapshot_restores_bit_identically() {
+    let root = fresh_root("serve");
+
+    // Serial uninterrupted reference.
+    let mut reference = ServeEngine::new(ctx_at(&root), spec(), 1).unwrap();
+    churn(&mut reference);
+    let mut full: Vec<String> = Vec::new();
+    for _ in 0..TOTAL_MIS {
+        full.extend(step_lines(&mut reference));
+    }
+    assert!(!full.is_empty(), "churn script produced no events");
+
+    // Threaded run, interrupted at SNAP_AT.
+    let mut threaded = ServeEngine::new(ctx_at(&root), spec(), 4).unwrap();
+    churn(&mut threaded);
+    let mut head: Vec<String> = Vec::new();
+    for _ in 0..SNAP_AT {
+        head.extend(step_lines(&mut threaded));
+    }
+    let snap = threaded.snapshot().unwrap();
+    drop(threaded); // the pool dies with the engine
+
+    let mut restored = ServeEngine::restore(ctx_at(&root), snap, 2).unwrap();
+    assert_eq!(restored.mi(), SNAP_AT, "restore landed on the wrong boundary");
+    let mut tail: Vec<String> = Vec::new();
+    for _ in SNAP_AT..TOTAL_MIS {
+        tail.extend(step_lines(&mut restored));
+    }
+
+    head.extend(tail);
+    assert_eq!(
+        head, full,
+        "threaded snapshot/restore stream diverged from the serial uninterrupted run"
+    );
+}

@@ -91,7 +91,7 @@ fn report(engine: &ServeEngine) -> String {
 /// the final report.
 fn snapshot_everywhere_roundtrip(hosts: usize, tag: &str) {
     let root = fresh_root(tag);
-    let mut reference = ServeEngine::new(ctx_at(&root), spec(hosts)).unwrap();
+    let mut reference = ServeEngine::new(ctx_at(&root), spec(hosts), 1).unwrap();
     churn(&mut reference);
 
     let mut snaps = vec![reference.snapshot().unwrap()];
@@ -105,7 +105,7 @@ fn snapshot_everywhere_roundtrip(hosts: usize, tag: &str) {
     assert!(total_events > 0, "churn script produced no events");
 
     for (boundary, snap) in snaps.into_iter().enumerate() {
-        let mut restored = ServeEngine::restore(ctx_at(&root), snap).unwrap();
+        let mut restored = ServeEngine::restore(ctx_at(&root), snap, 1).unwrap();
         assert_eq!(restored.mi(), boundary, "restore landed on the wrong boundary");
         let mut tail = Vec::new();
         for _ in boundary..TOTAL_MIS {
@@ -140,7 +140,7 @@ fn cluster_snapshot_at_every_boundary_replays_bit_identically() {
 #[test]
 fn snapshot_file_roundtrip_is_lossless() {
     let root = fresh_root("file_roundtrip");
-    let mut reference = ServeEngine::new(ctx_at(&root), spec(1)).unwrap();
+    let mut reference = ServeEngine::new(ctx_at(&root), spec(1), 1).unwrap();
     churn(&mut reference);
     let mut head = Vec::new();
     for _ in 0..12 {
@@ -160,7 +160,7 @@ fn snapshot_file_roundtrip_is_lossless() {
     for _ in 12..TOTAL_MIS {
         tail_ref.extend(step_lines(&mut reference));
     }
-    let mut restored = ServeEngine::restore(ctx_at(&root), loaded).unwrap();
+    let mut restored = ServeEngine::restore(ctx_at(&root), loaded, 1).unwrap();
     let mut tail = Vec::new();
     for _ in 12..TOTAL_MIS {
         tail.extend(step_lines(&mut restored));
