@@ -90,6 +90,7 @@
 
 use super::session::{Event, LaneId, LaneSpec, LaneStatus, MiRecord, Session, SessionState};
 use crate::energy::RailEnergy;
+use crate::faults::{FaultEvent, FaultOp, FaultPlan};
 use crate::net::{Testbed, Topology};
 use crate::util::rng::mix_seed;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -225,6 +226,22 @@ pub struct Cluster {
     /// Set by `admit` (admissions emit events and may grow arenas), cleared
     /// each step: suppresses the allocation-free assertion for one MI.
     admits_since_step: bool,
+    /// Fault plane armed ([`Cluster::install_faults`]): the cluster owns
+    /// the plan and routes ops to hosts; every host runs its watchdog.
+    faults_armed: bool,
+    /// Seeded fault ops sorted by MI, applied as `mi` passes them.
+    fault_plan: Vec<FaultEvent>,
+    /// Next unapplied index into `fault_plan`.
+    fault_next: usize,
+    /// Per-host quarantine flag: a crashed host is never stepped again;
+    /// its ledger stays frozen in the energy sums.
+    crashed: Vec<bool>,
+    /// Per-global-lane energy carried off crashed hosts (J) — added to the
+    /// lane's live-host attribution so Σ lanes == Σ host ledgers survives
+    /// migration.
+    carried: Vec<f64>,
+    /// Cluster-level events (`Migrated`) queued for the next merged step.
+    fault_pending: Vec<Event>,
 }
 
 impl Cluster {
@@ -241,6 +258,7 @@ impl Cluster {
             host_bufs: (0..hosts.len()).map(|_| Vec::new()).collect(),
             evt_cap: vec![0; hosts.len()],
             evt_hiwater: vec![0; hosts.len()],
+            crashed: vec![false; hosts.len()],
             hosts,
             locus: Vec::new(),
             next_host: 0,
@@ -249,6 +267,11 @@ impl Cluster {
             step_threads: 1,
             pool: None,
             admits_since_step: false,
+            faults_armed: false,
+            fault_plan: Vec::new(),
+            fault_next: 0,
+            carried: Vec::new(),
+            fault_pending: Vec::new(),
         }
     }
 
@@ -300,18 +323,145 @@ impl Cluster {
         }
     }
 
-    /// Admit a lane on the next host round-robin; returns its *global*
-    /// lane id (admission order across the whole cluster).
+    /// Admit a lane on the next host round-robin (skipping quarantined
+    /// hosts — a degraded cluster keeps taking admissions); returns its
+    /// *global* lane id (admission order across the whole cluster).
     pub fn admit(&mut self, spec: LaneSpec) -> LaneId {
+        // At least one host is always healthy (`crash_host` spares the
+        // last one), so this cursor walk terminates.
+        while self.crashed[self.next_host] {
+            self.next_host = (self.next_host + 1) % self.hosts.len();
+        }
         let h = self.next_host;
         self.next_host = (self.next_host + 1) % self.hosts.len();
         let local = self.hosts[h].admit(spec);
         let global = LaneId(self.locus.len());
         self.locus.push((h, local));
+        self.carried.push(0.0);
         debug_assert_eq!(self.global_of[h].len(), local.0);
         self.global_of[h].push(global.0);
         self.admits_since_step = true;
         global
+    }
+
+    /// Install a seeded fault plan ([`crate::faults`]) at cluster level:
+    /// the cluster applies each op at its scheduled MI boundary — segment
+    /// faults fan out to every healthy host's substrate, stalls and stream
+    /// errors route to the owning host, and [`FaultOp::HostCrash`] becomes
+    /// quarantine-and-migrate ([`Cluster::crash_host`]). Every host's
+    /// stall watchdog is armed. An armed cluster is no longer
+    /// checkpointable ([`Cluster::export_state`]).
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        for host in &mut self.hosts {
+            host.arm_faults();
+        }
+        self.fault_plan = plan.events;
+        self.fault_next = 0;
+        self.faults_armed = true;
+    }
+
+    /// Whether the fault plane is armed on this cluster.
+    pub fn faults_armed(&self) -> bool {
+        self.faults_armed
+    }
+
+    /// Number of hosts currently quarantined (crashed and migrated away).
+    pub fn quarantined_hosts(&self) -> usize {
+        self.crashed.iter().filter(|&&c| c).count()
+    }
+
+    /// Apply plan ops that have come due — runs in the coordinator thread
+    /// at the top of every step, before any host advances, so fault timing
+    /// and the merged-stream position of fault events are pure functions
+    /// of the MI index (byte-identical at any `--jobs`/`--step-threads`).
+    fn apply_due_faults(&mut self) {
+        while self.fault_next < self.fault_plan.len()
+            && self.fault_plan[self.fault_next].at_mi <= self.mi
+        {
+            let op = self.fault_plan[self.fault_next].op.clone();
+            self.fault_next += 1;
+            match &op {
+                FaultOp::SegmentScale { .. } => {
+                    // Every host simulates its own share of the faulted
+                    // segment; fan the scale out to all healthy hosts.
+                    for h in 0..self.hosts.len() {
+                        if !self.crashed[h] {
+                            self.hosts[h].apply_fault_op(&op);
+                        }
+                    }
+                }
+                FaultOp::HostStall { host, .. } => {
+                    let h = host % self.hosts.len();
+                    if !self.crashed[h] {
+                        self.hosts[h].apply_fault_op(&op);
+                    }
+                }
+                FaultOp::StreamError { lane_slot } => {
+                    // Route by global lane id so the victim is independent
+                    // of host sharding.
+                    if !self.locus.is_empty() {
+                        let gid = lane_slot % self.locus.len();
+                        let (h, l) = self.locus[gid];
+                        if !self.crashed[h] {
+                            self.hosts[h].fault_lane(l, "stream-error");
+                        }
+                    }
+                }
+                FaultOp::HostCrash { host } => {
+                    self.crash_host(host % self.hosts.len());
+                }
+            }
+        }
+    }
+
+    /// Quarantine a host and migrate its in-flight lanes onto healthy
+    /// hosts: each non-terminal lane is lifted out with its optimizer,
+    /// job progress and trackers ([`Session::extract_lane`]) and
+    /// re-admitted on the least-loaded healthy host (ties break to the
+    /// lowest index), keeping its *global* lane id. Energy attributed on
+    /// the dead host is carried so Σ lane attribution still equals the
+    /// cluster ledger truth (the frozen ledger stays in the sum). The
+    /// last healthy host can never be crashed. Emits one
+    /// [`Event::Migrated`] per moved lane into the next merged step.
+    pub fn crash_host(&mut self, h: usize) {
+        if h >= self.hosts.len() || self.crashed[h] {
+            return;
+        }
+        if self.crashed.iter().filter(|&&c| !c).count() <= 1 {
+            return; // never kill the last healthy host
+        }
+        self.crashed[h] = true;
+        let time_s = self.time_s();
+        for local in 0..self.hosts[h].lane_count() {
+            let gid = self.global_of[h][local];
+            let Some(m) = self.hosts[h].extract_lane(LaneId(local)) else {
+                continue; // already terminal on the dead host
+            };
+            self.carried[gid] += m.energy_j;
+            let target = self.least_loaded_healthy_host();
+            let nlocal = self.hosts[target].admit_migrated(m);
+            self.locus[gid] = (target, nlocal);
+            debug_assert_eq!(self.global_of[target].len(), nlocal.0);
+            self.global_of[target].push(gid);
+            self.fault_pending.push(Event::Migrated {
+                lane: LaneId(gid),
+                mi: self.mi,
+                time_s,
+                from_host: h,
+                to_host: target,
+            });
+        }
+        // Re-admissions grow arenas on the target hosts.
+        self.admits_since_step = true;
+    }
+
+    /// The healthy host with the fewest in-flight lanes (lowest index on
+    /// ties) — the deterministic migration target.
+    fn least_loaded_healthy_host(&self) -> usize {
+        (0..self.hosts.len())
+            .filter(|&h| !self.crashed[h])
+            .min_by_key(|&h| self.hosts[h].lanes_in_flight())
+            .expect("at least one healthy host")
     }
 
     /// Advance every host session by one monitoring interval, merging
@@ -327,10 +477,19 @@ impl Cluster {
                 self.hosts[h].recycle_record(record);
             }
         }
+        if self.faults_armed {
+            self.apply_due_faults();
+        }
+        // Cluster-level events (migrations off crashed hosts) lead the
+        // merged stream — a fixed position, independent of thread count.
+        events.append(&mut self.fault_pending);
         let threads = self.step_threads.min(self.hosts.len());
         if threads <= 1 {
             let mut scratch = std::mem::take(&mut self.scratch);
             for h in 0..self.hosts.len() {
+                if self.crashed[h] {
+                    continue; // quarantined: frozen, never stepped again
+                }
                 self.hosts[h].step_into(&mut scratch);
                 for mut ev in scratch.drain(..) {
                     self.globalize(h, &mut ev);
@@ -357,22 +516,40 @@ impl Cluster {
         let pool = self.pool.take().expect("pool just ensured above");
         let jobs = pool.jobs.as_ref().expect("pool job channel open");
         let base = self.hosts.as_mut_ptr();
+        let mut dispatched = 0;
         for h in 0..n {
+            if self.crashed[h] {
+                continue; // quarantined: frozen, never stepped again
+            }
             let out = std::mem::take(&mut self.host_bufs[h]);
             // SAFETY: each job gets a distinct host index, and we recv all
-            // `n` results below before `self.hosts` can move again.
+            // dispatched results below before `self.hosts` can move again.
             let session = SendPtr(unsafe { base.add(h) });
             jobs.send(StepJob { host: h, session, out }).expect("step worker pool alive");
+            dispatched += 1;
         }
-        let mut panicked = false;
-        for _ in 0..n {
+        let mut panicked_hosts = Vec::new();
+        for _ in 0..dispatched {
             let r = pool.results.recv().expect("step worker pool alive");
-            panicked |= r.panicked;
+            if r.panicked {
+                panicked_hosts.push(r.host);
+            }
             self.host_bufs[r.host] = r.out;
         }
         self.pool = Some(pool);
-        if panicked {
-            panic!("a host session panicked during a pooled cluster step");
+        // A panicking host no longer aborts the fleet: quarantine it and
+        // migrate its lanes, exactly like an injected crash. Its partial
+        // events for this MI are dropped (the panic left them mid-write);
+        // the `Migrated` announcements join the next merged step. Sorted
+        // so multi-host panics quarantine in deterministic order.
+        panicked_hosts.sort_unstable();
+        for h in panicked_hosts {
+            self.host_bufs[h].clear();
+            if self.crashed.iter().filter(|&&c| !c).count() <= 1 {
+                // Nowhere left to migrate: the fleet is genuinely dead.
+                panic!("the last healthy host panicked during a pooled cluster step");
+            }
+            self.crash_host(h);
         }
         for h in 0..n {
             let mut buf = std::mem::take(&mut self.host_bufs[h]);
@@ -406,7 +583,10 @@ impl Cluster {
             | Event::Paused { lane, .. }
             | Event::Resumed { lane, .. }
             | Event::Completed { lane, .. }
-            | Event::Departed { lane, .. } => *lane = LaneId(self.global_of[host][lane.0]),
+            | Event::Departed { lane, .. }
+            | Event::Faulted { lane, .. }
+            | Event::Retrying { lane, .. }
+            | Event::Migrated { lane, .. } => *lane = LaneId(self.global_of[host][lane.0]),
         }
     }
 
@@ -434,9 +614,14 @@ impl Cluster {
         self.resolve(id).and_then(|(h, l)| self.hosts[h].lane_name(l))
     }
 
-    /// True when every lane on every host has completed or departed.
+    /// True when every lane on every healthy host has completed or
+    /// departed (quarantined hosts hold only tombstones — their in-flight
+    /// lanes migrated away).
     pub fn is_idle(&self) -> bool {
-        self.hosts.iter().all(Session::is_idle)
+        self.hosts
+            .iter()
+            .enumerate()
+            .all(|(h, host)| self.crashed[h] || host.is_idle())
     }
 
     /// Cluster MIs run so far (hosts step in lockstep).
@@ -444,9 +629,15 @@ impl Cluster {
         self.mi
     }
 
-    /// Simulated time, seconds (identical on every host — lockstep MIs).
+    /// Simulated time, seconds (identical on every healthy host — lockstep
+    /// MIs; quarantined hosts' clocks freeze at their crash MI).
     pub fn time_s(&self) -> f64 {
-        self.hosts[0].time_s()
+        self.hosts
+            .iter()
+            .enumerate()
+            .find(|(h, _)| !self.crashed[*h])
+            .map(|(_, host)| host.time_s())
+            .unwrap_or_else(|| self.hosts[0].time_s())
     }
 
     pub fn lane_count(&self) -> usize {
@@ -473,9 +664,14 @@ impl Cluster {
         self.hosts.iter().map(Session::host_energy_j).sum()
     }
 
-    /// Energy attributed to one lane so far, joules.
+    /// Energy attributed to one lane so far, joules. For a lane migrated
+    /// off a crashed host this is its live-host attribution plus the
+    /// portion frozen on the host it left (`carried`), so per-lane totals
+    /// keep summing to the cluster ledger truth through crashes.
     pub fn lane_energy_j(&self, id: LaneId) -> Option<f64> {
-        self.resolve(id).and_then(|(h, l)| self.hosts[h].lane_energy_j(l))
+        let (h, l) = self.resolve(id)?;
+        let live = self.hosts[h].lane_energy_j(l)?;
+        Some(live + self.carried.get(id.0).copied().unwrap_or(0.0))
     }
 
     /// Cluster-wide per-rail breakdown (None when any host runs the
@@ -514,7 +710,12 @@ impl Cluster {
     /// of the capture — and neither is `step_threads`, which never affects
     /// the logical state (§Perf: the pool is quiescent between steps, so
     /// capture needs no synchronization beyond being called at a boundary).
+    /// An armed or degraded (quarantined-host) cluster refuses to
+    /// checkpoint — fault state lives outside the snapshot codec.
     pub fn export_state(&self) -> Option<ClusterState> {
+        if self.faults_armed || self.crashed.iter().any(|&c| c) {
+            return None;
+        }
         Some(ClusterState {
             mi: self.mi,
             hosts: self.hosts.iter().map(Session::export_state).collect::<Option<Vec<_>>>()?,
@@ -773,6 +974,120 @@ mod tests {
             digest
         };
         assert_eq!(tail(3, 1), tail(1, 3));
+    }
+
+    /// An injected host crash quarantines the host and migrates its
+    /// in-flight lanes: every admitted lane still completes with all its
+    /// bytes, and Σ per-lane energy == cluster ledger truth at 1e-9.
+    #[test]
+    fn host_crash_migrates_lanes_and_conserves_bytes_and_energy() {
+        use crate::faults::{FaultEvent, FaultOp, FaultPlan};
+        let mut c = Cluster::incast(&Testbed::chameleon(), 4, 41);
+        c.install_faults(FaultPlan {
+            events: vec![FaultEvent { at_mi: 3, op: FaultOp::HostCrash { host: 2 } }],
+        });
+        let n = 8;
+        let mut totals = Vec::new();
+        for _ in 0..n {
+            let job = TransferJob::files(16, 256 << 20);
+            totals.push(job.total_bytes());
+            c.admit(LaneSpec::new(Box::new(StaticTool::rclone()), job));
+        }
+        let mut events = Vec::new();
+        let mut migrated = Vec::new();
+        let mut completed = vec![None; n];
+        for _ in 0..400 {
+            c.step_into(&mut events);
+            for ev in &events {
+                match ev {
+                    Event::Migrated { lane, from_host, to_host, .. } => {
+                        assert_eq!(*from_host, 2);
+                        assert_ne!(*to_host, 2);
+                        migrated.push(lane.0);
+                    }
+                    Event::Completed { lane, bytes_delivered, .. } => {
+                        completed[lane.0] = Some(*bytes_delivered);
+                    }
+                    _ => {}
+                }
+            }
+            if c.is_idle() {
+                break;
+            }
+        }
+        assert!(c.is_idle(), "fleet never drained after the crash");
+        assert_eq!(c.quarantined_hosts(), 1);
+        // Host 2 held 2 of the 8 round-robin lanes; both must have moved.
+        assert_eq!(migrated, vec![2, 6]);
+        for (k, done) in completed.iter().enumerate() {
+            let bytes = done.expect("every admitted lane must complete despite the crash");
+            assert!(
+                bytes >= totals[k] * 0.999,
+                "lane {k} lost bytes across migration: {bytes} < {}",
+                totals[k]
+            );
+        }
+        let total = c.host_energy_j();
+        let attributed: f64 =
+            (0..c.lane_count()).map(|k| c.lane_energy_j(LaneId(k)).unwrap()).sum();
+        assert!(
+            (attributed - total).abs() <= 1e-9 * total.max(1.0),
+            "migration broke energy conservation: lanes {attributed} J vs cluster {total} J"
+        );
+    }
+
+    /// The crash-and-migrate stream is byte-identical at any intra-step
+    /// thread count: quarantine happens in the coordinator at a fixed MI
+    /// boundary, never inside a worker.
+    #[test]
+    fn crash_recovery_is_thread_count_invariant() {
+        use crate::faults::{FaultEvent, FaultOp, FaultPlan};
+        let run = |threads: usize| {
+            let mut c = Cluster::incast(&Testbed::chameleon(), 4, 43);
+            c.set_step_threads(threads);
+            c.install_faults(FaultPlan {
+                events: vec![
+                    FaultEvent { at_mi: 2, op: FaultOp::HostCrash { host: 1 } },
+                    FaultEvent { at_mi: 5, op: FaultOp::HostCrash { host: 3 } },
+                ],
+            });
+            for _ in 0..8 {
+                c.admit(lane(8));
+            }
+            let mut events = Vec::new();
+            let mut digest = Vec::new();
+            for _ in 0..30 {
+                c.step_into(&mut events);
+                for ev in &events {
+                    let bits = match ev {
+                        Event::MiCompleted { record, .. } => format!(
+                            "mi thr={:016x} e={:016x}",
+                            record.throughput_gbps.to_bits(),
+                            record.energy_total_j.to_bits()
+                        ),
+                        other => format!("{other:?}"),
+                    };
+                    digest.push((ev.lane().0, bits));
+                }
+            }
+            assert_eq!(c.quarantined_hosts(), 2);
+            digest
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(4));
+    }
+
+    /// Armed or degraded clusters refuse to checkpoint.
+    #[test]
+    fn armed_cluster_is_not_checkpointable() {
+        use crate::faults::FaultPlan;
+        let mut c = incast3(91);
+        c.admit(lane(4));
+        let mut events = Vec::new();
+        c.step_into(&mut events);
+        assert!(c.export_state().is_some());
+        c.install_faults(FaultPlan::default());
+        assert!(c.export_state().is_none());
     }
 
     /// `reserve_lanes` is a pure capacity hint: admissions and stepping

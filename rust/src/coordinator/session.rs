@@ -53,6 +53,7 @@ use super::reward::{RewardConfig, RewardKind, RewardTracker, TrackerState};
 use super::state::{FeatureWindow, Observation, WindowState};
 use super::{Decision, MiContext, Optimizer};
 use crate::energy::{EnergyConfig, EnergyPlane, LaneActivity, LaneBill, LedgerState, RailEnergy};
+use crate::faults::{backoff_mis, FaultEvent, FaultOp, FaultPlan, STALL_AFTER_MIS, STALL_EPS_BYTES};
 use crate::net::background::Background;
 use crate::net::{FlowId, MiMetrics, NetworkSim, SimState, Substrate, Testbed, Topology};
 use crate::telemetry::TelemetrySink;
@@ -107,6 +108,11 @@ pub enum LaneStatus {
     Active,
     /// Externally paused: demand forced to zero, no observations, resumable.
     Paused,
+    /// Tripped by the fault plane ([`crate::faults`]): the stall watchdog
+    /// or an injected stream error took the lane offline. Demand is zero
+    /// and no observations flow; the session retries it automatically with
+    /// exponential backoff, preserving every byte already delivered.
+    Faulted,
     /// Job delivered every byte.
     Completed,
     /// Cancelled before completion (left the session).
@@ -129,6 +135,18 @@ pub enum Event {
     Completed { lane: LaneId, mi: usize, time_s: f64, bytes_delivered: f64, total_energy_j: f64 },
     /// A lane was cancelled before completing.
     Departed { lane: LaneId, mi: usize, time_s: f64, bytes_delivered: f64, total_energy_j: f64 },
+    /// The fault plane took a lane offline (`fault` names the cause:
+    /// `"stall"` for the watchdog, `"stream-error"` for injected stream
+    /// faults). Bytes already delivered are preserved; a `Retrying` event
+    /// follows after the backoff window.
+    Faulted { lane: LaneId, mi: usize, time_s: f64, fault: &'static str },
+    /// A faulted lane came back online after its exponential-backoff
+    /// window (`attempt` counts consecutive faults since last progress).
+    Retrying { lane: LaneId, mi: usize, time_s: f64, attempt: u32 },
+    /// A lane was moved off a crashed host onto a healthy one with its
+    /// optimizer state, job progress and energy attribution intact. The
+    /// lane id is its stable global id — unchanged by the move.
+    Migrated { lane: LaneId, mi: usize, time_s: f64, from_host: usize, to_host: usize },
 }
 
 impl Event {
@@ -140,7 +158,10 @@ impl Event {
             | Event::Paused { lane, .. }
             | Event::Resumed { lane, .. }
             | Event::Completed { lane, .. }
-            | Event::Departed { lane, .. } => *lane,
+            | Event::Departed { lane, .. }
+            | Event::Faulted { lane, .. }
+            | Event::Retrying { lane, .. }
+            | Event::Migrated { lane, .. } => *lane,
         }
     }
 }
@@ -200,10 +221,21 @@ struct SessionLane {
     job: TransferJob,
     window: FeatureWindow,
     reward: RewardTracker,
+    /// Kept past admission so a crashed host's lanes can be re-admitted
+    /// elsewhere with the same I/O cap and power model (migration).
+    engine: EngineProfile,
     cc: u32,
     p: u32,
     has_pending_decision: bool,
     status: LaneStatus,
+    /// Consecutive low-progress MIs seen by the stall watchdog (armed
+    /// sessions only; see [`crate::faults`]).
+    stall_mis: u32,
+    /// MI at which a faulted lane returns to `Active`.
+    retry_at_mi: usize,
+    /// Consecutive faults since the lane last made progress — indexes the
+    /// exponential backoff.
+    attempt: u32,
 }
 
 /// Builder for [`Session`] (same knobs the pre-redesign controller took,
@@ -322,6 +354,10 @@ impl SessionBuilder {
             pending: Vec::new(),
             energy: EnergyPlane::new(self.energy, self.seed),
             observe_paused: self.observe_paused,
+            faults_armed: false,
+            fault_plan: Vec::new(),
+            fault_next: 0,
+            stall_until_mi: 0,
             metrics_buf: Vec::new(),
             events_buf: Vec::new(),
             activity_buf: Vec::new(),
@@ -351,6 +387,17 @@ pub struct Session {
     /// sender + receiver host-ledger pair).
     energy: EnergyPlane,
     observe_paused: bool,
+    /// Fault plane armed ([`Session::install_faults`] /
+    /// [`Session::arm_faults`]): the stall watchdog runs and the session
+    /// is no longer checkpointable. Never set on default sessions, so the
+    /// fault-free path stays bit-identical to the seed.
+    faults_armed: bool,
+    /// Seeded fault ops sorted by MI, applied as `mi` passes them.
+    fault_plan: Vec<FaultEvent>,
+    /// Next unapplied index into `fault_plan`.
+    fault_next: usize,
+    /// Injected host stall: all demand collapses to zero before this MI.
+    stall_until_mi: usize,
     // §Perf: pooled per-step buffers — stepping allocates nothing at
     // steady state (see the module docs).
     metrics_buf: Vec<MiMetrics>,
@@ -414,10 +461,14 @@ impl Session {
             job,
             window,
             reward: RewardTracker::new(reward, self.reward_cfg),
+            engine,
             cc: cc0,
             p: p0,
             has_pending_decision: false,
             status: LaneStatus::Active,
+            stall_mis: 0,
+            retry_at_mi: 0,
+            attempt: 0,
         });
         id
     }
@@ -460,12 +511,13 @@ impl Session {
     }
 
     /// Cancel a lane before completion (it departs the session; its flow's
-    /// demand drops to zero). Returns false if it already ended.
+    /// demand drops to zero). Faulted lanes may be cancelled — an operator
+    /// can give up on a retry loop. Returns false if it already ended.
     pub fn cancel(&mut self, id: LaneId) -> bool {
         let Some(lane) = self.lanes.get_mut(id.0) else {
             return false;
         };
-        if !matches!(lane.status, LaneStatus::Active | LaneStatus::Paused) {
+        if !matches!(lane.status, LaneStatus::Active | LaneStatus::Paused | LaneStatus::Faulted) {
             return false;
         }
         lane.status = LaneStatus::Departed;
@@ -493,8 +545,120 @@ impl Session {
     /// across all MIs and call this directly.
     pub fn step_into(&mut self, events: &mut Vec<Event>) {
         self.reclaim_events(events);
+        if self.faults_armed {
+            self.apply_due_faults();
+        }
         events.append(&mut self.pending);
         self.step_mi(events);
+    }
+
+    /// Install a seeded fault plan ([`crate::faults::FaultSchedule::resolve`])
+    /// and arm the stall watchdog. Single-host drivers (fleet, `serve` with
+    /// one host) call this; clusters keep the plan at cluster level and only
+    /// [`Session::arm_faults`] each host. Ops apply at the MI boundaries of
+    /// [`Session::step_into`] as `mi` passes their scheduled index, so the
+    /// same plan replays the same event stream at any parallelism. An armed
+    /// session is no longer checkpointable ([`Session::export_state`]).
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        self.fault_plan = plan.events;
+        self.fault_next = 0;
+        self.faults_armed = true;
+    }
+
+    /// Arm the stall watchdog and retry machinery without installing a
+    /// plan — cluster hosts run in this mode; the cluster owns the plan and
+    /// routes each op to its host via [`Session::apply_fault_op`].
+    pub fn arm_faults(&mut self) {
+        self.faults_armed = true;
+    }
+
+    /// Whether the fault plane is armed on this session.
+    pub fn faults_armed(&self) -> bool {
+        self.faults_armed
+    }
+
+    /// Apply plan ops that have come due and bring retries back online —
+    /// runs at the top of every `step_into` on an armed session, before the
+    /// MI executes, so fault timing is a pure function of the MI index.
+    fn apply_due_faults(&mut self) {
+        while self.fault_next < self.fault_plan.len()
+            && self.fault_plan[self.fault_next].at_mi <= self.mi
+        {
+            let op = self.fault_plan[self.fault_next].op.clone();
+            self.fault_next += 1;
+            self.apply_fault_op(&op);
+        }
+        self.release_retries();
+    }
+
+    /// Return faulted lanes whose backoff window has elapsed to `Active`,
+    /// queueing a [`Event::Retrying`] for each. Also called by the cluster
+    /// at each MI boundary on hosts it armed without a plan.
+    pub(crate) fn release_retries(&mut self) {
+        let time_s = self.sim.time_s();
+        let mi = self.mi;
+        for (li, lane) in self.lanes.iter_mut().enumerate() {
+            if lane.status == LaneStatus::Faulted && mi >= lane.retry_at_mi {
+                lane.status = LaneStatus::Active;
+                lane.stall_mis = 0;
+                self.pending.push(Event::Retrying {
+                    lane: LaneId(li),
+                    mi,
+                    time_s,
+                    attempt: lane.attempt,
+                });
+            }
+        }
+    }
+
+    /// Apply one fault op to this session at an MI boundary. Draws no
+    /// randomness; queued events land in `pending` exactly like external
+    /// control calls, so they merge into the stream deterministically.
+    pub(crate) fn apply_fault_op(&mut self, op: &FaultOp) {
+        match op {
+            FaultOp::SegmentScale { segment, scale } => {
+                // Unsupported substrates (the frozen baseline) report
+                // false; callers gate faults off the baseline path, so a
+                // miss here is a plan/topology mismatch, not an error.
+                let _ = self.sim.fault_segment(segment, *scale);
+            }
+            FaultOp::HostStall { mis, .. } => {
+                self.stall_until_mi = self.stall_until_mi.max(self.mi + mis);
+            }
+            FaultOp::HostCrash { .. } => {
+                // A single-host session cannot fail over
+                // ([`crate::faults::FaultSchedule::resolve`] downgrades
+                // crashes for it); a stray crash op degrades to a stall.
+                self.stall_until_mi = self.stall_until_mi.max(self.mi + 8);
+            }
+            FaultOp::StreamError { lane_slot } => {
+                if !self.lanes.is_empty() {
+                    let li = lane_slot % self.lanes.len();
+                    self.fault_lane(LaneId(li), "stream-error");
+                }
+            }
+        }
+    }
+
+    /// Take a lane offline with the given cause, scheduling its retry by
+    /// exponential backoff. No-op (false) unless the lane is `Active`.
+    pub(crate) fn fault_lane(&mut self, id: LaneId, fault: &'static str) -> bool {
+        let time_s = self.sim.time_s();
+        let mi = self.mi;
+        let Some(lane) = self.lanes.get_mut(id.0) else {
+            return false;
+        };
+        if lane.status != LaneStatus::Active {
+            return false;
+        }
+        lane.status = LaneStatus::Faulted;
+        lane.has_pending_decision = false;
+        lane.stall_mis = 0;
+        lane.attempt += 1;
+        lane.retry_at_mi = mi + backoff_mis(lane.attempt - 1);
+        self.sim.set_demand_cap(lane.flow, 0.0);
+        self.pending.push(Event::Faulted { lane: id, mi, time_s, fault });
+        true
     }
 
     /// Drain `events`, reclaiming every contained record's state buffer
@@ -590,9 +754,13 @@ impl Session {
     fn step_mi(&mut self, events: &mut Vec<Event>) {
         let has_energy = self.has_energy;
         // Cap demand of nearly-finished lanes so they don't overshoot;
-        // paused/ended lanes hold zero demand.
+        // paused/faulted/ended lanes hold zero demand. During an injected
+        // host stall every lane's demand collapses to zero — transfer
+        // threads stay alive but move no bytes, which is what trips the
+        // stall watchdog below.
+        let host_stalled = self.faults_armed && self.mi < self.stall_until_mi;
         for lane in &self.lanes {
-            if lane.status != LaneStatus::Active {
+            if host_stalled || lane.status != LaneStatus::Active {
                 self.sim.set_demand_cap(lane.flow, 0.0);
             } else {
                 let cap = lane.job.remaining_bytes() * 8.0 / self.mi_s / 1e9;
@@ -619,10 +787,18 @@ impl Session {
                 self.lanes
                     .iter()
                     .enumerate()
-                    .filter(|(_, l)| matches!(l.status, LaneStatus::Active | LaneStatus::Paused))
+                    .filter(|(_, l)| {
+                        matches!(
+                            l.status,
+                            LaneStatus::Active | LaneStatus::Paused | LaneStatus::Faulted
+                        )
+                    })
                     .map(|(li, l)| {
                         let m = &metrics[l.flow.0];
-                        let paused = l.status == LaneStatus::Paused;
+                        // Faulted lanes bill like paused ones: still on the
+                        // host, idle rail — so Σ per-lane attribution stays
+                        // equal to the host totals through fault windows.
+                        let paused = l.status != LaneStatus::Active;
                         LaneActivity {
                             lane: li,
                             // Paused lanes park their transfer threads: no
@@ -642,6 +818,7 @@ impl Session {
             self.activity_buf = activity;
         }
         let observe_paused = self.observe_paused;
+        let faults_armed = self.faults_armed;
         let mut decisions = std::mem::take(&mut self.decisions_buf);
         decisions.clear();
         for (li, lane) in self.lanes.iter_mut().enumerate() {
@@ -718,10 +895,34 @@ impl Session {
             if lane.has_pending_decision {
                 lane.optimizer.learn(out.reward, lane.window.state(), done_now);
             }
+            // Stall watchdog (armed sessions only, so the default path is
+            // untouched): consecutive near-zero-progress MIs fault the
+            // lane; any real progress resets both the counter and the
+            // backoff ladder.
+            let mut tripped = false;
+            if faults_armed && !done_now {
+                if m.bytes_delivered < STALL_EPS_BYTES {
+                    lane.stall_mis += 1;
+                    tripped = lane.stall_mis >= STALL_AFTER_MIS;
+                } else {
+                    lane.stall_mis = 0;
+                    lane.attempt = 0;
+                }
+            }
             let mut action = None;
             if done_now {
                 lane.status = LaneStatus::Completed;
                 lane.has_pending_decision = false;
+            } else if tripped {
+                // The MI that tripped still emits its record below (the
+                // observation is real); the lane then sits out
+                // `backoff_mis(attempt)` MIs before `release_retries`
+                // brings it back. Bytes delivered so far are untouched.
+                lane.status = LaneStatus::Faulted;
+                lane.has_pending_decision = false;
+                lane.stall_mis = 0;
+                lane.attempt += 1;
+                lane.retry_at_mi = mi + 1 + backoff_mis(lane.attempt - 1);
             } else {
                 let ctx = MiContext {
                     state: lane.window.state(),
@@ -765,6 +966,8 @@ impl Session {
                     bytes_delivered: lane.job.delivered_bytes(),
                     total_energy_j: self.energy.lane_total_j(li),
                 });
+            } else if tripped {
+                events.push(Event::Faulted { lane: LaneId(li), mi, time_s, fault: "stall" });
             }
         }
         // Apply decisions after all lanes observed this MI.
@@ -806,11 +1009,13 @@ impl Session {
         self.lanes.len()
     }
 
-    /// Lanes currently active or paused (still in the system).
+    /// Lanes currently active, paused or faulted (still in the system).
     pub fn lanes_in_flight(&self) -> usize {
         self.lanes
             .iter()
-            .filter(|l| matches!(l.status, LaneStatus::Active | LaneStatus::Paused))
+            .filter(|l| {
+                matches!(l.status, LaneStatus::Active | LaneStatus::Paused | LaneStatus::Faulted)
+            })
             .count()
     }
 
@@ -872,9 +1077,12 @@ impl Session {
     /// substrate cannot checkpoint itself ([`Substrate::save_state`] is
     /// `None` — e.g. the frozen baseline sim) or when control events are
     /// still queued (`admit`/`pause`/… called since the last step) — a
-    /// capture between a control call and its step would lose those events.
+    /// capture between a control call and its step would lose those events
+    /// — or when the fault plane is armed: fault state (watchdog counters,
+    /// backoff schedules, degraded segment capacities) is deliberately
+    /// outside the snapshot codec, so a faulted run is not checkpointable.
     pub fn export_state(&self) -> Option<SessionState> {
-        if !self.pending.is_empty() {
+        if !self.pending.is_empty() || self.faults_armed {
             return None;
         }
         let sim = self.sim.save_state()?;
@@ -931,6 +1139,93 @@ impl Session {
         true
     }
 
+    /// Lift a non-terminal lane out of this session for re-admission on
+    /// another host ([`MigratedLane`]; the cluster's crash-recovery path).
+    /// The slot left behind becomes an inert `Departed` tombstone — its
+    /// flow holds zero demand and its energy account stays frozen on this
+    /// host's ledger (the caller carries the returned `energy_j` so global
+    /// attribution survives the move). No events are emitted; the cluster
+    /// announces the move itself. Returns `None` for unknown or already
+    /// terminal lanes.
+    pub(crate) fn extract_lane(&mut self, id: LaneId) -> Option<MigratedLane> {
+        use crate::baselines::StaticTool;
+        let lane = self.lanes.get_mut(id.0)?;
+        if matches!(lane.status, LaneStatus::Completed | LaneStatus::Departed) {
+            return None;
+        }
+        let energy_j = self.energy.lane_total_j(id.0);
+        let status = lane.status;
+        let optimizer = std::mem::replace(
+            &mut lane.optimizer,
+            Box::new(StaticTool::efficient_static(1, 1)),
+        );
+        let job = std::mem::replace(&mut lane.job, TransferJob::files(1, 0));
+        let window = std::mem::replace(
+            &mut lane.window,
+            FeatureWindow::new(1, self.bounds.cc_max, self.bounds.p_max),
+        );
+        let reward = std::mem::replace(
+            &mut lane.reward,
+            RewardTracker::new(RewardKind::ThroughputEnergy, self.reward_cfg),
+        );
+        let out = MigratedLane {
+            name: Arc::clone(&lane.name),
+            engine: lane.engine.clone(),
+            optimizer,
+            job,
+            window,
+            reward,
+            cc: lane.cc,
+            p: lane.p,
+            status,
+            energy_j,
+        };
+        lane.status = LaneStatus::Departed;
+        lane.has_pending_decision = false;
+        let flow = lane.flow;
+        self.sim.set_demand_cap(flow, 0.0);
+        Some(out)
+    }
+
+    /// Re-admit a lane lifted off a crashed host: a fresh flow and energy
+    /// account on this host, the carried optimizer/job/window/reward state
+    /// continuing exactly where it left off. Emits no `Admitted` event —
+    /// the lane never left the fleet, it only changed hosts. Paused lanes
+    /// stay paused; faulted lanes come back `Active` (the migration *is*
+    /// their retry).
+    pub(crate) fn admit_migrated(&mut self, m: MigratedLane) -> LaneId {
+        let (cc, p) = self.bounds.clamp(m.cc, m.p);
+        let io = m.engine.task_io_gbps(self.sim.testbed().task_io_gbps);
+        let flow = self.sim.add_flow(cc, p, Some(io));
+        let window_slot = self.lanes.len();
+        let meter_seed = self.seed.wrapping_mul(0x9E37).wrapping_add(window_slot as u64);
+        self.energy.open_lane(&m.engine.power, meter_seed);
+        let status = if m.status == LaneStatus::Paused {
+            self.sim.set_demand_cap(flow, 0.0);
+            LaneStatus::Paused
+        } else {
+            LaneStatus::Active
+        };
+        let id = LaneId(window_slot);
+        self.lanes.push(SessionLane {
+            name: m.name,
+            flow,
+            optimizer: m.optimizer,
+            job: m.job,
+            window: m.window,
+            reward: m.reward,
+            engine: m.engine,
+            cc,
+            p,
+            has_pending_decision: false,
+            status,
+            stall_mis: 0,
+            retry_at_mi: 0,
+            attempt: 0,
+        });
+        id
+    }
+
     pub fn bounds(&self) -> &ParamBounds {
         &self.bounds
     }
@@ -938,6 +1233,25 @@ impl Session {
     pub fn testbed(&self) -> &Testbed {
         self.sim.testbed()
     }
+}
+
+/// One lane lifted out of a crashed host ([`Session::extract_lane`]),
+/// carrying everything a healthy host needs to continue it bit-for-bit at
+/// the control level: identity, the live optimizer, job progress, feature
+/// window, reward tracker and the last applied `(cc, p)`.
+pub(crate) struct MigratedLane {
+    name: Arc<str>,
+    engine: EngineProfile,
+    optimizer: Box<dyn Optimizer>,
+    job: TransferJob,
+    window: FeatureWindow,
+    reward: RewardTracker,
+    cc: u32,
+    p: u32,
+    status: LaneStatus,
+    /// Energy attributed to the lane on the host it left — frozen there;
+    /// the cluster adds it to the lane's new-host account when reporting.
+    pub(crate) energy_j: f64,
 }
 
 /// A captured [`Session`] at an MI boundary (see [`Session::export_state`]).
@@ -1203,6 +1517,162 @@ mod tests {
         assert!(after > before, "paused lane accrued no idle energy");
         // Conservation: the lane's attribution is the whole host total.
         assert!((s.host_energy_j() - after).abs() <= 1e-9 * after);
+    }
+
+    /// Arming the fault plane without any plan (the cluster-host mode) must
+    /// leave a healthy run bit-identical: the watchdog only counts, and a
+    /// progressing lane never trips it.
+    #[test]
+    fn armed_fault_free_run_matches_unarmed_bit_for_bit() {
+        let build = |armed: bool| {
+            let mut s = Session::builder(Testbed::chameleon())
+                .background(Background::Idle)
+                .seed(11)
+                .build();
+            if armed {
+                s.arm_faults();
+            }
+            s.admit(static_spec());
+            s
+        };
+        let mut armed = build(true);
+        let mut plain = build(false);
+        for step in 0..20 {
+            assert_eq!(armed.step(), plain.step(), "step {step}: armed path diverged");
+        }
+        assert_eq!(armed.is_idle(), plain.is_idle());
+    }
+
+    /// An injected host stall starves every lane, the watchdog faults them
+    /// after [`STALL_AFTER_MIS`] dead MIs, retries back off exponentially,
+    /// and the job still completes with every byte once the stall lifts.
+    #[test]
+    fn host_stall_faults_then_retries_and_completes() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(13)
+            .build();
+        s.install_faults(FaultPlan {
+            events: vec![FaultEvent { at_mi: 2, op: FaultOp::HostStall { host: 0, mis: 6 } }],
+        });
+        let job = TransferJob::files(16, 256 << 20);
+        let total = job.total_bytes();
+        let id = s.admit(LaneSpec::new(Box::new(StaticTool::efficient_static(4, 4)), job));
+        let mut log = EventLog::default();
+        s.run_to_completion(DEFAULT_MAX_MIS, &mut log);
+        let faulted = log
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::Faulted { lane, fault, .. } if *lane == id && *fault == "stall"));
+        assert!(faulted, "stall watchdog never tripped");
+        let retried = log
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::Retrying { lane, attempt, .. } if *lane == id && *attempt >= 1));
+        assert!(retried, "faulted lane never retried");
+        let delivered = log.events.iter().find_map(|e| match e {
+            Event::Completed { lane, bytes_delivered, .. } if *lane == id => Some(*bytes_delivered),
+            _ => None,
+        });
+        let delivered = delivered.expect("lane never completed after the stall lifted");
+        assert!(delivered >= total * 0.999, "bytes lost across fault: {delivered} < {total}");
+        assert_eq!(s.status(id), Some(LaneStatus::Completed));
+    }
+
+    /// Injected stream errors fault the targeted lane at the MI boundary
+    /// and the retry ladder brings it back without losing progress.
+    #[test]
+    fn stream_error_faults_lane_and_preserves_bytes() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(17)
+            .build();
+        s.install_faults(FaultPlan {
+            events: vec![FaultEvent { at_mi: 1, op: FaultOp::StreamError { lane_slot: 0 } }],
+        });
+        let job = TransferJob::files(16, 256 << 20);
+        let total = job.total_bytes();
+        let id = s.admit(LaneSpec::new(Box::new(StaticTool::efficient_static(4, 4)), job));
+        let mut log = EventLog::default();
+        s.run_to_completion(DEFAULT_MAX_MIS, &mut log);
+        let fault_mi = log.events.iter().find_map(|e| match e {
+            Event::Faulted { lane, mi, fault, .. } if *lane == id => {
+                assert_eq!(*fault, "stream-error");
+                Some(*mi)
+            }
+            _ => None,
+        });
+        assert_eq!(fault_mi, Some(1), "stream error must land at its scheduled MI");
+        let retry_mi = log.events.iter().find_map(|e| match e {
+            Event::Retrying { lane, mi, .. } if *lane == id => Some(*mi),
+            _ => None,
+        });
+        assert_eq!(retry_mi, Some(2), "first backoff window is one MI");
+        let delivered = log.events.iter().find_map(|e| match e {
+            Event::Completed { lane, bytes_delivered, .. } if *lane == id => Some(*bytes_delivered),
+            _ => None,
+        });
+        assert!(delivered.expect("lane completed") >= total * 0.999);
+    }
+
+    /// Armed sessions refuse to checkpoint: fault state lives outside the
+    /// snapshot codec.
+    #[test]
+    fn armed_session_is_not_checkpointable() {
+        let mut s = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(19)
+            .build();
+        s.admit(static_spec());
+        s.step();
+        assert!(s.export_state().is_some(), "healthy session must checkpoint");
+        s.arm_faults();
+        assert!(s.export_state().is_none(), "armed session must refuse to checkpoint");
+    }
+
+    /// A lane lifted out of one session and re-admitted into another keeps
+    /// its job progress: the migration path conserves bytes end to end.
+    #[test]
+    fn extract_and_readmit_conserves_lane_bytes() {
+        let mut a = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(23)
+            .build();
+        let job = TransferJob::files(16, 256 << 20);
+        let total = job.total_bytes();
+        let id = a.admit(LaneSpec::new(Box::new(StaticTool::efficient_static(4, 4)), job));
+        for _ in 0..3 {
+            a.step();
+        }
+        let m = a.extract_lane(id).expect("in-flight lane must extract");
+        let moved_bytes = m.job.delivered_bytes();
+        assert!(moved_bytes > 0.0, "no progress before migration");
+        assert!(m.energy_j >= 0.0);
+        assert_eq!(a.status(id), Some(LaneStatus::Departed), "tombstone left behind");
+        assert!(a.extract_lane(id).is_none(), "tombstone must not extract twice");
+        let mut b = Session::builder(Testbed::chameleon())
+            .background(Background::Idle)
+            .seed(29)
+            .build();
+        let nid = b.admit_migrated(m);
+        assert_eq!(b.lane_name(nid), a.lane_name(id), "identity survives the move");
+        let mut log = EventLog::default();
+        b.run_to_completion(DEFAULT_MAX_MIS, &mut log);
+        assert!(
+            log.events.iter().all(|e| !matches!(e, Event::Admitted { .. })),
+            "migration must not re-announce admission"
+        );
+        let delivered = log.events.iter().find_map(|e| match e {
+            Event::Completed { lane, bytes_delivered, .. } if *lane == nid => {
+                Some(*bytes_delivered)
+            }
+            _ => None,
+        });
+        let delivered = delivered.expect("migrated lane completed");
+        assert!(
+            delivered >= total * 0.999 && delivered >= moved_bytes,
+            "bytes lost in migration: {delivered} of {total}"
+        );
     }
 
     /// The lumped compat rail (the default) reports no rail breakdown and

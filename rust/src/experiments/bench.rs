@@ -180,11 +180,24 @@ pub struct BenchOpts {
     /// When the resolved count is 1 (single core, or single-host points)
     /// the threaded column is skipped.
     pub step_threads: usize,
+    /// Optional fault preset: time the curve with a seeded
+    /// [`crate::faults::FaultPlan`] installed per trial (recovery-path
+    /// overhead). The pre-arena baseline loop has no fault plane, so its
+    /// comparison column is skipped; the threaded byte-identity gate
+    /// still runs — chaos must not break determinism.
+    pub faults: Option<&'static crate::faults::FaultSchedule>,
 }
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        BenchOpts { quick: false, iters: 1, inject_slowdown: 0.0, lanes: None, step_threads: 0 }
+        BenchOpts {
+            quick: false,
+            iters: 1,
+            inject_slowdown: 0.0,
+            lanes: None,
+            step_threads: 0,
+            faults: None,
+        }
     }
 }
 
@@ -338,8 +351,9 @@ fn timed_fleet(
     baseline_loop: bool,
     hosts: usize,
     step_threads: usize,
+    faults: Option<&'static crate::faults::FaultSchedule>,
 ) -> Result<(fleet::FleetReport, f64)> {
-    let opts = FleetOpts { baseline_loop, hosts, step_threads, ..FleetOpts::default() };
+    let opts = FleetOpts { baseline_loop, hosts, step_threads, faults, ..FleetOpts::default() };
     let t0 = Instant::now();
     let report = fleet::run(paths, sched, methods, Scale::Quick, 42, 1, opts)?;
     Ok((report, t0.elapsed().as_secs_f64()))
@@ -355,8 +369,8 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
     // statics, allocator growth, page-cache warmup) are not billed to
     // whichever side happens to be timed first.
     let warmup = ArrivalSchedule::churn_heavy_scaled(8, 30);
-    timed_fleet(paths, &warmup, &methods, false, 1, 1)?;
-    timed_fleet(paths, &warmup, &methods, true, 1, 1)?;
+    timed_fleet(paths, &warmup, &methods, false, 1, 1, opts.faults)?;
+    timed_fleet(paths, &warmup, &methods, true, 1, 1, None)?;
     // The curve as (lanes, hosts, with_baseline) points: the single-host
     // sizes, the incast cluster points, then the giant points (which skip
     // the frozen baseline loop — module docs). The first cluster and giant
@@ -390,8 +404,11 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
         let mut base_wall = f64::INFINITY;
         let mut threaded_wall = f64::INFINITY;
         let mut report = None;
+        // A fault plan disables the baseline comparison column (the
+        // frozen loop has no fault plane to replay it on).
+        let with_baseline = with_baseline && opts.faults.is_none();
         for _ in 0..iters {
-            let (rep, mut w) = timed_fleet(paths, &sched, &methods, false, hosts, 1)?;
+            let (rep, mut w) = timed_fleet(paths, &sched, &methods, false, hosts, 1, opts.faults)?;
             if opts.inject_slowdown > 0.0 {
                 // Real sleep, billed to the arena wall: the synthetic
                 // regression the CI perf-trend job proves it can catch.
@@ -400,7 +417,8 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
                 w += pause;
             }
             if with_baseline {
-                let (base_rep, base_w) = timed_fleet(paths, &sched, &methods, true, hosts, 1)?;
+                let (base_rep, base_w) =
+                    timed_fleet(paths, &sched, &methods, true, hosts, 1, None)?;
                 // The bench doubles as a drift gate: both loops must
                 // produce the same report bytes (full suite:
                 // tests/golden_replay.rs).
@@ -414,7 +432,7 @@ pub fn run(paths: &Paths, opts: BenchOpts) -> Result<BenchReport> {
             }
             if step_threads > 1 {
                 let (thr_rep, thr_w) =
-                    timed_fleet(paths, &sched, &methods, false, hosts, step_threads)?;
+                    timed_fleet(paths, &sched, &methods, false, hosts, step_threads, opts.faults)?;
                 // Byte-identity is what makes the threaded column a
                 // speedup rather than a different computation.
                 if fleet::to_json(&rep).to_string() != fleet::to_json(&thr_rep).to_string() {

@@ -32,6 +32,7 @@ use crate::coordinator::{
     Cluster, Event, LaneId, LaneSpec, LaneStatus, Session, Stepping, INCAST_RX_OVER_WAN,
 };
 use crate::energy::RailEnergy;
+use crate::faults::FaultSchedule;
 use crate::net::Topology;
 use crate::runtime::WeightSnapshot;
 use crate::scenarios::ArrivalSchedule;
@@ -84,6 +85,12 @@ pub struct FleetOpts {
     /// `min(hosts, cores)`. See [`resolve_step_threads`]; pure wall-clock
     /// knob, never serialized into reports.
     pub step_threads: usize,
+    /// Optional seeded fault preset (`--faults NAME`): every trial runs
+    /// with a [`crate::faults::FaultPlan`] resolved from its trial seed,
+    /// so the same failure history replays at any `--jobs` and
+    /// `--step-threads` count. Incompatible with `baseline_loop` — the
+    /// frozen pre-arena simulator has no fault plane.
+    pub faults: Option<&'static FaultSchedule>,
 }
 
 impl Default for FleetOpts {
@@ -94,6 +101,7 @@ impl Default for FleetOpts {
             baseline_loop: false,
             hosts: 1,
             step_threads: 1,
+            faults: None,
         }
     }
 }
@@ -185,6 +193,13 @@ pub struct FleetTrial {
     /// JSON stays byte-identical to pre-cluster reports), one row per
     /// host on `--hosts N` cluster trials, summing to the cluster truth.
     pub hosts: Vec<HostEnergyRow>,
+    /// Fault-plane counters (all zero unless the trial ran `--faults`):
+    /// lanes declared faulted, retries released, lanes migrated off
+    /// crashed hosts, and hosts quarantined by the end of the trial.
+    pub faulted: usize,
+    pub retried: usize,
+    pub migrated: usize,
+    pub quarantined_hosts: usize,
 }
 
 /// The full fleet report.
@@ -198,6 +213,8 @@ pub struct FleetReport {
     pub yield_policy: bool,
     /// Sender hosts per trial (1 = single-session fleet).
     pub hosts: usize,
+    /// Fault preset name, when the run injected one.
+    pub faults: Option<&'static str>,
     pub trials: Vec<FleetTrial>,
 }
 
@@ -226,6 +243,11 @@ pub fn run(
 ) -> Result<FleetReport> {
     if methods.is_empty() {
         return Err(anyhow!("fleet needs at least one method"));
+    }
+    if opts.baseline_loop && opts.faults.is_some() {
+        // The frozen pre-arena loop is the golden-replay oracle; it has no
+        // fault plane, so injecting into it would silently diverge.
+        return Err(anyhow!("--faults is not supported on the baseline loop"));
     }
     // Resolve the intra-step thread knob once against the trial sharding,
     // so every worker steps its cluster with the same (warned-about)
@@ -262,6 +284,7 @@ pub fn run(
         observe_paused: opts.observe_paused,
         yield_policy: opts.yield_policy,
         hosts: opts.hosts.max(1),
+        faults: opts.faults.map(|f| f.name),
         trials: out_trials,
     })
 }
@@ -311,6 +334,9 @@ fn run_trial(
     opts: FleetOpts,
 ) -> Result<FleetTrial> {
     let hosts = opts.hosts.max(1);
+    // Identity-derived fault history: depends only on (preset, trial
+    // seed, hosts, horizon) — never on jobs or step threads.
+    let fault_plan = opts.faults.map(|f| f.resolve(trial_seed, hosts, schedule.horizon_mis));
     if hosts > 1 {
         // N sender hosts into the scenario testbed's shared WAN and one
         // receiver-ingest stage (incast). Each host session gets its own
@@ -331,7 +357,11 @@ fn run_trial(
             builder.topology(topo).build()
         });
         cluster.set_step_threads(opts.step_threads.max(1));
+        if let Some(plan) = fault_plan {
+            cluster.install_faults(plan);
+        }
         let mut out = drive_trial(ctx, schedule, methods, trial, trial_seed, opts, &mut cluster)?;
+        out.quarantined_hosts = cluster.quarantined_hosts();
         // Host-resolved rows, plus the cluster-level conservation check:
         // per-host ledger truth sums to the cluster total the trial billed.
         let mut per_host_j = 0.0;
@@ -372,6 +402,9 @@ fn run_trial(
         )));
     }
     let mut session = builder.build();
+    if let Some(plan) = fault_plan {
+        session.install_faults(plan);
+    }
     drive_trial(ctx, schedule, methods, trial, trial_seed, opts, &mut session)
 }
 
@@ -415,6 +448,10 @@ fn drive_trial<S: Stepping>(
     let mut pause_cost: Vec<(f64, usize)> = Vec::new();
     let mut pauses = 0usize;
     let mut yields_refused = 0usize;
+    // Fault-plane counters (stay zero on fault-free runs).
+    let mut faulted = 0usize;
+    let mut retried = 0usize;
+    let mut migrated = 0usize;
 
     let mut next_arrival = 0usize;
     // One event buffer for the whole trial (§Perf: `step_into` keeps the
@@ -488,6 +525,9 @@ fn drive_trial<S: Stepping>(
                 Event::Departed { lane, time_s, bytes_delivered, .. } => {
                     ended[lane.0] = Some((false, *time_s, *bytes_delivered));
                 }
+                Event::Faulted { .. } => faulted += 1,
+                Event::Retrying { .. } => retried += 1,
+                Event::Migrated { .. } => migrated += 1,
                 _ => {}
             }
         }
@@ -557,6 +597,12 @@ fn drive_trial<S: Stepping>(
         mis_run: session.mi(),
         rails: session.energy_rails(),
         hosts: Vec::new(),
+        faulted,
+        retried,
+        migrated,
+        // Filled by the cluster path in `run_trial`; a single session has
+        // no hosts to quarantine.
+        quarantined_hosts: 0,
     })
 }
 
@@ -623,7 +669,7 @@ fn run_yield_policy<S: Stepping>(
 /// Paper-style summary: one row per trial plus per-lane detail at verbose.
 pub fn print(report: &FleetReport) {
     println!(
-        "\nFleet — {} arrivals on '{}' ({} MI horizon, methods: {}{}{}{}):",
+        "\nFleet — {} arrivals on '{}' ({} MI horizon, methods: {}{}{}{}{}):",
         report.schedule,
         report.scenario,
         report.horizon_mis,
@@ -634,6 +680,10 @@ pub fn print(report: &FleetReport) {
             format!(", {} incast hosts", report.hosts)
         } else {
             String::new()
+        },
+        match report.faults {
+            Some(name) => format!(", faults: {name}"),
+            None => String::new(),
         },
     );
     let mut table = Table::new(&[
@@ -669,6 +719,18 @@ pub fn print(report: &FleetReport) {
         ]);
     }
     table.print();
+    // Fault-plane recovery summary (chaos runs only).
+    if let Some(name) = report.faults {
+        let sum = |f: fn(&FleetTrial) -> usize| report.trials.iter().map(f).sum::<usize>();
+        println!(
+            "fault plane '{}': {} lane faults, {} retries, {} migrations, {} host quarantines",
+            name,
+            sum(|t| t.faulted),
+            sum(|t| t.retried),
+            sum(|t| t.migrated),
+            sum(|t| t.quarantined_hosts),
+        );
+    }
     // Host-truth rail breakdown, averaged over trials.
     let rails: Vec<&RailEnergy> = report.trials.iter().filter_map(|t| t.rails.as_ref()).collect();
     if !rails.is_empty() {
@@ -751,6 +813,11 @@ pub fn to_json(report: &FleetReport) -> Json {
     if report.hosts > 1 {
         top.push(("hosts", Json::from(report.hosts)));
     }
+    // Like `hosts`: emitted only on chaos runs, so fault-free reports
+    // stay byte-identical to pre-fault-plane SPARTA.
+    if let Some(name) = report.faults {
+        top.push(("faults", Json::from(name)));
+    }
     top.push((
         "trials",
         Json::Arr(
@@ -767,6 +834,12 @@ pub fn to_json(report: &FleetReport) -> Json {
                         ("yields_refused", Json::from(t.yields_refused)),
                         ("mis_run", Json::from(t.mis_run)),
                     ];
+                    if report.faults.is_some() {
+                        o.push(("faulted", Json::from(t.faulted)));
+                        o.push(("retried", Json::from(t.retried)));
+                        o.push(("migrated", Json::from(t.migrated)));
+                        o.push(("quarantined_hosts", Json::from(t.quarantined_hosts)));
+                    }
                     if let Some(r) = &t.rails {
                         o.push(("energy_rails_j", rails_json(r)));
                     }

@@ -1,0 +1,355 @@
+//! Seeded fault-injection plans: the chaos the fleet must survive.
+//!
+//! A [`crate::scenarios::Scenario`] fixes the *healthy* network conditions
+//! and an [`crate::scenarios::ArrivalSchedule`] fixes the workload; a
+//! [`FaultSchedule`] fixes what goes *wrong* on top of both — WAN links
+//! flapping or degrading, sender hosts stalling or crashing outright,
+//! individual lanes hitting stream errors. Every preset resolves into an
+//! explicit, sorted [`FaultPlan`] from `(name, seed, hosts, horizon)`
+//! exactly like the arrival presets resolve workloads, so the same fault
+//! seed replays the same failure history — and therefore the same event
+//! stream — at any `--jobs` and `--step-threads` count.
+//!
+//! The determinism contract has two halves:
+//!
+//! 1. **Seeded injection.** A plan is materialized up front by
+//!    [`FaultSchedule::resolve`] with an identity-derived seed
+//!    (`mix_seed(base, name, 0)` — the arrivals idiom); nothing about
+//!    execution order, thread count or wall clock feeds back into it.
+//! 2. **MI-boundary recovery.** Every fault op is *applied* at the MI
+//!    boundary named by its `at_mi`, before the tick runs, and every
+//!    recovery op (stall detection, retry, migration) likewise fires at
+//!    boundaries — the simulator tick itself stays untouched, so the
+//!    golden-replay byte-identity between the arena and baseline loops is
+//!    preserved whenever no plan is installed.
+//!
+//! Select one with `--faults <name>` on `sparta fleet`, `sparta serve` or
+//! `sparta bench`, or programmatically:
+//!
+//! ```
+//! use sparta::faults::FaultSchedule;
+//!
+//! let sched = FaultSchedule::by_name("link-flap").unwrap();
+//! let a = sched.resolve(42, 1, 360);
+//! let b = sched.resolve(42, 1, 360);
+//! assert_eq!(a.events, b.events); // same (schedule, seed) => same faults
+//! assert!(!a.events.is_empty());
+//! ```
+//!
+//! **Adding a fault kind** is three local steps: add an [`FaultOp`]
+//! variant, teach the routing switch in `Session::apply_fault_op` (and
+//! `Cluster::apply_fault_op` if it is host- or cluster-scoped) what it
+//! does at an MI boundary, and emit it from a preset arm in
+//! [`FaultSchedule::resolve`]. Nothing else changes: telemetry, serve and
+//! the CLI only ever see the resulting `Faulted`/`Retrying`/`Migrated`
+//! events.
+
+use crate::util::rng::mix_seed;
+use crate::util::Rng;
+
+/// Consecutive no-progress MIs before the stall watchdog declares an
+/// Active lane faulted.
+pub const STALL_AFTER_MIS: u32 = 3;
+
+/// "No progress" threshold, bytes per MI: anything under this is a stall
+/// for watchdog purposes (a fully cut link still trickles control-sized
+/// residue through the fluid model).
+pub const STALL_EPS_BYTES: f64 = 4096.0;
+
+/// Exponential retry backoff, MIs: 1, 2, 4, 8, 8, ... (capped).
+pub fn backoff_mis(attempt: u32) -> usize {
+    1usize << attempt.min(3)
+}
+
+/// Floor for a faulted segment's capacity scale. A scale of exactly zero
+/// would send the droptail queue-delay math to infinity; this floor keeps
+/// the link numerically alive while starving it hard enough to trip the
+/// stall watchdog.
+pub const MIN_SEGMENT_SCALE: f64 = 1e-6;
+
+/// One injected failure (or recovery) op, applied at an MI boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultOp {
+    /// Scale a named topology segment's capacity against its nominal
+    /// value (`1.0` heals it). Routed to every host's substrate: in an
+    /// incast cluster the WAN is a shared stage, so a WAN fault hits all
+    /// senders' slices alike.
+    SegmentScale { segment: &'static str, scale: f64 },
+    /// Freeze one host's senders for `mis` monitoring intervals: all of
+    /// its lanes offer zero demand, so the stall watchdog trips them into
+    /// the faulted/retry cycle.
+    HostStall { host: usize, mis: usize },
+    /// Kill one host permanently. The cluster quarantines it and migrates
+    /// its in-flight lanes to healthy hosts with bytes intact; single-host
+    /// presets downgrade this to a stall at resolve time.
+    HostCrash { host: usize },
+    /// Break one lane's stream: the lane slot (modulo lanes admitted so
+    /// far at fire time) is faulted immediately and re-enters through the
+    /// retry/backoff path.
+    StreamError { lane_slot: usize },
+}
+
+/// One scheduled fault: `op` applied at the `at_mi` boundary, before that
+/// MI's tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at_mi: usize,
+    pub op: FaultOp,
+}
+
+/// A resolved, sorted fault history for one trial — what a
+/// [`crate::coordinator::Session`] or [`crate::coordinator::Cluster`]
+/// actually installs. Events at the same MI apply in vector order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// A named, reproducible failure preset. The registry mirrors
+/// [`crate::scenarios::ArrivalSchedule`]: look presets up by name, resolve
+/// them with a seed, get the identical plan every time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSchedule {
+    /// Registry name (`--faults <name>`).
+    pub name: &'static str,
+    /// One-line description for `sparta scenarios`.
+    pub summary: &'static str,
+}
+
+/// Periodic presets stop emitting past this many MIs even when the run
+/// horizon is longer (an open-ended `sparta serve` should not pre-plan
+/// unbounded failure histories).
+const PLAN_HORIZON_CAP_MIS: usize = 2000;
+
+impl FaultSchedule {
+    /// The registered failure presets.
+    pub fn all() -> &'static [FaultSchedule] {
+        &[
+            FaultSchedule {
+                name: "link-flap",
+                summary: "WAN capacity collapses for 3-5 MIs every ~30 MIs, then heals",
+            },
+            FaultSchedule {
+                name: "link-degrade",
+                summary: "persistent WAN brownout: capacity drops to ~40% mid-run and stays",
+            },
+            FaultSchedule {
+                name: "host-stall",
+                summary: "sender hosts freeze for 5-8 MIs a few times per run",
+            },
+            FaultSchedule {
+                name: "host-crash",
+                summary: "up to two hosts die mid-run; lanes migrate to survivors (stall when single-host)",
+            },
+            FaultSchedule {
+                name: "stream-error",
+                summary: "individual lane streams break every ~24 MIs and retry with backoff",
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static FaultSchedule> {
+        FaultSchedule::all().iter().find(|s| s.name == name)
+    }
+
+    /// Registry names, in registry order.
+    pub fn names() -> Vec<&'static str> {
+        FaultSchedule::all().iter().map(|s| s.name).collect()
+    }
+
+    /// Materialize the failure history for one trial. Deterministic: the
+    /// same `(schedule, seed, hosts, horizon)` yields the same plan, with
+    /// the schedule name joining the seed mix so two presets under the
+    /// same trial seed draw different histories.
+    pub fn resolve(&self, seed: u64, hosts: usize, horizon_mis: usize) -> FaultPlan {
+        let mut rng = Rng::new(mix_seed(seed, self.name, 0));
+        let hosts = hosts.max(1);
+        let horizon = horizon_mis.clamp(1, PLAN_HORIZON_CAP_MIS);
+        let mut events = Vec::new();
+        match self.name {
+            "link-flap" => {
+                let mut at = 10 + rng.below(6);
+                while at + 8 < horizon {
+                    let dur = 3 + rng.below(3);
+                    events.push(FaultEvent {
+                        at_mi: at,
+                        op: FaultOp::SegmentScale { segment: "wan", scale: 0.0 },
+                    });
+                    events.push(FaultEvent {
+                        at_mi: at + dur,
+                        op: FaultOp::SegmentScale { segment: "wan", scale: 1.0 },
+                    });
+                    at += 28 + rng.below(12);
+                }
+            }
+            "link-degrade" => {
+                let at = 12 + rng.below(8);
+                if at < horizon {
+                    events.push(FaultEvent {
+                        at_mi: at,
+                        op: FaultOp::SegmentScale { segment: "wan", scale: 0.4 },
+                    });
+                }
+            }
+            "host-stall" => {
+                let stalls = 2 + rng.below(2);
+                for k in 0..stalls {
+                    let at = 12 + k * (horizon / (stalls + 1)).max(1) + rng.below(10);
+                    if at + 2 >= horizon {
+                        break;
+                    }
+                    events.push(FaultEvent {
+                        at_mi: at,
+                        op: FaultOp::HostStall { host: rng.below(hosts), mis: 5 + rng.below(4) },
+                    });
+                }
+            }
+            "host-crash" => {
+                // Never more crashes than leave one survivor; on a
+                // single host, downgrade to a recoverable stall so the
+                // preset still means something for `--hosts 1`.
+                let crashes = 2.min(hosts - 1);
+                if crashes == 0 {
+                    let at = (horizon / 3).max(8) + rng.below(8);
+                    if at + 2 < horizon {
+                        events.push(FaultEvent {
+                            at_mi: at,
+                            op: FaultOp::HostStall { host: 0, mis: 8 },
+                        });
+                    }
+                } else {
+                    // Distinct victims, host 0 spared so the round-robin
+                    // admission path always has its first target alive.
+                    let mut victims: Vec<usize> = (1..hosts).collect();
+                    rng.shuffle(&mut victims);
+                    for (k, &host) in victims.iter().take(crashes).enumerate() {
+                        let at = ((k + 1) * horizon / (crashes + 2)).max(8) + rng.below(8);
+                        if at + 2 >= horizon {
+                            break;
+                        }
+                        events.push(FaultEvent { at_mi: at, op: FaultOp::HostCrash { host } });
+                    }
+                }
+            }
+            "stream-error" => {
+                let mut at = 8 + rng.below(8);
+                while at + 2 < horizon {
+                    events.push(FaultEvent {
+                        at_mi: at,
+                        op: FaultOp::StreamError { lane_slot: rng.below(1024) },
+                    });
+                    at += 18 + rng.below(12);
+                }
+            }
+            other => unreachable!("unregistered fault schedule '{other}'"),
+        }
+        events.sort_by_key(|e| e.at_mi);
+        FaultPlan { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_and_names_are_unique() {
+        let names = FaultSchedule::names();
+        for want in ["link-flap", "link-degrade", "host-stall", "host-crash", "stream-error"] {
+            assert!(names.contains(&want), "missing fault schedule '{want}'");
+        }
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate fault schedule names");
+        assert!(FaultSchedule::by_name("no-such-preset").is_none());
+    }
+
+    #[test]
+    fn plans_are_seed_deterministic_sorted_and_in_horizon() {
+        for sched in FaultSchedule::all() {
+            for hosts in [1usize, 4] {
+                let a = sched.resolve(7, hosts, 360);
+                let b = sched.resolve(7, hosts, 360);
+                assert_eq!(a, b, "{}: same seed must reproduce", sched.name);
+                assert!(!a.events.is_empty(), "{}: empty plan at 360 MIs", sched.name);
+                assert!(
+                    a.events.windows(2).all(|w| w[0].at_mi <= w[1].at_mi),
+                    "{}: plan out of order",
+                    sched.name
+                );
+                assert!(
+                    a.events.iter().all(|e| e.at_mi < 360),
+                    "{}: fault past horizon",
+                    sched.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_diverge() {
+        let flap = FaultSchedule::by_name("link-flap").unwrap();
+        assert_ne!(flap.resolve(1, 1, 360).events, flap.resolve(2, 1, 360).events);
+    }
+
+    #[test]
+    fn host_ops_stay_in_host_range() {
+        for sched in FaultSchedule::all() {
+            for hosts in [1usize, 2, 4, 8] {
+                for e in sched.resolve(11, hosts, 360).events {
+                    match e.op {
+                        FaultOp::HostStall { host, .. } | FaultOp::HostCrash { host } => {
+                            assert!(host < hosts, "{}: host {host} >= {hosts}", sched.name);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    /// `host-crash` leaves at least one survivor (and spares host 0), and
+    /// downgrades to a stall when there is nothing to fail over to.
+    #[test]
+    fn host_crash_never_kills_the_last_host() {
+        let crash = FaultSchedule::by_name("host-crash").unwrap();
+        for seed in 0..16u64 {
+            let single = crash.resolve(seed, 1, 360);
+            assert!(
+                single.events.iter().all(|e| matches!(e.op, FaultOp::HostStall { .. })),
+                "single-host crash must downgrade to stall"
+            );
+            for hosts in [2usize, 4, 8] {
+                let plan = crash.resolve(seed, hosts, 360);
+                let mut crashed: Vec<usize> = plan
+                    .events
+                    .iter()
+                    .filter_map(|e| match e.op {
+                        FaultOp::HostCrash { host } => Some(host),
+                        _ => None,
+                    })
+                    .collect();
+                assert!(!crashed.is_empty(), "no crash scheduled for {hosts} hosts");
+                assert!(!crashed.contains(&0), "host 0 must be spared");
+                crashed.sort_unstable();
+                crashed.dedup();
+                assert!(crashed.len() < hosts, "all hosts crashed");
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        assert_eq!(
+            (0..6).map(backoff_mis).collect::<Vec<_>>(),
+            vec![1, 2, 4, 8, 8, 8]
+        );
+    }
+}

@@ -92,6 +92,30 @@
 //! daemon, `sparta serve --restore`, and the concatenated event stream
 //! is byte-for-byte what the uninterrupted run would have emitted.
 //!
+//! Failure is a first-class, *seeded* input ([`faults`]): a
+//! [`faults::FaultSchedule`] preset (`link-flap`, `link-degrade`,
+//! `host-stall`, `host-crash`, `stream-error` — `--faults <name>` on
+//! fleet/serve/bench) resolves into an explicit [`faults::FaultPlan`]
+//! from an identity-derived seed, exactly as arrival schedules resolve
+//! workloads. Segment faults rescale a named topology stage's capacity at
+//! an MI boundary ([`net::Substrate::fault_segment`]); a per-lane stall
+//! watchdog in [`Session`] detects starved lanes and cycles them through
+//! `Faulted` → exponential-backoff → `Retrying` with already-transferred
+//! bytes intact; and a host crash turns the cluster's former
+//! panic-and-abort path into quarantine-and-migrate — the dead host's
+//! in-flight lanes are extracted (optimizer state, job progress, window
+//! and reward trackers) and re-admitted on healthy hosts, with
+//! `Event::Migrated` marking the move and the dead host's frozen ledger
+//! still counted so Σ per-host energy equals the cluster total. The
+//! determinism contract is the same two rules everywhere: faults are
+//! seeded data, and every recovery op lands on an MI boundary — so a
+//! faulted run's event stream is byte-identical at any `--jobs` and
+//! `--step-threads`, and the fault-free path is byte-identical to a build
+//! without the fault plane at all. A fleet with faults installed is not
+//! checkpointable (`export_state` returns `None`); `sparta serve` keeps
+//! running in degraded mode instead and reports fault/retry/migration
+//! counters over `status`.
+//!
 //! Scenarios are the *training* substrate too, not just an evaluation toy:
 //! [`experiments::train_pipeline`] takes a [`experiments::TrainSource`]
 //! (bare testbed or registered scenario), explores and fine-tunes under it,
@@ -210,6 +234,7 @@
 //!     mi_s: 1.0,
 //!     max_mis: 360,
 //!     observe_paused: false,
+//!     faults: None,             // or Some("link-flap".into()) for a chaos drill
 //! };
 //! let mut engine = ServeEngine::new(ctx, spec, 1).unwrap(); // 1 = serial stepping
 //! let mut events = Vec::new();
@@ -277,6 +302,7 @@ pub mod coordinator;
 pub mod emulator;
 pub mod energy;
 pub mod experiments;
+pub mod faults;
 pub mod net;
 pub mod runtime;
 pub mod scenarios;

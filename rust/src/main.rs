@@ -24,6 +24,7 @@ use anyhow::{anyhow, Result};
 use sparta::config::Paths;
 use sparta::coordinator::{LaneSpec, RewardKind, Session, SessionBuilder, DEFAULT_MAX_MIS};
 use sparta::experiments::{self, make_optimizer, Scale, SpartaCtx, TrainSource};
+use sparta::faults::FaultSchedule;
 use sparta::net::Testbed;
 use sparta::scenarios::{ArrivalSchedule, Scenario};
 use sparta::telemetry::report::lane_json;
@@ -124,6 +125,8 @@ struct CommonOpts<'a> {
     /// Intra-step cluster workers for multi-host stepping (fleet/serve/
     /// bench); `None` = flag not given (auto / serial per arm).
     step_threads: Option<usize>,
+    /// Seeded fault preset (fleet/serve/bench chaos runs).
+    faults: Option<&'a str>,
 }
 
 impl<'a> CommonOpts<'a> {
@@ -141,7 +144,22 @@ impl<'a> CommonOpts<'a> {
                     Some(args.get_usize("step-threads", 0).map_err(|e| anyhow!(e))?)
                 }
             },
+            faults: args.get("faults"),
         })
+    }
+
+    /// Resolve `--faults` against the preset registry (None when the flag
+    /// was not given; a loud error on an unknown name).
+    fn fault_schedule(&self) -> Result<Option<&'static FaultSchedule>> {
+        match self.faults {
+            None => Ok(None),
+            Some(name) => FaultSchedule::by_name(name).map(Some).ok_or_else(|| {
+                anyhow!(
+                    "unknown fault preset '{name}' (have: {})",
+                    FaultSchedule::names().join(", ")
+                )
+            }),
+        }
     }
 
     /// Write the machine-readable report when `--out` was given — the one
@@ -165,6 +183,7 @@ impl<'a> CommonOpts<'a> {
                 "events" => self.events.is_some(),
                 "observe-paused" => self.observe_paused,
                 "step-threads" => self.step_threads.is_some(),
+                "faults" => self.faults.is_some(),
                 other => unreachable!("unknown common flag '{other}'"),
             };
             if given {
@@ -224,10 +243,16 @@ fn dispatch(args: &Args) -> Result<()> {
                 ]);
             }
             t.print();
+            println!("\nfault presets (use with `sparta fleet`/`serve`/`bench --faults <name>`):");
+            let mut t = Table::new(&["name", "description"]);
+            for sched in FaultSchedule::all() {
+                t.row(vec![sched.name.into(), sched.summary.into()]);
+            }
+            t.print();
             Ok(())
         }
         Some("collect") => {
-            common.forbid("collect", &["step-threads"])?;
+            common.forbid("collect", &["step-threads", "faults"])?;
             let c = ctx()?;
             match scenario_arg(args)? {
                 Some(sc) => {
@@ -243,7 +268,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("train") => {
-            common.forbid("train", &["step-threads"])?;
+            common.forbid("train", &["step-threads", "faults"])?;
             let c = ctx()?;
             let algo = args.get_or("algo", "rppo").to_string();
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
@@ -273,7 +298,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("train-all") => {
-            common.forbid("train-all", &["step-threads"])?;
+            common.forbid("train-all", &["step-threads", "faults"])?;
             let c = ctx()?;
             let scenario = scenario_arg(args)?;
             let tb = if scenario.is_none() { Some(testbed_arg(args)?) } else { None };
@@ -302,7 +327,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // cross-scenario generalization matrix. Defaults to the
             // artifact-free `linq` core so it runs on a fresh checkout;
             // pass `--algo rppo` (etc.) once artifacts are built.
-            common.forbid("generalize", &["step-threads"])?;
+            common.forbid("generalize", &["step-threads", "faults"])?;
             let algo = args.get_or("algo", sparta::agents::FALLBACK_ALGO).to_string();
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
                 .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
@@ -326,7 +351,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("transfer") => {
-            common.forbid("transfer", &["step-threads"])?;
+            common.forbid("transfer", &["step-threads", "faults"])?;
             let c = ctx()?;
             let scenario = scenario_arg(args)?;
             let method = args.get_or("method", "sparta-fe");
@@ -359,6 +384,11 @@ fn dispatch(args: &Args) -> Result<()> {
                     let mut jsonl = JsonlSink::new(std::io::BufWriter::new(f));
                     let mut fan = FanoutSink { sinks: vec![&mut report_sink, &mut jsonl] };
                     session.run_to_completion(DEFAULT_MAX_MIS, &mut fan);
+                    // A write that failed mid-run is a failed run, not a
+                    // silently truncated event log.
+                    if let Some(e) = jsonl.take_error() {
+                        return Err(anyhow!("writing event stream {path}: {e}"));
+                    }
                     let mut w = jsonl.into_inner();
                     w.flush().map_err(|e| anyhow!("flushing event stream: {e}"))?;
                     println!("event stream written to {path}");
@@ -383,7 +413,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("sweep") => {
-            common.forbid("sweep", &["events", "observe-paused", "step-threads"])?;
+            common.forbid("sweep", &["events", "observe-paused", "step-threads", "faults"])?;
             let grid = [1u32, 2, 4, 8, 16];
             // `--scenario all`: iterate the full registry and emit one
             // combined report.
@@ -409,7 +439,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("algos") => {
-            common.forbid("algos", &["step-threads"])?;
+            common.forbid("algos", &["step-threads", "faults"])?;
             let reward = RewardKind::by_name(args.get_or("reward", "te"))
                 .ok_or_else(|| anyhow!("--reward must be fe|te"))?;
             let cells = experiments::fig4::run(
@@ -425,7 +455,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("tune") => {
-            common.forbid("tune", &["step-threads"])?;
+            common.forbid("tune", &["step-threads", "faults"])?;
             let curves = experiments::fig5::run(
                 &Paths::resolve(),
                 &sparta::agents::ALGOS,
@@ -438,7 +468,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("compare") => {
-            common.forbid("compare", &["events", "observe-paused", "step-threads"])?;
+            common.forbid("compare", &["events", "observe-paused", "step-threads", "faults"])?;
             let scenarios = scenario_list_arg(args)?;
             let methods = methods_arg(args);
             let cells = experiments::fig6::run(
@@ -460,7 +490,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("fairness") => {
-            common.forbid("fairness", &["step-threads"])?;
+            common.forbid("fairness", &["step-threads", "faults"])?;
             let scenarios = experiments::fig7::run(&Paths::resolve(), scale, seed, jobs)?;
             experiments::fig7::print(&scenarios);
             Ok(())
@@ -470,7 +500,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // artifact-free core); `--deterministic` keeps/emits only the
             // simulation-derived columns so table1 joins the CI
             // byte-identity job.
-            common.forbid("table1", &["step-threads"])?;
+            common.forbid("table1", &["step-threads", "faults"])?;
             let algo_list: Vec<String> = match args.get("algos") {
                 None => sparta::agents::ALGOS.iter().map(|a| a.to_string()).collect(),
                 Some(list) => list.split(',').map(|a| a.trim().to_string()).collect(),
@@ -513,6 +543,9 @@ fn dispatch(args: &Args) -> Result<()> {
                 inject_slowdown: args.get_f64("inject-slowdown", 0.0).map_err(|e| anyhow!(e))?,
                 lanes,
                 step_threads: common.step_threads.unwrap_or(0),
+                // --faults NAME: time the curve with the recovery path hot
+                // (skips the baseline column — no fault plane there).
+                faults: common.fault_schedule()?,
             };
             let report = experiments::bench::run(&Paths::resolve(), opts)?;
             experiments::bench::print(&report);
@@ -592,6 +625,12 @@ fn dispatch(args: &Args) -> Result<()> {
                         "--compare-observe runs single-host fleets (drop --step-threads)"
                     ));
                 }
+                if common.faults.is_some() {
+                    return Err(anyhow!(
+                        "--compare-observe compares the yield policy, not the fault \
+                         plane (drop --faults)"
+                    ));
+                }
                 let (blind, observing) = experiments::fleet::run_observe_comparison(
                     &Paths::resolve(),
                     &schedule,
@@ -617,6 +656,9 @@ fn dispatch(args: &Args) -> Result<()> {
                 observe_paused: common.observe_paused,
                 hosts,
                 step_threads: common.step_threads.unwrap_or(0),
+                // --faults NAME: install a seeded fault plan per trial
+                // (same failure history at any --jobs / --step-threads).
+                faults: common.fault_schedule()?,
                 ..experiments::fleet::FleetOpts::default()
             };
             let report = experiments::fleet::run(
@@ -637,7 +679,7 @@ fn dispatch(args: &Args) -> Result<()> {
             serve_cmd(args, &common, seed)
         }
         Some("serve-ctl") => {
-            common.forbid("serve-ctl", &["step-threads"])?;
+            common.forbid("serve-ctl", &["step-threads", "faults"])?;
             serve_ctl_cmd(args)
         }
         Some(other) => Err(anyhow!("unknown subcommand '{other}' — try `sparta help`")),
@@ -667,6 +709,15 @@ fn serve_cmd(args: &Args, common: &CommonOpts, seed: u64) -> Result<()> {
                 return Err(anyhow!(
                     "--restore conflicts with --scenario/--schedule: the snapshot \
                      carries its own spec"
+                ));
+            }
+            if common.faults.is_some() {
+                // Faulted services refuse to snapshot, so a snapshot is by
+                // construction fault-free; arming the restore would fork
+                // its stream from the interrupted run.
+                return Err(anyhow!(
+                    "--restore conflicts with --faults: snapshots are taken at \
+                     fault-free boundaries and restore bit-identically"
                 ));
             }
             Boot::Restore(PathBuf::from(path))
@@ -705,6 +756,10 @@ fn serve_cmd(args: &Args, common: &CommonOpts, seed: u64) -> Result<()> {
                 mi_s: args.get_f64("mi", 1.0).map_err(|e| anyhow!(e))?,
                 max_mis: args.get_usize("max-mis", DEFAULT_MAX_MIS).map_err(|e| anyhow!(e))?,
                 observe_paused: common.observe_paused,
+                // Validated at boot by `build_fleet` (unknown names fail
+                // before the socket binds); the validated name rides in
+                // the spec so `status` can report the active preset.
+                faults: common.fault_schedule()?.map(|f| f.name.to_string()),
             })
         }
     };
@@ -835,6 +890,15 @@ subcommands:
                                            --jobs shards trials, else one per
                                            host up to the core count; default
                                            1 = serial)
+            [--faults PRESET]              (seeded chaos: install a fault plan
+                                           per trial — link flaps/brownouts,
+                                           host stalls/crashes, stream errors.
+                                           Lanes retry with backoff; crashed
+                                           hosts quarantine and migrate their
+                                           lanes, bytes intact. Same seed =>
+                                           same failure history at any --jobs
+                                           / --step-threads; `sparta
+                                           scenarios` lists the presets)
   serve     [--scenario S|--schedule A]    resident transfer service (unix):
                                            daemon owns a session (--hosts N:
                                            an incast cluster), steps it on a
@@ -853,6 +917,12 @@ subcommands:
                                            fleets; wall-clock only, not in
                                            snapshots — a restore may pick a
                                            different count)
+            [--faults PRESET]              (run degraded under a seeded fault
+                                           plan: lanes retry, crashed hosts
+                                           migrate; `status` reports fault/
+                                           recovery counters. Conflicts with
+                                           --restore — a faulted service
+                                           refuses to checkpoint)
   serve-ctl ['JSON' ... | --stdin]         send request lines to the daemon
                                            and print each reply; `subscribe`
                                            then streams live events to stdout
@@ -892,6 +962,9 @@ subcommands:
             [--inject-slowdown F]          (test flag: sleep F x each arena
                                            timing so CI can prove the gate
                                            trips on a synthetic slowdown)
+            [--faults PRESET]              (time the curve with the recovery
+                                           path hot; skips the baseline
+                                           column — no fault plane there)
   sweep     --testbed T|--scenario S|--scenario all   Fig 1 (cc,p) sweep
   algos     --reward fe|te                 Fig 4   DRL algorithm comparison
   tune                                     Fig 5   online tuning on CloudLab
@@ -914,11 +987,11 @@ common flags: --scale quick|paper  --seed N  --jobs N  --quiet --verbose
   bit-identical at any jobs count for a fixed seed
   --out FILE (sweep/algos/tune/compare/table1/generalize/fleet/transfer/
   bench) writes a JSON report
-  --scenario/--jobs/--out/--events/--observe-paused/--step-threads are
-  parsed by one shared helper with one spelling and one default everywhere;
-  a subcommand that cannot honor one of them rejects it loudly (e.g.
-  --events outside transfer, --jobs on bench, --step-threads outside
-  fleet/serve/bench) instead of silently ignoring it
+  --scenario/--jobs/--out/--events/--observe-paused/--step-threads/--faults
+  are parsed by one shared helper with one spelling and one default
+  everywhere; a subcommand that cannot honor one of them rejects it loudly
+  (e.g. --events outside transfer, --jobs on bench, --step-threads and
+  --faults outside fleet/serve/bench) instead of silently ignoring it
   --jobs N and --step-threads T multiply: fleet warns once when J x T
   oversubscribes the machine and suggests a budget that fits
 ";

@@ -298,6 +298,10 @@ pub struct MiMetrics {
 struct Segment {
     name: &'static str,
     link: Link,
+    /// Healthy capacity, Gbps — the reference point fault injection
+    /// ([`NetworkSim::fault_segment`]) scales against, so repeated
+    /// degrade/heal cycles cannot drift.
+    nominal_gbps: f64,
     background: Option<BackgroundState>,
 }
 
@@ -350,9 +354,11 @@ impl NetworkSim {
                     .background
                     .clone()
                     .or_else(|| (i == wan_idx).then(|| testbed.default_background.clone()));
+                let link = spec.link();
                 Segment {
                     name: spec.name,
-                    link: spec.link(),
+                    nominal_gbps: link.capacity_gbps,
+                    link,
                     background: bg.map(Background::into_state),
                 }
             })
@@ -451,6 +457,22 @@ impl NetworkSim {
     /// no allocation per call (collect if a snapshot is needed).
     pub fn segment_queue_fills(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
         self.segments.iter().map(|s| (s.name, s.link.queue_fill()))
+    }
+
+    /// Fault injection ([`crate::faults`]): rescale every segment named
+    /// `segment` to `scale` × its nominal (healthy) capacity. `1.0` heals;
+    /// `0.0` is clamped to [`crate::faults::MIN_SEGMENT_SCALE`] so the
+    /// droptail queue-delay math stays finite on a fully cut link. Draws
+    /// no randomness and touches nothing when the name does not match, so
+    /// installing a fault plan cannot perturb the golden replay. Returns
+    /// whether any segment matched.
+    pub fn fault_segment(&mut self, segment: &str, scale: f64) -> bool {
+        let mut hit = false;
+        for s in self.segments.iter_mut().filter(|s| s.name == segment) {
+            s.link.capacity_gbps = s.nominal_gbps * scale.max(crate::faults::MIN_SEGMENT_SCALE);
+            hit = true;
+        }
+        hit
     }
 
     /// Capture the complete mutable simulator state at an MI boundary (see

@@ -75,6 +75,18 @@ pub trait Substrate: Send {
     fn load_state(&mut self, _state: &SimState) -> bool {
         false
     }
+
+    /// Fault-injection hook ([`crate::faults`]): scale the named topology
+    /// segment's capacity against its *nominal* value (`1.0` heals it,
+    /// `0.0` is clamped to a numerically-safe floor). Called only at MI
+    /// boundaries by a session applying a seeded fault plan; draws no
+    /// randomness and must be a no-op on unknown segment names. Returns
+    /// `false` when the substrate does not model named segments (e.g. the
+    /// frozen golden-replay baseline), in which case link faults are
+    /// reported as unsupported rather than silently ignored.
+    fn fault_segment(&mut self, _segment: &str, _scale: f64) -> bool {
+        false
+    }
 }
 
 impl Substrate for NetworkSim {
@@ -120,6 +132,10 @@ impl Substrate for NetworkSim {
 
     fn load_state(&mut self, state: &SimState) -> bool {
         NetworkSim::load_state(self, state)
+    }
+
+    fn fault_segment(&mut self, segment: &str, scale: f64) -> bool {
+        NetworkSim::fault_segment(self, segment, scale)
     }
 }
 

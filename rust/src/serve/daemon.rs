@@ -106,32 +106,104 @@ fn listen_loop(listener: UnixListener, tx: Sender<CtlMsg>) {
     }
 }
 
+/// Hard cap on one control request line. Any legitimate request fits in
+/// a fraction of this; past it, the handler drains the line off the wire
+/// without buffering it and answers with a structured error — one hostile
+/// or corrupt client line must never take down (or balloon) the daemon.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// One bounded line read off a control connection.
+enum LineRead {
+    /// A complete line (without the trailing `\n`) is in the buffer.
+    Line,
+    /// The line exceeded [`MAX_LINE_BYTES`]; it was drained off the wire
+    /// and discarded. The connection is still in sync at the next line.
+    TooLong,
+    /// Peer closed the connection.
+    Eof,
+}
+
+/// Read one `\n`-terminated line into `buf`, holding at most
+/// [`MAX_LINE_BYTES`] of it in memory — the oversized remainder is
+/// consumed and dropped chunk by chunk, so a gigabyte of garbage costs a
+/// gigabyte of socket traffic but only one BufReader block of memory.
+fn read_capped_line(reader: &mut impl BufRead, buf: &mut Vec<u8>) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut overflow = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: a dangling partial line still counts (mirrors
+            // `BufRead::lines`), unless it was oversized garbage.
+            return Ok(match (buf.is_empty() && !overflow, overflow) {
+                (true, _) => LineRead::Eof,
+                (false, true) => LineRead::TooLong,
+                (false, false) => LineRead::Line,
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if !overflow {
+                    buf.extend_from_slice(&chunk[..i]);
+                }
+                reader.consume(i + 1);
+                let too_long = overflow || buf.len() > MAX_LINE_BYTES;
+                if too_long {
+                    buf.clear();
+                }
+                return Ok(if too_long { LineRead::TooLong } else { LineRead::Line });
+            }
+            None => {
+                let n = chunk.len();
+                if !overflow {
+                    buf.extend_from_slice(chunk);
+                    if buf.len() > MAX_LINE_BYTES {
+                        overflow = true;
+                        buf.clear();
+                    }
+                }
+                reader.consume(n);
+            }
+        }
+    }
+}
+
 /// One control connection: request lines in, one reply line out per
-/// request. Parse errors are answered locally; everything else round
-/// trips through the pacer.
+/// request. Malformed input — oversized lines, invalid UTF-8, JSON that
+/// does not parse — is answered locally with a structured error and the
+/// connection (and daemon) keep going; only I/O failure or EOF ends the
+/// handler. Valid requests round trip through the pacer.
 fn handle_conn(stream: UnixStream, tx: Sender<CtlMsg>) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut writer = stream;
-    let reader = BufReader::new(read_half);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply_line = match parse_request(&line) {
-            Err(e) => err_line(&format!("{e:#}")),
-            Ok(req) => {
-                let sub = if req == Request::Subscribe { writer.try_clone().ok() } else { None };
-                let (reply_tx, reply_rx) = channel();
-                let msg = CtlMsg { req, reply: reply_tx, stream: sub };
-                if tx.send(msg).is_err() {
-                    break; // pacer gone: the daemon is shutting down
-                }
-                match reply_rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break,
-                }
+    let mut reader = BufReader::new(read_half);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let reply_line = match read_capped_line(&mut reader, &mut buf) {
+            Err(_) | Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLong) => {
+                err_line(&format!("request line exceeds {MAX_LINE_BYTES} bytes"))
             }
+            Ok(LineRead::Line) => match std::str::from_utf8(&buf) {
+                Err(_) => err_line("request line is not valid UTF-8"),
+                Ok(line) if line.trim().is_empty() => continue,
+                Ok(line) => match parse_request(line) {
+                    Err(e) => err_line(&format!("{e:#}")),
+                    Ok(req) => {
+                        let sub =
+                            if req == Request::Subscribe { writer.try_clone().ok() } else { None };
+                        let (reply_tx, reply_rx) = channel();
+                        let msg = CtlMsg { req, reply: reply_tx, stream: sub };
+                        if tx.send(msg).is_err() {
+                            return; // pacer gone: the daemon is shutting down
+                        }
+                        match reply_rx.recv() {
+                            Ok(r) => r,
+                            Err(_) => return,
+                        }
+                    }
+                },
+            },
         };
         if writeln!(writer, "{reply_line}").is_err() {
             break;
@@ -205,11 +277,35 @@ fn pacer_loop(engine: &mut ServeEngine, rx: &Receiver<CtlMsg>, opts: &ServeOptio
                 subscribers.retain_mut(|s| s.write_all(line.as_bytes()).is_ok());
             }
         }
+        // The event log is a product of the run, not best-effort
+        // telemetry: a sink that started dropping lines (disk full,
+        // deleted directory) fails the run at the boundary it happened.
+        if let Some(e) = sink.as_mut().and_then(|s| s.take_error()) {
+            return Err(e).with_context(|| {
+                format!(
+                    "writing event log {}",
+                    opts.events.as_deref().unwrap_or(Path::new("?")).display()
+                )
+            });
+        }
         if opts.time_scale > 0.0 {
             thread::sleep(Duration::from_secs_f64(engine.spec().mi_s / opts.time_scale));
         }
     }
-    Ok(()) // sink drops here, flushing the event log
+    // Flush explicitly so a failure surfaces as a run error instead of
+    // vanishing in Drop.
+    if let Some(mut s) = sink.take() {
+        s.flush();
+        if let Some(e) = s.take_error() {
+            return Err(e).with_context(|| {
+                format!(
+                    "flushing event log {}",
+                    opts.events.as_deref().unwrap_or(Path::new("?")).display()
+                )
+            });
+        }
+    }
+    Ok(())
 }
 
 /// Apply one control message at an MI boundary and answer it.
@@ -302,6 +398,31 @@ mod tests {
     use super::*;
     use crate::config::Paths;
 
+    /// Send one request line, read one reply line, parse it.
+    fn ask(writer: &mut UnixStream, reader: &mut BufReader<UnixStream>, line: &str) -> Json {
+        writeln!(writer, "{line}").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(&reply).expect("reply is one JSON object")
+    }
+
+    #[test]
+    fn capped_line_reader_bounds_memory_and_stays_in_sync() {
+        let mut big = vec![b'x'; MAX_LINE_BYTES + 10];
+        big.push(b'\n');
+        big.extend_from_slice(b"ok\n");
+        big.extend_from_slice(b"tail-without-newline");
+        let mut r = BufReader::new(std::io::Cursor::new(big));
+        let mut buf = Vec::new();
+        assert!(matches!(read_capped_line(&mut r, &mut buf).unwrap(), LineRead::TooLong));
+        assert!(buf.is_empty(), "oversized line must not be buffered");
+        assert!(matches!(read_capped_line(&mut r, &mut buf).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"ok", "reader out of sync after an oversized line");
+        assert!(matches!(read_capped_line(&mut r, &mut buf).unwrap(), LineRead::Line));
+        assert_eq!(buf, b"tail-without-newline");
+        assert!(matches!(read_capped_line(&mut r, &mut buf).unwrap(), LineRead::Eof));
+    }
+
     #[test]
     fn daemon_answers_control_requests_and_runs_to_completion() {
         let root = std::env::temp_dir().join("sparta_serve_daemon_unit");
@@ -316,6 +437,7 @@ mod tests {
             mi_s: 1.0,
             max_mis: 6,
             observe_paused: false,
+            faults: None,
         };
         let socket = root.join("ctl.sock");
         let opts = ServeOptions {
@@ -330,22 +452,36 @@ mod tests {
         let stream = connect_retry(&socket).expect("daemon socket comes up");
         let mut writer = stream.try_clone().unwrap();
         let mut reader = BufReader::new(stream);
-        let mut ask = |line: &str| -> Json {
-            writeln!(writer, "{line}").unwrap();
-            let mut reply = String::new();
-            reader.read_line(&mut reply).unwrap();
-            Json::parse(&reply).expect("reply is one JSON object")
-        };
 
-        let r = ask(r#"{"cmd":"admit","method":"rclone","files":1,"at_mi":0}"#);
+        let r = ask(&mut writer, &mut reader, r#"{"cmd":"admit","method":"rclone","files":1,"at_mi":0}"#);
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "admit: {r}");
         assert_eq!(r.get("queued_at_mi").and_then(Json::as_usize), Some(0));
-        let r = ask(r#"{"cmd":"admit","method":"no-such-method"}"#);
+        let r = ask(&mut writer, &mut reader, r#"{"cmd":"admit","method":"no-such-method"}"#);
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "bad admit: {r}");
-        let r = ask(r#"{"cmd":"status"}"#);
+
+        // Garbage must bounce with a structured error, not kill the
+        // connection or the daemon: broken JSON, an oversized line, and a
+        // line that is not UTF-8 at all.
+        let r = ask(&mut writer, &mut reader, r#"{"cmd": "adm"#);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "broken JSON: {r}");
+        let huge = format!("{{\"cmd\":\"status\",\"pad\":\"{}\"}}", "x".repeat(MAX_LINE_BYTES + 1));
+        let r = ask(&mut writer, &mut reader, &huge);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "oversized line: {r}");
+        assert!(
+            r.get("error").and_then(Json::as_str).unwrap_or("").contains("exceeds"),
+            "oversized reply names the cap: {r}"
+        );
+        writer.write_all(&[0xC3, 0x28, b'\n']).unwrap(); // invalid UTF-8 sequence
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let r = Json::parse(&reply).expect("non-UTF-8 line still gets a JSON reply");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "non-UTF-8: {r}");
+
+        // And the connection still works after all of it.
+        let r = ask(&mut writer, &mut reader, r#"{"cmd":"status"}"#);
         let mi = r.get("status").and_then(|s| s.get("mi")).and_then(Json::as_usize);
         assert_eq!(mi, Some(0), "held daemon must sit at MI 0: {r}");
-        let r = ask(r#"{"cmd":"go"}"#);
+        let r = ask(&mut writer, &mut reader, r#"{"cmd":"go"}"#);
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "go: {r}");
 
         daemon.join().unwrap().expect("daemon exits cleanly at max_mis");

@@ -34,6 +34,10 @@ pub struct ServeEngine {
     queue: Vec<PendingOp>,
     /// Per-epoch JFI over the event stream since (re)start, for `status`.
     fairness: FairnessSink,
+    /// Fault-plane counters since (re)start, fed from the event stream.
+    faulted: usize,
+    retried: usize,
+    migrated: usize,
 }
 
 impl ServeEngine {
@@ -70,7 +74,17 @@ impl ServeEngine {
             }
         }
         let fairness = FairnessSink::new(EPOCH_MIS);
-        Ok(ServeEngine { ctx, spec, fleet, admits: Vec::new(), queue, fairness })
+        Ok(ServeEngine {
+            ctx,
+            spec,
+            fleet,
+            admits: Vec::new(),
+            queue,
+            fairness,
+            faulted: 0,
+            retried: 0,
+            migrated: 0,
+        })
     }
 
     /// Resume from a snapshot: rebuild the fleet from the spec, replay the
@@ -100,7 +114,7 @@ impl ServeEngine {
             return Err(anyhow!("snapshot state does not match the rebuilt fleet shape"));
         }
         let fairness = FairnessSink::new(EPOCH_MIS);
-        Ok(ServeEngine { ctx, spec, fleet, admits, queue, fairness })
+        Ok(ServeEngine { ctx, spec, fleet, admits, queue, fairness, faulted: 0, retried: 0, migrated: 0 })
     }
 
     /// Queue a control op for `at_mi` (default: the next boundary).
@@ -138,6 +152,12 @@ impl ServeEngine {
         self.fleet.stepping().step_into(events);
         for ev in events.iter() {
             self.fairness.on_event(ev);
+            match ev {
+                Event::Faulted { .. } => self.faulted += 1,
+                Event::Retrying { .. } => self.retried += 1,
+                Event::Migrated { .. } => self.migrated += 1,
+                _ => {}
+            }
         }
         Ok(())
     }
@@ -242,6 +262,23 @@ impl ServeEngine {
             ]);
             fields.push(("rails", rails));
         }
+        // Fault-plane block: present whenever the service runs with a
+        // fault plan (even before anything fires), or after any fault
+        // activity — absent otherwise so fault-free status replies stay
+        // byte-identical to pre-fault-plane builds.
+        if self.spec.faults.is_some() || self.faulted + self.retried + self.migrated > 0 {
+            let preset = self.spec.faults.as_deref().map(Json::from).unwrap_or(Json::Null);
+            fields.push((
+                "faults",
+                Json::obj(vec![
+                    ("preset", preset),
+                    ("faulted", Json::from(self.faulted)),
+                    ("retried", Json::from(self.retried)),
+                    ("migrated", Json::from(self.migrated)),
+                    ("quarantined_hosts", Json::from(self.fleet.quarantined_hosts())),
+                ]),
+            ));
+        }
         Json::obj(fields)
     }
 
@@ -289,6 +326,7 @@ mod tests {
             mi_s: 1.0,
             max_mis: 24,
             observe_paused: false,
+            faults: None,
         }
     }
 
@@ -349,6 +387,37 @@ mod tests {
         let err = engine.enqueue(admit("no-such-method", 1, None), None);
         assert!(err.is_err(), "bogus method must be rejected");
         assert_eq!(engine.queue_len(), 0);
+    }
+
+    #[test]
+    fn status_json_gates_the_fault_block() {
+        // Fault-free service: no "faults" key at all.
+        let mut plain = ServeEngine::new(test_ctx("fault_gate_a"), spec("calm"), 1).unwrap();
+        plain.enqueue(admit("rclone", 1, None), Some(0)).unwrap();
+        let mut events = Vec::new();
+        plain.step(&mut events).unwrap();
+        assert!(plain.status_json().get("faults").is_none());
+
+        // Armed service: block present from boot, preset named, counters
+        // climbing once the plan fires.
+        let mut s = spec("calm");
+        s.faults = Some("host-stall".to_string());
+        let mut armed = ServeEngine::new(test_ctx("fault_gate_b"), s, 1).unwrap();
+        // A job large enough to still be in flight when the stall window
+        // opens (the plan's first stall lands at MI 12..21).
+        armed.enqueue(admit("rclone", 4096, None), Some(0)).unwrap();
+        let st = armed.status_json();
+        let fb = st.get("faults").expect("armed service reports the fault block");
+        assert_eq!(fb.get("preset").and_then(Json::as_str), Some("host-stall"));
+        for _ in 0..30 {
+            armed.step(&mut events).unwrap();
+        }
+        let st = armed.status_json();
+        let fb = st.get("faults").unwrap();
+        assert!(
+            fb.get("faulted").and_then(Json::as_usize).unwrap() > 0,
+            "host-stall plan never tripped the watchdog"
+        );
     }
 
     #[test]

@@ -75,6 +75,10 @@ pub struct ServeSpec {
     pub max_mis: usize,
     /// Whether paused lanes emit zero-throughput observation records.
     pub observe_paused: bool,
+    /// Optional [`crate::faults::FaultSchedule`] preset name: the service
+    /// runs with a seeded fault plan installed (chaos drills). A faulted
+    /// service keeps serving in degraded mode but refuses to checkpoint.
+    pub faults: Option<String>,
 }
 
 /// The two fleet scales behind one serve daemon, unified where the
@@ -115,6 +119,15 @@ impl Fleet {
         }
     }
 
+    /// Hosts quarantined by the fault plane (always 0 for single-host
+    /// fleets — a lone host has nowhere to fail over to).
+    pub fn quarantined_hosts(&self) -> usize {
+        match self {
+            Fleet::Single(_) => 0,
+            Fleet::Cluster(c) => c.quarantined_hosts(),
+        }
+    }
+
     /// Capture the fleet's mutable state at a clean MI boundary (`None`
     /// when control events are pending or the substrate cannot
     /// checkpoint itself).
@@ -151,13 +164,31 @@ pub fn build_fleet(spec: &ServeSpec, step_threads: usize) -> Result<Fleet> {
     let sc = Scenario::by_name(&spec.scenario)
         .ok_or_else(|| anyhow!("unknown scenario '{}'", spec.scenario))?;
     let hosts = spec.hosts.max(1);
+    // Resolve the fault preset (if any) before building, so a bad name
+    // fails boot instead of surfacing mid-run. The plan seeds from the
+    // service seed and spans the pacer horizon.
+    let fault_plan = match &spec.faults {
+        Some(name) => {
+            let preset = crate::faults::FaultSchedule::by_name(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown fault preset '{name}' (have: {})",
+                    crate::faults::FaultSchedule::names().join(", ")
+                )
+            })?;
+            Some(preset.resolve(spec.seed, hosts, spec.max_mis))
+        }
+        None => None,
+    };
     if hosts == 1 {
-        let session = sc
+        let mut session = sc
             .session_host_resolved()
             .mi(spec.mi_s)
             .observe_paused(spec.observe_paused)
             .seed(spec.seed)
             .build();
+        if let Some(plan) = fault_plan {
+            session.install_faults(plan);
+        }
         return Ok(Fleet::Single(Box::new(session)));
     }
     let tb = &sc.testbed;
@@ -171,5 +202,8 @@ pub fn build_fleet(spec: &ServeSpec, step_threads: usize) -> Result<Fleet> {
             .build()
     });
     cluster.set_step_threads(step_threads.max(1));
+    if let Some(plan) = fault_plan {
+        cluster.install_faults(plan);
+    }
     Ok(Fleet::Cluster(cluster))
 }

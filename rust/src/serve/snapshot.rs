@@ -124,6 +124,9 @@ pub fn status_str(s: LaneStatus) -> &'static str {
     match s {
         LaneStatus::Active => "active",
         LaneStatus::Paused => "paused",
+        // Never serialized into snapshots (faulted services refuse to
+        // checkpoint) but `status` replies report it live.
+        LaneStatus::Faulted => "faulted",
         LaneStatus::Completed => "completed",
         LaneStatus::Departed => "departed",
     }
@@ -133,6 +136,7 @@ fn status_from(s: &str) -> Result<LaneStatus> {
     match s {
         "active" => Ok(LaneStatus::Active),
         "paused" => Ok(LaneStatus::Paused),
+        "faulted" => Ok(LaneStatus::Faulted),
         "completed" => Ok(LaneStatus::Completed),
         "departed" => Ok(LaneStatus::Departed),
         other => Err(anyhow!("snapshot: unknown lane status '{other}'")),
@@ -243,7 +247,7 @@ fn grng(j: &Json, what: &str) -> Result<[u64; 4]> {
 // Spec / ops.
 
 fn spec_json(s: &ServeSpec) -> Json {
-    Json::obj(vec![
+    let mut o = vec![
         ("scenario", Json::from(s.scenario.as_str())),
         ("schedule", jopt(s.schedule.as_deref(), Json::from)),
         ("methods", Json::Arr(s.methods.iter().map(|m| Json::from(m.as_str())).collect())),
@@ -252,7 +256,15 @@ fn spec_json(s: &ServeSpec) -> Json {
         ("mi_s", jf64(s.mi_s)),
         ("max_mis", Json::from(s.max_mis)),
         ("observe_paused", Json::from(s.observe_paused)),
-    ])
+    ];
+    // Written only when set, so fault-free snapshots stay byte-identical
+    // to the pre-fault-plane format. (In practice a faulted service never
+    // snapshots — its fleet refuses to export — but the spec rides along
+    // in `status` replies too.)
+    if let Some(f) = &s.faults {
+        o.push(("faults", Json::from(f.as_str())));
+    }
+    Json::obj(o)
 }
 
 fn gspec(j: &Json) -> Result<ServeSpec> {
@@ -268,6 +280,11 @@ fn gspec(j: &Json) -> Result<ServeSpec> {
         mi_s: gf64(field(j, "mi_s")?, "spec.mi_s")?,
         max_mis: gusize(field(j, "max_mis")?, "spec.max_mis")?,
         observe_paused: gbool(field(j, "observe_paused")?, "spec.observe_paused")?,
+        // Absent in pre-fault-plane snapshots: tolerant read.
+        faults: match j.get("faults") {
+            Some(f) => gopt(f, |x| gstr(x, "spec.faults"))?,
+            None => None,
+        },
     })
 }
 
@@ -719,6 +736,7 @@ mod tests {
                 mi_s: 1.0,
                 max_mis: 40,
                 observe_paused: false,
+                faults: None,
             },
             admits: vec![AdmitRec {
                 method: "rclone".to_string(),

@@ -208,7 +208,15 @@ impl TelemetrySink for ReportSink {
                 acc.bytes_delivered = *bytes_delivered;
                 acc.total_energy_j = *total_energy_j;
             }
-            Event::Paused { .. } | Event::Resumed { .. } => {}
+            // Fault-plane lifecycle markers: no lane totals change at the
+            // moment of faulting/retrying/migrating — the surrounding
+            // MiCompleted records already carry the (zero-throughput)
+            // story, exactly as for pause/resume.
+            Event::Paused { .. }
+            | Event::Resumed { .. }
+            | Event::Faulted { .. }
+            | Event::Retrying { .. }
+            | Event::Migrated { .. } => {}
         }
     }
 }
@@ -271,6 +279,22 @@ pub fn event_json(event: &Event) -> Json {
             o.push(("total_energy_j", Json::from(*total_energy_j)));
             Json::obj(o)
         }
+        Event::Faulted { lane, mi, time_s, fault } => {
+            let mut o = head("faulted", lane.0, *mi, *time_s);
+            o.push(("fault", Json::from(*fault)));
+            Json::obj(o)
+        }
+        Event::Retrying { lane, mi, time_s, attempt } => {
+            let mut o = head("retrying", lane.0, *mi, *time_s);
+            o.push(("attempt", Json::from(*attempt as usize)));
+            Json::obj(o)
+        }
+        Event::Migrated { lane, mi, time_s, from_host, to_host } => {
+            let mut o = head("migrated", lane.0, *mi, *time_s);
+            o.push(("from_host", Json::from(*from_host)));
+            o.push(("to_host", Json::from(*to_host)));
+            Json::obj(o)
+        }
     }
 }
 
@@ -289,7 +313,14 @@ impl TelemetrySink for FanoutSink<'_> {
 }
 
 /// Streams events as JSON lines to any writer (files, pipes, sockets).
-/// Write errors are swallowed: telemetry must never abort a transfer.
+///
+/// I/O failure (disk full, closed pipe) must never *panic* a transfer,
+/// but it must not be silent either: the first write/flush error is
+/// recorded sticky, further output is suppressed, and the owning driver
+/// surfaces it as a run-level error via [`JsonlSink::io_error`] /
+/// [`JsonlSink::take_error`] — `sparta transfer` and the serve pacer both
+/// fail the run (with events intact up to the failure point) instead of
+/// dropping the rest of the stream on the floor.
 ///
 /// The writer is flushed on drop (and on [`JsonlSink::flush`]), so a sink
 /// over a `BufWriter` that goes out of scope mid-run — a daemon shutting
@@ -305,18 +336,36 @@ pub struct JsonlSink<W: Write> {
     out: Option<W>,
     /// Reusable line buffer.
     buf: String,
+    /// First write/flush error, held until the driver collects it.
+    err: Option<std::io::Error>,
 }
 
 impl<W: Write> JsonlSink<W> {
     pub fn new(out: W) -> JsonlSink<W> {
-        JsonlSink { out: Some(out), buf: String::new() }
+        JsonlSink { out: Some(out), buf: String::new(), err: None }
     }
 
-    /// Flush the underlying writer (errors swallowed, like writes).
+    /// Flush the underlying writer; a failure is recorded like a write
+    /// failure.
     pub fn flush(&mut self) {
         if let Some(out) = &mut self.out {
-            let _ = out.flush();
+            if let Err(e) = out.flush() {
+                if self.err.is_none() {
+                    self.err = Some(e);
+                }
+            }
         }
+    }
+
+    /// The first I/O error the sink hit, if any. Once set, no further
+    /// events are written; the driver should abort the run with it.
+    pub fn io_error(&self) -> Option<&std::io::Error> {
+        self.err.as_ref()
+    }
+
+    /// Take the first I/O error out of the sink (for propagation).
+    pub fn take_error(&mut self) -> Option<std::io::Error> {
+        self.err.take()
     }
 
     /// Recover the writer without flushing (the caller owns it again and
@@ -335,11 +384,16 @@ impl<W: Write> Drop for JsonlSink<W> {
 impl<W: Write> TelemetrySink for JsonlSink<W> {
     fn on_event(&mut self, event: &Event) {
         use std::fmt::Write as _;
+        if self.err.is_some() {
+            return;
+        }
         self.buf.clear();
         let _ = write!(self.buf, "{}", event_json(event));
         self.buf.push('\n');
         if let Some(out) = &mut self.out {
-            let _ = out.write_all(self.buf.as_bytes());
+            if let Err(e) = out.write_all(self.buf.as_bytes()) {
+                self.err = Some(e);
+            }
         }
     }
 }
@@ -528,6 +582,43 @@ mod tests {
         sink.on_event(&Event::Paused { lane: LaneId(0), mi: 1, time_s: 1.0 });
         let _w = sink.into_inner();
         assert_eq!(*flushes.lock().unwrap(), 1, "into_inner must not flush");
+    }
+
+    /// A failing writer (disk full, closed pipe) surfaces as a sticky
+    /// run-level error instead of silently dropping the rest of the
+    /// stream — and the sink stops writing after the first failure.
+    #[test]
+    fn jsonl_sink_surfaces_write_errors() {
+        struct FailingWriter {
+            ok_writes: usize,
+            attempts: usize,
+        }
+        impl Write for FailingWriter {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.attempts += 1;
+                if self.attempts <= self.ok_writes {
+                    Ok(buf.len())
+                } else {
+                    Err(std::io::Error::new(std::io::ErrorKind::WriteZero, "disk full"))
+                }
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut sink = JsonlSink::new(FailingWriter { ok_writes: 1, attempts: 0 });
+        let admitted = Event::Admitted { lane: LaneId(0), name: "x".into(), mi: 0, time_s: 0.0 };
+        sink.on_event(&admitted);
+        assert!(sink.io_error().is_none(), "first write succeeds");
+        sink.on_event(&admitted);
+        assert!(sink.io_error().is_some(), "second write must record the error");
+        sink.on_event(&admitted);
+        let attempts = {
+            let e = sink.take_error().expect("error is takeable");
+            assert_eq!(e.kind(), std::io::ErrorKind::WriteZero);
+            sink.into_inner().attempts
+        };
+        assert_eq!(attempts, 2, "no further writes after the first failure");
     }
 
     #[test]

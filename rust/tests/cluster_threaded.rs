@@ -66,6 +66,7 @@ fn spec() -> ServeSpec {
         mi_s: 1.0,
         max_mis: TOTAL_MIS,
         observe_paused: true,
+        faults: None,
     }
 }
 

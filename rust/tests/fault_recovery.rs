@@ -1,0 +1,220 @@
+//! The fault-plane contract on the real driver paths: seeded chaos must
+//! be a *deterministic* input, never a source of divergence. Every
+//! preset's churn fleet must produce a byte-identical report at any
+//! `--jobs` count; the host-crash preset must additionally survive the
+//! full `--jobs` × `--step-threads` matrix. And a direct cluster drive
+//! under host crashes must land every admitted lane — migrated off the
+//! dead hosts with its transferred bytes intact — while Σ per-lane
+//! energy still equals the host-truth ledger at 1e-9.
+
+use std::path::{Path, PathBuf};
+
+use sparta::baselines::StaticTool;
+use sparta::config::Paths;
+use sparta::coordinator::{Cluster, Event, LaneId, LaneSpec, Session, INCAST_RX_OVER_WAN};
+use sparta::experiments::{fleet, Scale};
+use sparta::faults::{FaultEvent, FaultOp, FaultPlan, FaultSchedule};
+use sparta::net::{Testbed, Topology};
+use sparta::scenarios::ArrivalSchedule;
+use sparta::telemetry::event_json;
+use sparta::transfer::TransferJob;
+
+fn fresh_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("sparta_it_faults_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+/// One churn fleet run under `preset`, serialized the way `sparta fleet
+/// --out` writes it. The fault plan is resolved per trial from the trial
+/// seed, so the report must not move by a byte across worker layouts.
+fn fleet_json(
+    root: &Path,
+    schedule: &ArrivalSchedule,
+    preset: &'static FaultSchedule,
+    jobs: usize,
+    step_threads: usize,
+) -> String {
+    let paths = Paths::with_root(root);
+    let methods: Vec<String> = vec!["2-phase".into(), "rclone".into()];
+    let opts = fleet::FleetOpts {
+        observe_paused: true,
+        hosts: 4,
+        step_threads,
+        faults: Some(preset),
+        ..fleet::FleetOpts::default()
+    };
+    let report = fleet::run(&paths, schedule, &methods, Scale::Quick, 9, jobs, opts).unwrap();
+    fleet::to_json(&report).to_string()
+}
+
+/// Every registry preset, churn fleet, `--jobs 1` vs `--jobs 4`: the
+/// failure history is identity-derived, so sharding trials across
+/// workers must not change a byte of the report.
+#[test]
+fn every_preset_is_byte_identical_across_jobs() {
+    let root = fresh_root("jobs");
+    let schedule = ArrivalSchedule::by_name("churn-light").unwrap();
+    for preset in FaultSchedule::all() {
+        let serial = fleet_json(&root, &schedule, preset, 1, 1);
+        let sharded = fleet_json(&root, &schedule, preset, 4, 1);
+        assert_eq!(
+            serial, sharded,
+            "{}: report differs between --jobs 1 and --jobs 4",
+            preset.name
+        );
+    }
+}
+
+/// The hardest preset gets the full matrix: host crashes force mid-run
+/// lane migration, and the report must still be byte-identical across
+/// `--jobs 1/4` × `--step-threads 1/4`. Also pins the recovery story:
+/// every trial actually migrated lanes and quarantined both victims.
+#[test]
+fn host_crash_fleet_is_byte_identical_across_jobs_and_step_threads() {
+    let root = fresh_root("matrix");
+    let schedule = ArrivalSchedule::by_name("churn-heavy").unwrap();
+    let preset = FaultSchedule::by_name("host-crash").unwrap();
+    let base = fleet_json(&root, &schedule, preset, 1, 1);
+    for (jobs, step_threads) in [(4, 1), (1, 4), (4, 4)] {
+        assert_eq!(
+            base,
+            fleet_json(&root, &schedule, preset, jobs, step_threads),
+            "host-crash report differs at --jobs {jobs} --step-threads {step_threads}"
+        );
+    }
+
+    // Re-run once keeping the structured report to assert the recovery
+    // counters (the byte-compares above prove this run equals them all).
+    let paths = Paths::with_root(&root);
+    let methods: Vec<String> = vec!["2-phase".into(), "rclone".into()];
+    let opts = fleet::FleetOpts {
+        observe_paused: true,
+        hosts: 4,
+        step_threads: 1,
+        faults: Some(preset),
+        ..fleet::FleetOpts::default()
+    };
+    let report = fleet::run(&paths, &schedule, &methods, Scale::Quick, 9, 1, opts).unwrap();
+    assert_eq!(report.faults, Some("host-crash"));
+    for trial in &report.trials {
+        assert!(
+            trial.migrated >= 1,
+            "trial {}: host crashes produced no migrations",
+            trial.trial
+        );
+        assert_eq!(
+            trial.quarantined_hosts, 2,
+            "trial {}: expected both crash victims quarantined",
+            trial.trial
+        );
+        // Per-lane attributions still sum to the per-host ledger with two
+        // hosts frozen mid-run: the crashed ledgers stop, and the migrated
+        // lanes carry their spent energy to the surviving hosts' books.
+        let lanes_j: f64 = trial.lanes.iter().map(|l| l.energy_kj * 1_000.0).sum();
+        let hosts_j: f64 = trial.hosts.iter().map(|h| h.energy_j).sum();
+        assert!(
+            (lanes_j - hosts_j).abs() <= 1e-9 * hosts_j.max(1.0),
+            "trial {}: lane energy {lanes_j} J != host ledger {hosts_j} J",
+            trial.trial
+        );
+    }
+}
+
+/// Direct cluster drive, no lane lifetimes: 8 lanes on 4 hosts, two
+/// hosts crash mid-transfer. Every lane must complete (the migrated ones
+/// on their new hosts, bytes conserved), the event stream must be
+/// byte-identical across step-thread counts, and Σ per-lane energy must
+/// equal the host-truth ledger at 1e-9.
+#[test]
+fn host_crash_migration_completes_every_lane_and_conserves_energy() {
+    const LANES: usize = 8;
+    const FILES: usize = 16;
+    const FILE_BYTES: u64 = 256 << 20;
+    let total_bytes = (FILES as f64) * (FILE_BYTES as f64);
+
+    let drive = |step_threads: usize| -> Vec<String> {
+        let tb = Testbed::chameleon();
+        let hosts = 4;
+        let mut cluster = Cluster::build(hosts, 77, |h, host_seed| {
+            Session::builder(tb.clone())
+                .energy(tb.energy_hosts_of(h, hosts))
+                .seed(host_seed)
+                .topology(Topology::incast_host(&tb, hosts, INCAST_RX_OVER_WAN))
+                .build()
+        });
+        cluster.set_step_threads(step_threads);
+        for k in 0..LANES {
+            cluster.admit(
+                LaneSpec::new(
+                    Box::new(StaticTool::efficient_static(4, 4)),
+                    TransferJob::files(FILES, FILE_BYTES),
+                )
+                .named(format!("lane{k}")),
+            );
+        }
+        // Hosts 1 and 2 die while every lane is still moving bytes; their
+        // round-robin residents (lanes 1/5 and 2/6) must migrate.
+        cluster.install_faults(FaultPlan {
+            events: vec![
+                FaultEvent { at_mi: 3, op: FaultOp::HostCrash { host: 2 } },
+                FaultEvent { at_mi: 6, op: FaultOp::HostCrash { host: 1 } },
+            ],
+        });
+
+        let mut events = Vec::new();
+        let mut lines = Vec::new();
+        let mut done = [false; LANES];
+        let mut migrated = 0usize;
+        for _ in 0..600 {
+            cluster.step_into(&mut events);
+            for ev in &events {
+                lines.push(event_json(ev).to_string());
+                match ev {
+                    Event::Completed { lane, bytes_delivered, .. } => {
+                        assert!(
+                            *bytes_delivered >= total_bytes * 0.999,
+                            "lane {} completed with bytes missing: {} < {}",
+                            lane.0,
+                            bytes_delivered,
+                            total_bytes
+                        );
+                        done[lane.0] = true;
+                    }
+                    Event::Migrated { .. } => migrated += 1,
+                    _ => {}
+                }
+            }
+            if cluster.is_idle() {
+                break;
+            }
+        }
+
+        assert!(
+            done.iter().all(|&d| d),
+            "a lane never completed after the crashes (done = {done:?})"
+        );
+        assert!(migrated >= 2, "two host crashes produced {migrated} migrations");
+        assert_eq!(cluster.quarantined_hosts(), 2);
+
+        // Conservation: per-lane attributions (live + carried-from-crashed)
+        // must reproduce the host-truth ledger exactly.
+        let lanes_j: f64 = (0..LANES)
+            .map(|k| cluster.lane_energy_j(LaneId(k)).expect("lane ledger survives migration"))
+            .sum();
+        let truth_j = cluster.host_energy_j();
+        assert!(
+            (lanes_j - truth_j).abs() <= 1e-9 * truth_j.max(1.0),
+            "lane energy {lanes_j} J != host truth {truth_j} J after migration"
+        );
+        lines
+    };
+
+    let serial = drive(1);
+    assert!(!serial.is_empty());
+    assert_eq!(
+        serial,
+        drive(4),
+        "crash-recovery event stream differs between step-threads 1 and 4"
+    );
+}

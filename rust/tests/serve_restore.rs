@@ -37,6 +37,7 @@ fn spec(hosts: usize) -> ServeSpec {
         mi_s: 1.0,
         max_mis: TOTAL_MIS,
         observe_paused: true,
+        faults: None,
     }
 }
 
